@@ -1,0 +1,40 @@
+"""Paper Eq. 3: L = L_parse + L_plan + L_exec.
+
+Measures the decomposition directly from the engine's stats counters:
+cold deploy (parse+plan), first request (JIT, charged to plan as the
+paper charges compilation), then steady-state exec. Validates that the
+plan cache drives L_plan -> 0 in steady state.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Reporter, build_engine, replay
+
+
+def run(rep: Reporter) -> dict:
+    eng, data = build_engine()
+    keys, ts, _ = data
+    d0 = eng.latency_decomposition()          # after deploy: parse+plan
+    rep.add("eq3/deploy", 0.0,
+            parse_ms=round(d0["parse_s"] * 1e3, 3),
+            plan_ms=round(d0["plan_s"] * 1e3, 3))
+
+    B = 256
+    eng.request("bench", keys[:B].tolist(), [float(ts.max()) + 1] * B)
+    d1 = eng.latency_decomposition()          # + first-request JIT
+    rep.add("eq3/first_request", 0.0,
+            jit_plan_ms=round((d1["plan_s"] - d0["plan_s"]) * 1e3, 2),
+            exec_ms=round(d1["exec_s"] * 1e3, 3))
+
+    r = replay(eng, data, n_batches=20, warm=False)
+    d2 = eng.latency_decomposition()
+    steady_plan_ms = (d2["plan_s"] - d1["plan_s"]) * 1e3
+    steady_exec_ms = (d2["exec_s"] - d1["exec_s"]) * 1e3
+    total = (d2["parse_s"] + d2["plan_s"] + d2["exec_s"])
+    rep.add("eq3/steady_state", 1e6 / r["qps"],
+            plan_ms_total=round(steady_plan_ms, 4),
+            exec_ms_total=round(steady_exec_ms, 2),
+            cache_hit_rate=round(d2["cache_hit_rate"], 3),
+            plan_share=round(steady_plan_ms
+                             / max(steady_exec_ms + steady_plan_ms, 1e-9), 4))
+    eng.close()
+    return {"deploy": d0, "steady": d2, "qps": r["qps"]}

@@ -1,0 +1,47 @@
+"""Paper Eq. 4: T = P / L — throughput vs parallelism.
+
+Two parallelism forms (DESIGN.md §2 hardware adaptation):
+
+* vectorised batch width B — the TPU-native analogue of worker threads
+  (vector lanes ≈ threads). QPS should rise strongly with B.
+* worker-pool threads P — the paper's literal mechanism, reproduced for
+  ablation fidelity. NOTE: this container has ONE physical core, so thread
+  scaling is expected ~flat here; on a multi-core host it tracks P (the
+  paper's 12-thread setup). We report it honestly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.optimizer import OptFlags
+
+from benchmarks.common import Reporter, build_engine, replay
+
+BATCHES = (1, 4, 16, 64, 256, 1024)
+WORKERS = (1, 2, 4)
+
+
+def run(rep: Reporter) -> dict:
+    out = {"batch": {}, "workers": {}}
+    # --- vectorised width sweep -------------------------------------------
+    eng, data = build_engine()
+    for B in BATCHES:
+        r = replay(eng, data, batch=B, n_batches=max(3, 512 // B))
+        out["batch"][B] = r["qps"]
+        rep.add(f"eq4/batch_B={B}", 1e6 / r["qps"],
+                qps=round(r["qps"], 1),
+                p50_batch_ms=round(r["p50_batch_ms"], 3))
+    eng.close()
+    scale = out["batch"][256] / out["batch"][1]
+    rep.add("eq4/vector_scaling_256_vs_1", 0.0, speedup=round(scale, 1))
+
+    # --- worker-pool sweep (paper-literal; 1-core container) ---------------
+    for P in WORKERS:
+        flags = OptFlags(parallel_workers=P)
+        eng, data = build_engine(flags)
+        r = replay(eng, data, batch=256, n_batches=8)
+        out["workers"][P] = r["qps"]
+        rep.add(f"eq4/workers_P={P}", 1e6 / r["qps"],
+                qps=round(r["qps"], 1))
+        eng.close()
+    return out

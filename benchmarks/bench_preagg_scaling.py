@@ -1,0 +1,59 @@
+"""Paper Eq. 2 (pre-aggregation): window-query latency vs window size.
+
+Naive scan is O(W); the bucketed pre-aggregate tier is O(W/B + 2B).
+The paper's claim: materialization makes long-window features cheap.
+We sweep W and report per-request latency for both paths.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.optimizer import OptFlags
+
+from benchmarks.common import Reporter, build_engine
+
+SQL_TMPL = """
+SELECT SUM(amount) OVER w AS s, AVG(amount) OVER w AS a,
+       MAX(amount) OVER w AS mx, COUNT(amount) OVER w AS c
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN {W} PRECEDING AND CURRENT ROW)
+"""
+
+WINDOWS = (16, 64, 256, 1024, 4096)
+
+
+def run(rep: Reporter) -> dict:
+    out = {}
+    for W in WINDOWS:
+        capacity = max(2 * W, 256)
+        row = {}
+        for label, flags in (("preagg", OptFlags()),
+                             ("naive", OptFlags(preagg=False))):
+            eng, data = build_engine(
+                flags, sql=SQL_TMPL.format(W=W), capacity=capacity,
+                bucket_size=64, n_events=3 * capacity, n_keys=32)
+            keys, ts, _ = data
+            B = 64
+            ks = keys[:B].tolist()
+            rts = [float(ts.max()) + 1.0] * B
+            eng.request("bench", ks, rts)              # warm/compile
+            t0 = time.perf_counter()
+            reps = 10
+            for i in range(reps):
+                eng.request("bench", ks, [r + i for r in rts])
+            dt = (time.perf_counter() - t0) / reps
+            row[label] = dt / B * 1e6                  # us per request
+            impl = eng.deployments["bench"].phys.groups[0].impl
+            row[f"{label}_impl"] = impl
+            eng.close()
+        out[W] = row
+        rep.add(f"preagg/W={W}", row.get("preagg", 0.0),
+                naive_us=round(row["naive"], 2),
+                preagg_us=round(row["preagg"], 2),
+                speedup=round(row["naive"] / row["preagg"], 2),
+                impl=row["preagg_impl"])
+    return out

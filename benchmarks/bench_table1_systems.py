@@ -1,0 +1,43 @@
+"""Paper Table 1: systems comparison — our measured engine-variant numbers
+side by side with the paper's published reference points.
+
+The baselines are execution-model emulations (DESIGN.md §8.2): we validate
+RELATIVE standings (OpenMLDB-style execution at the top, row interpreters
+at the bottom, microbatch in between), not absolute QPS of foreign DBMSes.
+"""
+from __future__ import annotations
+
+from repro.core.baselines import PAPER_TABLE1
+
+from benchmarks.common import Reporter
+
+
+def run(rep: Reporter, fig1_results: dict) -> dict:
+    mapping = {                      # paper system -> our execution model
+        "PostgreSQL": "row_interpreter",
+        "MySQL": "row_interpreter",
+        "SparkSQL": "microbatch",
+        "ClickHouse": "columnar_scan",
+        "OpenMLDB(paper)": "openmldb",
+    }
+    for system, (paper_qps, (lo, hi)) in PAPER_TABLE1.items():
+        ours = fig1_results.get(mapping.get(system, ""), None)
+        rep.add(f"table1/{system}", 0.0,
+                paper_qps=paper_qps, paper_latency_ms=f"{lo}-{hi}",
+                our_profile=mapping.get(system, "-"),
+                our_qps=round(ours["qps"], 1) if ours else None,
+                our_p50_req_ms=round(ours["p50_req_ms"], 4)
+                if ours else None)
+    # tier ordering check (execution models, not DBMS brands): specialised
+    # engine > vectorized generic engines (ClickHouse/SparkSQL tier) >
+    # row interpreters (PostgreSQL/MySQL tier) — the paper's Table-1
+    # structure.
+    top = fig1_results["openmldb"]["qps"]
+    mid = max(fig1_results["columnar_scan"]["qps"],
+              fig1_results["microbatch"]["qps"])
+    low = fig1_results["row_interpreter"]["qps"]
+    ok = top > mid > low
+    rep.add("table1/tier_ordering_matches_paper", 0.0, ok=bool(ok),
+            specialised=round(top, 1), vectorized_generic=round(mid, 1),
+            row_interpreter=round(low, 1))
+    return {"ordering_ok": ok}

@@ -1,0 +1,111 @@
+"""Shared benchmark harness: engine construction + workload replay.
+
+Every bench emits rows ``(name, us_per_call, derived)`` where ``derived``
+is a bench-specific dict (qps, p50_ms, ...). ``benchmarks.run`` prints the
+canonical CSV and writes experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.data.synthetic import (EventStreamConfig, generate_events,
+                                  request_stream)
+from repro.featurestore.table import TableSchema
+
+# The paper's workload shape: 100-500 records/batch, 6-12 parallel
+# requests/batch; we default to the midpoint.
+N_EVENTS = 20_000
+N_KEYS = 256
+REQ_BATCH = 256
+N_REQ_BATCHES = 30
+
+FEATURE_SQL = """
+SELECT
+  SUM(amount)  OVER w1 AS amt_sum_10,
+  AVG(amount)  OVER w1 AS amt_avg_10,
+  MAX(amount)  OVER w1 AS amt_max_10,
+  COUNT(amount) OVER w1 AS txn_cnt_10,
+  STD(amount)  OVER w1 AS amt_std_10,
+  AVG(lat)     OVER w2 AS lat_avg_100,
+  AVG(lon)     OVER w2 AS lon_avg_100,
+  MIN(amount)  OVER w2 AS amt_min_100,
+  MAX(amount)  OVER w2 AS amt_max_100,
+  LAST(amount) OVER w1 AS amt_last
+FROM events
+WINDOW w1 AS (PARTITION BY user ORDER BY ts
+              ROWS BETWEEN 10 PRECEDING AND CURRENT ROW),
+       w2 AS (PARTITION BY user ORDER BY ts
+              ROWS BETWEEN 100 PRECEDING AND CURRENT ROW)
+"""
+
+
+def build_engine(flags: OptFlags = OptFlags(), *, n_events: int = N_EVENTS,
+                 n_keys: int = N_KEYS, sql: str = FEATURE_SQL,
+                 capacity: int = 1024, bucket_size: int = 64,
+                 name: str = "bench") -> Tuple[Engine, tuple]:
+    eng = Engine(flags)
+    schema = TableSchema("events", key_col="user", ts_col="ts",
+                         value_cols=("amount", "lat", "lon", "cat",
+                                     "drift", "drift2"))
+    eng.create_table(schema, max_keys=n_keys, capacity=capacity,
+                     bucket_size=bucket_size)
+    data = generate_events(EventStreamConfig(n_events=n_events,
+                                             n_keys=n_keys, n_features=6))
+    keys, ts, rows = data
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    eng.deploy(name, sql)
+    return eng, data
+
+
+def replay(eng: Engine, data, *, deployment: str = "bench",
+           batch: int = REQ_BATCH, n_batches: int = N_REQ_BATCHES,
+           serve: Optional[Callable] = None, warm: bool = True
+           ) -> Dict[str, float]:
+    """Replay the online workload; returns qps + latency percentiles."""
+    keys, ts, _ = data
+    serve = serve or (lambda ks, rts: eng.request(
+        deployment, ks.tolist(), rts.tolist()))
+    if warm:
+        for ks, rts in request_stream(keys, ts, batch=batch, n_batches=1,
+                                      seed=99):
+            serve(ks, rts)
+    lats: List[float] = []
+    n = 0
+    t_start = time.perf_counter()
+    for ks, rts in request_stream(keys, ts, batch=batch,
+                                  n_batches=n_batches):
+        t0 = time.perf_counter()
+        serve(ks, rts)
+        lats.append(time.perf_counter() - t0)
+        n += len(ks)
+    wall = time.perf_counter() - t_start
+    lat = np.asarray(lats)
+    return {
+        "qps": n / wall,
+        "p50_batch_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_batch_ms": float(np.percentile(lat, 99) * 1e3),
+        "p50_req_ms": float(np.percentile(lat, 50) * 1e3 / batch),
+        "n_requests": n,
+        "wall_s": wall,
+    }
+
+
+class Reporter:
+    def __init__(self):
+        self.rows: List[Tuple[str, float, Dict]] = []
+
+    def add(self, name: str, us_per_call: float, **derived):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self) -> str:
+        out = ["name,us_per_call,derived"]
+        for name, us, derived in self.rows:
+            out.append(f"{name},{us:.2f},"
+                       + json.dumps(derived, sort_keys=True).replace(",", ";"))
+        return "\n".join(out)

@@ -1,0 +1,135 @@
+"""Aggregate dry-run cell JSONs into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        --dir experiments/dryrun --md
+
+Reads every ``<arch>__<shape>__<mesh>.json`` produced by launch/dryrun.py
+and emits (a) the §Dry-run compile/memory table, (b) the §Roofline terms
+table (single-pod cells), (c) the hillclimb candidate ranking.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname: str) -> List[Dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}us"
+    if x < 1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def sort_key(c):
+    return (c["arch"], SHAPE_ORDER.index(c["shape"]), c["mesh"])
+
+
+def dryrun_table(cells: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile | args/dev | temp/dev | out/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=sort_key):
+        if c["status"] == "skip":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                        f"SKIP ({c['skip_reason'][:40]}…) | | | | |")
+            continue
+        if c["status"] == "fail":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                        f"FAIL {c.get('error', '')[:60]} | | | | |")
+            continue
+        m = c["memory"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok | "
+            f"{c['compile_s']:.0f}s | {fmt_bytes(m['argument_bytes'])} | "
+            f"{fmt_bytes(m['temp_bytes'])} | {fmt_bytes(m['output_bytes'])} |")
+    return "\n".join(rows)
+
+
+HBM_BW = 819e9
+
+
+def mem_efficiency(c: Dict) -> float:
+    """Ideal bytes (touch every resident argument once, twice for train
+    params+opt which are also written) vs the measured HLO bytes."""
+    args = c["memory"]["argument_bytes"]
+    mult = 2.0 if c["kind"] == "train" else 1.0
+    ideal_s = mult * args / HBM_BW
+    return min(ideal_s / c["memory_s"], 1.0) if c["memory_s"] else 0.0
+
+
+def roofline_table(cells: List[Dict]) -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful | mem-eff | roofline-frac | bound-step |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=sort_key):
+        if c["mesh"] != "pod" or c["status"] != "ok":
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(c['compute_s'])} | "
+            f"{fmt_s(c['memory_s'])} | {fmt_s(c['collective_s'])} | "
+            f"**{c['dominant']}** | {c['useful_flop_ratio']:.3f} | "
+            f"{mem_efficiency(c):.3f} | "
+            f"{c['roofline_frac']:.4f} | {fmt_s(c['step_s_est'])} |")
+    return "\n".join(rows)
+
+
+def candidates(cells: List[Dict]) -> str:
+    ok = [c for c in cells if c["mesh"] == "pod" and c["status"] == "ok"]
+    worst = sorted(ok, key=lambda c: c["roofline_frac"])[:5]
+    coll = sorted(ok, key=lambda c: -(c["collective_s"]
+                                      / max(c["step_s_est"], 1e-12)))[:5]
+    out = ["worst roofline fraction:"]
+    out += [f"  {c['arch']} × {c['shape']}: frac={c['roofline_frac']:.4f} "
+            f"dom={c['dominant']}" for c in worst]
+    out.append("most collective-bound:")
+    out += [f"  {c['arch']} × {c['shape']}: coll share="
+            f"{c['collective_s'] / max(c['step_s_est'], 1e-12):.2f}"
+            for c in coll]
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    cells = load(args.dir)
+    n_ok = sum(1 for c in cells if c["status"] == "ok")
+    n_skip = sum(1 for c in cells if c["status"] == "skip")
+    n_fail = sum(1 for c in cells if c["status"] == "fail")
+    print(f"# cells: {n_ok} ok / {n_skip} skip / {n_fail} fail\n")
+    print("## Dry-run (both meshes)\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(cells))
+    print("\n## Hillclimb candidates\n")
+    print(candidates(cells))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

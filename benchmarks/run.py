@@ -1,0 +1,66 @@
+"""Benchmark driver: one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+
+Prints the canonical ``name,us_per_call,derived`` CSV and writes the full
+results to experiments/bench_results.json. §Paper-validation in
+EXPERIMENTS.md reads from that JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,table1,preagg,eq3,eq4")
+    ap.add_argument("--out", default="experiments/bench_results.json")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks.common import Reporter
+    rep = Reporter()
+    results = {}
+    t0 = time.time()
+
+    def want(name):
+        return only is None or name in only
+
+    fig1_results = None
+    if want("fig1") or want("table1"):
+        from benchmarks import bench_fig1_qps_latency as b1
+        fig1_results = b1.run(rep)
+        results["fig1"] = {k: v for k, v in fig1_results.items()}
+    if want("fig2"):
+        from benchmarks import bench_fig2_ablation as b2
+        results["fig2"] = b2.run(rep)
+    if want("table1") and fig1_results:
+        from benchmarks import bench_table1_systems as b3
+        results["table1"] = b3.run(rep, fig1_results)
+    if want("preagg"):
+        from benchmarks import bench_preagg_scaling as b4
+        results["preagg"] = b4.run(rep)
+    if want("eq3"):
+        from benchmarks import bench_latency_decomposition as b5
+        results["eq3"] = b5.run(rep)
+    if want("eq4"):
+        from benchmarks import bench_parallel_scaling as b6
+        results["eq4"] = b6.run(rep)
+
+    print(rep.emit())
+    print(f"# total bench wall time: {time.time() - t0:.1f}s",
+          file=sys.stderr)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"rows": [(n, u, d) for n, u, d in rep.rows],
+                   "results": results}, f, indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

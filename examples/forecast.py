@@ -1,0 +1,75 @@
+"""Time-series forecasting with window features — the paper's third use
+case: per-key AR(1) drift series, window-aggregate features (RANGE
+windows), ridge forecaster trained offline and served online.
+
+    PYTHONPATH=src python examples/forecast.py
+"""
+import numpy as np
+
+from repro.core import Engine
+from repro.data.synthetic import EventStreamConfig, generate_events
+from repro.featurestore.table import TableSchema
+
+# ---- stream with an AR(1) drift column ------------------------------------
+cfg = EventStreamConfig(n_events=12_000, n_keys=64, n_features=6,
+                        ar_rho=0.9, seed=5)
+keys, ts, rows = generate_events(cfg)
+DRIFT = 4  # column index of the AR(1) series
+
+engine = Engine()
+engine.create_table(
+    TableSchema("series", key_col="k", ts_col="ts",
+                value_cols=("amount", "lat", "lon", "cat", "drift",
+                            "drift2")),
+    max_keys=64, capacity=512, bucket_size=64)
+engine.insert("series", keys.tolist(), ts.tolist(), rows)
+
+# RANGE windows: last 30 and 120 SECONDS (not rows) of signal
+engine.deploy("forecast_features", """
+    SELECT AVG(drift)  OVER recent AS avg_30s,
+           STD(drift)  OVER recent AS std_30s,
+           LAST(drift) OVER recent AS last_val,
+           AVG(drift)  OVER longw  AS avg_120s,
+           COUNT(drift) OVER longw AS n_120s
+    FROM series
+    WINDOW recent AS (PARTITION BY k ORDER BY ts
+                      RANGE BETWEEN 30 PRECEDING AND CURRENT ROW),
+           longw  AS (PARTITION BY k ORDER BY ts
+                      RANGE BETWEEN 120 PRECEDING AND CURRENT ROW)
+""")
+
+# ---- offline: features at each event predict the NEXT drift value ---------
+off = engine.query_offline("forecast_features")
+names = sorted(n for n in off if not n.startswith("__"))
+X = np.stack([off[n] for n in names], -1)
+okey, ots = np.asarray(off["__key"]), np.asarray(off["__ts"])
+
+# target: the key's next drift observation
+idx = np.searchsorted(ts, ots)
+y = np.full(len(idx), np.nan, np.float32)
+for j, (kk, i0) in enumerate(zip(okey, idx)):
+    later = np.where((keys[i0 + 1:] == keys[i0]))[0]
+    if len(later):
+        y[j] = rows[i0 + 1 + later[0], DRIFT]
+m = np.isfinite(y)
+X, y = X[m], y[m]
+
+# ridge regression (closed form)
+mu, sd = X.mean(0), X.std(0) + 1e-6
+Xn = np.c_[(X - mu) / sd, np.ones(len(X))]
+w = np.linalg.solve(Xn.T @ Xn + 1e-3 * np.eye(Xn.shape[1]), Xn.T @ y)
+pred = Xn @ w
+ss_res = np.sum((y - pred) ** 2)
+ss_tot = np.sum((y - y.mean()) ** 2)
+print(f"forecaster trained on {len(y)} rows, R^2 = {1 - ss_res / ss_tot:.3f} "
+      f"(AR(1) rho={cfg.ar_rho} -> persistence is learnable)")
+
+# ---- online: forecast for fresh requests ----------------------------------
+req_keys = list(range(8))
+out = engine.request("forecast_features", req_keys,
+                     [float(ts.max()) + 1.0] * 8)
+F = np.stack([out[n] for n in names], -1)
+fc = np.c_[(F - mu) / sd, np.ones(len(F))] @ w
+for k, f in zip(req_keys, fc):
+    print(f"  key {k}: next-drift forecast {f:+.3f} "
+          f"(last observed {out['last_val'][k]:+.3f})")

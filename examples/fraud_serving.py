@@ -1,0 +1,97 @@
+"""Real-time fraud detection — the paper's flagship use case, end to end:
+
+synthetic transaction stream -> feature store -> offline training features
+-> logistic scorer -> PREDICT() deployed in-query -> dynamic-batched
+serving with latency SLO.
+
+    PYTHONPATH=src python examples/fraud_serving.py
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import (EventStreamConfig, generate_events,
+                                  make_labels)
+from repro.launch.serve import FEATURE_SQL, build_engine
+from repro.serving.batcher import BatcherConfig
+from repro.serving.server import FeatureServer, ServerConfig
+
+N_EVENTS, N_KEYS = 20_000, 256
+
+# ---- offline: features + labels -> train the scorer ----------------------
+engine = build_engine(N_EVENTS, N_KEYS)
+keys, ts, rows = generate_events(
+    EventStreamConfig(n_events=N_EVENTS, n_keys=N_KEYS, n_features=6))
+y_all = make_labels(keys, ts, rows, amount_thresh=35.0, dist_thresh=2.5)
+
+off = engine.query_offline("fraud_features")
+names = sorted(n for n in off if not n.startswith("__"))
+X = np.stack([off[n] for n in names], -1)
+y = y_all[np.searchsorted(ts, np.asarray(off["__ts"]))]
+mu, sd = X.mean(0), X.std(0) + 1e-6
+Xn = (X - mu) / sd
+w = np.zeros(X.shape[1], np.float32)
+b = 0.0
+for _ in range(300):
+    p = 1 / (1 + np.exp(-(Xn @ w + b)))
+    w -= 1.0 * (Xn.T @ (p - y) / len(y)).astype(np.float32)
+    b -= 1.0 * float(np.mean(p - y))
+print(f"trained scorer on {len(y)} point-in-time rows; "
+      f"base rate {y.mean():.3f}, mean score on positives "
+      f"{p[y == 1].mean():.3f} vs negatives {p[y == 0].mean():.3f}")
+
+# ---- deploy PREDICT() over the SAME feature definition --------------------
+def scorer(params, feats):
+    wj, bj = params
+    return 1 / (1 + jnp.exp(-(((feats - mu) / sd) @ wj + bj)))
+
+engine.register_model("fraud", scorer, (jnp.asarray(w), jnp.asarray(b)))
+head, window = FEATURE_SQL.strip().split("FROM events")
+engine.deploy("fraud_scored",
+              head + ", PREDICT(fraud, " + ", ".join(names)
+              + ") AS score FROM events" + window)
+
+# ---- online: dynamic-batched serving with deadline SLO --------------------
+server = FeatureServer(engine, "fraud_scored",
+                       ServerConfig(BatcherConfig(max_batch=64,
+                                                  max_delay_s=0.002)))
+lat = []
+scores = {}
+
+def client(i):
+    t0 = time.perf_counter()
+    try:
+        r = server.request(int(keys[i]), float(ts.max()) + 1 + i,
+                           timeout=60.0)
+    except Exception as e:            # pragma: no cover - report & continue
+        print("request failed:", e)
+        return
+    lat.append(time.perf_counter() - t0)
+    scores[i] = float(r["score"])
+
+# warm every power-of-2 shape bucket so the plan cache hits under load
+for bsz in (1, 2, 4, 8, 16, 32, 64):
+    engine.request("fraud_scored", [int(k) for k in keys[:bsz]],
+                   [float(ts.max()) + 0.5] * bsz)
+threads = [threading.Thread(target=client, args=(i,)) for i in range(256)]
+t0 = time.perf_counter()
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+wall = time.perf_counter() - t0
+server.close()
+
+lat_ms = np.asarray(lat) * 1e3
+print(f"\nserved {len(scores)} concurrent requests in {wall:.3f}s "
+      f"({len(scores) / wall:,.0f} QPS)")
+print(f"client latency p50={np.percentile(lat_ms, 50):.2f}ms "
+      f"p99={np.percentile(lat_ms, 99):.2f}ms "
+      f"(mean batch {server.batcher.mean_batch:.1f})")
+vals = np.asarray(list(scores.values()))
+thresh = np.percentile(vals, 95)      # review the top-5% riskiest
+flagged = int((vals > thresh).sum())
+print(f"flagged {flagged}/{len(scores)} requests for review "
+      f"(score > p95 = {thresh:.4f})")

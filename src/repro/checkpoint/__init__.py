@@ -1,0 +1,5 @@
+from repro.checkpoint.manager import CheckpointManager, CheckpointMeta
+from repro.checkpoint.reshard import restore_resharded, save_unsharded_spec
+
+__all__ = ["CheckpointManager", "CheckpointMeta", "restore_resharded",
+           "save_unsharded_spec"]

@@ -1,0 +1,79 @@
+"""Elastic restore: load a checkpoint onto a *different* mesh.
+
+Checkpoints store full (unsharded) host arrays per leaf (manager.py), so
+resharding is placement-only: given the new mesh and the sharding-rule
+table, every leaf is ``jax.device_put`` with its freshly derived
+NamedSharding. This supports:
+
+* scaling the data axis up/down (elastic DP — e.g. 16x16 -> 8x16 after
+  losing a slice, or onto the 2x16x16 multi-pod mesh);
+* changing the rule table itself (e.g. switching FSDP<->TP between
+  training and serving restores).
+
+For 1000+-node restores you would stream shards instead of full arrays;
+the manifest already records per-leaf shapes so a sharded reader can seek
+exactly its slice of each ``.npy`` (numpy format = header + C-contiguous
+payload). ``leaf_slice_bytes`` below computes those offsets — used by the
+tests to prove the layout supports partial reads.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager, CheckpointMeta
+from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
+                                        param_specs)
+
+__all__ = ["restore_resharded", "save_unsharded_spec", "leaf_slice_bytes"]
+
+
+def restore_resharded(mgr: CheckpointManager, step: Optional[int],
+                      like: Any, mesh: Mesh,
+                      specs: Optional[Any] = None,
+                      rules: ShardingRules = DEFAULT_RULES
+                      ) -> Tuple[Any, CheckpointMeta]:
+    """Restore ``like``-shaped tree and place it sharded on ``mesh``.
+
+    ``specs`` defaults to the standard parameter rules — pass explicit
+    specs for optimizer state or caches.
+    """
+    host_tree, meta = mgr.restore(step, like)
+    if specs is None:
+        specs = param_specs(host_tree, mesh, rules)
+    placed = jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        host_tree, specs,
+        is_leaf=lambda x: not isinstance(x, (dict, tuple, list)))
+    return placed, meta
+
+
+def save_unsharded_spec(tree: Any) -> Dict[str, Any]:
+    """Manifest fragment describing each leaf for sharded readers."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        name = "__".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        out[name] = {"shape": list(np.shape(leaf)),
+                     "dtype": str(np.asarray(leaf).dtype)}
+    return out
+
+
+def leaf_slice_bytes(shape, dtype, axis: int, shard: int, n_shards: int
+                     ) -> Tuple[int, int]:
+    """(offset, length) in bytes of one contiguous shard of a C-contiguous
+    array sharded on ``axis`` — only meaningful when axis == 0 (leading-dim
+    sharding reads are contiguous; others need strided reads)."""
+    if axis != 0:
+        raise ValueError("contiguous partial reads need leading-axis shards")
+    itemsize = np.dtype(dtype).itemsize
+    row = int(np.prod(shape[1:])) * itemsize if len(shape) > 1 else itemsize
+    per = shape[0] // n_shards
+    return shard * per * row, per * row

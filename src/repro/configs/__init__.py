@@ -1,0 +1,7 @@
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, SHAPES,
+                                ShapeSpec, input_specs, reduced, param_count)
+from repro.configs.registry import get_config, list_archs
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "SHAPES", "ShapeSpec",
+           "input_specs", "reduced", "param_count", "get_config",
+           "list_archs"]

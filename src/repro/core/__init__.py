@@ -1,0 +1,19 @@
+"""Core SQL+ML feature-query engine (the paper's contribution).
+
+Public API:
+
+    from repro.core import Engine, OptFlags, parse_sql, QueryBuilder
+"""
+from repro.core.dsl import (QueryBuilder, parse_sql, col, lit, sum_, count_,
+                            avg_, min_, max_, std_, var_, first_, last_)
+from repro.core.engine import Engine, Deployment, EngineStats
+from repro.core.optimizer import OptFlags, TableMeta, optimize
+from repro.core.logical import Query, LogicalPlan
+from repro.core.plan_cache import PlanCache, bucket_batch
+
+__all__ = [
+    "Engine", "Deployment", "EngineStats", "OptFlags", "TableMeta",
+    "optimize", "Query", "LogicalPlan", "PlanCache", "bucket_batch",
+    "QueryBuilder", "parse_sql", "col", "lit", "sum_", "count_", "avg_",
+    "min_", "max_", "std_", "var_", "first_", "last_",
+]

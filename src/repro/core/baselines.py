@@ -1,0 +1,363 @@
+"""Baseline execution models for the paper's system comparison (Table 1).
+
+We cannot ship PostgreSQL/MySQL/SparkSQL/ClickHouse, and the paper's point
+is not those vendors but their *execution models*. Each baseline below is
+the same feature query executed under a different model, on the same data,
+in the same process — isolating exactly the optimizations the paper
+attributes (DESIGN.md §8.2):
+
+* ``row_interpreter``  (PostgreSQL/MySQL class): per-request, per-row
+  interpreted evaluation over host memory; B-tree-style key lookup is a
+  host dict (same as ours), no compilation, no vectorisation, no pre-agg.
+* ``microbatch``       (SparkSQL/Flink class): vectorised columnar compute
+  but requests are processed in fixed micro-batches with a host⇄device
+  round-trip and fresh task dispatch per micro-batch; no pre-aggregation,
+  no request-level shape bucketing.
+* ``columnar_scan``    (ClickHouse class): vectorised, plan-cached columnar
+  execution WITHOUT a per-key time-series index: every request scans all
+  keys' storage and masks on the partition key; no pre-agg.
+* ``openmldb``         our full stack (plan opt + cache + pre-agg +
+  vectorised batch execution).
+
+``make_engine(profile)`` builds a configured engine; ``serve_batch`` runs
+one request batch under the profile's execution model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expr as E
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+
+__all__ = ["PROFILES", "BaselineRunner", "make_engine"]
+
+PROFILES = {
+    "openmldb": dict(kind="engine",
+                     flags=OptFlags(query_opt=True, preagg=True,
+                                    plan_cache=True, vectorized=True,
+                                    assume_latest=True)),
+    "row_interpreter": dict(kind="row"),
+    "microbatch": dict(kind="microbatch", micro=32,
+                       flags=OptFlags(query_opt=True, preagg=False,
+                                      plan_cache=True, vectorized=True,
+                                      assume_latest=False)),
+    # ClickHouse-style: vectorised columnar execution, but no ML-aware
+    # pre-aggregation tier and no online fast path. (A strict no-index
+    # full-scan model also exists — kind="columnar" — but on this 1-core
+    # container it measures the container, not the execution model.)
+    "columnar_scan": dict(kind="engine",
+                          flags=OptFlags(query_opt=True, preagg=False,
+                                         plan_cache=True, vectorized=True,
+                                         assume_latest=False)),
+    "columnar_fullscan": dict(kind="columnar",
+                              flags=OptFlags(query_opt=True, preagg=False,
+                                             plan_cache=True,
+                                             vectorized=True,
+                                             assume_latest=False)),
+}
+
+# Paper Table 1 reference points (queries/sec, latency ms) for reporting.
+PAPER_TABLE1 = {
+    "PostgreSQL": (1800, (85, 120)),
+    "MySQL": (2100, (60, 95)),
+    "SparkSQL": (3500, (50, 80)),
+    "ClickHouse": (8200, (25, 60)),
+    "FlinkSQL": (4200, (20, 40)),
+    "OpenMLDB(paper)": (12500, (1, 5)),
+}
+
+
+def make_engine(profile: str, **engine_kw) -> Engine:
+    p = PROFILES[profile]
+    flags = p.get("flags", OptFlags())
+    return Engine(flags, **engine_kw)
+
+
+@dataclass
+class _RowQuery:
+    """Pre-resolved interpretation state for the row interpreter."""
+
+    outputs: Tuple[Tuple[str, E.Expr], ...]
+    windows: Dict[str, E.WindowSpec]
+    where: Optional[E.Expr]
+
+
+class BaselineRunner:
+    """Runs one deployed query under a baseline execution model."""
+
+    def __init__(self, engine: Engine, deployment: str, profile: str):
+        self.engine = engine
+        self.dep = engine.deployments[deployment]
+        self.profile = profile
+        self.kind = PROFILES[profile]["kind"]
+        self.micro = PROFILES[profile].get("micro", 100)
+        q = self.dep.query
+        self._rowq = _RowQuery(outputs=q.outputs,
+                               windows=dict(q.windows), where=q.where)
+        self._host_cache: Optional[Tuple[np.ndarray, ...]] = None
+
+    # ------------------------------------------------------------- dispatch
+    def serve_batch(self, keys: Sequence, ts: Sequence[float],
+                    rows: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
+        if self.kind == "engine":
+            return self.engine.request(self.dep.name, keys, ts, rows)
+        if self.kind == "microbatch":
+            return self._serve_microbatch(keys, ts, rows)
+        if self.kind == "row":
+            return self._serve_rowwise(keys, ts, rows)
+        if self.kind == "columnar":
+            return self._serve_columnar(keys, ts, rows)
+        raise ValueError(self.kind)
+
+    # ------------------------------------------------- microbatch (SparkSQL)
+    def _serve_microbatch(self, keys, ts, rows) -> Dict[str, np.ndarray]:
+        outs: List[Dict[str, np.ndarray]] = []
+        n = len(keys)
+        for s in range(0, n, self.micro):
+            sl = slice(s, min(s + self.micro, n))
+            # host->device->host round-trip per micro-batch task, exactly
+            # batch-at-a-time task dispatch with no shape bucketing reuse
+            outs.append(self.engine.request(
+                self.dep.name, list(keys[sl]), list(np.asarray(ts)[sl]),
+                None if rows is None else rows[sl]))
+        return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+
+    # ------------------------------------------- row interpreter (MySQL/PG)
+    def _host_arrays(self):
+        # Interpreters read host memory; refresh per batch (tables are
+        # quiescent during the benchmark window).
+        t = self.dep.table
+        return (np.asarray(t.state.values), np.asarray(t.state.ts),
+                np.asarray(t.state.total))
+
+    def _serve_rowwise(self, keys, ts, rows) -> Dict[str, np.ndarray]:
+        table = self.dep.table
+        values, tsbuf, total = self._host_arrays()
+        C = table.capacity
+        schema = table.schema
+        out: Dict[str, List[float]] = {n: [] for n, _ in self._rowq.outputs}
+        for i, key in enumerate(keys):
+            kx = table.key_index(key)
+            # storage timestamps are f32 — compare in the same precision
+            t_req = float(np.float32(ts[i]))
+            tot = int(total[kx])
+            n_ret = min(tot, C)
+            # reconstruct events in position order (index scan)
+            evs: List[Tuple[float, np.ndarray]] = []
+            for p in range(tot - n_ret, tot):
+                s = p % C
+                te = float(tsbuf[kx, s])
+                if te <= t_req:
+                    evs.append((te, values[kx, s]))
+            env_cache: Dict[str, float] = {}
+            for name, ex in self._rowq.outputs:
+                val = self._interp(ex, evs, t_req, schema,
+                                   rows[i] if rows is not None else None)
+                out[name].append(val)
+        return {n: np.asarray(v, np.float32) for n, v in out.items()}
+
+    def _interp(self, e: E.Expr, evs, t_req, schema, req_row) -> float:
+        """Row-at-a-time interpretation (no vectorisation on purpose)."""
+        if isinstance(e, E.Lit):
+            return float(e.value)
+        if isinstance(e, E.Col):
+            if req_row is not None and e.name in schema.value_cols:
+                return float(req_row[schema.col_index(e.name)])
+            if e.name == schema.ts_col:
+                return t_req
+            return 0.0
+        if isinstance(e, E.BinOp):
+            a = self._interp(e.lhs, evs, t_req, schema, req_row)
+            b = self._interp(e.rhs, evs, t_req, schema, req_row)
+            return float({
+                "+": a + b, "-": a - b, "*": a * b,
+                "/": a / b if b else 0.0,
+                ">": a > b, ">=": a >= b, "<": a < b, "<=": a <= b,
+                "==": a == b, "!=": a != b,
+                "and": bool(a) and bool(b), "or": bool(a) or bool(b),
+            }[e.op])
+        if isinstance(e, E.Func):
+            args = [self._interp(a, evs, t_req, schema, req_row)
+                    for a in e.args]
+            fn = {"log": math.log, "log1p": math.log1p, "abs": abs,
+                  "sqrt": math.sqrt, "exp": math.exp,
+                  "neg": lambda x: -x,
+                  "sigmoid": lambda x: 1 / (1 + math.exp(-x)),
+                  "relu": lambda x: max(x, 0.0),
+                  "safe_div": lambda a, b: a / b if b > 0 else 0.0,
+                  }.get(e.name)
+            if fn is None:
+                raise NotImplementedError(f"row interp func {e.name}")
+            return float(fn(*args))
+        if isinstance(e, E.Agg):
+            spec = self._rowq.windows[e.window]
+            if spec.is_rows:
+                win = evs[-spec.rows_preceding:]
+            else:
+                lo = t_req - spec.range_preceding
+                win = [ev for ev in evs if ev[0] >= lo]
+            acc: List[float] = []
+            for te, row in win:
+                if isinstance(e.arg, E.Col):
+                    acc.append(float(row[
+                        self._rowq_schema_idx(e.arg.name)]))
+                elif isinstance(e.arg, E.Lit):
+                    acc.append(float(e.arg.value))
+                else:
+                    acc.append(self._interp_evt(e.arg, te, row))
+            if e.func == E.AggFunc.COUNT:
+                return float(len(acc))
+            if not acc:
+                return 0.0
+            if e.func == E.AggFunc.SUM:
+                s = 0.0
+                for x in acc:    # row-at-a-time on purpose
+                    s += x
+                return s
+            if e.func == E.AggFunc.AVG:
+                return sum(acc) / len(acc)
+            if e.func == E.AggFunc.MIN:
+                return min(acc)
+            if e.func == E.AggFunc.MAX:
+                return max(acc)
+            if e.func in (E.AggFunc.STD, E.AggFunc.VAR):
+                m = sum(acc) / len(acc)
+                v = sum((x - m) ** 2 for x in acc) / len(acc)
+                return math.sqrt(v) if e.func == E.AggFunc.STD else v
+            if e.func == E.AggFunc.FIRST:
+                return acc[0]
+            if e.func == E.AggFunc.LAST:
+                return acc[-1]
+        raise NotImplementedError(type(e).__name__)
+
+    def _rowq_schema_idx(self, name: str) -> int:
+        return self.dep.table.schema.col_index(name)
+
+    def _interp_evt(self, e: E.Expr, te: float, row: np.ndarray) -> float:
+        schema = self.dep.table.schema
+        if isinstance(e, E.Col):
+            if e.name == schema.ts_col:
+                return te
+            return float(row[schema.col_index(e.name)])
+        if isinstance(e, E.Lit):
+            return float(e.value)
+        if isinstance(e, E.BinOp):
+            a = self._interp_evt(e.lhs, te, row)
+            b = self._interp_evt(e.rhs, te, row)
+            return float({"+": a + b, "-": a - b, "*": a * b,
+                          "/": a / b if b else 0.0}[e.op])
+        raise NotImplementedError
+
+    # ------------------------------------------- columnar scan (ClickHouse)
+    def _serve_columnar(self, keys, ts, rows) -> Dict[str, np.ndarray]:
+        """Vectorised full-storage scan: no per-key index, so every request
+        masks over all keys' slots (K·C work instead of C). Requests run in
+        chunks of 16 — a scan engine pipelines queries, it does not
+        materialise one K·C mask per concurrent request."""
+        table = self.dep.table
+        kidx_all = table.key_indices(keys)
+        ts_all = np.asarray(ts, np.float32)
+        fn = self._columnar_fn()
+        outs: List[Dict[str, np.ndarray]] = []
+        CH = 16
+        for s in range(0, len(kidx_all), CH):
+            pad = 0
+            kidx = kidx_all[s:s + CH]
+            ts_arr = ts_all[s:s + CH]
+            if len(kidx) < CH:                 # pad to the compiled shape
+                pad = CH - len(kidx)
+                kidx = np.pad(kidx, (0, pad))
+                ts_arr = np.pad(ts_arr, (0, pad))
+            out = fn(table.state.values, table.state.ts, table.state.total,
+                     jnp.asarray(kidx), jnp.asarray(ts_arr))
+            out = jax.block_until_ready(out)
+            outs.append({k: np.asarray(v)[:CH - pad] for k, v in out.items()})
+        return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+
+    def _columnar_fn(self):
+        if getattr(self, "_col_fn", None) is not None:
+            return self._col_fn
+        rowq = self._rowq
+        schema = self.dep.table.schema
+
+        @jax.jit
+        def fn(values, tsbuf, total, kidx, req_ts):
+            K, C, V = values.shape
+            flat_v = values.reshape(K * C, V)
+            flat_t = tsbuf.reshape(K * C)
+            flat_k = jnp.repeat(jnp.arange(K, dtype=jnp.int32), C)
+            slot = jnp.tile(jnp.arange(C, dtype=jnp.int32), K)
+            head = (total % C)[flat_k]
+            rel = (slot - head) % C
+            p = total[flat_k] - C + rel
+            valid = (p >= 0) & (p < total[flat_k])
+
+            def one(e: E.Expr, kx, t_req):
+                if isinstance(e, E.Lit):
+                    return jnp.float32(e.value)
+                if isinstance(e, E.Col):
+                    return jnp.float32(0.0)
+                if isinstance(e, E.BinOp):
+                    a, b = one(e.lhs, kx, t_req), one(e.rhs, kx, t_req)
+                    return E._BINOPS[e.op](a, b)
+                if isinstance(e, E.Func):
+                    args = [one(a, kx, t_req) for a in e.args]
+                    return E._FUNCS[e.name](*args)
+                if isinstance(e, E.Agg):
+                    spec = rowq.windows[e.window]
+                    m = valid & (flat_k == kx) & (flat_t <= t_req)
+                    if spec.is_rows:
+                        # keep rows with p >= p1 - W (ring positions are
+                        # per-key monotone, so this is the rows window)
+                        p1 = jnp.max(jnp.where(m, p, -1)) + 1
+                        m = m & (p >= p1 - spec.rows_preceding)
+                    else:
+                        m = m & (flat_t >= t_req - spec.range_preceding)
+                    if isinstance(e.arg, E.Col):
+                        x = flat_v[:, schema.col_index(e.arg.name)]
+                    else:
+                        x = jnp.ones_like(flat_t)
+                    mf = m.astype(jnp.float32)
+                    if e.func == E.AggFunc.COUNT:
+                        return jnp.sum(mf)
+                    if e.func == E.AggFunc.SUM:
+                        return jnp.sum(x * mf)
+                    if e.func == E.AggFunc.AVG:
+                        c = jnp.maximum(jnp.sum(mf), 1.0)
+                        return jnp.sum(x * mf) / c
+                    if e.func == E.AggFunc.MIN:
+                        return jnp.min(jnp.where(m, x, 3e38))
+                    if e.func == E.AggFunc.MAX:
+                        return jnp.max(jnp.where(m, x, -3e38))
+                    if e.func in (E.AggFunc.STD, E.AggFunc.VAR):
+                        c = jnp.maximum(jnp.sum(mf), 1.0)
+                        mu = jnp.sum(x * mf) / c
+                        var = jnp.maximum(
+                            jnp.sum(x * x * mf) / c - mu * mu, 0.0)
+                        return (jnp.sqrt(var)
+                                if e.func == E.AggFunc.STD else var)
+                    if e.func in (E.AggFunc.FIRST, E.AggFunc.LAST):
+                        if e.func == E.AggFunc.LAST:
+                            psel = jnp.max(jnp.where(m, p, -1))
+                        else:
+                            psel = jnp.min(jnp.where(m, p, 2 ** 30))
+                        sel = (m & (p == psel)).astype(jnp.float32)
+                        return jnp.sum(x * sel)
+                raise NotImplementedError(type(e).__name__)
+
+            def per_req(kx, t_req):
+                return {n: one(ex, kx, t_req) for n, ex in rowq.outputs}
+
+            return jax.vmap(per_req)(kidx, req_ts)
+
+        self._col_fn = fn
+        return fn

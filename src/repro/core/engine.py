@@ -1,0 +1,304 @@
+"""Engine facade: deploy SQL+ML feature queries, serve them online, run them
+offline — one definition, two execution modes (the paper's core promise).
+
+Hot path anatomy (paper Eq. 3: ``L = L_parse + L_plan + L_exec``):
+
+* ``deploy``  — parse (L_parse) + optimize + lower (L_plan, amortised by the
+  plan cache across deployments and batch buckets);
+* ``request`` — key lookup (host dict), pad to a shape bucket, run the
+  compiled executable (L_exec), unpad.
+
+"Parallel processing" (paper O4) has two forms here: vectorised batch
+execution (TPU-native; default) and a worker-pool mode
+(``flags.parallel_workers > 1``) that reproduces the paper's thread-level
+ablation semantics on CPU.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dsl
+from repro.core.logical import LogicalPlan, Query
+from repro.core.optimizer import OptFlags, TableMeta, optimize
+from repro.core.physical import PhysicalPlan, compile_plan
+from repro.core.plan_cache import PlanCache, bucket_batch
+from repro.featurestore.registry import FeatureRegistry, FeatureSet
+from repro.featurestore.table import Table, TableSchema
+
+__all__ = ["Engine", "Deployment", "EngineStats"]
+
+
+@dataclass
+class EngineStats:
+    """Cumulative latency decomposition (seconds) + counters."""
+
+    parse_s: float = 0.0
+    plan_s: float = 0.0
+    exec_s: float = 0.0
+    n_requests: int = 0
+    n_batches: int = 0
+
+    def snapshot(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class Deployment:
+    name: str
+    query: Query
+    plan: LogicalPlan
+    phys: PhysicalPlan
+    opt_log: List[str]
+    table: Table
+
+
+class Engine:
+    def __init__(self, flags: OptFlags = OptFlags(), *,
+                 max_cache_entries: int = 128):
+        self.flags = flags
+        self.tables: Dict[str, Table] = {}
+        self.models: Dict[str, Callable] = {}
+        self.model_params: Dict[str, object] = {}
+        self.deployments: Dict[str, Deployment] = {}
+        self.registry = FeatureRegistry()
+        self.cache = PlanCache(max_entries=max_cache_entries,
+                               enabled=flags.plan_cache)
+        self.stats = EngineStats()
+        self._pool: Optional[cf.ThreadPoolExecutor] = None
+        if flags.parallel_workers > 1:
+            self._pool = cf.ThreadPoolExecutor(flags.parallel_workers)
+
+    # ------------------------------------------------------------------ DDL
+    def create_table(self, schema: TableSchema, *, max_keys: int = 1024,
+                     capacity: int = 1024, bucket_size: int = 64) -> Table:
+        if schema.name in self.tables:
+            raise ValueError(f"table {schema.name!r} exists")
+        t = Table(schema, max_keys=max_keys, capacity=capacity,
+                  bucket_size=bucket_size, enable_preagg=self.flags.preagg)
+        self.tables[schema.name] = t
+        self.registry.register_schema(schema)
+        return t
+
+    def insert(self, table: str, keys: Sequence, ts: Sequence[float],
+               rows: np.ndarray) -> None:
+        self.tables[table].insert(keys, ts, rows)
+
+    def register_model(self, name: str, fn: Callable,
+                       params: object = None) -> None:
+        """``fn(params, features (B, F) f32) -> (B,) or (B, k)``."""
+        self.models[name] = fn
+        self.model_params[name] = params
+
+    # --------------------------------------------------------------- deploy
+    def deploy(self, name: str, query: Union[str, Query, dsl.QueryBuilder],
+               ) -> Deployment:
+        t0 = time.perf_counter()
+        if isinstance(query, str):
+            q = dsl.parse_sql(query)
+        elif isinstance(query, dsl.QueryBuilder):
+            q = query.build()
+        else:
+            q = query
+        parse_dt = time.perf_counter() - t0
+        self.stats.parse_s += parse_dt
+
+        table = self.tables.get(q.table)
+        if table is None:
+            raise KeyError(f"unknown table {q.table!r}; create_table first")
+        t1 = time.perf_counter()
+        meta = TableMeta(capacity=table.capacity,
+                         bucket_size=table.bucket_size,
+                         n_value_cols=len(table.schema.value_cols),
+                         has_preagg=table.preagg is not None)
+        plan, log = optimize(q.to_logical(), meta, self.flags)
+        phys = compile_plan(plan, table.schema, flags=self.flags,
+                            bucket_size=table.bucket_size,
+                            model_fns=self.models)
+        self.stats.plan_s += time.perf_counter() - t1
+
+        dep = Deployment(name=name, query=q, plan=plan, phys=phys,
+                         opt_log=log, table=table)
+        self.deployments[name] = dep
+        self.registry.register(FeatureSet(name=name, query=q))
+        return dep
+
+    def explain(self, name: str) -> str:
+        dep = self.deployments[name]
+        lines = [f"deployment {name!r} on table {dep.table.schema.name!r}"]
+        lines += [f"  plan: {dep.plan.fingerprint()[:160]}"]
+        lines += [f"  opt : {l}" for l in dep.opt_log]
+        for g in dep.phys.groups:
+            lines.append(f"  window {g.name}: impl={g.impl} "
+                         f"cols={g.plain_cols} fields={g.fields} "
+                         f"aggs={len(g.slots)}")
+        return "\n".join(lines)
+
+    # ------------------------------------------------------ compiled lookup
+    def _compiled(self, dep: Deployment, bucket: int) -> Callable:
+        key = (dep.phys.fingerprint(), bucket, self.flags.assume_latest,
+               dep.name if dep.plan.predict else "")
+        table = dep.table
+
+        def make() -> Callable:
+            executor = dep.phys.executor_for(
+                self.flags.assume_latest)
+            jit_fn = jax.jit(executor)
+            # Warm up: compile for this bucket's shapes now (charged to
+            # L_plan, as the paper charges planning+JIT on first execution).
+            V = len(table.schema.value_cols)
+            dummy = jit_fn(
+                table.state, table.preagg,
+                jnp.zeros((bucket,), jnp.int32),
+                jnp.zeros((bucket,), jnp.float32),
+                jnp.zeros((bucket, V), jnp.float32),
+                self._predict_params(dep))
+            jax.block_until_ready(dummy)
+            return jit_fn
+
+        fn, plan_dt = self.cache.get_or_compile(key, make)
+        self.stats.plan_s += plan_dt
+        return fn
+
+    def _predict_params(self, dep: Deployment):
+        if dep.plan.predict is None:
+            return None
+        return self.model_params.get(dep.plan.predict.model)
+
+    # --------------------------------------------------------------- online
+    def request(self, name: str, keys: Sequence, ts: Sequence[float],
+                rows: Optional[np.ndarray] = None
+                ) -> Dict[str, np.ndarray]:
+        """Serve a batch of online feature requests."""
+        dep = self.deployments[name]
+        table = dep.table
+        B = len(keys)
+        if B == 0:
+            return {n: np.zeros((0,), np.float32)
+                    for n in dep.phys.feature_names}
+        kidx = table.key_indices(keys, create=False)
+        ts_arr = np.asarray(ts, np.float32)
+        V = len(table.schema.value_cols)
+        row_arr = (np.asarray(rows, np.float32) if rows is not None
+                   else np.zeros((B, V), np.float32))
+
+        if self.flags.parallel_workers > 1 and self._pool is not None:
+            return self._request_pooled(dep, kidx, ts_arr, row_arr)
+        if not self.flags.vectorized:
+            return self._request_rowwise(dep, kidx, ts_arr, row_arr)
+        return self._request_batched(dep, kidx, ts_arr, row_arr)
+
+    def _request_batched(self, dep: Deployment, kidx, ts_arr, row_arr
+                         ) -> Dict[str, np.ndarray]:
+        B = len(kidx)
+        bucket = bucket_batch(B)
+        fn = self._compiled(dep, bucket)
+        pad = bucket - B
+        if pad:
+            kidx = np.pad(kidx, (0, pad))
+            ts_arr = np.pad(ts_arr, (0, pad))
+            row_arr = np.pad(row_arr, ((0, pad), (0, 0)))
+        table = dep.table
+        t0 = time.perf_counter()
+        out = fn(table.state, table.preagg, jnp.asarray(kidx),
+                 jnp.asarray(ts_arr), jnp.asarray(row_arr),
+                 self._predict_params(dep))
+        out = jax.block_until_ready(out)
+        self.stats.exec_s += time.perf_counter() - t0
+        self.stats.n_requests += B
+        self.stats.n_batches += 1
+        return {n: np.asarray(a)[:B] for n, a in out.items()}
+
+    def _request_rowwise(self, dep: Deployment, kidx, ts_arr, row_arr
+                         ) -> Dict[str, np.ndarray]:
+        """Paper-faithful per-request execution (ablation: vectorized off)."""
+        outs: List[Dict[str, np.ndarray]] = []
+        for i in range(len(kidx)):
+            outs.append(self._request_batched(
+                dep, kidx[i:i + 1], ts_arr[i:i + 1], row_arr[i:i + 1]))
+        return {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
+
+    def _request_pooled(self, dep: Deployment, kidx, ts_arr, row_arr
+                        ) -> Dict[str, np.ndarray]:
+        """Worker-pool fan-out (paper O4 'parallel processing')."""
+        W = self.flags.parallel_workers
+        n = len(kidx)
+        shard = max(1, (n + W - 1) // W)
+        futs = []
+        for s in range(0, n, shard):
+            sl = slice(s, min(s + shard, n))
+            if self.flags.vectorized:
+                futs.append(self._pool.submit(
+                    self._request_batched, dep, kidx[sl], ts_arr[sl],
+                    row_arr[sl]))
+            else:
+                futs.append(self._pool.submit(
+                    self._request_rowwise, dep, kidx[sl], ts_arr[sl],
+                    row_arr[sl]))
+        outs = [f.result() for f in futs]
+        return {nme: np.concatenate([o[nme] for o in outs])
+                for nme in outs[0]}
+
+    # -------------------------------------------------------------- offline
+    def query_offline(self, name: str, *, batch_size: int = 1024,
+                      point_in_time: bool = True
+                      ) -> Dict[str, np.ndarray]:
+        """Run the deployed query over EVERY retained event (training-set
+        materialisation). Point-in-time: each event sees only history up to
+        its own timestamp — exactly the online semantics, which is the
+        training-serving-skew guarantee."""
+        dep = self.deployments[name]
+        table = dep.table
+        st = table.state
+        totals = np.asarray(st.total)
+        C = table.capacity
+        req_keys: List[int] = []
+        req_slots: List[int] = []
+        for k in range(table.n_keys):
+            tot = int(totals[k])
+            n = min(tot, C)
+            for p in range(tot - n, tot):
+                req_keys.append(k)
+                req_slots.append(p % C)
+        if not req_keys:
+            return {n: np.zeros((0,), np.float32)
+                    for n in dep.phys.feature_names}
+        kidx = np.asarray(req_keys, np.int32)
+        slots = np.asarray(req_slots, np.int32)
+        ts_all = np.asarray(st.ts)[kidx, slots]
+        rows_all = np.asarray(st.values)[kidx, slots]
+
+        saved = self.flags
+        if point_in_time and self.flags.assume_latest:
+            # offline must not assume request-ts is newest
+            self.flags = dataclasses.replace(self.flags, assume_latest=False)
+        try:
+            outs: List[Dict[str, np.ndarray]] = []
+            for s in range(0, len(kidx), batch_size):
+                sl = slice(s, s + batch_size)
+                outs.append(self._request_batched(
+                    dep, kidx[sl], ts_all[sl], rows_all[sl]))
+        finally:
+            self.flags = saved
+        res = {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
+        res["__key"] = kidx
+        res["__ts"] = ts_all
+        return res
+
+    # ---------------------------------------------------------------- stats
+    def latency_decomposition(self) -> Dict[str, float]:
+        s = self.stats
+        return {"parse_s": s.parse_s, "plan_s": s.plan_s, "exec_s": s.exec_s,
+                "n_requests": s.n_requests,
+                "cache_hit_rate": self.cache.stats.hit_rate}
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)

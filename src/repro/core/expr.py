@@ -1,0 +1,304 @@
+"""Expression IR for SQL+ML feature queries.
+
+Two expression layers, mirroring OpenMLDB's planner:
+
+* scalar expressions (``Col``, ``Lit``, ``BinOp``, ``Func``, ``Cast``) that
+  evaluate row-wise over event columns or over already-computed features, and
+* aggregate expressions (``Agg``) that reduce a scalar expression over a
+  named window.
+
+Expressions are immutable, hashable dataclasses so that plans can be
+fingerprinted for the compiled-plan cache (paper §4 "caching") and compared
+structurally by the optimizer's CSE pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "AggFunc",
+    "Agg",
+    "BinOp",
+    "Cast",
+    "Col",
+    "Expr",
+    "Func",
+    "Lit",
+    "WindowSpec",
+    "walk",
+    "children",
+    "replace_children",
+    "collect_columns",
+    "collect_aggs",
+]
+
+
+class AggFunc(enum.Enum):
+    """Window aggregate functions supported by the engine."""
+
+    SUM = "sum"
+    COUNT = "count"
+    AVG = "avg"
+    MIN = "min"
+    MAX = "max"
+    STD = "std"
+    VAR = "var"
+    FIRST = "first"   # oldest event in window
+    LAST = "last"     # newest event in window
+
+    @property
+    def decomposable(self) -> bool:
+        """True if expressible via moment aggregates (pre-agg friendly)."""
+        return self in (AggFunc.SUM, AggFunc.COUNT, AggFunc.AVG, AggFunc.STD,
+                        AggFunc.VAR)
+
+    @property
+    def invertible(self) -> bool:
+        """True if ``F(t) - F(t-W)`` subtraction applies (paper Eq. 2)."""
+        return self in (AggFunc.SUM, AggFunc.COUNT)
+
+
+@dataclass(frozen=True)
+class Expr:
+    """Base class for all expressions."""
+
+    def fingerprint(self) -> str:
+        return repr(self)
+
+
+@dataclass(frozen=True)
+class Col(Expr):
+    name: str
+
+    def __repr__(self) -> str:  # stable fingerprints
+        return f"Col({self.name})"
+
+
+@dataclass(frozen=True)
+class Lit(Expr):
+    value: float
+
+    def __repr__(self) -> str:
+        return f"Lit({self.value!r})"
+
+
+@dataclass(frozen=True)
+class BinOp(Expr):
+    op: str  # + - * / // % > >= < <= == != and or
+    lhs: Expr
+    rhs: Expr
+
+    def __repr__(self) -> str:
+        return f"BinOp({self.op},{self.lhs!r},{self.rhs!r})"
+
+
+@dataclass(frozen=True)
+class Func(Expr):
+    """Scalar function call: log, log1p, abs, sqrt, exp, neg, min2, max2,
+    sigmoid, relu, clip(lo,hi) …"""
+
+    name: str
+    args: Tuple[Expr, ...]
+
+    def __repr__(self) -> str:
+        return f"Func({self.name},{list(self.args)!r})"
+
+
+@dataclass(frozen=True)
+class Cast(Expr):
+    to: str  # "f32" | "i32" | "bool"
+    arg: Expr
+
+    def __repr__(self) -> str:
+        return f"Cast({self.to},{self.arg!r})"
+
+
+@dataclass(frozen=True)
+class WindowSpec:
+    """``WINDOW w AS (PARTITION BY key ORDER BY ts {ROWS|RANGE} BETWEEN
+    <n> PRECEDING AND CURRENT ROW)``.
+
+    ``rows_preceding`` — count-based window of the most recent N events.
+    ``range_preceding`` — time-based window covering ``[t - range, t]``.
+    Exactly one of the two must be set.
+    """
+
+    name: str
+    partition_by: str
+    order_by: str
+    rows_preceding: Optional[int] = None
+    range_preceding: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if (self.rows_preceding is None) == (self.range_preceding is None):
+            raise ValueError(
+                f"window {self.name!r}: exactly one of rows_preceding / "
+                f"range_preceding must be given")
+
+    @property
+    def is_rows(self) -> bool:
+        return self.rows_preceding is not None
+
+    def frame_fingerprint(self) -> str:
+        """Fingerprint of the frame only (ignores the window's name) —
+        used by the window-merge optimizer pass."""
+        return (f"W(p={self.partition_by},o={self.order_by},"
+                f"rows={self.rows_preceding},range={self.range_preceding})")
+
+    def __repr__(self) -> str:
+        return f"{self.frame_fingerprint()}#{self.name}"
+
+
+@dataclass(frozen=True)
+class Agg(Expr):
+    """Aggregate of a scalar expression over a named window."""
+
+    func: AggFunc
+    arg: Expr                  # Lit(1.0) for COUNT(*)
+    window: str                # window name, resolved against the plan's specs
+
+    def __repr__(self) -> str:
+        return f"Agg({self.func.value},{self.arg!r},{self.window})"
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+
+def children(e: Expr) -> Tuple[Expr, ...]:
+    if isinstance(e, BinOp):
+        return (e.lhs, e.rhs)
+    if isinstance(e, Func):
+        return e.args
+    if isinstance(e, Cast):
+        return (e.arg,)
+    if isinstance(e, Agg):
+        return (e.arg,)
+    return ()
+
+
+def replace_children(e: Expr, new: Tuple[Expr, ...]) -> Expr:
+    if isinstance(e, BinOp):
+        return dataclasses.replace(e, lhs=new[0], rhs=new[1])
+    if isinstance(e, Func):
+        return dataclasses.replace(e, args=tuple(new))
+    if isinstance(e, Cast):
+        return dataclasses.replace(e, arg=new[0])
+    if isinstance(e, Agg):
+        return dataclasses.replace(e, arg=new[0])
+    assert not new
+    return e
+
+
+def walk(e: Expr) -> Iterable[Expr]:
+    """Pre-order traversal."""
+    yield e
+    for c in children(e):
+        yield from walk(c)
+
+
+def collect_columns(e: Expr) -> Tuple[str, ...]:
+    seen: Dict[str, None] = {}
+    for node in walk(e):
+        if isinstance(node, Col):
+            seen.setdefault(node.name)
+    return tuple(seen)
+
+
+def collect_aggs(e: Expr) -> Tuple[Agg, ...]:
+    return tuple(n for n in walk(e) if isinstance(n, Agg))
+
+
+# ---------------------------------------------------------------------------
+# Scalar evaluation over a dict of arrays (row-major, broadcastable)
+# ---------------------------------------------------------------------------
+
+_BINOPS: Dict[str, Callable[[Any, Any], Any]] = {
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+    "//": lambda a, b: a // b,
+    "%": lambda a, b: a % b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "and": lambda a, b: jnp.logical_and(a, b),
+    "or": lambda a, b: jnp.logical_or(a, b),
+}
+
+_FUNCS: Dict[str, Callable[..., Any]] = {
+    "log": jnp.log,
+    "log1p": jnp.log1p,
+    "abs": jnp.abs,
+    "sqrt": jnp.sqrt,
+    "exp": jnp.exp,
+    "neg": lambda x: -x,
+    "not": jnp.logical_not,
+    "min2": jnp.minimum,
+    "max2": jnp.maximum,
+    "sigmoid": lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "floor": jnp.floor,
+    "ceil": jnp.ceil,
+    "clip": lambda x, lo, hi: jnp.clip(x, lo, hi),
+    "if": jnp.where,          # if(cond, a, b)
+    # Aggregate-decomposition helpers (optimizer pass O1): guarded against
+    # empty windows (count == 0 -> 0, matching engine empty-window policy).
+    "safe_div": lambda a, b: jnp.where(b > 0, a / jnp.maximum(b, 1e-30), 0.0),
+    "safe_var": lambda sq, s, c: jnp.where(
+        c > 0,
+        jnp.maximum(sq / jnp.maximum(c, 1.0)
+                    - (s / jnp.maximum(c, 1.0)) ** 2, 0.0),
+        0.0),
+    "safe_std": lambda sq, s, c: jnp.sqrt(jnp.where(
+        c > 0,
+        jnp.maximum(sq / jnp.maximum(c, 1.0)
+                    - (s / jnp.maximum(c, 1.0)) ** 2, 0.0),
+        0.0)),
+}
+
+_CASTS = {"f32": jnp.float32, "i32": jnp.int32, "bool": jnp.bool_}
+
+
+def eval_scalar(e: Expr, env: Dict[str, Any]):
+    """Evaluate a scalar expression against ``env`` (column name -> array).
+
+    ``Agg`` nodes must have been replaced with ``Col`` references to
+    materialised aggregate outputs before calling this (the physical planner
+    guarantees that).
+    """
+    if isinstance(e, Col):
+        if e.name not in env:
+            raise KeyError(f"unknown column {e.name!r}; have {sorted(env)}")
+        return env[e.name]
+    if isinstance(e, Lit):
+        return jnp.asarray(e.value, dtype=jnp.float32)
+    if isinstance(e, BinOp):
+        fn = _BINOPS.get(e.op)
+        if fn is None:
+            raise ValueError(f"unknown binop {e.op!r}")
+        return fn(eval_scalar(e.lhs, env), eval_scalar(e.rhs, env))
+    if isinstance(e, Func):
+        fn = _FUNCS.get(e.name)
+        if fn is None:
+            raise ValueError(f"unknown function {e.name!r}")
+        return fn(*(eval_scalar(a, env) for a in e.args))
+    if isinstance(e, Cast):
+        return eval_scalar(e.arg, env).astype(_CASTS[e.to])
+    if isinstance(e, Agg):
+        raise TypeError("Agg node reached scalar evaluation — physical "
+                        "planner must materialise aggregates first")
+    raise TypeError(f"unknown expr node {type(e).__name__}")
+
+
+def scalar_func_names() -> Tuple[str, ...]:
+    return tuple(_FUNCS)

@@ -1,0 +1,164 @@
+"""Logical plan for SQL+ML feature queries.
+
+A query compiles to a small tree of logical operators:
+
+    Scan -> [Filter] -> WindowProject -> [Predict] -> Output
+
+``WindowProject`` is the workhorse: a set of named output expressions over
+request columns and window aggregates (OpenMLDB's "window union" stage).
+``Predict`` embeds an ML model invocation over computed features (the
+paper's PREDICT_CHURN / DETECT_FRAUD style SQL+ML functions).
+
+The logical plan is immutable; optimizer passes rewrite it functionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core import expr as E
+
+__all__ = [
+    "LogicalPlan",
+    "Scan",
+    "Filter",
+    "WindowProject",
+    "Predict",
+    "Query",
+    "validate",
+]
+
+
+@dataclass(frozen=True)
+class Scan:
+    """Scan of one event table; ``columns`` narrowed by column pruning."""
+
+    table: str
+    columns: Tuple[str, ...]  # value columns needed from storage
+
+    def __repr__(self) -> str:
+        return f"Scan({self.table},cols={list(self.columns)})"
+
+
+@dataclass(frozen=True)
+class Filter:
+    """Row-level predicate applied to events before window aggregation
+    (WHERE clause over event columns)."""
+
+    pred: Optional[E.Expr]
+
+    def __repr__(self) -> str:
+        return f"Filter({self.pred!r})"
+
+
+@dataclass(frozen=True)
+class WindowProject:
+    """Named output expressions over request columns + window aggregates.
+
+    ``outputs``   — (name, expr) pairs; exprs may contain Agg nodes.
+    ``windows``   — window name -> WindowSpec.
+    """
+
+    outputs: Tuple[Tuple[str, E.Expr], ...]
+    windows: Tuple[Tuple[str, E.WindowSpec], ...]
+
+    def window_map(self) -> Dict[str, E.WindowSpec]:
+        return dict(self.windows)
+
+    def __repr__(self) -> str:
+        outs = ",".join(f"{n}={e!r}" for n, e in self.outputs)
+        wins = ",".join(f"{n}:{w!r}" for n, w in self.windows)
+        return f"WindowProject([{outs}],windows=[{wins}])"
+
+
+@dataclass(frozen=True)
+class Predict:
+    """ML inference over a subset of the projected features.
+
+    ``model`` names a model registered with the engine;
+    ``features`` are output names from the WindowProject stage;
+    ``output`` is the name of the prediction column.
+    """
+
+    model: str
+    features: Tuple[str, ...]
+    output: str
+
+    def __repr__(self) -> str:
+        return f"Predict({self.model},{list(self.features)}->{self.output})"
+
+
+@dataclass(frozen=True)
+class LogicalPlan:
+    scan: Scan
+    filter: Filter
+    project: WindowProject
+    predict: Optional[Predict] = None
+    # Physical hints attached by the optimizer (not part of SQL semantics).
+    # window name -> "naive" | "preagg"
+    window_impl: Tuple[Tuple[str, str], ...] = field(default=())
+
+    def fingerprint(self) -> str:
+        """Stable structural fingerprint — the plan-cache key component."""
+        return (f"{self.scan!r}|{self.filter!r}|{self.project!r}|"
+                f"{self.predict!r}|{dict(self.window_impl)!r}")
+
+    def with_(self, **kw) -> "LogicalPlan":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class Query:
+    """A parsed-but-unoptimized query (the DSL/SQL front-end output)."""
+
+    table: str
+    outputs: Tuple[Tuple[str, E.Expr], ...]
+    windows: Tuple[Tuple[str, E.WindowSpec], ...]
+    where: Optional[E.Expr] = None
+    predict: Optional[Predict] = None
+
+    def to_logical(self) -> LogicalPlan:
+        # Before optimization, scan conservatively requests every column
+        # referenced anywhere (pruning narrows this later).
+        cols: Dict[str, None] = {}
+        for _, e in self.outputs:
+            for c in E.collect_columns(e):
+                cols.setdefault(c)
+        if self.where is not None:
+            for c in E.collect_columns(self.where):
+                cols.setdefault(c)
+        plan = LogicalPlan(
+            scan=Scan(self.table, tuple(cols)),
+            filter=Filter(self.where),
+            project=WindowProject(self.outputs, self.windows),
+            predict=self.predict,
+        )
+        validate(plan)
+        return plan
+
+
+def validate(plan: LogicalPlan) -> None:
+    """Check window references + predict feature references resolve."""
+    wmap = plan.project.window_map()
+    for name, e in plan.project.outputs:
+        for agg in E.collect_aggs(e):
+            if agg.window not in wmap:
+                raise ValueError(
+                    f"output {name!r} references undefined window "
+                    f"{agg.window!r}; defined: {sorted(wmap)}")
+    if plan.predict is not None:
+        out_names = {n for n, _ in plan.project.outputs}
+        missing = [f for f in plan.predict.features if f not in out_names]
+        if missing:
+            raise ValueError(
+                f"Predict references unknown features {missing}; "
+                f"available: {sorted(out_names)}")
+    # Every window must share the table's partition/order columns — the
+    # storage layer indexes one (key, ts) pair per table.
+    parts = {w.partition_by for _, w in plan.project.windows}
+    orders = {w.order_by for _, w in plan.project.windows}
+    if len(parts) > 1 or len(orders) > 1:
+        raise ValueError(
+            f"all windows in one query must share PARTITION BY / ORDER BY "
+            f"columns (got partitions={sorted(parts)}, orders={sorted(orders)})")

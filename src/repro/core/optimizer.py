@@ -1,0 +1,314 @@
+"""Logical-plan optimizer — the paper's O1 "query/plan optimization" layer.
+
+Pass pipeline (each individually toggleable so the Figure-2 ablation can
+attribute gains):
+
+1.  ``constant_folding``      — fold literal arithmetic.
+2.  ``simplify_filter``       — drop always-true WHERE; detect always-false.
+3.  ``window_merge``          — windows with identical frames collapse into
+                                one (shared scan + fused aggregation).
+4.  ``decompose_aggregates``  — AVG→SUM/COUNT, STD/VAR→moments, so shared
+                                moments are computed once (enables CSE).
+5.  ``cse``                   — deduplicate identical aggregate subtrees.
+6.  ``column_pruning``        — narrow the storage scan to referenced cols.
+7.  ``select_window_impl``    — cost-based choice of naive scan vs
+                                pre-aggregated execution per window (O3).
+
+Passes are pure ``LogicalPlan -> LogicalPlan`` rewrites; ``optimize``
+returns the new plan plus a human-readable rewrite log (surfaced by
+``Engine.explain`` and the benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import expr as E
+from repro.core.logical import (Filter, LogicalPlan, Scan, WindowProject,
+                                validate)
+
+__all__ = ["OptFlags", "TableMeta", "optimize", "estimate_window_cost"]
+
+
+@dataclass(frozen=True)
+class TableMeta:
+    """Catalog info the cost model needs about a storage table."""
+
+    capacity: int
+    bucket_size: int
+    n_value_cols: int
+    has_preagg: bool
+
+
+@dataclass(frozen=True)
+class OptFlags:
+    """Optimization switches (paper Fig. 2 ablation axes)."""
+
+    query_opt: bool = True        # passes 1–6
+    preagg: bool = True           # pass 7 may pick pre-aggregation
+    plan_cache: bool = True       # consumed by the engine, carried here
+    vectorized: bool = True       # engine: batched vs per-row execution
+    assume_latest: bool = True    # engine: online fast path (req_ts is newest)
+    parallel_workers: int = 1     # engine: worker-pool fan-out (paper Fig. 2)
+
+
+# ---------------------------------------------------------------------------
+# Expression rewriting helpers
+# ---------------------------------------------------------------------------
+
+def _rewrite(e: E.Expr, fn: Callable[[E.Expr], E.Expr]) -> E.Expr:
+    """Bottom-up rewrite."""
+    kids = tuple(_rewrite(c, fn) for c in E.children(e))
+    return fn(E.replace_children(e, kids))
+
+
+_FOLDABLE_BIN = {"+", "-", "*", "/", ">", ">=", "<", "<=", "==", "!="}
+_FOLDABLE_FN = {"log", "log1p", "abs", "sqrt", "exp", "neg", "floor", "ceil"}
+
+import math as _math
+
+_PY_BIN = {
+    "+": lambda a, b: a + b, "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b, "/": lambda a, b: a / b if b != 0 else float("inf"),
+    ">": lambda a, b: float(a > b), ">=": lambda a, b: float(a >= b),
+    "<": lambda a, b: float(a < b), "<=": lambda a, b: float(a <= b),
+    "==": lambda a, b: float(a == b), "!=": lambda a, b: float(a != b),
+}
+_PY_FN = {
+    "log": _math.log, "log1p": _math.log1p, "abs": abs,
+    "sqrt": _math.sqrt, "exp": _math.exp, "neg": lambda x: -x,
+    "floor": _math.floor, "ceil": _math.ceil,
+}
+
+
+def _fold(e: E.Expr) -> E.Expr:
+    if (isinstance(e, E.BinOp) and e.op in _FOLDABLE_BIN
+            and isinstance(e.lhs, E.Lit) and isinstance(e.rhs, E.Lit)):
+        try:
+            return E.Lit(float(_PY_BIN[e.op](e.lhs.value, e.rhs.value)))
+        except (ValueError, OverflowError):
+            return e
+    if (isinstance(e, E.Func) and e.name in _FOLDABLE_FN
+            and len(e.args) == 1 and isinstance(e.args[0], E.Lit)):
+        try:
+            return E.Lit(float(_PY_FN[e.name](e.args[0].value)))
+        except (ValueError, OverflowError):
+            return e
+    # algebraic identities
+    if isinstance(e, E.BinOp):
+        if e.op == "+" and isinstance(e.rhs, E.Lit) and e.rhs.value == 0.0:
+            return e.lhs
+        if e.op == "+" and isinstance(e.lhs, E.Lit) and e.lhs.value == 0.0:
+            return e.rhs
+        if e.op == "*" and isinstance(e.rhs, E.Lit) and e.rhs.value == 1.0:
+            return e.lhs
+        if e.op == "*" and isinstance(e.lhs, E.Lit) and e.lhs.value == 1.0:
+            return e.rhs
+        if e.op == "and":
+            if isinstance(e.lhs, E.Lit):
+                return e.rhs if e.lhs.value else E.Lit(0.0)
+            if isinstance(e.rhs, E.Lit):
+                return e.lhs if e.rhs.value else E.Lit(0.0)
+    return e
+
+
+# ---------------------------------------------------------------------------
+# Passes
+# ---------------------------------------------------------------------------
+
+def pass_constant_folding(plan: LogicalPlan, log: List[str]) -> LogicalPlan:
+    n_before = sum(len(list(E.walk(e))) for _, e in plan.project.outputs)
+    outs = tuple((n, _rewrite(e, _fold)) for n, e in plan.project.outputs)
+    pred = (_rewrite(plan.filter.pred, _fold)
+            if plan.filter.pred is not None else None)
+    n_after = sum(len(list(E.walk(e))) for _, e in outs)
+    if n_after < n_before:
+        log.append(f"constant_folding: {n_before - n_after} nodes folded")
+    return plan.with_(project=dataclasses.replace(plan.project, outputs=outs),
+                      filter=Filter(pred))
+
+
+def pass_simplify_filter(plan: LogicalPlan, log: List[str]) -> LogicalPlan:
+    pred = plan.filter.pred
+    if isinstance(pred, E.Lit):
+        if pred.value:
+            log.append("simplify_filter: dropped always-true WHERE")
+            return plan.with_(filter=Filter(None))
+        log.append("simplify_filter: WHERE is always-false (empty windows)")
+    return plan
+
+
+def pass_window_merge(plan: LogicalPlan, log: List[str]) -> LogicalPlan:
+    """Windows with identical frames share one name (one fused scan)."""
+    canon: Dict[str, str] = {}   # frame fingerprint -> canonical window name
+    rename: Dict[str, str] = {}  # old name -> canonical name
+    keep: List[Tuple[str, E.WindowSpec]] = []
+    for name, spec in plan.project.windows:
+        fp = spec.frame_fingerprint()
+        if fp in canon:
+            rename[name] = canon[fp]
+        else:
+            canon[fp] = name
+            keep.append((name, spec))
+    if not rename:
+        return plan
+
+    def fix(e: E.Expr) -> E.Expr:
+        if isinstance(e, E.Agg) and e.window in rename:
+            return dataclasses.replace(e, window=rename[e.window])
+        return e
+
+    outs = tuple((n, _rewrite(e, fix)) for n, e in plan.project.outputs)
+    log.append(f"window_merge: merged {len(rename)} duplicate window(s) "
+               f"({', '.join(f'{a}->{b}' for a, b in rename.items())})")
+    return plan.with_(project=WindowProject(outs, tuple(keep)))
+
+
+def pass_decompose_aggregates(plan: LogicalPlan, log: List[str]) -> LogicalPlan:
+    """AVG(x) -> safe_div(SUM(x), COUNT(x)); STD/VAR -> moment form."""
+    n = [0]
+
+    def fix(e: E.Expr) -> E.Expr:
+        if not isinstance(e, E.Agg):
+            return e
+        if e.func == E.AggFunc.AVG:
+            n[0] += 1
+            return E.Func("safe_div", (
+                E.Agg(E.AggFunc.SUM, e.arg, e.window),
+                E.Agg(E.AggFunc.COUNT, e.arg, e.window)))
+        if e.func in (E.AggFunc.STD, E.AggFunc.VAR):
+            n[0] += 1
+            fname = "safe_std" if e.func == E.AggFunc.STD else "safe_var"
+            sq = E.Agg(E.AggFunc.SUM, E.BinOp("*", e.arg, e.arg), e.window)
+            s = E.Agg(E.AggFunc.SUM, e.arg, e.window)
+            c = E.Agg(E.AggFunc.COUNT, e.arg, e.window)
+            return E.Func(fname, (sq, s, c))
+        return e
+
+    outs = tuple((name, _rewrite(e, fix)) for name, e in plan.project.outputs)
+    if n[0]:
+        log.append(f"decompose_aggregates: {n[0]} compound aggregate(s) "
+                   f"rewritten to shared moments")
+    return plan.with_(project=dataclasses.replace(plan.project, outputs=outs))
+
+
+def pass_cse(plan: LogicalPlan, log: List[str]) -> LogicalPlan:
+    """Count duplicate aggregate subtrees (dedup happens in the physical
+    planner via fingerprint keying; this pass records the win)."""
+    seen: Dict[str, int] = {}
+    for _, e in plan.project.outputs:
+        for agg in E.collect_aggs(e):
+            seen[agg.fingerprint()] = seen.get(agg.fingerprint(), 0) + 1
+    dups = sum(c - 1 for c in seen.values() if c > 1)
+    if dups:
+        log.append(f"cse: {dups} duplicate aggregate(s) shared "
+                   f"({len(seen)} unique)")
+    return plan
+
+
+def pass_column_pruning(plan: LogicalPlan, log: List[str]) -> LogicalPlan:
+    cols: Dict[str, None] = {}
+    for _, e in plan.project.outputs:
+        for c in E.collect_columns(e):
+            cols.setdefault(c)
+    if plan.filter.pred is not None:
+        for c in E.collect_columns(plan.filter.pred):
+            cols.setdefault(c)
+    pruned = tuple(c for c in plan.scan.columns if c in cols)
+    if len(pruned) < len(plan.scan.columns):
+        dropped = set(plan.scan.columns) - set(pruned)
+        log.append(f"column_pruning: dropped {sorted(dropped)}")
+    return plan.with_(scan=Scan(plan.scan.table, pruned))
+
+
+def sumsq_col(arg: E.Expr) -> Optional[str]:
+    """Match the ``x*x`` pattern — maps onto the materialized sumsq tier."""
+    if (isinstance(arg, E.BinOp) and arg.op == "*"
+            and isinstance(arg.lhs, E.Col) and isinstance(arg.rhs, E.Col)
+            and arg.lhs.name == arg.rhs.name):
+        return arg.lhs.name
+    return None
+
+
+def _tiered_arg(a: E.Agg) -> bool:
+    """True if the aggregate can be served from pre-aggregate tiers."""
+    if isinstance(a.arg, E.Col):
+        return True
+    if isinstance(a.arg, E.Lit) and a.func == E.AggFunc.COUNT:
+        return True
+    if a.func == E.AggFunc.SUM and sumsq_col(a.arg) is not None:
+        return True   # SUM(x*x) == the sumsq tier (STD/VAR decomposition)
+    return False
+
+
+def estimate_window_cost(spec: E.WindowSpec, meta: TableMeta, *,
+                         impl: str, n_cols: int,
+                         needs_ts_scan: bool) -> float:
+    """Rough elements-touched cost model (f32 reads per request)."""
+    C, B = meta.capacity, meta.bucket_size
+    nb = C // B
+    if impl == "naive":
+        return C * (n_cols + 1)                   # values + ts
+    ts_cost = C if needs_ts_scan else 0
+    return nb * (n_cols + 1) + 2 * B * n_cols + ts_cost
+
+
+def pass_select_window_impl(plan: LogicalPlan, log: List[str], *,
+                            meta: TableMeta,
+                            flags: OptFlags) -> LogicalPlan:
+    """Cost-based naive-vs-preagg choice per window (paper O3)."""
+    by_window: Dict[str, List[E.Agg]] = {}
+    for _, e in plan.project.outputs:
+        for agg in E.collect_aggs(e):
+            by_window.setdefault(agg.window, []).append(agg)
+    impl: Dict[str, str] = {}
+    for wname, spec in plan.project.windows:
+        aggs = by_window.get(wname, [])
+        reasons = []
+        if not flags.preagg or not meta.has_preagg:
+            reasons.append("preagg disabled")
+        if plan.filter.pred is not None:
+            reasons.append("WHERE filter present (tiers are unfiltered)")
+        if any(a.func in (E.AggFunc.FIRST, E.AggFunc.LAST) for a in aggs):
+            reasons.append("FIRST/LAST need raw scan")
+        if any(not _tiered_arg(a) for a in aggs):
+            reasons.append("derived aggregate argument (no materialized tier)")
+        if spec.is_rows and spec.rows_preceding > meta.capacity - meta.bucket_size:
+            reasons.append("window exceeds pre-agg retention safety margin")
+        if reasons:
+            impl[wname] = "naive"
+            log.append(f"window {wname!r}: naive ({'; '.join(reasons)})")
+            continue
+        n_cols = len({a.arg.name for a in aggs if isinstance(a.arg, E.Col)}) or 1
+        needs_ts = (not spec.is_rows) or (not flags.assume_latest)
+        c_naive = estimate_window_cost(spec, meta, impl="naive",
+                                       n_cols=n_cols, needs_ts_scan=True)
+        c_pre = estimate_window_cost(spec, meta, impl="preagg",
+                                     n_cols=n_cols, needs_ts_scan=needs_ts)
+        chosen = "preagg" if c_pre < c_naive else "naive"
+        impl[wname] = chosen
+        log.append(f"window {wname!r}: {chosen} "
+                   f"(cost naive={c_naive:.0f} preagg={c_pre:.0f})")
+    return plan.with_(window_impl=tuple(sorted(impl.items())))
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def optimize(plan: LogicalPlan, meta: TableMeta,
+             flags: OptFlags = OptFlags()) -> Tuple[LogicalPlan, List[str]]:
+    log: List[str] = []
+    if flags.query_opt:
+        plan = pass_constant_folding(plan, log)
+        plan = pass_simplify_filter(plan, log)
+        plan = pass_window_merge(plan, log)
+        plan = pass_decompose_aggregates(plan, log)
+        plan = pass_cse(plan, log)
+        plan = pass_column_pruning(plan, log)
+    else:
+        log.append("query_opt disabled: plan executed as written")
+    plan = pass_select_window_impl(plan, log, meta=meta, flags=flags)
+    validate(plan)
+    return plan, log

@@ -1,0 +1,295 @@
+"""Physical planning: LogicalPlan → pure JAX executable.
+
+The physical plan materialises every *unique* aggregate once (CSE), groups
+aggregates by window so each window runs ONE fused scan (window merge), and
+lowers each window group through either the naive fused-scan kernel or the
+pre-aggregation kernel as chosen by the optimizer (``plan.window_impl``).
+
+The emitted executor is a pure function
+
+    executor(state, preagg, key_idx, req_ts, req_row, model_params)
+        -> {output_name: (B,) or (B, k) array}
+
+suitable for ``jax.jit`` (the plan cache owns compilation) and for
+``shard_map``/``pjit`` batch sharding in the offline path.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expr as E
+from repro.core.logical import LogicalPlan
+from repro.core.optimizer import OptFlags
+from repro.featurestore.table import PreAggState, TableSchema, TableState
+from repro.kernels import ops
+
+__all__ = ["PhysicalPlan", "compile_plan", "AggSlot", "WindowGroup"]
+
+# Aggregate function -> raw moment fields required from the window kernel.
+_FIELD_OF = {
+    E.AggFunc.SUM: "sum",
+    E.AggFunc.COUNT: "count",
+    E.AggFunc.MIN: "min",
+    E.AggFunc.MAX: "max",
+    E.AggFunc.FIRST: "first",
+    E.AggFunc.LAST: "last",
+    # AVG/STD/VAR survive only if decompose_aggregates was disabled; the
+    # physical layer then derives them from moments itself.
+    E.AggFunc.AVG: "avg",
+    E.AggFunc.STD: "std",
+    E.AggFunc.VAR: "var",
+}
+
+_DERIVED = {E.AggFunc.AVG, E.AggFunc.STD, E.AggFunc.VAR}
+_MOMENTS_FOR = {
+    E.AggFunc.AVG: ("sum", "count"),
+    E.AggFunc.STD: ("sum", "sumsq", "count"),
+    E.AggFunc.VAR: ("sum", "sumsq", "count"),
+}
+
+
+@dataclass(frozen=True)
+class AggSlot:
+    internal: str          # env name of the materialised aggregate
+    func: E.AggFunc
+    arg: E.Expr
+    window: str
+    col_pos: int           # position in the window group's stacked columns
+    field: str = ""        # kernel output field this slot reads
+
+
+@dataclass(frozen=True)
+class WindowGroup:
+    name: str
+    spec: E.WindowSpec
+    impl: str                         # "naive" | "preagg"
+    plain_cols: Tuple[int, ...]       # storage column indices gathered
+    derived_args: Tuple[E.Expr, ...]  # virtual columns (naive impl only)
+    slots: Tuple[AggSlot, ...]
+    fields: Tuple[str, ...]           # kernel fields to materialise
+
+
+@dataclass
+class PhysicalPlan:
+    plan: LogicalPlan
+    groups: Tuple[WindowGroup, ...]
+    outputs: Tuple[Tuple[str, E.Expr], ...]   # aggs replaced by Col refs
+    executor: Callable
+    feature_names: Tuple[str, ...]
+    # assume_latest is a *request-time* property (online fast path vs
+    # point-in-time offline), so the executor is built per mode
+    executor_factory: Optional[Callable] = None
+
+    def executor_for(self, assume_latest: bool) -> Callable:
+        if self.executor_factory is None:
+            return self.executor
+        return self.executor_factory(assume_latest)
+
+    def fingerprint(self) -> str:
+        return self.plan.fingerprint()
+
+
+def _internal_name(agg: E.Agg) -> str:
+    import hashlib
+    h = hashlib.md5(agg.fingerprint().encode()).hexdigest()[:10]
+    return f"__agg_{h}"
+
+
+def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
+                 flags: OptFlags = OptFlags(),
+                 bucket_size: int,
+                 model_fns: Optional[Dict[str, Callable]] = None
+                 ) -> PhysicalPlan:
+    """Lower an optimized logical plan to an executor function."""
+    model_fns = model_fns or {}
+    impl_map = dict(plan.window_impl)
+    wmap = plan.project.window_map()
+
+    # ---- 1. unique aggregates (CSE) -------------------------------------
+    uniq: Dict[str, E.Agg] = {}
+    for _, e in plan.project.outputs:
+        for agg in E.collect_aggs(e):
+            uniq.setdefault(agg.fingerprint(), agg)
+
+    # ---- 2. group by window; assign stacked-column positions ------------
+    groups: List[WindowGroup] = []
+    slot_by_fp: Dict[str, AggSlot] = {}
+    for wname, spec in plan.project.windows:
+        waggs = [a for a in uniq.values() if a.window == wname]
+        if not waggs:
+            continue
+        impl = impl_map.get(wname, "naive")
+        plain: List[int] = []
+        plain_seen: Dict[int, int] = {}
+        derived: List[E.Expr] = []
+        derived_seen: Dict[str, int] = {}
+        slots: List[AggSlot] = []
+        fields: List[str] = []
+        from repro.core.optimizer import sumsq_col
+        for agg in sorted(waggs, key=lambda a: a.fingerprint()):
+            field = _FIELD_OF[agg.func]
+            sq_col = (sumsq_col(agg.arg)
+                      if agg.func == E.AggFunc.SUM else None)
+            if isinstance(agg.arg, E.Col) or (sq_col is not None
+                                              and impl == "preagg"):
+                # plain storage column — SUM(x*x) reads the sumsq tier
+                cname = sq_col if sq_col is not None else agg.arg.name
+                if sq_col is not None:
+                    field = "sumsq"
+                ci = schema.col_index(cname)
+                if ci not in plain_seen:
+                    plain_seen[ci] = len(plain)
+                    plain.append(ci)
+                pos = plain_seen[ci]
+            elif isinstance(agg.arg, E.Lit) and agg.func == E.AggFunc.COUNT:
+                pos = -1   # COUNT(*) — no column needed
+            else:
+                if impl == "preagg":
+                    raise AssertionError(
+                        f"optimizer chose preagg for window {wname!r} with "
+                        f"derived aggregate argument {agg.arg!r}")
+                fp = agg.arg.fingerprint()
+                if fp not in derived_seen:
+                    derived_seen[fp] = len(derived)
+                    derived.append(agg.arg)
+                pos = len(plain_seen) + derived_seen[fp]  # provisional
+            if agg.func in _DERIVED:
+                for m in _MOMENTS_FOR[agg.func]:
+                    if m not in fields:
+                        fields.append(m)
+            elif field not in fields:
+                fields.append(field)
+            slot = AggSlot(internal=_internal_name(agg), func=agg.func,
+                           arg=agg.arg, window=wname, col_pos=pos,
+                           field=field)
+            slots.append(slot)
+            slot_by_fp[agg.fingerprint()] = slot
+        # fix provisional derived positions now that plain count is final
+        n_plain = len(plain)
+        fixed = []
+        for s in slots:
+            if (not isinstance(s.arg, E.Col) and s.col_pos >= 0
+                    and s.arg.fingerprint() in derived_seen):
+                # recompute: derived columns come after all plain ones
+                fp = s.arg.fingerprint()
+                pos = n_plain + derived_seen[fp]
+                s = AggSlot(s.internal, s.func, s.arg, s.window, pos,
+                            s.field)
+            fixed.append(s)
+        groups.append(WindowGroup(
+            name=wname, spec=spec, impl=impl, plain_cols=tuple(plain),
+            derived_args=tuple(derived), slots=tuple(fixed),
+            fields=tuple(fields)))
+
+    # ---- 3. rewrite outputs: Agg -> Col(internal) ------------------------
+    def sub(e: E.Expr) -> E.Expr:
+        if isinstance(e, E.Agg):
+            return E.Col(slot_by_fp[e.fingerprint()].internal)
+        kids = tuple(sub(c) for c in E.children(e))
+        return E.replace_children(e, kids)
+
+    outputs = tuple((n, sub(e)) for n, e in plan.project.outputs)
+    feature_names = tuple(n for n, _ in outputs)
+    filter_pred = plan.filter.pred
+    scan_cols = plan.scan.columns
+    predict = plan.predict
+    ts_col = schema.ts_col
+    groups_t = tuple(groups)
+
+    # ---- 4. the executor --------------------------------------------------
+    # assume_latest is request-time (online fast path vs point-in-time
+    # offline materialisation), so the executor is a factory over it.
+    @functools.lru_cache(maxsize=2)
+    def make_executor(assume_latest: bool) -> Callable:
+     def executor(state: TableState, preagg: Optional[PreAggState],
+                 key_idx: jax.Array, req_ts: jax.Array,
+                 req_row: jax.Array,
+                 model_params: Optional[Dict] = None
+                 ) -> Dict[str, jax.Array]:
+        # event-level environment for WHERE / derived aggregate args
+        def event_env():
+            env = {c: state.values[:, :, schema.col_index(c)]
+                   for c in scan_cols if c in schema.value_cols}
+            env[ts_col] = state.ts
+            return env
+
+        evt_mask = None
+        if filter_pred is not None:
+            evt_mask = E.eval_scalar(filter_pred, event_env())
+            evt_mask = evt_mask.astype(jnp.bool_)
+
+        env: Dict[str, jax.Array] = {}
+        # request-row columns + request timestamp
+        for j, c in enumerate(schema.value_cols):
+            env[c] = req_row[:, j]
+        env[ts_col] = req_ts
+
+        for grp in groups_t:
+            spec = grp.spec
+            kw = dict(rows_preceding=spec.rows_preceding,
+                      range_preceding=spec.range_preceding,
+                      assume_latest=assume_latest)
+            if grp.impl == "preagg":
+                assert preagg is not None
+                idx = jnp.asarray(grp.plain_cols, jnp.int32)
+                raw = ops.preagg_window(
+                    state.values[:, :, idx], state.ts, state.total,
+                    preagg.sum[:, :, idx], preagg.sumsq[:, :, idx],
+                    preagg.min[:, :, idx], preagg.max[:, :, idx],
+                    preagg.count, key_idx, req_ts,
+                    bucket_size=bucket_size,
+                    fields=grp.fields, **kw)
+            else:
+                cols = [state.values[:, :, ci] for ci in grp.plain_cols]
+                if grp.derived_args:
+                    ev = event_env()
+                    cols += [E.eval_scalar(a, ev).astype(jnp.float32)
+                             for a in grp.derived_args]
+                v = (jnp.stack(cols, axis=-1) if cols
+                     else state.values[:, :, :0])
+                raw = ops.window_agg(
+                    v, state.ts, state.total, key_idx, req_ts,
+                    evt_mask=evt_mask, fields=grp.fields, **kw)
+            cnt = raw.get("count")
+            nonempty = (cnt > 0) if cnt is not None else None
+            for s in grp.slots:
+                if s.func == E.AggFunc.COUNT:
+                    env[s.internal] = raw["count"]
+                    continue
+                if s.func in _DERIVED:
+                    c = jnp.maximum(raw["count"], 1.0)
+                    mean = raw["sum"][:, s.col_pos] / c
+                    if s.func == E.AggFunc.AVG:
+                        val = mean
+                    else:
+                        var = jnp.maximum(
+                            raw["sumsq"][:, s.col_pos] / c - mean * mean, 0.0)
+                        val = var if s.func == E.AggFunc.VAR else jnp.sqrt(var)
+                    env[s.internal] = jnp.where(nonempty, val, 0.0)
+                    continue
+                val = raw[s.field or _FIELD_OF[s.func]][:, s.col_pos]
+                if s.func in (E.AggFunc.MIN, E.AggFunc.MAX,
+                              E.AggFunc.FIRST, E.AggFunc.LAST):
+                    val = jnp.where(nonempty, val, 0.0)
+                env[s.internal] = val
+
+        out = {n: E.eval_scalar(e, env) for n, e in outputs}
+        if predict is not None:
+            feats = jnp.stack([out[f] for f in predict.features], axis=-1)
+            fn = model_fns.get(predict.model)
+            if fn is None:
+                raise KeyError(f"model {predict.model!r} not registered")
+            out[predict.output] = fn(model_params, feats.astype(jnp.float32))
+        return out
+
+     return executor
+
+    return PhysicalPlan(plan=plan, groups=groups_t, outputs=outputs,
+                        executor=make_executor(flags.assume_latest),
+                        executor_factory=make_executor,
+                        feature_names=feature_names)

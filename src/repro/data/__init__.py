@@ -1,0 +1,8 @@
+from repro.data.synthetic import (EventStreamConfig, generate_events,
+                                  request_stream, make_labels,
+                                  token_batch_stream)
+from repro.data.pipeline import HostPipeline, PipelineConfig
+
+__all__ = ["EventStreamConfig", "generate_events", "request_stream",
+           "make_labels", "token_batch_stream", "HostPipeline",
+           "PipelineConfig"]

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (ShardingRules, DEFAULT_RULES,
+                                        dp_axes, param_specs, batch_specs,
+                                        cache_specs_tree, opt_specs,
+                                        spec_for_leaf)
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "dp_axes", "param_specs",
+           "batch_specs", "cache_specs_tree", "opt_specs", "spec_for_leaf"]

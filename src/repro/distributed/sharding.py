@@ -1,0 +1,312 @@
+"""Per-architecture sharding rules (DP/FSDP/TP/EP/SP) as declarative tables.
+
+Strategy (DESIGN.md §5):
+
+* ``data`` axis (16): FSDP — every weight's ``d_model``-role dim is sharded
+  over it; activations' batch dim is sharded over ``("pod","data")``.
+* ``model`` axis (16): TP — attention head projections, FFN hidden, expert
+  hidden, and the vocab dim of embedding/lm_head.
+* ``pod`` axis (2, multi-pod only): pure data parallelism (composes with
+  ``data`` for the batch), so cross-pod traffic is gradient all-reduce
+  only — the slice compression in optim/compression.py targets exactly it.
+* EP: the expert dim shards over ``data`` *when divisible* (jamba: 16e/16);
+  otherwise experts keep FSDP+TP on their (d, ff) dims (mixtral 8e,
+  granite 40e — 16 ∤ E).
+* SP: long-context decode (B=1) shards the KV-cache sequence dim over
+  ``data`` instead of the unshardable batch.
+
+Every rule is divisibility-checked against the actual dim size: a mesh
+axis that does not divide the dim is dropped (replicated) rather than
+letting ``jit`` reject the sharding. This is what makes ONE rule table
+serve all 10 architectures (12-head qwen2 and 48-head mixtral included).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "dp_axes", "param_specs",
+           "batch_specs", "cache_specs_tree", "opt_specs", "spec_for_leaf",
+           "named", "tree_named"]
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical-role -> mesh-axis mapping (MaxText-style logical axis rules)."""
+
+    fsdp: Axis = "data"          # weight d_model-role dims
+    tensor: Axis = "model"       # heads / ffn-hidden / vocab dims
+    expert: Axis = "data"        # MoE expert dim (EP), when divisible
+    dp_extra: Axis = "pod"       # extra pure-DP axis when present in mesh
+    seq: Axis = "data"           # SP for unshardable-batch caches
+    # when True, expert dim takes priority over fsdp on expert weights
+    prefer_ep: bool = True
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def dp_axes(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES) -> Axis:
+    """Batch-dim axes: ("pod","data") on multi-pod, ("data",) otherwise."""
+    names = mesh.axis_names
+    out = []
+    if isinstance(rules.dp_extra, str) and rules.dp_extra in names:
+        out.append(rules.dp_extra)
+    for a in (rules.fsdp if isinstance(rules.fsdp, tuple)
+              else (rules.fsdp,)):
+        if a in names:
+            out.append(a)
+    return tuple(out)
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.axis_names else 0
+    n = 1
+    for a in axis:
+        s = mesh.shape[a] if a in mesh.axis_names else 0
+        if s == 0:
+            return 0
+        n *= s
+    return n
+
+
+def _fit(mesh: Mesh, axis: Axis, dim: int) -> Axis:
+    """Return ``axis`` if it exists in the mesh and divides ``dim``."""
+    sz = _axis_size(mesh, axis)
+    if sz <= 1 or dim % sz != 0:
+        return None
+    return axis
+
+
+def _mk(mesh: Mesh, shape: Tuple[int, ...], wanted: Sequence[Axis]) -> P:
+    """Divisibility-checked PartitionSpec; drops duplicate axis uses."""
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, wanted):
+        ax = _fit(mesh, ax, dim)
+        flat = (ax,) if isinstance(ax, str) else (ax or ())
+        if ax is not None and not any(a in used for a in flat):
+            out.append(ax)
+            used.update(flat)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_leaf(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                  rules: ShardingRules = DEFAULT_RULES) -> P:
+    """Sharding rule for one parameter leaf, by name + shape.
+
+    ``path`` is the '/'-joined pytree key path; stacked-layer params carry a
+    leading ``reps`` dim that is never sharded (it is scanned over).
+    """
+    fs, tp, ep = rules.fsdp, rules.tensor, rules.expert
+    nd = len(shape)
+
+    def tail(*axes: Axis) -> P:
+        """Apply ``axes`` to the trailing dims, replicate leading dims."""
+        lead = nd - len(axes)
+        return _mk(mesh, shape, [None] * lead + list(axes))
+
+    # --- embeddings / lm head: (V, d) -> vocab TP + d FSDP
+    if re.search(r"(^|/)(embed|lm_head)$", path):
+        return tail(tp, fs)
+
+    # --- MoE ----------------------------------------------------------------
+    if "/router" in path:
+        return tail(fs, None)                       # (d, E)
+    if "/experts/" in path or "/shared/" in path:
+        # (reps, E, d, ff) for wi/wg; (reps, E, ff, d) for wo
+        is_wo = path.endswith("wo")
+        e_dim = shape[-3]
+        ep_ok = _fit(mesh, ep, e_dim) is not None and rules.prefer_ep
+        if is_wo:
+            return (tail(ep, tp, None) if ep_ok else tail(None, tp, fs))
+        return (tail(ep, None, tp) if ep_ok else tail(None, fs, tp))
+
+    # --- Mamba ---------------------------------------------------------------
+    if path.endswith("in_proj"):
+        return tail(fs, tp)                         # (d, d_proj)
+    if path.endswith("out_proj"):
+        return tail(tp, fs)                         # (d_in, d)
+    if path.endswith("conv_w"):
+        return tail(None, tp)                       # (k, conv_ch)
+    if re.search(r"(A_log|dt_bias|/D|conv_b)$", path):
+        return tail(None)
+
+    # --- attention / MLP matmul weights --------------------------------------
+    if re.search(r"/(wq|wk|wv|wi|wg)(/w)?$", path):
+        return tail(fs, tp)                         # column-parallel
+    if re.search(r"/(wo)(/w)?$", path):
+        return tail(tp, fs)                         # row-parallel
+
+    # --- norms, biases, scalars ----------------------------------------------
+    return _mk(mesh, shape, [None] * nd)
+
+
+def param_specs(params_shape: Any, mesh: Mesh,
+                rules: ShardingRules = DEFAULT_RULES) -> Any:
+    """Pytree of PartitionSpec matching a params (shape-)pytree."""
+
+    def one(path, leaf):
+        return spec_for_leaf(_path_str(path), tuple(leaf.shape), mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_specs(opt_shape: Any, mesh: Mesh,
+              rules: ShardingRules = DEFAULT_RULES) -> Any:
+    """OptState specs: m/v/master shard like params; count replicated."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("count") or leaf.ndim == 0:
+            return P()
+        # strip the leading "m/"|"v/"|"master/" component
+        sub = ps.split("/", 1)[1] if "/" in ps else ps
+        return spec_for_leaf(sub, tuple(leaf.shape), mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+# ---------------------------------------------------------------------------
+# Activation / input / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, kind: str,
+                global_batch: int, rules: ShardingRules = DEFAULT_RULES
+                ) -> Dict[str, P]:
+    """Input shardings for one shape cell. Batch over ("pod","data")."""
+    dp = dp_axes(mesh, rules)
+    dp = _fit(mesh, dp, global_batch)
+    b = dp  # None when batch is unshardable (long_500k B=1)
+    specs: Dict[str, P] = {}
+    if kind == "train":
+        specs["tokens"] = P(b, None)
+        specs["targets"] = P(b, None)
+        if cfg.frontend:
+            specs["embeds"] = P(b, None, None)
+        if cfg.is_encdec:
+            specs["enc_embeds"] = P(b, None, None)
+    elif kind == "prefill":
+        specs["tokens"] = P(b, None)
+        if cfg.frontend:
+            specs["embeds"] = P(b, None, None)
+        if cfg.is_encdec:
+            specs["enc_embeds"] = P(b, None, None)
+    else:  # decode
+        specs["token"] = P(b)
+        specs["position"] = P(b)
+        if cfg.is_encdec:
+            specs["enc_out"] = P(b, None, None)
+    return specs
+
+
+def cache_specs_tree(cache_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                     global_batch: int,
+                     rules: ShardingRules = DEFAULT_RULES) -> Any:
+    """Specs for a stacked KV/SSM cache pytree.
+
+    Leaves are (reps, B, S, Hkv, D) [attn k/v], (reps, B, k-1, conv_ch)
+    [mamba conv], (reps, B, nh, N, P) [mamba ssm]. Batch shards over
+    ("pod","data") when divisible; otherwise the sequence dim (attn) or
+    the heads dim (ssm) shards over ``data`` — sequence parallelism for
+    the long_500k cells.
+    """
+    dp = _fit(mesh, dp_axes(mesh, rules), global_batch)
+
+    def kv_axes(S: int, hkv: int, hd: int):
+        """TP for a KV cache (S_ax, H_ax, D_ax). Shard kv-heads when they
+        divide the tensor axis; otherwise shard the SEQUENCE dim — the
+        split-KV flash-decode layout: the one-position scatter stays
+        local, softmax stats + pv reduction are KB-sized all-reduces.
+        (Replicating the heads makes GSPMD all-gather the whole cache over
+        the model axis every layer: 537 MB/device/layer measured on qwen2
+        decode — EXPERIMENTS.md §Perf iteration 2.)"""
+        if _fit(mesh, rules.tensor, hkv) is not None:
+            return None, rules.tensor, None
+        if _fit(mesh, rules.tensor, S) is not None:
+            return rules.tensor, None, None
+        if _fit(mesh, rules.tensor, hd) is not None:
+            return None, None, rules.tensor
+        return None, None, None
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        sh = tuple(leaf.shape)
+        nd = len(sh)
+        if nd == 5:            # attn kv (reps,B,S,H,D) or ssm (reps,B,nh,N,P)
+            if ps.endswith("ssm"):
+                if dp is not None:
+                    return _mk(mesh, sh, [None, dp, rules.tensor, None, None])
+                return _mk(mesh, sh, [None, None, rules.tensor, None, None])
+            s_ax, h_ax, d_ax = kv_axes(sh[2], sh[3], sh[4])
+            if dp is not None:
+                return _mk(mesh, sh, [None, dp, s_ax, h_ax, d_ax])
+            # B unshardable: sequence takes BOTH axes when possible (SP)
+            return _mk(mesh, sh, [None, None,
+                                  (rules.seq if s_ax is None else
+                                   (rules.seq, s_ax) if isinstance(s_ax, str)
+                                   else rules.seq),
+                                  h_ax, d_ax])
+        if nd == 4:            # unstacked kv (B,S,H,D) / conv (reps,B,k,ch)
+            if ps.endswith("conv"):
+                return _mk(mesh, sh, [None, dp, None, rules.tensor])
+            s_ax, h_ax, d_ax = kv_axes(sh[1], sh[2], sh[3])
+            if dp is not None:
+                return _mk(mesh, sh, [dp, s_ax, h_ax, d_ax])
+            return _mk(mesh, sh, [(rules.seq if s_ax is None else
+                                   (rules.seq, s_ax) if isinstance(s_ax, str)
+                                   else rules.seq),
+                                  h_ax, d_ax])
+        if nd == 3 and ps.endswith("conv"):
+            return _mk(mesh, sh, [dp, None, rules.tensor])
+        return _mk(mesh, sh, [dp] + [None] * (nd - 1))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

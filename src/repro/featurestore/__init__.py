@@ -1,0 +1,6 @@
+from repro.featurestore.table import (Table, TableSchema, TableState,
+                                      PreAggState)
+from repro.featurestore.registry import FeatureRegistry, FeatureSet
+
+__all__ = ["Table", "TableSchema", "TableState", "PreAggState",
+           "FeatureRegistry", "FeatureSet"]

@@ -1,0 +1,118 @@
+"""Pre-aggregate tier maintenance + verification (paper Eq. 2).
+
+The *incremental* maintenance lives in ``featurestore.table.ingest`` (one
+fused scatter pass with the raw ring-buffer update). This module holds the
+non-hot-path companions:
+
+* ``rebuild_preagg``   — recompute the bucketed tier from raw state
+  (checkpoint restore validation, corruption recovery);
+* ``verify_preagg``    — invariant check: every bucket equals the fold of
+  its covered raw slots (property tests + post-restore audit);
+* ``preagg_memory_overhead`` — the paper's materialization cost metric.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.featurestore.table import (NEG_INF, POS_INF, PreAggState,
+                                      TableState, empty_preagg)
+
+__all__ = ["rebuild_preagg", "verify_preagg", "preagg_memory_overhead"]
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_size",))
+def rebuild_preagg(state: TableState, *, bucket_size: int) -> PreAggState:
+    """Recompute the bucketed tier from the raw ring buffers.
+
+    Slot ``c`` of key ``k`` holds the event at global position
+    ``p`` where ``p % C == c`` and ``p ∈ [total-min(total,C), total)``.
+    Bucket slot ``b`` covers raw slots ``[b*B, (b+1)*B)`` *of the ring*;
+    because C % B == 0, ring slots of one bucket always belong to the same
+    global bucket index — so a bucket is valid iff all its covered live
+    positions share that bucket.
+    """
+    K, C, V = state.values.shape
+    B = bucket_size
+    nb = C // B
+    total = state.total                                    # (K,)
+    # global position stored at ring slot c (for key k):
+    # p = total-1 - ((cur-1 - c) % C)  where cur = total % C
+    c_idx = jnp.arange(C, dtype=jnp.int32)[None, :]        # (1, C)
+    cur = (total % C)[:, None]                             # (K, 1)
+    back = (cur - 1 - c_idx) % C
+    p = total[:, None] - 1 - back                          # (K, C) global pos
+    live = (p >= jnp.maximum(total[:, None] - C, 0)) & (p < total[:, None])
+
+    vals = state.values                                    # (K, C, V)
+    w = live[..., None].astype(jnp.float32)
+    grp = vals.reshape(K, nb, B, V)
+    wg = w.reshape(K, nb, B, 1)
+    psum = jnp.sum(grp * wg, axis=2)
+    psumsq = jnp.sum(grp * grp * wg, axis=2)
+    pmin = jnp.min(jnp.where(wg > 0, grp, POS_INF), axis=2)
+    pmax = jnp.max(jnp.where(wg > 0, grp, NEG_INF), axis=2)
+    pcnt = jnp.sum(wg[..., 0], axis=2)
+    return PreAggState(sum=psum, sumsq=psumsq, min=pmin, max=pmax, count=pcnt)
+
+
+def verify_preagg(state: TableState, preagg: PreAggState, *,
+                  bucket_size: int, atol: float = 1e-3) -> Tuple[bool, float]:
+    """Check the live portion of the incremental tier against a rebuild.
+
+    Only buckets that are *fully live* (all B covered positions retained
+    and in the same global bucket) are comparable — partially-overwritten
+    buckets are never read by the query path either (the kernel fetches
+    raw tails for them). Returns (ok, max_abs_err over compared entries).
+    """
+    K, C, V = state.values.shape
+    B = bucket_size
+    nb = C // B
+    ref = rebuild_preagg(state, bucket_size=bucket_size)
+    total = np.asarray(state.total)                       # (K,)
+    errs = [0.0]
+    ok = True
+    got_sum = np.asarray(preagg.sum)
+    ref_sum = np.asarray(ref.sum)
+    got_cnt = np.asarray(preagg.count)
+    ref_cnt = np.asarray(ref.count)
+    for k in range(K):
+        tot = int(total[k])
+        if tot == 0:
+            continue
+        first_live = max(tot - C, 0)
+        for b in range(nb):
+            # bucket slot b currently holds global bucket index g where
+            # g % nb == b; the *live* one is the largest such g < ceil(tot/B)
+            hi_bucket = (tot - 1) // B
+            g = hi_bucket - ((hi_bucket - b) % nb)
+            if g < 0:
+                continue
+            start, end = g * B, (g + 1) * B
+            if start < first_live:
+                continue                                   # partially evicted
+            if end > tot:
+                continue                                   # still filling
+            e = float(np.max(np.abs(got_sum[k, b] - ref_sum[k, b])))
+            e = max(e, float(abs(got_cnt[k, b] - ref_cnt[k, b])))
+            errs.append(e)
+            if e > atol:
+                ok = False
+    return ok, max(errs)
+
+
+def preagg_memory_overhead(state: TableState,
+                           preagg: Optional[PreAggState]) -> float:
+    """Materialization bytes as a fraction of raw storage (paper's
+    caching-cost accounting)."""
+    raw = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+              for x in jax.tree_util.tree_leaves(state))
+    if preagg is None:
+        return 0.0
+    extra = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(preagg))
+    return extra / raw

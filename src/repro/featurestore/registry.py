@@ -1,0 +1,63 @@
+"""Feature registry: one SQL definition, consistent offline + online use.
+
+The registry is the paper's §3.3 "bridging online and offline pipelines":
+a :class:`FeatureSet` couples a table schema with a feature query. The SAME
+optimized plan is executed by the offline batch path (training data) and the
+online request path (serving), which is what eliminates training–serving
+skew. ``tests/test_consistency.py`` asserts bit-equality between the two.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Dict, Optional
+
+from repro.featurestore.table import TableSchema
+
+if TYPE_CHECKING:  # avoid featurestore <-> core import cycle
+    from repro.core.logical import Query
+
+__all__ = ["FeatureSet", "FeatureRegistry"]
+
+
+@dataclass
+class FeatureSet:
+    name: str
+    query: "Query"
+    version: int = 1
+    description: str = ""
+
+    @property
+    def table(self) -> str:
+        return self.query.table
+
+
+@dataclass
+class FeatureRegistry:
+    """Named feature sets + table schemas (the 'feature store' catalogue)."""
+
+    schemas: Dict[str, TableSchema] = field(default_factory=dict)
+    feature_sets: Dict[str, FeatureSet] = field(default_factory=dict)
+
+    def register_schema(self, schema: TableSchema) -> None:
+        if schema.name in self.schemas:
+            raise ValueError(f"schema {schema.name!r} already registered")
+        self.schemas[schema.name] = schema
+
+    def register(self, fs: FeatureSet) -> None:
+        if fs.table not in self.schemas:
+            raise ValueError(
+                f"feature set {fs.name!r} references unknown table "
+                f"{fs.table!r}; register its schema first")
+        prev = self.feature_sets.get(fs.name)
+        if prev is not None and prev.version >= fs.version:
+            raise ValueError(
+                f"feature set {fs.name!r} v{fs.version} does not supersede "
+                f"registered v{prev.version}")
+        self.feature_sets[fs.name] = fs
+
+    def get(self, name: str) -> FeatureSet:
+        try:
+            return self.feature_sets[name]
+        except KeyError:
+            raise KeyError(f"unknown feature set {name!r}; registered: "
+                           f"{sorted(self.feature_sets)}") from None

@@ -1,0 +1,269 @@
+"""In-memory time-series event storage: per-key ring buffers + pre-aggregates.
+
+OpenMLDB stores events in a per-key skiplist ordered by timestamp. On TPU we
+adapt that to **dense preallocated ring buffers** (DESIGN.md §2): a table is
+
+    values : (K, C, V) float32   — V value columns for K keys, capacity C
+    ts     : (K, C)    float32   — event timestamps (ingest order == ts order)
+    total  : (K,)      int32     — monotone count of events ever ingested
+
+Event ``p`` (the p-th event of a key, 0-based, over all time) lives at slot
+``p % C``; retained events are ``p ∈ [max(0, total-C), total)``. This gives
+O(1) append, free eviction, contiguous window scans, and a fixed shape that
+`jit`/`shard_map` can carry.
+
+Pre-aggregation (paper Eq. 2) is a second tier of **bucketed partial
+aggregates**: bucket ``b`` covers positions ``[b·B, (b+1)·B)`` and is stored
+at slot ``b % NB`` where ``NB = C // B``. A window ``[p0, p1)`` is then
+`sum(full buckets) + head partial + tail partial`, turning O(W) scans into
+O(W/B + 2B) — the TPU-native form of OpenMLDB's ``F(t) − F(t−W)``.
+
+All state is a pytree; ingest is a jitted pure function. The host-side
+``Table`` wrapper owns the key→index dict (hash lookups stay on CPU in
+OpenMLDB too) and re-dispatches into the jitted kernels.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TableSchema", "TableState", "PreAggState", "Table",
+           "empty_state", "empty_preagg", "ingest", "NEG_INF", "POS_INF"]
+
+NEG_INF = jnp.float32(-3.0e38)
+POS_INF = jnp.float32(3.0e38)
+
+
+@dataclass(frozen=True)
+class TableSchema:
+    name: str
+    key_col: str
+    ts_col: str
+    value_cols: Tuple[str, ...]
+
+    def col_index(self, col: str) -> int:
+        try:
+            return self.value_cols.index(col)
+        except ValueError:
+            raise KeyError(
+                f"table {self.name!r} has no value column {col!r}; "
+                f"columns: {list(self.value_cols)}") from None
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TableState:
+    """Device-resident ring-buffer storage (pytree)."""
+
+    values: jax.Array  # (K, C, V) f32
+    ts: jax.Array      # (K, C) f32
+    total: jax.Array   # (K,) i32
+
+    @property
+    def capacity(self) -> int:
+        return self.ts.shape[1]
+
+    @property
+    def max_keys(self) -> int:
+        return self.ts.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PreAggState:
+    """Bucketed partial aggregates (pytree). ``NB = C // bucket_size``."""
+
+    sum: jax.Array     # (K, NB, V) f32
+    sumsq: jax.Array   # (K, NB, V) f32
+    min: jax.Array     # (K, NB, V) f32
+    max: jax.Array     # (K, NB, V) f32
+    count: jax.Array   # (K, NB)    f32  (filtered count support)
+
+    @property
+    def n_buckets(self) -> int:
+        return self.count.shape[1]
+
+
+def empty_state(max_keys: int, capacity: int, n_cols: int) -> TableState:
+    return TableState(
+        values=jnp.zeros((max_keys, capacity, n_cols), jnp.float32),
+        ts=jnp.full((max_keys, capacity), NEG_INF, jnp.float32),
+        total=jnp.zeros((max_keys,), jnp.int32),
+    )
+
+
+def empty_preagg(max_keys: int, capacity: int, n_cols: int,
+                 bucket_size: int) -> PreAggState:
+    if capacity % bucket_size != 0:
+        raise ValueError(f"capacity {capacity} must be a multiple of "
+                         f"bucket_size {bucket_size}")
+    nb = capacity // bucket_size
+    return PreAggState(
+        sum=jnp.zeros((max_keys, nb, n_cols), jnp.float32),
+        sumsq=jnp.zeros((max_keys, nb, n_cols), jnp.float32),
+        min=jnp.full((max_keys, nb, n_cols), POS_INF, jnp.float32),
+        max=jnp.full((max_keys, nb, n_cols), NEG_INF, jnp.float32),
+        count=jnp.zeros((max_keys, nb), jnp.float32),
+    )
+
+
+def _batch_seq_numbers(key_idx: jax.Array) -> jax.Array:
+    """seq[i] = #{j < i : key[j] == key[i]} — per-key arrival rank inside one
+    ingest batch. O(B²) elementwise, fine for B ≤ a few thousand."""
+    b = key_idx.shape[0]
+    same = key_idx[:, None] == key_idx[None, :]
+    lower = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
+    return jnp.sum(same & lower, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_size",), donate_argnums=(0, 1))
+def ingest(state: TableState, preagg: Optional[PreAggState],
+           key_idx: jax.Array, ts: jax.Array, vals: jax.Array,
+           *, bucket_size: int = 0) -> Tuple[TableState, Optional[PreAggState]]:
+    """Append a batch of events. ``key_idx (B,) i32``, ``ts (B,) f32``,
+    ``vals (B, V) f32``. Events must arrive in non-decreasing ts order per
+    key (streaming ingest). Batch size must be ≤ capacity.
+
+    Maintains the raw ring buffer and (if ``preagg`` given) the bucketed
+    pre-aggregate tier in one fused scatter pass.
+    """
+    C = state.capacity
+    seq = _batch_seq_numbers(key_idx)
+    pos = state.total[key_idx] + seq             # global position p, (B,)
+    slot = pos % C
+
+    values = state.values.at[key_idx, slot].set(vals)
+    tsbuf = state.ts.at[key_idx, slot].set(ts)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(key_idx), key_idx, num_segments=state.max_keys)
+    total = state.total + counts.astype(jnp.int32)
+    new_state = TableState(values=values, ts=tsbuf, total=total)
+
+    if preagg is None:
+        return new_state, None
+
+    B = bucket_size
+    nb = preagg.n_buckets
+    bslot = (pos // B) % nb
+    is_bucket_start = (pos % B) == 0
+    # Reset slots whose bucket (re)starts in this batch, then accumulate.
+    # Non-start rows are redirected to an out-of-bounds key index; JAX
+    # scatter updates DROP out-of-bounds writes, giving a masked scatter
+    # with no duplicate-order hazards (two bucket-start rows can never
+    # target the same slot within one ≤capacity batch).
+    k_rst = jnp.where(is_bucket_start, key_idx,
+                      jnp.int32(state.max_keys))
+    sum_t = preagg.sum.at[k_rst, bslot].set(0.0)
+    sumsq_t = preagg.sumsq.at[k_rst, bslot].set(0.0)
+    min_t = preagg.min.at[k_rst, bslot].set(POS_INF)
+    max_t = preagg.max.at[k_rst, bslot].set(NEG_INF)
+    cnt_t = preagg.count.at[k_rst, bslot].set(0.0)
+
+    sum_t = sum_t.at[key_idx, bslot].add(vals)
+    sumsq_t = sumsq_t.at[key_idx, bslot].add(vals * vals)
+    min_t = min_t.at[key_idx, bslot].min(vals)
+    max_t = max_t.at[key_idx, bslot].max(vals)
+    cnt_t = cnt_t.at[key_idx, bslot].add(1.0)
+    new_preagg = PreAggState(sum=sum_t, sumsq=sumsq_t, min=min_t,
+                             max=max_t, count=cnt_t)
+    return new_state, new_preagg
+
+
+class Table:
+    """Host-side table wrapper: schema + key dictionary + device state.
+
+    The key→dense-index map is a host hash table (as in OpenMLDB, key lookup
+    happens CPU-side); all window math runs on device over dense indices.
+    """
+
+    def __init__(self, schema: TableSchema, *, max_keys: int = 1024,
+                 capacity: int = 1024, bucket_size: int = 64,
+                 enable_preagg: bool = True):
+        if capacity % bucket_size != 0:
+            raise ValueError("capacity must be a multiple of bucket_size")
+        self.schema = schema
+        self.max_keys = max_keys
+        self.capacity = capacity
+        self.bucket_size = bucket_size
+        self.key_to_idx: Dict[object, int] = {}
+        self.state = empty_state(max_keys, capacity, len(schema.value_cols))
+        self.preagg: Optional[PreAggState] = (
+            empty_preagg(max_keys, capacity, len(schema.value_cols),
+                         bucket_size) if enable_preagg else None)
+        self._last_ts: Dict[int, float] = {}
+
+    # -- key management ----------------------------------------------------
+    def key_index(self, key, create: bool = False) -> int:
+        idx = self.key_to_idx.get(key)
+        if idx is None:
+            if not create:
+                raise KeyError(f"unknown key {key!r} in table "
+                               f"{self.schema.name!r}")
+            idx = len(self.key_to_idx)
+            if idx >= self.max_keys:
+                raise RuntimeError(
+                    f"table {self.schema.name!r} key space exhausted "
+                    f"({self.max_keys}); resize via Table(max_keys=...)")
+            self.key_to_idx[key] = idx
+        return idx
+
+    def key_indices(self, keys: Sequence, create: bool = False) -> np.ndarray:
+        return np.asarray([self.key_index(k, create) for k in keys],
+                          dtype=np.int32)
+
+    @property
+    def n_keys(self) -> int:
+        return len(self.key_to_idx)
+
+    # -- ingest ------------------------------------------------------------
+    def insert(self, keys: Sequence, ts: Sequence[float],
+               rows: np.ndarray) -> None:
+        """Append events. ``rows`` is (B, V) in schema column order. Events
+        must be in non-decreasing ts order per key."""
+        keys = list(keys)
+        ts_arr = np.asarray(ts, np.float32)
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim != 2 or rows.shape[1] != len(self.schema.value_cols):
+            raise ValueError(
+                f"rows must be (B, {len(self.schema.value_cols)}), got "
+                f"{rows.shape}")
+        if len(keys) != len(ts_arr) or len(keys) != rows.shape[0]:
+            raise ValueError("keys/ts/rows length mismatch")
+        if rows.shape[0] > self.capacity:
+            # Keep per-batch position spans below capacity (ring safety).
+            for s in range(0, rows.shape[0], self.capacity):
+                self.insert(keys[s:s + self.capacity],
+                            ts_arr[s:s + self.capacity],
+                            rows[s:s + self.capacity])
+            return
+        kidx = self.key_indices(keys, create=True)
+        for i, k in enumerate(kidx):
+            last = self._last_ts.get(int(k), float("-inf"))
+            t = float(ts_arr[i])
+            if t < last:
+                raise ValueError(
+                    f"out-of-order ingest for key index {int(k)}: "
+                    f"{t} < {last} (streaming tables require per-key "
+                    f"non-decreasing timestamps)")
+            self._last_ts[int(k)] = t
+        self.state, self.preagg = ingest(
+            self.state, self.preagg, jnp.asarray(kidx),
+            jnp.asarray(ts_arr), jnp.asarray(rows),
+            bucket_size=self.bucket_size)
+
+    # -- introspection -----------------------------------------------------
+    def column_indices(self, cols: Sequence[str]) -> Tuple[int, ...]:
+        return tuple(self.schema.col_index(c) for c in cols)
+
+    def memory_bytes(self) -> int:
+        n = sum(int(np.prod(x.shape)) * 4
+                for x in jax.tree_util.tree_leaves(self.state))
+        if self.preagg is not None:
+            n += sum(int(np.prod(x.shape)) * 4
+                     for x in jax.tree_util.tree_leaves(self.preagg))
+        return n

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
+``ops.py`` (jit'd wrappers with platform dispatch), ``ref.py`` (pure-jnp
+oracles). Kernels are validated on CPU via ``interpret=True`` against the
+oracles (tests/test_kernels.py sweeps shapes/dtypes).
+
+Kernels:
+    window_agg       — fused multi-aggregate sliding-window scan (engine)
+    preagg_window    — bucketed pre-aggregate window lookup, DMA partials
+    flash_attention  — causal/SWA GQA flash attention (train/prefill)
+    decode_attention — grouped-head KV-cache decode attention (serving)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+Decode is memory-bound: each new token must stream the whole (length-long)
+KV cache once. The kernel groups the ``rep = Hq/Hkv`` query heads that
+share one KV head into a single (rep, D) block so every KV byte fetched
+from HBM feeds ``rep`` query heads (GQA's arithmetic-intensity win), and
+iterates KV blocks with an online-softmax accumulator.
+
+Grid: (B, Hkv, S/bk). Cache blocks past ``lengths[b]`` (and before the
+sliding window) are skipped with ``pl.when``.
+
+Blocks: q (1, 1, rep, D) — q reshaped (B, Hkv, rep, D); k/v (1, bk, 1, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+__all__ = ["decode_attention_pallas"]
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, window: Optional[int], bk: int, n_kb: int,
+            rep: int, ring: bool, S: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = len_ref[b]      # prefix mode: #valid; ring mode: abs position
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_lo = j * bk
+    if ring:
+        run = jnp.bool_(True)      # every ring block may hold live entries
+    else:
+        run = k_lo < length
+        if window is not None:
+            run = jnp.logical_and(run, k_lo + bk - 1 >= length - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (rep, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (rep, bk)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (rep, bk), 1)
+        if ring:
+            # ring slot s holds absolute position pos - ((pos - s) mod S)
+            pos = length
+            ap = pos - jax.lax.rem(pos - kpos + S * (pos // S + 1), S)
+            mask = ap >= 0
+            if window is not None:
+                mask &= ap > pos - window
+        else:
+            mask = kpos < length
+            if window is not None:
+                mask &= kpos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kb - 1)
+    def _finalize():
+        l = l_ref[...]
+        l_safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, lengths: jax.Array, *,
+                            window: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            block_k: int = 256,
+                            ring: bool = False,
+                            interpret: bool = False) -> jax.Array:
+    """q (B, Hq, D); caches (B, S, Hkv, D); lengths (B,) -> (B, Hq, D).
+
+    ``ring=True``: rolling-ring cache (SWA serving); ``lengths`` carries
+    the absolute position, masking follows the ring layout (see ref).
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    if Hq % Hkv != 0:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    rep = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_k, S)
+    if S % bk:
+        raise ValueError(f"cache length {S} must divide block_k {bk}")
+    n_kb = S // bk
+    qg = q.reshape(B, Hkv, rep, D)
+
+    grid = (B, Hkv, n_kb)
+    kern = functools.partial(_kernel, scale=scale, window=window, bk=bk,
+                             n_kb=n_kb, rep=rep, ring=ring, S=S)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, D), lambda b, h, j, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, bk, 1, D), lambda b, h, j, lens: (b, j, h, 0)),
+                pl.BlockSpec((1, bk, 1, D), lambda b, h, j, lens: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, D),
+                                   lambda b, h, j, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, D), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, Hq, D)

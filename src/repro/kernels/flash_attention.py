@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: causal GQA flash attention (train/prefill path).
+
+Standard IO-aware attention (FlashAttention re-tiled for TPU): the
+(Sq, Sk) score matrix is never materialised in HBM; blocks of Q stream
+against blocks of K/V held in VMEM with an online-softmax accumulator in
+f32 scratch. GQA is handled by indexing the KV head as ``h // rep`` in the
+BlockSpec index maps — no repeat-materialisation of KV.
+
+Grid: (B, Hq, Sq/bq, Sk/bk), K-blocks innermost (accumulation order).
+Causal + sliding-window blocks that are fully masked are skipped via
+``pl.when`` (they still appear in the grid — TPU grids are static — but do
+zero work).
+
+Blocks (MXU-aligned): q (1, bq, 1, D) · k/v (1, bk, 1, D); default
+bq = bk = 128, D is the head dim (64/80/96/128 for the assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+__all__ = ["flash_attention_pallas"]
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            bq: int, bk: int, n_kb: int, q_offset: int):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    i = pl.program_id(2)
+    # global positions; queries are right-aligned when Sq < Sk
+    q_lo = i * bq + q_offset
+    k_lo = j * bk
+
+    # block-level skip: fully-masked (causal/window) blocks do no work
+    run = True
+    if causal:
+        run = jnp.logical_and(run, k_lo <= q_lo + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kb - 1)
+    def _finalize():
+        l = l_ref[...]
+        l_safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q (B, Sq, Hq, D); k/v (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if Hq % Hkv != 0:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    rep = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        raise ValueError(f"seq lens ({Sq},{Sk}) must divide blocks ({bq},{bk})")
+    n_kb = Sk // bk
+    q_offset = Sk - Sq   # right-aligned queries (prefill continuation)
+
+    grid = (B, Hq, Sq // bq, n_kb)
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kb=n_kb, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, i, j, rep=rep: (b, j, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, i, j, rep=rep: (b, j, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,147 @@
+"""Jit-ready kernel entry points with platform dispatch.
+
+Each op has a Pallas TPU kernel (``repro.kernels.<name>``) and a pure-jnp
+oracle (``repro.kernels.ref``). Dispatch order:
+
+* explicit override via ``set_backend("pallas"|"ref"|"auto")``
+* "auto": Pallas on TPU backends, reference elsewhere (this container is
+  CPU-only, so CI exercises the Pallas kernels through ``interpret=True``
+  in the kernel test-suite, and the reference path everywhere else).
+
+The ops are *functionally identical* across backends — the kernel tests
+sweep shapes/dtypes asserting allclose against ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+__all__ = ["window_agg", "preagg_window", "flash_attention",
+           "decode_attention", "set_backend", "get_backend"]
+
+_BACKEND = "auto"
+_VALID = ("auto", "pallas", "ref")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _use_pallas(interpret_ok: bool = False) -> bool:
+    if _BACKEND == "pallas":
+        return True
+    if _BACKEND == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Feature-engine ops
+# ---------------------------------------------------------------------------
+
+def window_agg(values: jax.Array, ts: jax.Array, total: jax.Array,
+               req_key: jax.Array, req_ts: jax.Array, *,
+               rows_preceding: Optional[int] = None,
+               range_preceding: Optional[float] = None,
+               evt_mask: Optional[jax.Array] = None,
+               assume_latest: bool = False,
+               fields: Optional[Tuple[str, ...]] = None,
+               interpret: bool = False) -> Dict[str, jax.Array]:
+    """Fused multi-aggregate sliding-window scan (naive path)."""
+    if _use_pallas() or interpret:
+        from repro.kernels import window_agg as k
+        return k.window_agg_pallas(
+            values, ts, total, req_key, req_ts,
+            rows_preceding=rows_preceding, range_preceding=range_preceding,
+            evt_mask=evt_mask, assume_latest=assume_latest, fields=fields,
+            interpret=interpret)
+    return ref.window_agg_ref(
+        values, ts, total, req_key, req_ts,
+        rows_preceding=rows_preceding, range_preceding=range_preceding,
+        evt_mask=evt_mask, assume_latest=assume_latest, fields=fields)
+
+
+def preagg_window(values: jax.Array, ts: jax.Array, total: jax.Array,
+                  pa_sum: jax.Array, pa_sumsq: jax.Array, pa_min: jax.Array,
+                  pa_max: jax.Array, pa_count: jax.Array,
+                  req_key: jax.Array, req_ts: jax.Array, *,
+                  bucket_size: int,
+                  rows_preceding: Optional[int] = None,
+                  range_preceding: Optional[float] = None,
+                  assume_latest: bool = False,
+                  fields: Optional[Tuple[str, ...]] = None,
+                  interpret: bool = False) -> Dict[str, jax.Array]:
+    """Pre-aggregated window lookup (paper Eq. 2 path)."""
+    if _use_pallas() or interpret:
+        from repro.kernels import preagg_window as k
+        return k.preagg_window_pallas(
+            values, ts, total, pa_sum, pa_sumsq, pa_min, pa_max, pa_count,
+            req_key, req_ts, bucket_size=bucket_size,
+            rows_preceding=rows_preceding, range_preceding=range_preceding,
+            assume_latest=assume_latest, fields=fields, interpret=interpret)
+    return ref.preagg_window_ref(
+        values, ts, total, pa_sum, pa_sumsq, pa_min, pa_max, pa_count,
+        req_key, req_ts, bucket_size=bucket_size,
+        rows_preceding=rows_preceding, range_preceding=range_preceding,
+        assume_latest=assume_latest, fields=fields)
+
+
+# ---------------------------------------------------------------------------
+# Model-side attention ops
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_k: int = 0, unroll: bool = False,
+                    interpret: bool = False) -> jax.Array:
+    """Causal (optionally sliding-window) GQA attention.
+
+    q (B, Sq, Hq, D); k/v (B, Sk, Hkv, D) -> (B, Sq, Hq, D).
+
+    ``block_k > 0`` selects the streaming online-softmax form on the
+    non-Pallas path (flash algorithm in XLA ops — no S² materialisation);
+    ``unroll=True`` additionally unrolls the KV-block loop so dry-run cost
+    analysis counts every block.
+    """
+    if _use_pallas() or interpret:
+        from repro.kernels import flash_attention as kmod
+        return kmod.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            interpret=interpret)
+    if block_k and k.shape[1] > block_k:
+        return ref.flash_attention_xla(q, k, v, causal=causal,
+                                       window=window, scale=scale,
+                                       block_k=block_k, unroll=unroll)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, window: Optional[int] = None,
+                     scale: Optional[float] = None, ring: bool = False,
+                     interpret: bool = False) -> jax.Array:
+    """Single-token GQA decode vs a KV cache.
+
+    q (B, Hq, D); caches (B, S, Hkv, D); lengths (B,) -> (B, Hq, D).
+    ``ring=True``: rolling-ring layout; lengths = absolute positions.
+    """
+    if _use_pallas() or interpret:
+        from repro.kernels import decode_attention as kmod
+        return kmod.decode_attention_pallas(
+            q, k_cache, v_cache, lengths, window=window, scale=scale,
+            ring=ring, interpret=interpret)
+    return ref.decode_attention_ref(q, k_cache, v_cache, lengths,
+                                    window=window, scale=scale, ring=ring)

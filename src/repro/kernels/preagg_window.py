@@ -1,0 +1,226 @@
+"""Pallas TPU kernel: pre-aggregated window lookup (paper Eq. 2).
+
+The bandwidth story is the whole point: the naive kernel streams the
+request's entire ``(C, V)`` ring block from HBM; this kernel reads only
+
+* the bucketed partial-aggregate tiers ``(NB, V)`` (NB = C/bucket ≪ C),
+* two ``(bucket, V)`` raw slabs for the head/tail partial corrections,
+* optionally the ``(C,)`` timestamp column (RANGE windows / point-in-time).
+
+Raw values therefore stay in HBM (``pl.ANY`` memory space); the kernel
+issues two dynamic-start ``make_async_copy`` DMAs for exactly the two
+bucket-aligned slabs the window's partial edges touch (ring wraparound
+cannot split a slab because capacity % bucket == 0 — see featurestore).
+
+Positions: window [p0, p1) = head partial [p0, b0·B) + full buckets
+[b0, b1) + tail partial [b1·B, p1); head slab is bucket b0−1, tail slab is
+bucket b1 (b0 ≤ b1+1 always holds).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -3.0e38
+POS_INF = 3.0e38
+
+_ALL_FIELDS = ("sum", "sumsq", "count", "min", "max")
+
+__all__ = ["preagg_window_pallas"]
+
+
+def _kernel(req_key_ref, tot_ref, rts_ref,             # scalar prefetch
+            values_hbm, ts_ref, pa_sum_ref, pa_sumsq_ref, pa_min_ref,
+            pa_max_ref, pa_cnt_ref,
+            *rest,
+            fields: Tuple[str, ...], C: int, V: int, NB: int, BSZ: int,
+            rows_preceding: Optional[int],
+            range_preceding: Optional[float],
+            assume_latest: bool, needs_ts: bool):
+    n_out = len(fields)
+    out_refs = rest[:n_out]
+    slab, sem = rest[n_out], rest[n_out + 1]
+
+    i = pl.program_id(0)
+    key = req_key_ref[i]
+    tot = tot_ref[i]
+    t_req = rts_ref[i]
+
+    # ---- window interval [p0, p1) -------------------------------------
+    if needs_ts:
+        tsb = ts_ref[0][:, None]                          # (C, 1)
+        slots = jax.lax.broadcasted_iota(jnp.int32, (C, 1), 0)
+        head = tot % C
+        rel = jax.lax.rem(slots - head + C, C)
+        p = tot - C + rel
+        valid = (p >= 0) & (p < tot)
+        if assume_latest:
+            p1 = tot
+        else:
+            p1 = tot - jnp.sum((valid & (tsb > t_req)).astype(jnp.int32))
+        if rows_preceding is not None:
+            p0 = p1 - jnp.int32(rows_preceding)
+        else:
+            in_rng = valid & (tsb >= t_req - range_preceding) & (tsb <= t_req)
+            p0 = p1 - jnp.sum(in_rng.astype(jnp.int32))
+    else:
+        p1 = tot
+        p0 = p1 - jnp.int32(rows_preceding)
+    p0 = jnp.maximum(jnp.maximum(p0, 0), tot - C)
+
+    b0 = (p0 + BSZ - 1) // BSZ
+    b1 = p1 // BSZ
+    has_buckets = b0 <= b1
+
+    # ---- DMA the two bucket-aligned raw slabs from HBM ------------------
+    hb = jnp.maximum(b0 - 1, 0)               # head slab bucket index
+    h_slot = (hb * BSZ) % C
+    t_slot = (b1 * BSZ) % C
+    cp_h = pltpu.make_async_copy(
+        values_hbm.at[key, pl.ds(h_slot, BSZ), :], slab.at[0], sem.at[0])
+    cp_t = pltpu.make_async_copy(
+        values_hbm.at[key, pl.ds(t_slot, BSZ), :], slab.at[1], sem.at[1])
+    cp_h.start()
+    cp_t.start()
+
+    # ---- full buckets (overlap with the DMAs) ---------------------------
+    b_head = jnp.maximum(tot - 1, 0) // BSZ
+    s = jax.lax.broadcasted_iota(jnp.int32, (NB, 1), 0)
+    b_of_s = b_head - jax.lax.rem(b_head - s + NB * (1 + C // BSZ), NB)
+    bmask = has_buckets & (b_of_s >= b0) & (b_of_s < b1)   # (NB, 1)
+    bmf = bmask.astype(jnp.float32)
+
+    acc: Dict[str, jax.Array] = {}
+    if "sum" in fields:
+        acc["sum"] = jnp.sum(pa_sum_ref[0] * bmf, axis=0)
+    if "sumsq" in fields:
+        acc["sumsq"] = jnp.sum(pa_sumsq_ref[0] * bmf, axis=0)
+    if "count" in fields:
+        acc["count"] = jnp.sum(pa_cnt_ref[0][:, None] * bmf)
+    if "min" in fields:
+        acc["min"] = jnp.min(jnp.where(bmask, pa_min_ref[0], POS_INF), axis=0)
+    if "max" in fields:
+        acc["max"] = jnp.max(jnp.where(bmask, pa_max_ref[0], NEG_INF), axis=0)
+
+    cp_h.wait()
+    cp_t.wait()
+
+    # ---- partial corrections from the slabs ------------------------------
+    ii = jax.lax.broadcasted_iota(jnp.int32, (BSZ, 1), 0)
+    # head slab rows are positions hb·BSZ + ii, in-window [p0, head_end)
+    head_end = jnp.where(has_buckets, b0 * BSZ, p1)
+    hp = hb * BSZ + ii
+    hm = (hp >= p0) & (hp < head_end)
+    # tail slab rows are positions b1·BSZ + ii, in-window [tail_start, p1)
+    tail_start = jnp.maximum(b1 * BSZ, p0)
+    tp = b1 * BSZ + ii
+    tm = has_buckets & (tp >= tail_start) & (tp < p1)
+
+    hv, tv = slab[0], slab[1]                    # (BSZ, V)
+    hmf, tmf = hm.astype(jnp.float32), tm.astype(jnp.float32)
+    o = 0
+    for f in fields:
+        if f == "sum":
+            val = acc["sum"] + jnp.sum(hv * hmf, axis=0) \
+                + jnp.sum(tv * tmf, axis=0)
+            out_refs[o][0, :] = val
+        elif f == "sumsq":
+            val = acc["sumsq"] + jnp.sum(hv * hv * hmf, axis=0) \
+                + jnp.sum(tv * tv * tmf, axis=0)
+            out_refs[o][0, :] = val
+        elif f == "count":
+            out_refs[o][0, 0] = acc["count"] + jnp.sum(hmf) + jnp.sum(tmf)
+        elif f == "min":
+            val = jnp.minimum(jnp.min(jnp.where(hm, hv, POS_INF), axis=0),
+                              jnp.min(jnp.where(tm, tv, POS_INF), axis=0))
+            out_refs[o][0, :] = jnp.minimum(acc["min"], val)
+        elif f == "max":
+            val = jnp.maximum(jnp.max(jnp.where(hm, hv, NEG_INF), axis=0),
+                              jnp.max(jnp.where(tm, tv, NEG_INF), axis=0))
+            out_refs[o][0, :] = jnp.maximum(acc["max"], val)
+        o += 1
+
+
+def preagg_window_pallas(values: jax.Array, ts: jax.Array, total: jax.Array,
+                         pa_sum: jax.Array, pa_sumsq: jax.Array,
+                         pa_min: jax.Array, pa_max: jax.Array,
+                         pa_count: jax.Array,
+                         req_key: jax.Array, req_ts: jax.Array, *,
+                         bucket_size: int,
+                         rows_preceding: Optional[int] = None,
+                         range_preceding: Optional[float] = None,
+                         assume_latest: bool = False,
+                         fields: Optional[Tuple[str, ...]] = None,
+                         interpret: bool = False) -> Dict[str, jax.Array]:
+    """Pallas implementation of :func:`repro.kernels.ref.preagg_window_ref`."""
+    fields = tuple(fields) if fields else _ALL_FIELDS
+    fields = tuple(f for f in _ALL_FIELDS if f in fields)
+    K, C, V = values.shape
+    NB = pa_count.shape[1]
+    BSZ = bucket_size
+    B = req_key.shape[0]
+    if C % BSZ != 0 or NB != C // BSZ:
+        raise ValueError(f"capacity {C} / bucket {BSZ} / NB {NB} mismatch")
+    tot_req = total[req_key].astype(jnp.int32)
+    req_ts = req_ts.astype(jnp.float32)
+    needs_ts = (rows_preceding is None) or (not assume_latest)
+
+    def key3(i, k, t, r):
+        return (k[i], 0, 0)
+
+    def key2(i, k, t, r):
+        return (k[i], 0)
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pl.ANY),                 # values in HBM
+        (pl.BlockSpec((1, C), key2) if needs_ts
+         else pl.BlockSpec((1, 1), lambda i, k, t, r: (0, 0))),
+        pl.BlockSpec((1, NB, V), key3),                    # pa_sum
+        pl.BlockSpec((1, NB, V), key3),                    # pa_sumsq
+        pl.BlockSpec((1, NB, V), key3),                    # pa_min
+        pl.BlockSpec((1, NB, V), key3),                    # pa_max
+        pl.BlockSpec((1, NB), key2),                       # pa_count
+    ]
+    ts_in = (ts.astype(jnp.float32) if needs_ts
+             else jnp.zeros((1, 1), jnp.float32))
+
+    out_specs, out_shapes = [], []
+    for f in fields:
+        w = 1 if f == "count" else V
+        out_specs.append(pl.BlockSpec((1, w), lambda i, k, t, r: (i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((B, w), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((2, BSZ, V), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    kern = functools.partial(
+        _kernel, fields=fields, C=C, V=V, NB=NB, BSZ=BSZ,
+        rows_preceding=rows_preceding, range_preceding=range_preceding,
+        assume_latest=assume_latest, needs_ts=needs_ts)
+    outs = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=tuple(out_shapes),
+        interpret=interpret,
+    )(req_key.astype(jnp.int32), tot_req, req_ts,
+      values.astype(jnp.float32), ts_in,
+      pa_sum.astype(jnp.float32), pa_sumsq.astype(jnp.float32),
+      pa_min.astype(jnp.float32), pa_max.astype(jnp.float32),
+      pa_count.astype(jnp.float32))
+
+    res: Dict[str, jax.Array] = {}
+    for f, a in zip(fields, outs):
+        res[f] = a[:, 0] if f == "count" else a
+    return res

@@ -1,0 +1,396 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path).
+
+Positional model (see featurestore.table): event ``p`` of a key lives at ring
+slot ``p % C``; retained events are ``p ∈ [max(0, total−C), total)``. For a
+request at time ``t`` the window is a position interval ``[p0, p1)`` with
+``p1 = P_t = #{events with ts ≤ t}`` and
+
+* ROWS  W : ``p0 = P_t − W``
+* RANGE R : ``p0 = first p with ts[p] ≥ t − R``
+
+Both clamped to retention. All aggregates reduce over that interval.
+
+``window_agg_ref``   — naive fused multi-aggregate scan, O(C) per request.
+``preagg_window_ref`` — bucketed pre-aggregation path (paper Eq. 2), reading
+                        O(NB + 2·bucket) instead of O(C·V).
+``decode_attention_ref`` / ``flash_attention_ref`` — model-side oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-3.0e38)
+POS_INF = jnp.float32(3.0e38)
+_BIG_I32 = jnp.int32(2**30)
+
+__all__ = ["window_agg_ref", "preagg_window_ref", "derive_features",
+            "window_bounds", "flash_attention_ref", "flash_attention_xla",
+            "decode_attention_ref"]
+
+
+def _positions(ts: jax.Array, total: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-slot global positions + validity for gathered rings.
+
+    ts (B, C); total (B,). Returns p (B, C) i32, valid (B, C) bool.
+    """
+    B, C = ts.shape
+    slots = jnp.arange(C, dtype=jnp.int32)[None, :]
+    head = (total % C)[:, None].astype(jnp.int32)
+    rel = (slots - head) % C
+    p = total[:, None].astype(jnp.int32) - C + rel
+    valid = (p >= 0) & (p < total[:, None])
+    return p, valid
+
+
+def window_bounds(ts_rows: jax.Array, total_rows: jax.Array,
+                  req_ts: jax.Array, *, rows_preceding: Optional[int],
+                  range_preceding: Optional[float],
+                  assume_latest: bool = False
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Window position interval [p0, p1) per request.
+
+    ts_rows (B, C) gathered ring timestamps; total_rows (B,); req_ts (B,).
+    ``assume_latest``: online fast path — req_ts ≥ every ingested ts of the
+    key, so ``P_t = total`` without scanning timestamps (beyond-paper opt).
+    """
+    total_rows = total_rows.astype(jnp.int32)
+    C = ts_rows.shape[1]
+    if assume_latest and rows_preceding is not None:
+        p1 = total_rows
+        p0 = jnp.maximum(p1 - jnp.int32(rows_preceding), 0)
+        p0 = jnp.maximum(p0, total_rows - C)
+        return p0, p1
+    p, valid = _positions(ts_rows, total_rows)
+    if assume_latest:
+        p1 = total_rows
+    else:
+        after = valid & (ts_rows > req_ts[:, None])
+        p1 = total_rows - jnp.sum(after, axis=1).astype(jnp.int32)
+    if rows_preceding is not None:
+        p0 = p1 - jnp.int32(rows_preceding)
+    else:
+        in_range = (valid & (ts_rows >= (req_ts - range_preceding)[:, None])
+                    & (ts_rows <= req_ts[:, None]))
+        p0 = p1 - jnp.sum(in_range, axis=1).astype(jnp.int32)
+    p0 = jnp.maximum(jnp.maximum(p0, 0), total_rows - C)
+    return p0, p1
+
+
+def window_agg_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
+                   req_key: jax.Array, req_ts: jax.Array, *,
+                   rows_preceding: Optional[int] = None,
+                   range_preceding: Optional[float] = None,
+                   evt_mask: Optional[jax.Array] = None,
+                   assume_latest: bool = False,
+                   fields: Optional[Tuple[str, ...]] = None
+                   ) -> Dict[str, jax.Array]:
+    """Naive fused multi-aggregate sliding window.
+
+    values (K, C, V), ts (K, C), total (K,), req_key (B,), req_ts (B,),
+    evt_mask optional (K, C) event-level WHERE mask. ``fields`` restricts
+    which aggregates are materialised (None = all).
+
+    Returns dict: sum/sumsq/min/max/first/last (B, V), count (B,).
+    """
+    fields = fields or ("sum", "sumsq", "count", "min", "max", "first",
+                        "last")
+    v = values[req_key]            # (B, C, V)
+    t = ts[req_key]                # (B, C)
+    tot = total[req_key]           # (B,)
+    p, valid = _positions(t, tot)
+    p0, p1 = window_bounds(t, tot, req_ts,
+                           rows_preceding=rows_preceding,
+                           range_preceding=range_preceding,
+                           assume_latest=assume_latest)
+    win = valid & (p >= p0[:, None]) & (p < p1[:, None])
+    if evt_mask is not None:
+        win = win & evt_mask[req_key]
+    winf = win[:, :, None].astype(jnp.float32)
+
+    out: Dict[str, jax.Array] = {}
+    if "sum" in fields:
+        out["sum"] = jnp.sum(v * winf, axis=1)
+    if "sumsq" in fields:
+        out["sumsq"] = jnp.sum(v * v * winf, axis=1)
+    if "count" in fields:
+        out["count"] = jnp.sum(win, axis=1).astype(jnp.float32)
+    if "min" in fields:
+        out["min"] = jnp.min(jnp.where(win[:, :, None], v, POS_INF), axis=1)
+    if "max" in fields:
+        out["max"] = jnp.max(jnp.where(win[:, :, None], v, NEG_INF), axis=1)
+    if "first" in fields or "last" in fields:
+        # first/last: events at min/max position inside the window.
+        # Empty window -> 0.0 (SQL NULL has no tensor representation).
+        nonempty = jnp.any(win, axis=1)[:, None].astype(jnp.float32)
+        p_first = jnp.where(win, p, _BIG_I32)
+        p_last = jnp.where(win, p, -1)
+        idx_first = jnp.argmin(p_first, axis=1)
+        idx_last = jnp.argmax(p_last, axis=1)
+        if "first" in fields:
+            out["first"] = jnp.take_along_axis(
+                v, idx_first[:, None, None], axis=1)[:, 0, :] * nonempty
+        if "last" in fields:
+            out["last"] = jnp.take_along_axis(
+                v, idx_last[:, None, None], axis=1)[:, 0, :] * nonempty
+    return out
+
+
+def preagg_window_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
+                      pa_sum: jax.Array, pa_sumsq: jax.Array,
+                      pa_min: jax.Array, pa_max: jax.Array,
+                      pa_count: jax.Array,
+                      req_key: jax.Array, req_ts: jax.Array, *,
+                      bucket_size: int,
+                      rows_preceding: Optional[int] = None,
+                      range_preceding: Optional[float] = None,
+                      assume_latest: bool = False,
+                      fields: Optional[Tuple[str, ...]] = None
+                      ) -> Dict[str, jax.Array]:
+    """Bucketed pre-aggregation window (paper Eq. 2, TPU form).
+
+    window [p0,p1) = head partial [p0, b0·B) + full buckets [b0, b1)
+    + tail partial [b1·B, p1), with b0 = ceil(p0/B), b1 = floor(p1/B).
+    Exactness requires window span ≤ capacity − bucket_size (DESIGN.md §2).
+
+    Returns dict: sum/sumsq/min/max (B, V), count (B,).
+    """
+    fields = fields or ("sum", "sumsq", "count", "min", "max")
+    B_, C = ts.shape[0], ts.shape[1]
+    Bsz = bucket_size
+    nb = pa_count.shape[1]
+    t = ts[req_key]
+    tot = total[req_key].astype(jnp.int32)
+    p0, p1 = window_bounds(t, tot, req_ts,
+                           rows_preceding=rows_preceding,
+                           range_preceding=range_preceding,
+                           assume_latest=assume_latest)
+    b0 = (p0 + Bsz - 1) // Bsz
+    b1 = p1 // Bsz
+    has_buckets = b0 <= b1
+
+    # -- full buckets: slot s holds bucket index b(s) = b_head − ((b_head−s) mod NB)
+    b_head = jnp.maximum(tot - 1, 0) // Bsz              # (B,)
+    s = jnp.arange(nb, dtype=jnp.int32)[None, :]          # (1, NB)
+    b_of_s = b_head[:, None] - ((b_head[:, None] - s) % nb)
+    bmask = (has_buckets[:, None] & (b_of_s >= b0[:, None])
+             & (b_of_s < b1[:, None]))                    # (B, NB)
+    bmf = bmask[:, :, None].astype(jnp.float32)
+    g = lambda a: a[req_key]                              # (B, NB, ...) gather
+
+    # -- raw partials: head [p0, min(b0·B, p1)) and tail [b1·B, p1) (only
+    #    when buckets exist; otherwise the head interval covers everything).
+    head_end = jnp.where(has_buckets, b0 * Bsz, p1)
+    tail_start = jnp.where(has_buckets, b1 * Bsz, p1)   # empty when no buckets
+
+    def partial(start, end):
+        i = jnp.arange(Bsz, dtype=jnp.int32)[None, :]     # span ≤ bucket
+        pp = start[:, None] + i                           # (B, Bsz)
+        m = pp < end[:, None]
+        slot = pp % C
+        vv = jnp.take_along_axis(values[req_key], slot[:, :, None], axis=1)
+        mf = m[:, :, None].astype(jnp.float32)
+        res = {}
+        if "sum" in fields:
+            res["sum"] = jnp.sum(vv * mf, axis=1)
+        if "sumsq" in fields:
+            res["sumsq"] = jnp.sum(vv * vv * mf, axis=1)
+        if "count" in fields:
+            res["count"] = jnp.sum(m, axis=1).astype(jnp.float32)
+        if "min" in fields:
+            res["min"] = jnp.min(jnp.where(m[:, :, None], vv, POS_INF),
+                                 axis=1)
+        if "max" in fields:
+            res["max"] = jnp.max(jnp.where(m[:, :, None], vv, NEG_INF),
+                                 axis=1)
+        return res
+
+    h = partial(p0, head_end)
+    tl = partial(tail_start, p1)
+
+    out: Dict[str, jax.Array] = {}
+    if "sum" in fields:
+        out["sum"] = jnp.sum(g(pa_sum) * bmf, axis=1) + h["sum"] + tl["sum"]
+    if "sumsq" in fields:
+        out["sumsq"] = (jnp.sum(g(pa_sumsq) * bmf, axis=1)
+                        + h["sumsq"] + tl["sumsq"])
+    if "count" in fields:
+        out["count"] = (jnp.sum(g(pa_count) * bmask, axis=1)
+                        + h["count"] + tl["count"])
+    if "min" in fields:
+        min_b = jnp.min(jnp.where(bmask[:, :, None], g(pa_min), POS_INF),
+                        axis=1)
+        out["min"] = jnp.minimum(min_b, jnp.minimum(h["min"], tl["min"]))
+    if "max" in fields:
+        max_b = jnp.max(jnp.where(bmask[:, :, None], g(pa_max), NEG_INF),
+                        axis=1)
+        out["max"] = jnp.maximum(max_b, jnp.maximum(h["max"], tl["max"]))
+    return out
+
+
+def derive_features(raw: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Derive AVG/STD/VAR from moment aggregates; zero-fill empty windows."""
+    cnt = raw["count"][:, None] if raw["count"].ndim == 1 else raw["count"]
+    safe = jnp.maximum(cnt, 1.0)
+    nonempty = cnt > 0
+    out = dict(raw)
+    if "sum" in raw:
+        mean = raw["sum"] / safe
+        out["avg"] = jnp.where(nonempty, mean, 0.0)
+        if "sumsq" in raw:
+            var = jnp.maximum(raw["sumsq"] / safe - mean * mean, 0.0)
+            out["var"] = jnp.where(nonempty, var, 0.0)
+            out["std"] = jnp.sqrt(out["var"])
+    if "min" in raw:
+        out["min"] = jnp.where(nonempty, raw["min"], 0.0)
+    if "max" in raw:
+        out["max"] = jnp.where(nonempty, raw["max"], 0.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model-side attention oracles
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Reference GQA attention. q (B, Sq, Hq, D), k/v (B, Sk, Hkv, D).
+
+    ``window``: sliding-window attention span (Mistral-style), None = full.
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    # grouped GQA form (no jnp.repeat) — see decode_attention_ref: the
+    # repeat hides the head grouping from GSPMD and triggers KV gathers.
+    qg = q.reshape(B, Sq, Hkv, rep, D)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k) * scale
+    Sk = k.shape[1]
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # right-aligned query block
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(q.dtype), v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None,
+                        block_k: int = 1024,
+                        unroll: bool = False) -> jax.Array:
+    """Streaming online-softmax attention in pure XLA ops — the SAME
+    algorithm as the Pallas flash kernel, expressed as a scan over KV
+    blocks so the lowered HLO never materialises the (Sq, Sk) score
+    matrix. This is what the production TPU build runs through the Pallas
+    kernel; on the dry-run meshes it is the lowering that makes the
+    memory/collective roofline terms reflect the kernel, not a naive S²
+    einsum (EXPERIMENTS.md §Perf).
+
+    ``unroll=True`` emits straight-line code (no while loop) so XLA cost
+    analysis counts every block — used by the dry-run measurement.
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_k, Sk)
+    if Sk % bk:
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+    nb = Sk // bk
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, rep, D)
+    kb = k.reshape(B, nb, bk, Hkv, D)
+    vb = v.reshape(B, nb, bk, Hkv, D)
+    qpos = jnp.arange(Sq, dtype=jnp.int32) + (Sk - Sq)  # right-aligned
+
+    def body(carry, inp):
+        acc, m, l = carry            # (B,Sq,Hkv,rep,D), (B,Sq,Hkv,rep), l
+        kblk, vblk, k_lo = inp       # (B,bk,Hkv,D) ×2, scalar
+        s = jnp.einsum("bqhrd,bkhd->bqhrk", qg,
+                       kblk.astype(jnp.float32))        # (B,Sq,Hkv,rep,bk)
+        kpos = k_lo + jnp.arange(bk, dtype=jnp.int32)
+        mask = jnp.ones((Sq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        maskb = mask[None, :, None, None, :]
+        s = jnp.where(maskb, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(maskb, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = (acc * alpha[..., None]
+                   + jnp.einsum("bqhrk,bkhd->bqhrd", p,
+                                vblk.astype(jnp.float32)))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, Hkv, rep, D), jnp.float32)
+    m0 = jnp.full((B, Sq, Hkv, rep), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, rep), jnp.float32)
+    xs = (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+          jnp.arange(nb, dtype=jnp.int32) * bk)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), xs,
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array, *,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None,
+                         ring: bool = False) -> jax.Array:
+    """Single-token decode attention with KV cache.
+
+    q (B, Hq, D); k_cache/v_cache (B, S, Hkv, D).
+
+    ``ring=False``: prefix layout — ``lengths`` (B,) = number of valid
+    cache entries (the query attends to positions < length; ``window``
+    restricts to the trailing ``window`` of them).
+
+    ``ring=True``: rolling-ring layout (sliding-window serving) —
+    ``lengths`` carries the current absolute POSITION (B,). The entry at
+    ring slot ``s`` holds absolute position ``pos - ((pos - s) mod S)``;
+    it is attended iff that position is ≥ 0 and within the window. Softmax
+    is permutation-invariant, so no reordering of the ring is needed.
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    # grouped GQA einsum — NO jnp.repeat: repeating kv heads hides the
+    # kv-head<->q-head relation from the SPMD partitioner, which then
+    # all-gathers the sequence-sharded cache (268 MB/device/layer measured
+    # on qwen2 decode) instead of keeping S local. The grouped form keeps
+    # every contraction either local or a (B,H,D)-sized reduce.
+    qg = q.reshape(B, Hkv, rep, D)
+    logits = jnp.einsum("bhrd,bkhd->bhrk", qg, k_cache) * scale
+    kpos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if ring:
+        pos = lengths[:, None]
+        ap = pos - jax.lax.rem(pos - kpos + S * ((pos // S) + 1), S)
+        mask = ap >= 0
+        if window is not None:
+            mask = mask & (ap > pos - window)
+    else:
+        mask = kpos < lengths[:, None]
+        if window is not None:
+            mask = mask & (kpos >= lengths[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhrk,bkhd->bhrd", probs.astype(q.dtype), v_cache)
+    return out.reshape(B, Hq, D)

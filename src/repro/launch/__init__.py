@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, multi-pod dry-run, training and serving
+drivers. ``python -m repro.launch.dryrun --help`` etc."""

@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, and extract the roofline terms.
+
+MUST keep the two lines above as the very first statements — jax locks the
+device count on first init, and the production meshes need 512 host
+placeholder devices. (That is also why this module must never be imported
+by tests/benches: run it as ``python -m repro.launch.dryrun``.)
+
+Per cell this script reports (EXPERIMENTS.md §Dry-run / §Roofline):
+
+* ``memory_analysis()`` — per-device argument/output/temp bytes (fits?),
+* ``cost_analysis()``   — per-device HLO FLOPs + bytes accessed,
+* collective bytes      — parsed from the compiled HLO: summed operand
+  sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute ops,
+* the three roofline terms vs TPU v5e constants
+  (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI),
+* MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the useful-compute ratio.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
+        --mesh pod,multipod --out experiments/dryrun
+    python -m repro.launch.dryrun --all   # every cell, both meshes
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, ModelConfig, param_count
+from repro.configs.registry import get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step_bundle
+from repro.optim.adamw import AdamWConfig
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e, per chip)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (conservative single-link)
+
+# HLO dtype byte widths for collective-bytes parsing
+_DT = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+       "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+       "f64": 8, "c64": 8, "c128": 16}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_operand_bytes(op_args: str) -> int:
+    """Sum byte sizes of 'f32[128,512], bf16[4]{0}' style operand lists."""
+    total = 0
+    for m in _SHAPE_RE.finditer(op_args):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT[dt]
+    return total
+
+
+def collective_bytes(hlo: str) -> Dict[str, int]:
+    """Per-collective summed operand bytes from compiled HLO text."""
+    out = {k: 0 for k in _COLL}
+    for line in hlo.splitlines():
+        s = line.strip()
+        # e.g. '%ag = bf16[8,128]{1,0} all-gather(%x), replica_groups=...'
+        m = re.search(r"=\s*([^=]*?)\s+(all-gather|all-reduce|"
+                      r"reduce-scatter|all-to-all|collective-permute)"
+                      r"(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done(" in s:
+            continue                       # count start, not done
+        # operands are inside the call parens; take text after '('
+        args = s[s.index("(", m.start(2)):]
+        # operand tuple may reference named values without shapes; fall back
+        # to the RESULT shape (for all-reduce in==out; for all-gather the
+        # result overcounts by world/size — use operands when present).
+        opb = _parse_operand_bytes(args)
+        if opb == 0:
+            opb = _parse_operand_bytes(m.group(1))
+        out[kind] += opb
+    return out
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+def applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    ss = SHAPES[shape]
+    if shape == "long_500k" and not cfg.long_context_ok:
+        return False, ("pure full-attention arch: no sub-quadratic path "
+                       "for 500k decode (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def _compile_once(cfg: ModelConfig, shape: str, mesh, *, accum: int,
+                  compress: bool) -> Tuple[Any, Any, float, float]:
+    """Lower+compile one config on one mesh -> (compiled, bundle, t_l, t_c)."""
+    t0 = time.time()
+    bundle = build_step_bundle(cfg, shape, mesh, opt_cfg=AdamWConfig(),
+                               accum=accum, compress_crosspod=compress)
+
+    def to_named(specs):
+        return jax.tree_util.tree_map(
+            lambda s: jax.NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    kw = {}
+    if bundle.out_specs is not None:
+        kw["out_shardings"] = to_named(bundle.out_specs)
+    jf = jax.jit(bundle.fn, in_shardings=to_named(bundle.in_specs),
+                 donate_argnums=bundle.donate, **kw)
+    with mesh:
+        lowered = jf.lower(*bundle.arg_structs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, bundle, t_lower, t_compile
+
+
+def _costs(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": dict(coll)}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *,
+             accum: Optional[int] = None,
+             remat: Optional[str] = None,
+             compress: bool = False,
+             measure: bool = True,
+             attn_block: int = 0,
+             rules_name: str = "default") -> Dict[str, Any]:
+    """Lower + compile one cell; return the report dict.
+
+    Compiles the FULL config (the multi-pod runnability proof + memory
+    analysis), then — because XLA cost_analysis counts ``while``-loop
+    bodies once, not per trip — compiles m=2 and m=4 layer-period variants
+    at accum=1 and extrapolates ``cost(R) = base + R*layer`` to the full
+    depth for the roofline terms (see EXPERIMENTS.md §Methodology).
+    """
+    from repro.configs.base import scale_layers
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape)
+    cell = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+            "rules": rules_name, "status": "skip", "skip_reason": why}
+    if not ok:
+        return cell
+
+    ss = SHAPES[shape]
+    if remat is None:
+        remat = "full" if ss.kind == "train" else "none"
+    if accum is None:
+        # keep per-microbatch tokens <= 64k tokens/device-row to bound
+        # activation memory on the big archs
+        accum = 1
+        if ss.kind == "train":
+            accum = {"jamba-v0.1-52b": 8, "mixtral-8x22b": 8,
+                     "starcoder2-7b": 4, "qwen2-vl-7b": 4,
+                     "phi4-mini-3.8b": 4, "granite-moe-3b-a800m": 2,
+                     }.get(arch, 2)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    from repro.distributed.sharding import dp_axes
+    dp = dp_axes(mesh)
+    import numpy as _np
+    dp_n = int(_np.prod([mesh.shape[a] for a in dp]))
+    act_dp = tuple(dp) if (attn_block and ss.global_batch % dp_n == 0) else ()
+    act_sp = "model" if (act_dp and ss.kind in ("train", "prefill")
+                         and ss.seq_len % mesh.shape["model"] == 0) else None
+    # local MoE dispatch groups aligned with DP shards (only useful when
+    # streaming/opt mode is on, and only when the batch divides)
+    moe_groups = dp_n if (attn_block and cfg.moe is not None
+                          and ss.global_batch % dp_n == 0) else 0
+    cfg = dataclasses.replace(cfg, remat=remat, attn_block_k=attn_block,
+                              act_dp=act_dp, act_sp=act_sp,
+                              moe_groups=moe_groups)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    # ---- 1. full-config compile: the runnability proof --------------------
+    compiled, bundle, t_lower, t_compile = _compile_once(
+        cfg, shape, mesh, accum=accum, compress=compress)
+    ma = compiled.memory_analysis()
+    raw = _costs(compiled)
+
+    # ---- 2. cost extrapolation over layer depth ---------------------------
+    # XLA cost_analysis counts ``while`` bodies once, so the scanned full
+    # model underreports by ~R×. Measure UNROLLED (scan_layers=False)
+    # 1-period and 2-period models at accum=1 and extrapolate
+    # cost(R) = base + R*layer. Unrolled small models compile in seconds;
+    # per-layer shapes (and hence per-layer cost) equal the full model's.
+    R_full = cfg.n_layers // len(cfg.pattern)
+    if measure:
+        small = dataclasses.replace(cfg, scan_layers=False)
+        c1 = _costs(_compile_once(scale_layers(small, 1), shape, mesh,
+                                  accum=1, compress=compress)[0])
+        c2 = _costs(_compile_once(scale_layers(small, 2), shape, mesh,
+                                  accum=1, compress=compress)[0])
+
+        def extrap(v1: float, v2: float) -> float:
+            layer = v2 - v1
+            return max(v1 + (R_full - 1) * layer, 0.0)
+
+        flops_dev = extrap(c1["flops"], c2["flops"])
+        bytes_dev = extrap(c1["bytes"], c2["bytes"])
+        coll = {k: extrap(c1["coll"][k], c2["coll"][k]) for k in _COLL}
+        measure_mode = "unrolled-extrapolated(m1,m2)"
+    else:
+        flops_dev, bytes_dev, coll = raw["flops"], raw["bytes"], raw["coll"]
+        measure_mode = "raw-scanned(underreports R x)"
+    coll_total = sum(coll.values())
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_total / ICI_BW
+
+    n_params = param_count(cfg)
+    n_active = param_count(cfg, active=True)
+    if ss.kind == "train":
+        tokens = ss.global_batch * ss.seq_len
+        model_flops = 6 * n_active * tokens
+    elif ss.kind == "prefill":
+        tokens = ss.global_batch * ss.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = ss.global_batch          # one new token per sequence
+        model_flops = 2 * n_active * tokens
+    model_flops_dev = model_flops / n_chips
+
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)), key=lambda kv: kv[1])[0]
+
+    cell.update({
+        "status": "ok",
+        "kind": ss.kind,
+        "accum": accum,
+        "remat": remat,
+        "attn_block": attn_block,
+        "n_chips": n_chips,
+        "measure_mode": measure_mode,
+        "raw_full_compile": raw,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_total,
+        "collectives": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dom,
+        "step_s_est": max(compute_s, memory_s, collective_s),
+        "params": n_params,
+        "params_active": n_active,
+        "model_flops_per_device": model_flops_dev,
+        "useful_flop_ratio": (model_flops_dev / flops_dev
+                              if flops_dev else 0.0),
+        "roofline_frac": (model_flops_dev / PEAK_FLOPS
+                          / max(compute_s, memory_s, collective_s)
+                          if max(compute_s, memory_s, collective_s) > 0
+                          else 0.0),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+    })
+    return cell
+
+
+def cell_path(outdir: str, arch: str, shape: str, mesh_kind: str) -> str:
+    return os.path.join(outdir, f"{arch}__{shape}__{mesh_kind}.json")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="shape cell (default: all)")
+    ap.add_argument("--mesh", default="pod,multipod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 cross-pod gradient all-reduce")
+    ap.add_argument("--attn-block", type=int, default=0,
+                    help="KV block for streaming attention (0=dense)")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cached cells")
+    ap.add_argument("--rules", default="default")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                p = cell_path(args.out, arch, shape, mk)
+                if (os.path.exists(p) and not args.force
+                        and args.rules == "default"):
+                    print(f"[cached] {arch} {shape} {mk}")
+                    continue
+                tag = f"{arch} × {shape} × {mk}"
+                try:
+                    # roofline measurement on the single-pod mesh only;
+                    # the multipod pass is the pod-axis sharding proof
+                    cell = run_cell(arch, shape, mk, accum=args.accum,
+                                    remat=args.remat,
+                                    compress=args.compress,
+                                    measure=(mk == "pod"),
+                                    attn_block=args.attn_block,
+                                    rules_name=args.rules)
+                except Exception as e:
+                    traceback.print_exc()
+                    cell = {"arch": arch, "shape": shape, "mesh": mk,
+                            "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                if args.rules == "default":
+                    with open(p, "w") as f:
+                        json.dump(cell, f, indent=1)
+                st = cell["status"]
+                extra = ""
+                if st == "ok":
+                    extra = (f" dom={cell['dominant']}"
+                             f" comp={cell['compute_s']:.3e}s"
+                             f" mem={cell['memory_s']:.3e}s"
+                             f" coll={cell['collective_s']:.3e}s"
+                             f" useful={cell['useful_flop_ratio']:.2f}"
+                             f" compile={cell['compile_s']:.0f}s")
+                elif st == "fail":
+                    extra = " " + cell.get("error", "")[:160]
+                print(f"[{st}] {tag}{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

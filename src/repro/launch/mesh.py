@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, while tests/benches must see the real single device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh", "POD_SHAPE",
+           "MULTIPOD_SHAPE"]
+
+POD_SHAPE: Tuple[int, ...] = (16, 16)            # one v5e pod: 256 chips
+MULTIPOD_SHAPE: Tuple[int, ...] = (2, 16, 16)    # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: Optional[int] = None, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,294 @@
+"""Model-agnostic step builders: one place that turns a ``ModelConfig``
+into jit-able ``train_step`` / ``prefill_step`` / ``serve_step`` functions
+plus their input/parameter/optimizer/cache sharding specs.
+
+Used by launch/train.py (real execution on the local mesh), launch/serve.py,
+and launch/dryrun.py (lower+compile on the 512-device production meshes).
+
+Conventions:
+
+* ``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+  with optional gradient accumulation (``accum`` microbatches via
+  ``lax.scan``) and optional int8-compressed cross-pod gradient reduce.
+* ``serve_step(params, caches, token, position[, enc_out])
+  -> (logits, caches)`` — one decode token against the KV/SSM cache.
+* ``prefill_step(params, tokens[, ...]) -> (last_logits, caches)``.
+* Non-finite-gradient guard: a step whose global grad norm is non-finite
+  applies a zero update (params/opt unchanged except the skip counter) —
+  the at-scale "one bad host must not poison the run" rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES, input_specs
+from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
+                                        batch_specs, cache_specs_tree,
+                                        dp_axes, opt_specs, param_specs)
+from repro.models import encdec, lm
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_init,
+                               adamw_update)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
+           "init_params", "params_struct", "opt_struct", "cache_struct",
+           "StepBundle", "build_step_bundle"]
+
+
+# ---------------------------------------------------------------------------
+# Param / state structure helpers
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.is_encdec:
+        return encdec.init_encdec(key, cfg)
+    return lm.init_lm(key, cfg)
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_struct(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    ps = params_struct(cfg)
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), ps)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, cache_len: int):
+    if cfg.is_encdec:
+        return jax.eval_shape(
+            lambda: encdec.init_dec_cache(cfg, batch, cache_len))
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, cache_len))
+
+
+def _loss_fn(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return functools.partial(encdec.loss_fn)
+    return functools.partial(lm.loss_fn)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    accum: int = 1, mesh: Optional[Mesh] = None,
+                    compress_crosspod: bool = False,
+                    rules: ShardingRules = DEFAULT_RULES) -> Callable:
+    """Builds ``train_step(params, opt_state, batch)``.
+
+    ``accum > 1`` splits the leading batch dim into microbatches and scans,
+    accumulating f32 gradients — memory drops ~accum-fold while FLOPs stay.
+    ``compress_crosspod`` computes per-pod gradients under shard_map over
+    the ``pod`` axis and reduces them with the int8 collective.
+    """
+    loss_fn = _loss_fn(cfg)
+
+    def make_grads_of(cfg_):
+        def grads_of(params, batch):
+            if accum == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, cfg_, batch)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.float32), grads)
+                return grads, loss, metrics
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((accum, b // accum) + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, cfg_, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            (g_sum, l_sum), metrics = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, g_sum)
+            metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m), metrics)
+            return grads, l_sum / accum, metrics
+
+        return grads_of
+
+    grads_of = make_grads_of(cfg)
+
+    def apply_update(params, opt_state, grads):
+        new_p, new_s, om = adamw_update(grads, opt_state, params, opt_cfg)
+        # non-finite guard: zero-out the update, keep the old state
+        ok = jnp.isfinite(om.get("grad_norm", jnp.float32(0.0)))
+        pick = lambda a, b: jnp.where(ok, a, b)
+        new_p = jax.tree_util.tree_map(pick, new_p, params)
+        new_s = jax.tree_util.tree_map(pick, new_s, opt_state)
+        om["skipped"] = (~ok).astype(jnp.float32)
+        return new_p, new_s, om
+
+    if not compress_crosspod or mesh is None or "pod" not in mesh.axis_names:
+        def train_step(params, opt_state, batch):
+            grads, loss, metrics = grads_of(params, batch)
+            params, opt_state, om = apply_update(params, opt_state, grads)
+            metrics = dict(metrics)
+            metrics.update(om)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        return train_step
+
+    # ---- int8-compressed cross-pod variant --------------------------------
+    from repro.distributed.collectives import psum_int8
+    npods = mesh.shape["pod"]
+    # inside shard_map the pod axis is Manual — activation pins may only
+    # reference the auto axes
+    cfg_local = dataclasses.replace(
+        cfg, act_dp=tuple(a for a in cfg.act_dp if a != "pod"))
+    grads_of_local = make_grads_of(cfg_local)
+
+    def train_step(params, opt_state, batch):
+        # per-pod grads: batch leading dim sharded over pod inside the
+        # shard_map; data/model axes stay in auto (XLA) mode.
+        bspec_in = jax.tree_util.tree_map(lambda _: P("pod"), batch)
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(), bspec_in), out_specs=P(),
+            check_vma=False, axis_names=frozenset({"pod"}))
+        def pod_grads(p, b):
+            g, loss, metrics = grads_of_local(p, b)
+            g = jax.tree_util.tree_map(
+                lambda x: psum_int8(x, "pod") / npods, g)
+            loss = jax.lax.pmean(loss, "pod")
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m, "pod"), metrics)
+            return g, loss, metrics
+
+        grads, loss, metrics = pod_grads(params, batch)
+        params, opt_state, om = apply_update(params, opt_state, grads)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int) -> Callable:
+    if cfg.is_encdec:
+        def prefill_step(params, enc_embeds, tokens):
+            enc_out = encdec.encode(params, cfg, enc_embeds)
+            return encdec.dec_prefill(params, cfg, enc_out, tokens,
+                                      cache_len)
+        return prefill_step
+
+    def prefill_step(params, tokens, embeds=None):
+        return lm.prefill(params, cfg, tokens, cache_len, embeds)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    if cfg.is_encdec:
+        def serve_step(params, caches, token, position, enc_out):
+            return encdec.dec_decode_step(params, cfg, enc_out, caches,
+                                          token, position)
+        return serve_step
+
+    def serve_step(params, caches, token, position):
+        return lm.decode_step(params, cfg, caches, token, position)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Bundle: everything the dry-run / drivers need for one (arch, shape) cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepBundle:
+    """One shape cell's jit-ready callable + arg structures + shardings."""
+
+    fn: Callable                     # step function (pure)
+    arg_structs: Tuple               # ShapeDtypeStructs, positional
+    in_specs: Tuple                  # PartitionSpec pytrees, positional
+    donate: Tuple[int, ...]          # donated argnums
+    kind: str                        # train | prefill | decode
+    # explicit output shardings: carried state (params/opt/caches) MUST
+    # keep its input sharding — leaving it to XLA lets the partitioner
+    # replicate donated caches, which shows up as a cache-sized all-gather
+    # per step (found in the qwen2 decode baseline; EXPERIMENTS.md §Perf)
+    out_specs: Optional[Tuple] = None
+
+
+def build_step_bundle(cfg: ModelConfig, shape: str, mesh: Mesh, *,
+                      opt_cfg: AdamWConfig = AdamWConfig(),
+                      accum: int = 1,
+                      compress_crosspod: bool = False,
+                      rules: ShardingRules = DEFAULT_RULES) -> StepBundle:
+    """Assemble (fn, arg structs, shardings) for one (arch × shape) cell."""
+    ss = SHAPES[shape]
+    pstruct = params_struct(cfg)
+    pspecs = param_specs(pstruct, mesh, rules)
+    ins = input_specs(cfg, shape)
+    bspecs_all = batch_specs(cfg, mesh, ss.kind, ss.global_batch, rules)
+    bspecs = {k: bspecs_all[k] for k in ins}
+
+    if ss.kind == "train":
+        ostruct = opt_struct(cfg, opt_cfg)
+        ospecs = opt_specs(ostruct, mesh, rules)
+        fn = make_train_step(cfg, opt_cfg, accum=accum, mesh=mesh,
+                             compress_crosspod=compress_crosspod,
+                             rules=rules)
+        return StepBundle(fn=fn, arg_structs=(pstruct, ostruct, ins),
+                          in_specs=(pspecs, ospecs, bspecs),
+                          donate=(0, 1), kind="train",
+                          out_specs=(pspecs, ospecs, None))
+
+    if ss.kind == "prefill":
+        cache_len = ss.seq_len
+        cstruct_p = cache_struct(cfg, ss.global_batch, cache_len)
+        cspecs_p = cache_specs_tree(cstruct_p, cfg, mesh, ss.global_batch,
+                                    rules)
+        fn = make_prefill_step(cfg, cache_len)
+        if cfg.is_encdec:
+            args = (pstruct, ins["enc_embeds"], ins["tokens"])
+            specs = (pspecs, bspecs["enc_embeds"], bspecs["tokens"])
+        elif cfg.frontend:
+            args = (pstruct, ins["tokens"], ins["embeds"])
+            specs = (pspecs, bspecs["tokens"], bspecs["embeds"])
+        else:
+            args = (pstruct, ins["tokens"])
+            specs = (pspecs, bspecs["tokens"])
+        return StepBundle(fn=fn, arg_structs=args, in_specs=specs,
+                          donate=(), kind="prefill",
+                          out_specs=(None, cspecs_p))
+
+    # decode
+    cstruct = cache_struct(cfg, ss.global_batch, ss.seq_len)
+    cspecs = cache_specs_tree(cstruct, cfg, mesh, ss.global_batch, rules)
+    fn = make_serve_step(cfg)
+    if cfg.is_encdec:
+        args = (pstruct, cstruct, ins["token"], ins["position"],
+                ins["enc_out"])
+        specs = (pspecs, cspecs, bspecs["token"], bspecs["position"],
+                 bspecs["enc_out"])
+    else:
+        args = (pstruct, cstruct, ins["token"], ins["position"])
+        specs = (pspecs, cspecs, bspecs["token"], bspecs["position"])
+    return StepBundle(fn=fn, arg_structs=args, in_specs=specs,
+                      donate=(1,), kind="decode",
+                      out_specs=(None, cspecs))

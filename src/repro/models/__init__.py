@@ -1,0 +1,9 @@
+"""Composable model zoo: decoder-only / hybrid / MoE / enc-dec backbones.
+
+Pure-functional JAX: params are nested dicts of arrays, every module is an
+``init_*(key, cfg) -> params`` plus an ``apply``-style function. Layers are
+stacked along a leading axis and iterated with ``lax.scan`` so the lowered
+HLO stays small enough to compile 56-layer models on the 512-device
+dry-run mesh.
+"""
+__all__ = ["lm", "encdec", "attention", "moe", "ssm", "layers", "blocks"]

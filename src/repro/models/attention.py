@@ -1,0 +1,183 @@
+"""GQA attention block with RoPE/M-RoPE, QKV bias, sliding window, KV cache.
+
+Three entry points sharing one parameter set:
+
+* ``attend_train``   — full-sequence causal attention (flash kernel path);
+* ``attend_prefill`` — same math, but also returns the KV cache;
+* ``attend_decode``  — one token against a cache (decode kernel path).
+
+Cache layout (per layer): ``k/v (B, S_max, Hkv, D)`` ring-free append at
+``position`` (positions are monotone during serving), plus cross-attention
+variants for the encoder-decoder models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import (apply_linear, apply_rope, init_linear,
+                                 mrope_positions_text)
+
+Params = Dict[str, jax.Array]
+
+__all__ = ["init_attention", "attend_train", "attend_prefill",
+           "attend_decode", "init_cross_attention", "cross_attend",
+           "cross_attend_decode"]
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, dtype, cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, dtype, cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, dtype, cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _pin_dp(t: jax.Array, cfg: ModelConfig, seq_too: bool = False
+            ) -> jax.Array:
+    """Pin an activation's batch dim to the DP axes (replicated elsewhere);
+    with ``seq_too`` also shard its sequence dim over ``cfg.act_sp``
+    (context parallelism for the query side of streaming attention).
+    Without the pin, GSPMD picks depth-dependent layouts for flash
+    accumulators and all-reduces them per KV block (EXPERIMENTS.md §Perf)."""
+    if not cfg.act_dp:
+        return t
+    from jax.sharding import PartitionSpec as P
+    seq_ax = (cfg.act_sp if seq_too and cfg.act_sp is not None
+              and t.shape[1] % 16 == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        t, P(tuple(cfg.act_dp), seq_ax, *([None] * (t.ndim - 2))))
+
+
+def _project_qkv(p: Params, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = apply_linear(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = apply_linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = apply_linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return (_pin_dp(q, cfg, seq_too=True), _pin_dp(k, cfg),
+            _pin_dp(v, cfg))
+
+
+def attend_train(p: Params, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array, causal: bool = True) -> jax.Array:
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = ops.flash_attention(q, k, v, causal=causal,
+                            window=cfg.sliding_window if causal else None,
+                            block_k=cfg.attn_block_k,
+                            unroll=not cfg.scan_layers)
+    B, S = x.shape[:2]
+    return apply_linear(p["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd))
+
+
+def attend_prefill(p: Params, x: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array, cache_len: int
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (output, kv-cache padded to ``cache_len``)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = ops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                            block_k=cfg.attn_block_k,
+                            unroll=not cfg.scan_layers)
+    B, S = x.shape[:2]
+    pad = cache_len - S
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = apply_linear(p["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd))
+    return out, {"k": kc, "v": vc}
+
+
+def attend_decode(p: Params, x: jax.Array, cfg: ModelConfig,
+                  cache: Dict[str, jax.Array], position: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B, d) one token; cache k/v (B, S_max, Hkv, D); position (B,).
+
+    With a sliding window the cache is a rolling ring of size >= window:
+    writes land at ``position % S_max`` and the kernel masks by absolute
+    position (window math handles wraparound because only the last
+    ``window`` positions are ever valid).
+    """
+    B, d = x.shape
+    hd = cfg.hd
+    q = apply_linear(p["wq"], x).reshape(B, 1, cfg.n_heads, hd)
+    k = apply_linear(p["wk"], x).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = apply_linear(p["wv"], x).reshape(B, 1, cfg.n_kv_heads, hd)
+    pos = position[:, None]
+    if cfg.mrope_sections is not None:
+        pos = mrope_positions_text(pos)   # text decode: t=h=w=position
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.mrope_sections)
+
+    S_max = cache["k"].shape[1]
+    slot = position % S_max if cfg.sliding_window else position
+    # One-hot masked write instead of a scatter: a scatter with runtime
+    # (batch, slot) indices into the sequence-sharded cache forces GSPMD to
+    # all-gather the whole cache per layer (537 MB/device/layer measured —
+    # EXPERIMENTS.md §Perf); the masked blend partitions elementwise.
+    hit = (jnp.arange(S_max, dtype=jnp.int32)[None, :]
+           == slot[:, None])[:, :, None, None]             # (B, S, 1, 1)
+    kc = jnp.where(hit, k[:, 0][:, None].astype(cache["k"].dtype),
+                   cache["k"])
+    vc = jnp.where(hit, v[:, 0][:, None].astype(cache["v"].dtype),
+                   cache["v"])
+
+    if cfg.sliding_window:
+        # Ring layout: softmax is permutation-invariant, so attend in ring
+        # order directly and mask by each slot's ABSOLUTE position —
+        # no take_along_axis reorder (which would also gather the
+        # sequence-sharded cache).
+        o = ops.decode_attention(q[:, 0], kc, vc, position,
+                                 window=cfg.sliding_window, ring=True)
+    else:
+        lengths = position + 1
+        o = ops.decode_attention(q[:, 0], kc, vc, lengths, window=None)
+    out = apply_linear(p["wo"], o.reshape(B, cfg.n_heads * hd))
+    return out, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: ModelConfig) -> Params:
+    return init_attention(key, cfg)
+
+
+def cross_attend(p: Params, x: jax.Array, enc_out: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    """Decoder queries over encoder memory (no causal mask, no rope)."""
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    hd = cfg.hd
+    q = apply_linear(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = apply_linear(p["wk"], enc_out).reshape(B, Se, cfg.n_kv_heads, hd)
+    v = apply_linear(p["wv"], enc_out).reshape(B, Se, cfg.n_kv_heads, hd)
+    o = ops.flash_attention(q, k, v, causal=False, window=None,
+                            block_k=cfg.attn_block_k,
+                            unroll=not cfg.scan_layers)
+    return apply_linear(p["wo"], o.reshape(B, S, cfg.n_heads * hd))
+
+
+def cross_attend_decode(p: Params, x: jax.Array, enc_out: jax.Array,
+                        cfg: ModelConfig) -> jax.Array:
+    """One decoder token (B, d) against encoder memory (B, Se, d)."""
+    B, d = x.shape
+    Se = enc_out.shape[1]
+    hd = cfg.hd
+    q = apply_linear(p["wq"], x).reshape(B, cfg.n_heads, hd)
+    k = apply_linear(p["wk"], enc_out).reshape(B, Se, cfg.n_kv_heads, hd)
+    v = apply_linear(p["wv"], enc_out).reshape(B, Se, cfg.n_kv_heads, hd)
+    lengths = jnp.full((B,), Se, jnp.int32)
+    o = ops.decode_attention(q, k, v, lengths, window=None)
+    return apply_linear(p["wo"], o.reshape(B, cfg.n_heads * hd))

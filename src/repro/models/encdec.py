@@ -1,0 +1,200 @@
+"""Encoder-decoder backbone (Seamless-M4T medium class).
+
+Per the assignment the modality frontend is a STUB: the encoder consumes
+precomputed audio-frame embeddings ``(B, S_enc, d_model)`` directly.
+Encoder: bidirectional attention + MLP. Decoder: causal self-attention
+(KV-cached for serving) + cross-attention over encoder memory + MLP.
+Both stacks are layer-stacked and scanned like the decoder-only models.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, init_embedding,
+                                 init_mlp, init_norm)
+
+Params = Dict[str, Any]
+
+__all__ = ["init_encdec", "encode", "forward_train", "loss_fn",
+           "dec_prefill", "dec_decode_step", "init_dec_cache"]
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+        "attn": attn.init_attention(ks[0], cfg),
+        "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+        "self_attn": attn.init_attention(ks[0], cfg),
+        "norm_x": init_norm(cfg.d_model, cfg.norm, dtype),
+        "cross_attn": attn.init_cross_attention(ks[1], cfg),
+        "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _stack(key, init_one, n: int) -> Params:
+    keys = jax.random.split(key, n)
+    ps = [init_one(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "enc_blocks": _stack(ks[0], lambda k: _init_enc_block(k, cfg),
+                             cfg.encoder_layers),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "embed": init_embedding(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "dec_blocks": _stack(ks[2], lambda k: _init_dec_block(k, cfg),
+                             cfg.n_layers),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def _run_stack(scan_fn, x, stacked, cfg: ModelConfig):
+    """lax.scan over stacked blocks, or a python loop when unrolled
+    (``cfg.scan_layers=False``, dry-run cost measurement)."""
+    if not cfg.scan_layers:
+        reps = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        ys = []
+        for i in range(reps):
+            x, y = scan_fn(x, jax.tree_util.tree_map(
+                lambda a: a[i], stacked))
+            ys.append(y)
+        if ys and ys[0] is not None:
+            return x, jax.tree_util.tree_map(lambda *s: jnp.stack(s), *ys)
+        return x, None
+    return jax.lax.scan(scan_fn, x, stacked)
+
+
+def encode(params: Params, cfg: ModelConfig,
+           enc_embeds: jax.Array) -> jax.Array:
+    x = enc_embeds.astype(cfg.compute_dtype)
+    B_, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B_, S))
+
+    def scan_fn(x, p):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        x = x + attn.attend_train(p["attn"], h, cfg, pos, causal=False)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + apply_mlp(p["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = _run_stack(scan_fn, x, params["enc_blocks"], cfg)
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def _dec_blocks_train(params: Params, cfg: ModelConfig, x: jax.Array,
+                      enc_out: jax.Array, pos: jax.Array) -> jax.Array:
+    def scan_fn(x, p):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        x = x + attn.attend_train(p["self_attn"], h, cfg, pos, causal=True)
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + attn.cross_attend(p["cross_attn"], h, enc_out, cfg)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + apply_mlp(p["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = _run_stack(scan_fn, x, params["dec_blocks"], cfg)
+    return x
+
+
+def _logits(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x.astype(jnp.float32) @ params["embed"].astype(jnp.float32).T
+
+
+def forward_train(params: Params, cfg: ModelConfig, enc_embeds: jax.Array,
+                  tokens: jax.Array) -> jax.Array:
+    enc_out = encode(params, cfg, enc_embeds)
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    B_, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B_, S))
+    x = _dec_blocks_train(params, cfg, x, enc_out, pos)
+    return _logits(params, cfg, x)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = forward_train(params, cfg, batch["enc_embeds"],
+                           batch["tokens"])
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "nll": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving (decoder incremental; encoder memory fixed)
+# ---------------------------------------------------------------------------
+
+def init_dec_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
+    dtype = cfg.compute_dtype
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    one = {"k": jnp.zeros((batch, cache_len, hkv, hd), dtype),
+           "v": jnp.zeros((batch, cache_len, hkv, hd), dtype)}
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def dec_prefill(params: Params, cfg: ModelConfig, enc_out: jax.Array,
+                tokens: jax.Array, cache_len: int
+                ) -> Tuple[jax.Array, Params]:
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    B_, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B_, S))
+
+    def scan_fn(x, p):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        o, cache = attn.attend_prefill(p["self_attn"], h, cfg, pos,
+                                       cache_len)
+        x = x + o
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + attn.cross_attend(p["cross_attn"], h, enc_out, cfg)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + apply_mlp(p["mlp"], h, cfg.act)
+        return x, cache
+
+    x, caches = _run_stack(scan_fn, x, params["dec_blocks"], cfg)
+    return _logits(params, cfg, x[:, -1:, :])[:, 0, :], caches
+
+
+def dec_decode_step(params: Params, cfg: ModelConfig, enc_out: jax.Array,
+                    caches: Params, token: jax.Array, position: jax.Array
+                    ) -> Tuple[jax.Array, Params]:
+    x = params["embed"].astype(cfg.compute_dtype)[token]   # (B, d)
+
+    def scan_fn(x, inp):
+        p, cache = inp
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        o, cache = attn.attend_decode(p["self_attn"], h, cfg, cache,
+                                      position)
+        x = x + o
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + attn.cross_attend_decode(p["cross_attn"], h, enc_out, cfg)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + apply_mlp(p["mlp"], h[:, None, :], cfg.act)[:, 0, :]
+        return x, cache
+
+    x, caches = _run_stack(scan_fn, x, (params["dec_blocks"], caches), cfg)
+    return _logits(params, cfg, x[:, None, :])[:, 0, :], caches

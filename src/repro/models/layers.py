@@ -1,0 +1,144 @@
+"""Primitive layers: norms, rotary embeddings (incl. M-RoPE), MLPs.
+
+Conventions: params are dicts of arrays; ``init_*`` takes a PRNG key and
+returns params in ``cfg.param_dtype``; compute runs in ``cfg.dtype`` with
+f32 accumulation where it matters (norm statistics, softmax, loss).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_norm", "apply_norm", "rope_freqs", "apply_rope",
+           "mrope_positions_text", "init_mlp", "apply_mlp", "init_linear",
+           "apply_linear", "init_embedding"]
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(f"unknown norm {kind!r}")
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies (head_dim//2,) in f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: Optional[Tuple[int, int, int]] = None
+               ) -> jax.Array:
+    """Rotate q or k. x (..., S, H, D); positions (..., S) int32 for
+    standard RoPE, or (3, ..., S) for M-RoPE (temporal/height/width id
+    streams; Qwen2-VL §2.1). ``mrope_sections`` gives the number of
+    frequency PAIRS driven by each stream (sums to D/2)."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                      # (D/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    else:
+        assert positions.shape[0] == 3, "M-RoPE wants (3, ..., S) positions"
+        secs = mrope_sections
+        assert sum(secs) == D // 2, (secs, D)
+        parts = []
+        off = 0
+        for s_i, sec in enumerate(secs):
+            p = positions[s_i][..., None].astype(jnp.float32)  # (..., S, 1)
+            parts.append(p * inv[off:off + sec])
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)       # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def mrope_positions_text(positions: jax.Array) -> jax.Array:
+    """Text-only M-RoPE: all three id streams equal the text position."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+# ---------------------------------------------------------------------------
+# Linear / MLP
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype,
+                bias: bool = False) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32)
+    w = w * (1.0 / math.sqrt(d_in))
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {"wi": init_linear(ks[0], d, d_ff, dtype)["w"],
+                "wg": init_linear(ks[1], d, d_ff, dtype)["w"],
+                "wo": init_linear(ks[2], d_ff, d, dtype)["w"]}
+    return {"wi": init_linear(ks[0], d, d_ff, dtype)["w"],
+            "wo": init_linear(ks[2], d_ff, d, dtype)["w"]}
+
+
+def apply_mlp(p: Params, x: jax.Array, act: str) -> jax.Array:
+    h = x @ p["wi"].astype(x.dtype)
+    if act == "swiglu":
+        g = x @ p["wg"].astype(x.dtype)
+        h = jax.nn.silu(g) * h
+    elif act == "geglu":
+        g = x @ p["wg"].astype(x.dtype)
+        h = jax.nn.gelu(g) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return h @ p["wo"].astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (1.0 / math.sqrt(d))).astype(dtype)

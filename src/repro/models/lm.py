@@ -1,0 +1,151 @@
+"""Decoder-only language model: embed → stacked blocks → norm → logits.
+
+Entry points used by the launcher and serving runtime:
+
+    init_lm(key, cfg)                        -> params
+    forward_train(params, cfg, tokens, ...)  -> logits
+    loss_fn(params, cfg, batch)              -> (loss, metrics)
+    prefill(params, cfg, tokens, cache_len)  -> (last_logits, caches)
+    decode_step(params, cfg, caches, token, position) -> (logits, caches)
+    init_cache(cfg, batch, cache_len)        -> concrete cache pytree
+
+[vlm]/[audio] archs prepend stub frontend embeddings (precomputed patch /
+frame vectors, per the assignment) to the token embeddings; loss is masked
+to token positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models.layers import (apply_norm, init_embedding, init_norm,
+                                 mrope_positions_text)
+
+Params = Dict[str, Any]
+
+__all__ = ["init_lm", "forward_train", "loss_fn", "prefill", "decode_step",
+           "init_cache", "cache_specs"]
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": B.init_stacked_blocks(ks[1], cfg),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_embedding(ks[2], cfg.vocab_size, cfg.d_model,
+                                      dtype)
+    return p
+
+
+def _positions(cfg: ModelConfig, B_: int, S: int, offset: int = 0):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B_, S))
+    if cfg.mrope_sections is not None:
+        return mrope_positions_text(pos)
+    return pos
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  embeds: Optional[jax.Array]) -> jax.Array:
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(cfg.compute_dtype), x], axis=1)
+    return x
+
+
+def _logits(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return x.astype(jnp.float32) @ head.astype(jnp.float32).T
+
+
+def forward_train(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  embeds: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens (B, S_txt) [+ embeds (B, F, d)] -> logits (B, S, V)."""
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    B_, S = x.shape[:2]
+    pos = _positions(cfg, B_, S)
+    x, aux = B.run_blocks_train(params["blocks"], x, cfg, pos)
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (f32), MoE aux losses folded in.
+
+    batch: tokens (B, S_txt), targets (B, S_txt) with -100 = masked,
+    optional embeds (B, F, d_model).
+    """
+    tokens = batch["tokens"]
+    targets = batch["targets"]
+    embeds = batch.get("embeds")
+    logits, aux = forward_train(params, cfg, tokens, embeds)
+    if embeds is not None:
+        logits = logits[:, embeds.shape[1]:, :]   # loss on text positions
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    metrics = {"nll": loss}
+    if cfg.moe is not None:
+        loss = (loss + cfg.moe.aux_coef * aux["moe_aux"] / cfg.n_layers
+                + cfg.moe.router_z_coef * aux["moe_zloss"] / cfg.n_layers)
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            cache_len: int, embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Tuple]:
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    B_, S = x.shape[:2]
+    pos = _positions(cfg, B_, S)
+    x, caches = B.run_blocks_prefill(params["blocks"], x, cfg, pos,
+                                     cache_len)
+    return _logits(params, cfg, x[:, -1:, :])[:, 0, :], caches
+
+
+def decode_step(params: Params, cfg: ModelConfig, caches: Tuple,
+                token: jax.Array, position: jax.Array
+                ) -> Tuple[jax.Array, Tuple]:
+    """token (B,) int32; position (B,) int32 -> (logits (B, V), caches)."""
+    x = params["embed"].astype(cfg.compute_dtype)[token]   # (B, d)
+    x, caches = B.run_blocks_decode(params["blocks"], x, cfg, caches,
+                                    position)
+    return _logits(params, cfg, x[:, None, :])[:, 0, :], caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Tuple:
+    """Concrete zero caches, stacked to match the scan layout."""
+    pattern = B.normalize_pattern(cfg)
+    reps = cfg.n_layers // len(pattern)
+    dtype = cfg.compute_dtype
+    out = []
+    for token in pattern:
+        one = B.init_block_cache(cfg, token, batch, cache_len, dtype)
+        out.append(jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one))
+    return tuple(out)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Tuple:
+    """ShapeDtypeStruct cache pytree (dry-run: no allocation)."""
+    concrete = jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+    return concrete

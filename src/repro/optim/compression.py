@@ -1,0 +1,80 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantization and
+top-k sparsification, both with error feedback.
+
+At 2 pods × 256 chips the inter-pod links (data-center network or optical
+ICI) are the scarce resource; compressing the *pod-axis* gradient
+all-reduce is the classic fix (Deep Gradient Compression; 1-bit Adam).
+We keep the intra-pod reduce in full precision and compress only the
+``psum`` over the ``pod`` axis (see distributed/collectives.py).
+
+Error feedback: the quantization residual is carried into the next step's
+gradient so the compression bias vanishes in expectation — required for
+convergence at int8/top-k rates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+__all__ = ["compress_int8", "decompress_int8", "compress_topk",
+           "decompress_topk", "ErrorFeedback"]
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization -> (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_topk(x: jax.Array, k_frac: float
+                  ) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
+    """Keep the top ``k_frac`` fraction of entries by magnitude.
+
+    Returns (values (k,), indices (k,) i32, original shape).
+    """
+    xf = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(xf.shape[0] * k_frac))
+    vals, idx = jax.lax.top_k(jnp.abs(xf), k)
+    return xf[idx], idx.astype(jnp.int32), x.shape
+
+
+def decompress_topk(vals: jax.Array, idx: jax.Array,
+                    shape: Tuple[int, ...]) -> jax.Array:
+    n = 1
+    for s in shape:
+        n *= s
+    return jnp.zeros((n,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ErrorFeedback:
+    """Per-leaf carried quantization residual (f32 pytree)."""
+
+    residual: Params
+
+    @staticmethod
+    def init(params: Params) -> "ErrorFeedback":
+        return ErrorFeedback(residual=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def ef_int8_roundtrip(g: jax.Array, res: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """One error-feedback int8 round trip for a single leaf: returns the
+    decompressed gradient actually applied and the new residual."""
+    corrected = g.astype(jnp.float32) + res
+    q, s = compress_int8(corrected)
+    deq = decompress_int8(q, s)
+    return deq, corrected - deq

@@ -1,0 +1,5 @@
+from repro.serving.batcher import BatcherConfig, DynamicBatcher, Request
+from repro.serving.server import FeatureServer, ServerConfig, ModelServer
+
+__all__ = ["BatcherConfig", "DynamicBatcher", "Request", "FeatureServer",
+           "ServerConfig", "ModelServer"]

@@ -1,0 +1,151 @@
+"""Dynamic request batcher (paper O5, resource management).
+
+Requests arrive one at a time; executing them one at a time wastes the
+vector unit, executing huge batches blows the latency SLO. The batcher
+forms batches by a deadline/size policy:
+
+* flush when ``max_batch`` requests are waiting, or
+* when the oldest request has waited ``max_delay_s`` (its deadline), and
+* pad the batch up to the next power-of-2 bucket so the engine's plan
+  cache hits (shape bucketing = compiled-plan reuse, paper O2).
+
+Admission control: a bounded queue — when the system is saturated the
+caller sees backpressure instead of unbounded latency (the "balancing
+CPU and memory under high concurrency" knob from the paper, adapted).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["BatcherConfig", "DynamicBatcher", "Request"]
+
+
+@dataclass(frozen=True)
+class BatcherConfig:
+    max_batch: int = 64
+    max_delay_s: float = 0.002
+    max_queue: int = 4096               # admission control bound
+    num_dispatchers: int = 1
+
+
+@dataclass
+class Request:
+    key: Any
+    ts: float
+    payload: Optional[np.ndarray] = None
+    enqueued_at: float = field(default_factory=time.perf_counter)
+    done: threading.Event = field(default_factory=threading.Event)
+    result: Optional[Dict[str, np.ndarray]] = None
+    error: Optional[Exception] = None
+
+    def wait(self, timeout: Optional[float] = None) -> Dict[str, np.ndarray]:
+        if not self.done.wait(timeout):
+            raise TimeoutError("request timed out")
+        if self.error is not None:
+            raise self.error
+        assert self.result is not None
+        return self.result
+
+
+class DynamicBatcher:
+    """Groups requests and dispatches them to ``serve_batch``.
+
+    ``serve_batch(keys, ts, payloads) -> {name: (B,) np.ndarray}``.
+    """
+
+    def __init__(self, serve_batch: Callable, cfg: BatcherConfig = BatcherConfig()):
+        self.serve_batch = serve_batch
+        self.cfg = cfg
+        self._q: Deque[Request] = collections.deque()
+        self._lock = threading.Lock()
+        self._new = threading.Condition(self._lock)
+        self._stop = False
+        self.stats = {"batches": 0, "requests": 0, "rejected": 0,
+                      "sum_batch": 0, "max_batch_seen": 0}
+        self._threads = [
+            threading.Thread(target=self._dispatch_loop, daemon=True)
+            for _ in range(cfg.num_dispatchers)]
+        for t in self._threads:
+            t.start()
+
+    # ---------------------------------------------------------------- client
+    def submit(self, key, ts: float,
+               payload: Optional[np.ndarray] = None) -> Request:
+        r = Request(key=key, ts=ts, payload=payload)
+        with self._lock:
+            if len(self._q) >= self.cfg.max_queue:
+                self.stats["rejected"] += 1
+                raise RuntimeError("admission control: queue full")
+            self._q.append(r)
+            self._new.notify()
+        return r
+
+    def __call__(self, key, ts: float,
+                 payload: Optional[np.ndarray] = None,
+                 timeout: float = 5.0) -> Dict[str, np.ndarray]:
+        return self.submit(key, ts, payload).wait(timeout)
+
+    # -------------------------------------------------------------- dispatch
+    def _take_batch(self) -> List[Request]:
+        cfg = self.cfg
+        with self._new:
+            while not self._q and not self._stop:
+                self._new.wait(0.1)
+            if self._stop and not self._q:
+                return []
+            # deadline policy: wait for more work until the oldest
+            # request's deadline, then take up to max_batch
+            oldest = self._q[0].enqueued_at
+            deadline = oldest + cfg.max_delay_s
+            while (len(self._q) < cfg.max_batch
+                   and time.perf_counter() < deadline and not self._stop):
+                self._new.wait(max(deadline - time.perf_counter(), 0.0001))
+            out = []
+            while self._q and len(out) < cfg.max_batch:
+                out.append(self._q.popleft())
+            return out
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            batch = self._take_batch()
+            if not batch:
+                if self._stop:
+                    return
+                continue
+            keys = [r.key for r in batch]
+            ts = np.asarray([r.ts for r in batch], np.float32)
+            payloads = None
+            if batch[0].payload is not None:
+                payloads = np.stack([r.payload for r in batch])
+            try:
+                res = self.serve_batch(keys, ts, payloads)
+                for i, r in enumerate(batch):
+                    r.result = {k: v[i] for k, v in res.items()}
+                    r.done.set()
+            except Exception as e:
+                for r in batch:
+                    r.error = e
+                    r.done.set()
+            self.stats["batches"] += 1
+            self.stats["requests"] += len(batch)
+            self.stats["sum_batch"] += len(batch)
+            self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"],
+                                               len(batch))
+
+    def close(self) -> None:
+        with self._lock:
+            self._stop = True
+            self._new.notify_all()
+        for t in self._threads:
+            t.join(timeout=1.0)
+
+    @property
+    def mean_batch(self) -> float:
+        b = self.stats["batches"]
+        return self.stats["sum_batch"] / b if b else 0.0

@@ -1,0 +1,158 @@
+"""Serving runtime: feature engine + (optional) model decode behind the
+dynamic batcher — the paper's online mode as a deployable server loop.
+
+Two servers:
+
+* ``FeatureServer`` — OpenMLDB's role: per-request real-time feature
+  vectors from deployed SQL window queries (engine hot path), with the
+  batcher providing deadline/size batching and admission control.
+* ``ModelServer``  — features (or tokens) -> model decode steps; holds the
+  jit-compiled ``serve_step`` + KV caches, demonstrates the end-to-end
+  "SQL features -> ML model" pipeline of the paper's Figure 5.
+
+Fault tolerance: a hedged-dispatch wrapper (``hedged``) re-issues a
+request after a deadline — at scale, one slow replica must not set the
+tail latency (straggler mitigation on the serving path).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.serving.batcher import BatcherConfig, DynamicBatcher
+
+__all__ = ["ServerConfig", "FeatureServer", "ModelServer", "hedged"]
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    batcher: BatcherConfig = BatcherConfig()
+    hedge_after_s: Optional[float] = None     # straggler re-dispatch
+
+
+class FeatureServer:
+    """Online feature serving over a deployed engine query."""
+
+    def __init__(self, engine: Engine, deployment: str,
+                 cfg: ServerConfig = ServerConfig()):
+        self.engine = engine
+        self.deployment = deployment
+        self.cfg = cfg
+
+        def serve_batch(keys, ts, payloads):
+            return self.engine.request(self.deployment, keys, ts, payloads)
+
+        self.batcher = DynamicBatcher(serve_batch, cfg.batcher)
+
+    def request(self, key, ts: float,
+                row: Optional[np.ndarray] = None,
+                timeout: float = 5.0) -> Dict[str, np.ndarray]:
+        call = lambda: self.batcher(key, ts, row, timeout=timeout)
+        if self.cfg.hedge_after_s is not None:
+            return hedged(call, self.cfg.hedge_after_s)
+        return call()
+
+    def close(self) -> None:
+        self.batcher.close()
+
+
+class ModelServer:
+    """Batched incremental decoding behind compiled prefill/decode steps.
+
+    ``prefill(tokens (B,S)) -> slot ids``; ``decode() -> (B,) next tokens``.
+    The KV caches live on device; requests join/leave slots (continuous
+    batching at slot granularity).
+    """
+
+    def __init__(self, cfg, params, *, batch: int, cache_len: int,
+                 mesh=None, greedy: bool = True):
+        from repro.launch.steps import make_prefill_step, make_serve_step
+        from repro.models import lm
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self._prefill = jax.jit(make_prefill_step(cfg, cache_len))
+        self._decode = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+        self.caches = lm.init_cache(cfg, batch, cache_len)
+        self.positions = jnp.zeros((batch,), jnp.int32)
+        self.tokens = jnp.zeros((batch,), jnp.int32)
+        self.active = np.zeros((batch,), bool)
+        self.generated: List[List[int]] = [[] for _ in range(batch)]
+
+    def prefill(self, tokens: np.ndarray) -> List[int]:
+        """Admit ``tokens (B0, S)`` sequences into free slots."""
+        B0, S = tokens.shape
+        free = [i for i in range(self.batch) if not self.active[i]][:B0]
+        if len(free) < B0:
+            raise RuntimeError("no free slots (admission control)")
+        last_logits, caches = self._prefill(self.params,
+                                            jnp.asarray(tokens, jnp.int32))
+        nxt = jnp.argmax(last_logits, -1).astype(jnp.int32)
+        # scatter the prefilled caches into the batch slots
+        idx = jnp.asarray(free, jnp.int32)
+        self.caches = jax.tree_util.tree_map(
+            lambda full, new: full.at[:, idx].set(
+                new.astype(full.dtype)) if full.ndim >= 2 else full,
+            self.caches, caches)
+        self.tokens = self.tokens.at[idx].set(nxt)
+        self.positions = self.positions.at[idx].set(S)
+        for j, slot in enumerate(free):
+            self.active[slot] = True
+            self.generated[slot] = [int(nxt[j])]
+        return free
+
+    def decode(self, steps: int = 1) -> np.ndarray:
+        """Advance every active slot ``steps`` tokens."""
+        for _ in range(steps):
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               self.tokens, self.positions)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            self.tokens = nxt
+            self.positions = self.positions + 1
+            host = np.asarray(nxt)
+            for i in range(self.batch):
+                if self.active[i]:
+                    self.generated[i].append(int(host[i]))
+        return np.asarray(self.tokens)
+
+    def release(self, slots: Sequence[int]) -> None:
+        for s in slots:
+            self.active[s] = False
+
+
+def hedged(call: Callable[[], Any], after_s: float,
+           max_hedges: int = 1) -> Any:
+    """Issue ``call``; if it has not returned after ``after_s``, race a
+    second attempt and take the winner (tail-at-scale mitigation)."""
+    result: Dict[str, Any] = {}
+    done = threading.Event()
+
+    def attempt(tag):
+        try:
+            r = call()
+        except Exception as e:
+            r = e
+        if not done.is_set():
+            result.setdefault("v", r)
+            done.set()
+
+    t = threading.Thread(target=attempt, args=("p",), daemon=True)
+    t.start()
+    n = 0
+    while not done.wait(after_s) and n < max_hedges:
+        n += 1
+        threading.Thread(target=attempt, args=(f"h{n}",), daemon=True).start()
+    done.wait()
+    v = result["v"]
+    if isinstance(v, Exception):
+        raise v
+    return v

@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real
+single CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import os
+
+# determinism + quiet logs for the whole suite
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_table_with_events(n_keys=8, n_events=400, n_cols=3, capacity=128,
+                           bucket_size=16, seed=0, enable_preagg=True):
+    """A populated events Table + the raw (keys, ts, rows) used."""
+    from repro.featurestore.table import Table, TableSchema
+    rng = np.random.default_rng(seed)
+    schema = TableSchema("events", key_col="k", ts_col="ts",
+                         value_cols=tuple(f"c{i}" for i in range(n_cols)))
+    t = Table(schema, max_keys=n_keys, capacity=capacity,
+              bucket_size=bucket_size, enable_preagg=enable_preagg)
+    keys = rng.integers(0, n_keys, n_events)
+    ts = np.sort(rng.uniform(0.0, 1000.0, n_events)).astype(np.float32)
+    rows = rng.normal(0, 2, size=(n_events, n_cols)).astype(np.float32)
+    t.insert(keys.tolist(), ts.tolist(), rows)
+    return t, (keys, ts, rows)

@@ -1,0 +1,92 @@
+"""Checkpoint manager: atomicity, crc validation, retention, async,
+restore-with-reshard."""
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def tree(step):
+    return {"params": {"w": jnp.full((4, 4), float(step)),
+                       "b": jnp.arange(4.0) + step},
+            "opt": {"m": jnp.zeros((4, 4)), "count": jnp.asarray(step)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retain=3, async_save=False)
+    mgr.save(5, tree(5), extra={"note": "x"})
+    got, meta = mgr.restore(None, tree(0))
+    assert meta.step == 5 and meta.extra["note"] == "x"
+    np.testing.assert_allclose(got["params"]["w"], np.full((4, 4), 5.0))
+    assert int(got["opt"]["count"]) == 5
+
+
+def test_async_save_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retain=2, async_save=True)
+    for s in (1, 2, 3):
+        mgr.save(s, tree(s))
+    mgr.wait()
+    assert mgr.all_steps() == [2, 3]            # retention
+
+
+def test_retention_with_archive(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), retain=1, archive_every=2,
+                            async_save=False)
+    for s in (1, 2, 3, 4, 5):
+        mgr.save(s, tree(s))
+    assert mgr.all_steps() == [2, 4, 5]         # archives 2,4 + newest 5
+
+
+def test_crc_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, tree(1))
+    d = os.path.join(str(tmp_path), "step_0000000001")
+    victim = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(d, victim))
+    arr = arr.reshape(-1)
+    arr = arr.copy()
+    arr.flat[0] += 1.0
+    np.save(os.path.join(d, victim), arr)
+    with pytest.raises(IOError, match="crc"):
+        mgr.restore(1, tree(0))
+    # validation can be bypassed explicitly (forensics path)
+    got, _ = mgr.restore(1, tree(0), validate=False)
+
+
+def test_atomic_publish_no_partial_checkpoint(tmp_path):
+    """tmp dirs never count as checkpoints."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    os.makedirs(os.path.join(str(tmp_path), "tmp.9.zzz"))
+    assert mgr.all_steps() == []
+    mgr.save(1, tree(1))
+    assert mgr.all_steps() == [1]
+
+
+def test_restore_resharded_on_local_mesh(tmp_path):
+    from repro.checkpoint.reshard import restore_resharded
+    from repro.launch.mesh import make_local_mesh
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    t = {"mlp": {"wi": jnp.ones((8, 16)), "wo": jnp.ones((16, 8))}}
+    mgr.save(3, t)
+    mesh = make_local_mesh()
+    placed, meta = restore_resharded(mgr, None, t, mesh)
+    assert meta.step == 3
+    np.testing.assert_allclose(np.asarray(placed["mlp"]["wi"]),
+                               np.ones((8, 16)))
+    # placed arrays carry shardings from the rule table
+    assert placed["mlp"]["wi"].sharding is not None
+
+
+def test_leaf_slice_bytes_contiguous():
+    from repro.checkpoint.reshard import leaf_slice_bytes
+    off, ln = leaf_slice_bytes((8, 4), np.float32, axis=0, shard=1,
+                               n_shards=2)
+    assert off == 4 * 4 * 4 and ln == 4 * 4 * 4
+    with pytest.raises(ValueError):
+        leaf_slice_bytes((8, 4), np.float32, axis=1, shard=0, n_shards=2)

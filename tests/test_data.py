@@ -1,0 +1,96 @@
+"""Synthetic data generator + host pipeline (prefetch, ordering, hedging)."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import HostPipeline, PipelineConfig
+from repro.data.synthetic import (EventStreamConfig, generate_events,
+                                  make_labels, request_stream,
+                                  token_batch_stream)
+
+
+def test_generator_deterministic():
+    cfg = EventStreamConfig(n_events=500, seed=7)
+    a = generate_events(cfg)
+    b = generate_events(cfg)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_generator_properties():
+    cfg = EventStreamConfig(n_events=5000, n_keys=64, zipf_alpha=1.3)
+    keys, ts, rows = generate_events(cfg)
+    assert np.all(np.diff(ts) >= 0)                 # time-ordered
+    assert rows.shape == (5000, cfg.n_features)
+    assert np.all(rows[:, 0] > 0)                   # lognormal amounts
+    # zipf: the most popular key dominates the median one
+    _, freq = np.unique(keys, return_counts=True)
+    assert freq.max() > 5 * np.median(freq)
+
+
+def test_labels_plantable():
+    cfg = EventStreamConfig(n_events=3000, n_keys=32)
+    keys, ts, rows = generate_events(cfg)
+    y = make_labels(keys, ts, rows)
+    assert y.shape == (3000,)
+    assert 0.0 < y.mean() < 0.5                     # rare positives
+
+
+def test_request_stream_horizon():
+    cfg = EventStreamConfig(n_events=200)
+    keys, ts, rows = generate_events(cfg)
+    for ks, rts in request_stream(keys, ts, batch=16, n_batches=3):
+        assert len(ks) == 16
+        assert np.all(rts > ts.max())               # online "now" queries
+
+
+def test_token_stream_shapes():
+    it = token_batch_stream(vocab=100, batch=4, seq=16, n_batches=2)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16)
+    assert b["targets"].shape == (4, 16)
+    assert b["tokens"].max() < 100
+
+
+def test_pipeline_in_order_delivery():
+    def producer(i):
+        time.sleep(0.001 * ((i * 7) % 5))           # jittered producers
+        return i
+
+    p = HostPipeline(producer, n_batches=20,
+                     cfg=PipelineConfig(prefetch=4, n_workers=3))
+    got = list(p)
+    assert got == list(range(20))
+
+
+def test_pipeline_propagates_errors():
+    def producer(i):
+        if i == 3:
+            raise RuntimeError("producer died")
+        return i
+
+    p = HostPipeline(producer, n_batches=10)
+    with pytest.raises(RuntimeError, match="producer died"):
+        list(p)
+
+
+def test_pipeline_hedging_beats_straggler():
+    calls = []
+
+    def producer(i):
+        calls.append(i)
+        if i == 2 and calls.count(2) == 1:
+            time.sleep(0.4)                         # first attempt straggles
+        return i
+
+    p = HostPipeline(producer, n_batches=6,
+                     cfg=PipelineConfig(prefetch=2, n_workers=2,
+                                        hedge_after_s=0.05, max_hedges=1))
+    t0 = time.perf_counter()
+    got = list(p)
+    dt = time.perf_counter() - t0
+    assert got == list(range(6))
+    assert p.stats["hedges"] >= 1
+    assert dt < 0.4                                 # hedge avoided the stall

@@ -1,0 +1,167 @@
+"""SQL parser edge cases, expression algebra, optimizer passes in
+isolation, and plan-cache LRU semantics."""
+import numpy as np
+import pytest
+
+from repro.core import dsl
+from repro.core import expr as E
+from repro.core.logical import Query, validate
+from repro.core.optimizer import OptFlags, TableMeta, optimize
+from repro.core.plan_cache import PlanCache, bucket_batch
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+
+def test_parse_range_window():
+    q = dsl.parse_sql("""
+        SELECT AVG(x) OVER w AS a FROM t
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     RANGE BETWEEN 30 PRECEDING AND CURRENT ROW)""")
+    spec = dict(q.windows)["w"]
+    assert spec.range_preceding == 30.0 and spec.rows_preceding is None
+
+
+def test_parse_scalar_arithmetic_and_functions():
+    q = dsl.parse_sql("""
+        SELECT SUM(x) OVER w AS s,
+               LOG(SUM(x) OVER w + 1) AS lg,
+               SUM(x) OVER w / COUNT(x) OVER w AS manual_avg
+        FROM t
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    names = [n for n, _ in q.outputs]
+    assert names == ["s", "lg", "manual_avg"]
+
+
+def test_parse_where_clause():
+    q = dsl.parse_sql("""
+        SELECT COUNT(x) OVER w AS c FROM t
+        WHERE x > 3 AND x <= 10
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    assert q.where is not None
+    assert isinstance(q.where, E.BinOp)
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(SyntaxError):
+        dsl.parse_sql("SELECT FROM WINDOW nope")
+    # undefined window refs are caught at plan validation (deploy time)
+    q = dsl.parse_sql("SELECT SUM(x) OVER missing AS s FROM t")
+    with pytest.raises(ValueError, match="undefined window"):
+        q.to_logical()
+    # mixed partition keys are rejected too
+    q2 = dsl.parse_sql("""
+        SELECT SUM(x) OVER a AS s, SUM(x) OVER b AS t2 FROM t
+        WINDOW a AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW),
+               b AS (PARTITION BY other ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    with pytest.raises(ValueError, match="PARTITION BY"):
+        q2.to_logical()
+
+
+def test_expr_fingerprint_stable_and_distinct():
+    a = dsl.sum_(dsl.col("x")).over("w").node
+    b = dsl.sum_(dsl.col("x")).over("w").node
+    c = dsl.sum_(dsl.col("y")).over("w").node
+    assert a.fingerprint() == b.fingerprint()
+    assert a.fingerprint() != c.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# optimizer passes in isolation
+# ---------------------------------------------------------------------------
+
+def _meta(**kw):
+    d = dict(capacity=256, bucket_size=32, n_value_cols=2, has_preagg=True)
+    d.update(kw)
+    return TableMeta(**d)
+
+
+def test_constant_folding():
+    q = dsl.parse_sql("""
+        SELECT SUM(x) OVER w * (2 + 3) AS s FROM t
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    plan, log = optimize(q.to_logical(), _meta(), OptFlags())
+    assert any("constant" in l for l in log), log
+
+
+def test_window_cost_model_switches_impl():
+    q = dsl.parse_sql("""
+        SELECT SUM(x) OVER w AS s FROM t
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 200 PRECEDING AND CURRENT ROW)""")
+    # big window + preagg available -> preagg
+    plan, _ = optimize(q.to_logical(), _meta(capacity=4096), OptFlags())
+    assert dict(plan.window_impl)["w"] == "preagg"
+    # no preagg tier -> naive
+    plan, _ = optimize(q.to_logical(), _meta(has_preagg=False), OptFlags())
+    assert dict(plan.window_impl)["w"] == "naive"
+
+
+def test_decompose_then_cse_shares_moments():
+    q = dsl.parse_sql("""
+        SELECT AVG(x) OVER w AS a, STD(x) OVER w AS sd,
+               SUM(x) OVER w AS s
+        FROM t
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 50 PRECEDING AND CURRENT ROW)""")
+    plan, log = optimize(q.to_logical(), _meta(), OptFlags())
+    # AVG -> SUM/COUNT and STD -> moments share the SUM aggregate
+    uniq = set()
+    for _, e in plan.project.outputs:
+        for agg in E.collect_aggs(e):
+            uniq.add(agg.fingerprint())
+    assert len(uniq) <= 3, uniq     # sum, sumsq(x*x), count
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_bucket_batch_monotone():
+    prev = 0
+    for n in range(1, 300):
+        b = bucket_batch(n)
+        assert b >= n
+        assert b >= prev or n <= prev
+        prev = b
+    assert bucket_batch(5000) == 8192
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(max_entries=2)
+    calls = []
+
+    def mk(tag):
+        def make():
+            calls.append(tag)
+            return lambda: tag
+        return make
+
+    cache.get_or_compile("a", mk("a"))
+    cache.get_or_compile("b", mk("b"))
+    cache.get_or_compile("a", mk("a"))       # refresh a
+    cache.get_or_compile("c", mk("c"))       # evicts b (LRU)
+    cache.get_or_compile("a", mk("a"))       # still cached
+    cache.get_or_compile("b", mk("b"))       # recompiles
+    assert calls == ["a", "b", "c", "b"]
+    assert cache.stats.evictions >= 1
+    assert cache.stats.hits == 2
+
+
+def test_plan_cache_disabled_always_compiles():
+    cache = PlanCache(enabled=False)
+    n = {"c": 0}
+
+    def make():
+        n["c"] += 1
+        return lambda: None
+
+    cache.get_or_compile("k", make)
+    cache.get_or_compile("k", make)
+    assert n["c"] == 2

@@ -1,0 +1,222 @@
+"""Engine behaviour: deploy/request/offline, optimizer passes, plan cache,
+latency decomposition, baselines — the paper's system surface."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dsl
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.featurestore.table import TableSchema
+
+SQL = """
+SELECT SUM(amount) OVER w AS s,
+       AVG(amount) OVER w AS a,
+       STD(amount) OVER w AS sd,
+       COUNT(amount) OVER w AS c,
+       MAX(lat) OVER w AS mx
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 50 PRECEDING AND CURRENT ROW)
+"""
+
+
+def make_engine(flags=OptFlags(), n_events=500, n_keys=16, seed=0):
+    eng = Engine(flags)
+    schema = TableSchema("events", key_col="user", ts_col="ts",
+                         value_cols=("amount", "lat", "lon"))
+    eng.create_table(schema, max_keys=64, capacity=256, bucket_size=32)
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_keys, n_events)
+    ts = np.sort(rng.uniform(0, 1000, n_events)).astype(np.float32)
+    rows = rng.normal(0, 2, size=(n_events, 3)).astype(np.float32)
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    return eng, (keys, ts, rows)
+
+
+def brute_force(keys, ts, rows, req_key, req_ts, w=50):
+    """Host-side oracle. Engine semantics: the window covers the last ``w``
+    STORED events with ts <= request ts (the request row itself is exposed
+    to scalar expressions but not aggregated); empty windows -> 0."""
+    out = {"s": [], "a": [], "sd": [], "c": [], "mx": []}
+    for k, t in zip(req_key, req_ts):
+        m = (keys == k) & (ts <= t)
+        amounts = rows[m, 0][-w:]
+        lats = rows[m, 1][-w:]
+        n = len(amounts)
+        out["c"].append(float(n))
+        out["s"].append(amounts.sum() if n else 0.0)
+        out["a"].append(amounts.mean() if n else 0.0)
+        out["sd"].append(amounts.std() if n else 0.0)
+        out["mx"].append(lats.max() if n else 0.0)
+    return {k: np.asarray(v, np.float32) for k, v in out.items()}
+
+
+@pytest.mark.parametrize("flags", [
+    OptFlags(),                                           # everything on
+    OptFlags(preagg=False),                               # naive windows
+    OptFlags(query_opt=False, preagg=False),              # no rewrites
+    OptFlags(vectorized=False),                           # row-at-a-time
+])
+def test_engine_matches_bruteforce(flags):
+    """Online requests (ts past the ingest horizon — the assume_latest
+    contract of the online fast path)."""
+    eng, (keys, ts, rows) = make_engine(flags)
+    dep = eng.deploy("f", SQL)
+    rng = np.random.default_rng(1)
+    B = 16
+    rk = rng.integers(0, 16, B)
+    rt = np.sort(rng.uniform(1100, 1500, B)).astype(np.float32)
+    got = eng.request("f", rk.tolist(), rt.tolist())
+    want = brute_force(keys, ts, rows, rk, rt)
+    for name in ("s", "a", "sd", "c", "mx"):
+        np.testing.assert_allclose(got[name], want[name], rtol=1e-3,
+                                   atol=1e-3, err_msg=name)
+
+
+def test_point_in_time_requests():
+    """assume_latest=False: request ts inside history must see only events
+    up to that ts (offline / point-in-time semantics)."""
+    eng, (keys, ts, rows) = make_engine(
+        OptFlags(assume_latest=False))
+    eng.deploy("f", SQL)
+    rng = np.random.default_rng(2)
+    B = 16
+    rk = rng.integers(0, 16, B)
+    rt = np.sort(rng.uniform(200, 1500, B)).astype(np.float32)
+    got = eng.request("f", rk.tolist(), rt.tolist())
+    want = brute_force(keys, ts, rows, rk, rt)
+    for name in ("s", "a", "sd", "c", "mx"):
+        np.testing.assert_allclose(got[name], want[name], rtol=1e-3,
+                                   atol=1e-3, err_msg=name)
+
+
+def test_optimizer_pass_log_and_impl_choice():
+    eng, _ = make_engine()
+    dep = eng.deploy("f", SQL)
+    log = "\n".join(dep.opt_log)
+    assert "decompose_aggregates" in log       # AVG/STD -> moments
+    assert "cse" in log                        # shared SUM/COUNT
+    assert any(g.impl == "preagg" for g in dep.phys.groups)
+    # naive chosen when preagg disabled
+    eng2, _ = make_engine(OptFlags(preagg=False))
+    dep2 = eng2.deploy("f", SQL)
+    assert all(g.impl == "naive" for g in dep2.phys.groups)
+
+
+def test_plan_cache_hits_across_batches():
+    eng, (keys, ts, _) = make_engine()
+    eng.deploy("f", SQL)
+    for i in range(5):
+        eng.request("f", keys[:7].tolist(), (ts[:7] + 2000 + i).tolist())
+    st = eng.cache.stats
+    assert st.hits >= 4                        # first compiles, rest hit
+    assert eng.latency_decomposition()["cache_hit_rate"] > 0.5
+
+
+def test_shape_bucketing_reuses_plans():
+    from repro.core.plan_cache import bucket_batch
+    assert bucket_batch(1) == 1
+    assert bucket_batch(3) == 4
+    assert bucket_batch(5) == 8
+    assert bucket_batch(64) == 64
+    eng, (keys, ts, _) = make_engine()
+    eng.deploy("f", SQL)
+    eng.request("f", keys[:5].tolist(), (ts[:5] + 2000).tolist())
+    eng.request("f", keys[:7].tolist(), (ts[:7] + 2001).tolist())  # same 8
+    assert eng.cache.stats.misses == 1
+    assert eng.cache.stats.hits == 1
+
+
+def test_latency_decomposition_populated():
+    eng, (keys, ts, _) = make_engine()
+    eng.deploy("f", SQL)
+    eng.request("f", keys[:4].tolist(), (ts[:4] + 2000).tolist())
+    d = eng.latency_decomposition()
+    assert d["parse_s"] > 0 and d["plan_s"] > 0 and d["exec_s"] > 0
+    assert d["n_requests"] == 4
+
+
+def test_where_clause_filters_events():
+    eng, (keys, ts, rows) = make_engine()
+    q = """SELECT COUNT(amount) OVER w AS c FROM events
+           WHERE amount > 0
+           WINDOW w AS (PARTITION BY user ORDER BY ts
+                        ROWS BETWEEN 100 PRECEDING AND CURRENT ROW)"""
+    eng.deploy("fw", q)
+    rk, rt = keys[:8], ts[:8] + 2000
+    got = eng.request("fw", rk.tolist(), rt.tolist())
+    for k, t, c in zip(rk, rt, got["c"]):
+        m = (keys == k) & (ts <= t)
+        # WHERE applies inside the last-100 row window
+        want = (rows[m, 0][-100:] > 0).sum()
+        assert c == pytest.approx(want, abs=1e-4)
+
+
+def test_query_builder_equivalent_to_sql():
+    eng, (keys, ts, _) = make_engine()
+    eng.deploy("sql", SQL)
+    qb = (dsl.QueryBuilder("events")
+          .window("w", partition_by="user", order_by="ts", rows=50)
+          .select(s=dsl.sum_(dsl.col("amount")).over("w"),
+                  a=dsl.avg_(dsl.col("amount")).over("w"),
+                  sd=dsl.std_(dsl.col("amount")).over("w"),
+                  c=dsl.count_(dsl.col("amount")).over("w"),
+                  mx=dsl.max_(dsl.col("lat")).over("w")))
+    eng.deploy("py", qb)
+    rk, rt = keys[:6].tolist(), (ts[:6] + 3000).tolist()
+    a = eng.request("sql", rk, rt)
+    b = eng.request("py", rk, rt)
+    for name in a:
+        np.testing.assert_allclose(a[name], b[name], rtol=1e-6)
+
+
+def test_model_udf_predict():
+    """PREDICT(model, features...) — the +ML part of SQL+ML."""
+    eng, (keys, ts, _) = make_engine()
+    w = np.asarray([0.5, -0.25], np.float32)
+
+    def scorer(params, feats):
+        return jnp.asarray(feats) @ jnp.asarray(params)
+
+    eng.register_model("scorer", scorer, w)
+    q = """SELECT SUM(amount) OVER w AS fs,
+                  COUNT(amount) OVER w AS fc,
+                  PREDICT(scorer, fs, fc) AS score
+           FROM events
+           WINDOW w AS (PARTITION BY user ORDER BY ts
+                        ROWS BETWEEN 50 PRECEDING AND CURRENT ROW)"""
+    eng.deploy("ml", q)
+    got = eng.request("ml", keys[:5].tolist(), (ts[:5] + 2000).tolist())
+    plain = eng.deploy("plain", SQL)
+    feats = eng.request("plain", keys[:5].tolist(), (ts[:5] + 2000).tolist())
+    want = feats["s"] * 0.5 - 0.25 * feats["c"]
+    np.testing.assert_allclose(got["score"], want, rtol=1e-4, atol=1e-4)
+
+
+def test_baseline_profiles_agree_on_results():
+    """All emulated engines must compute identical features (they differ
+    only in execution model / speed)."""
+    from repro.core.baselines import BaselineRunner, make_engine as mk
+    results = {}
+    for profile in ("openmldb", "row_interpreter", "microbatch",
+                    "columnar_scan"):
+        eng = mk(profile)
+        schema = TableSchema("events", key_col="user", ts_col="ts",
+                             value_cols=("amount", "lat", "lon"))
+        eng.create_table(schema, max_keys=64, capacity=256, bucket_size=32)
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, 16, 500)
+        ts = np.sort(rng.uniform(0, 1000, 500)).astype(np.float32)
+        rows = rng.normal(0, 2, (500, 3)).astype(np.float32)
+        eng.insert("events", keys.tolist(), ts.tolist(), rows)
+        eng.deploy("f", SQL)
+        r = BaselineRunner(eng, "f", profile)
+        out = r.serve_batch(keys[:10].tolist(), (ts[:10] + 2000).tolist())
+        results[profile] = out
+    base = results["openmldb"]
+    for profile, out in results.items():
+        for name in base:
+            np.testing.assert_allclose(
+                out[name], base[name], rtol=1e-3, atol=1e-3,
+                err_msg=f"{profile}:{name}")

@@ -1,0 +1,109 @@
+"""Ring-buffer storage + pre-aggregate tier invariants (incl. hypothesis
+property tests on the system's core invariant: preagg == rebuild)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.featurestore.preagg import (preagg_memory_overhead,
+                                       rebuild_preagg, verify_preagg)
+from repro.featurestore.table import Table, TableSchema
+from conftest import make_table_with_events
+
+
+def test_ring_buffer_positions_and_eviction():
+    schema = TableSchema("t", "k", "ts", ("x",))
+    t = Table(schema, max_keys=2, capacity=8, bucket_size=4)
+    # 12 events for key 'a': first 4 must be evicted
+    t.insert(["a"] * 12, list(range(12)), np.arange(12, dtype=np.float32)[:, None])
+    st_ = t.state
+    assert int(st_.total[0]) == 12
+    vals = np.asarray(st_.values[0, :, 0])
+    # slots hold positions 4..11 (ring layout: slot p % 8)
+    for p in range(4, 12):
+        assert vals[p % 8] == p
+    assert t.memory_bytes() > 0
+
+
+def test_out_of_order_ingest_rejected():
+    schema = TableSchema("t", "k", "ts", ("x",))
+    t = Table(schema, max_keys=2, capacity=8, bucket_size=4)
+    t.insert(["a"], [5.0], np.zeros((1, 1), np.float32))
+    with pytest.raises(ValueError, match="out-of-order"):
+        t.insert(["a"], [4.0], np.zeros((1, 1), np.float32))
+
+
+def test_key_space_exhaustion():
+    schema = TableSchema("t", "k", "ts", ("x",))
+    t = Table(schema, max_keys=2, capacity=8, bucket_size=4)
+    t.insert(["a", "b"], [0.0, 0.0], np.zeros((2, 1), np.float32))
+    with pytest.raises(RuntimeError, match="key space exhausted"):
+        t.insert(["c"], [1.0], np.zeros((1, 1), np.float32))
+
+
+def test_incremental_preagg_matches_rebuild():
+    t, _ = make_table_with_events(n_keys=6, n_events=700, capacity=128,
+                                  bucket_size=16, seed=3)
+    ok, err = verify_preagg(t.state, t.preagg, bucket_size=16)
+    assert ok, f"max err {err}"
+
+
+def test_preagg_memory_overhead_bounded():
+    t, _ = make_table_with_events(capacity=128, bucket_size=16)
+    ovh = preagg_memory_overhead(t.state, t.preagg)
+    # 4 stat tensors + count at 1/16 bucket granularity ≈ 4/16 + eps
+    assert 0.1 < ovh < 0.5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_events=st.integers(1, 300),
+    n_keys=st.integers(1, 5),
+    bucket=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_property_preagg_invariant(n_events, n_keys, bucket, seed):
+    """For ANY ingest pattern, live full buckets of the incremental tier
+    equal a from-scratch rebuild (paper Eq. 2 correctness)."""
+    rng = np.random.default_rng(seed)
+    schema = TableSchema("t", "k", "ts", ("x", "y"))
+    t = Table(schema, max_keys=n_keys, capacity=64, bucket_size=bucket)
+    keys = rng.integers(0, n_keys, n_events)
+    ts = np.sort(rng.uniform(0, 100, n_events)).astype(np.float32)
+    rows = rng.normal(0, 3, (n_events, 2)).astype(np.float32)
+    # ingest in random batch splits
+    i = 0
+    while i < n_events:
+        j = min(n_events, i + int(rng.integers(1, 40)))
+        t.insert(keys[i:j].tolist(), ts[i:j].tolist(), rows[i:j])
+        i = j
+    ok, err = verify_preagg(t.state, t.preagg, bucket_size=bucket,
+                            atol=1e-2)
+    assert ok, f"max err {err}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    w=st.integers(1, 80),
+    seed=st.integers(0, 10_000),
+)
+def test_property_preagg_window_equals_naive(w, seed):
+    """Window aggregates via the preagg path == naive scan, for any
+    window size (the optimizer's impl choice can never change results)."""
+    from repro.kernels import ref
+    t, _ = make_table_with_events(n_keys=4, n_events=300, capacity=128,
+                                  bucket_size=16, seed=seed)
+    st_, pa = t.state, t.preagg
+    rng = np.random.default_rng(seed + 1)
+    req_key = jnp.asarray(rng.integers(0, 4, 6), jnp.int32)
+    req_ts = jnp.asarray(np.sort(rng.uniform(0, 1200, 6)), jnp.float32)
+    naive = ref.window_agg_ref(st_.values, st_.ts, st_.total, req_key,
+                               req_ts, rows_preceding=w)
+    fast = ref.preagg_window_ref(st_.values, st_.ts, st_.total, pa.sum,
+                                 pa.sumsq, pa.min, pa.max, pa.count,
+                                 req_key, req_ts, bucket_size=16,
+                                 rows_preceding=w)
+    for name in ("sum", "count", "min", "max"):
+        np.testing.assert_allclose(np.asarray(fast[name]),
+                                   np.asarray(naive[name]),
+                                   rtol=5e-4, atol=5e-4, err_msg=name)

@@ -1,0 +1,211 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned
+arch instantiates a REDUCED config of the same family and runs one
+forward/train step + one decode step on CPU, asserting shapes + no NaNs."""
+import dataclasses
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, input_specs, param_count, reduced
+from repro.configs.registry import get_config, list_archs
+from repro.models import encdec, frontend, lm
+
+ARCHS = list_archs()
+
+
+def _reduced_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks),
+             "targets": jnp.asarray(np.roll(toks, -1, 1))}
+    if cfg.frontend:
+        batch["embeds"] = frontend.stub_frontend(
+            jax.random.PRNGKey(1), cfg, B)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = frontend.stub_audio_frames(
+            jax.random.PRNGKey(2), cfg, B, n_frames=S)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch):
+    """One real optimizer step on the reduced config: loss finite+decreases
+    direction sane, params updated, grads flow to every leaf."""
+    from repro.launch.steps import init_params, make_train_step
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    cfg = reduced(get_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                          schedule="constant")
+    opt = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = _reduced_batch(cfg)
+    p1, o1, m1 = step(params, opt, batch)
+    assert np.isfinite(m1["loss"]), arch
+    assert float(m1["loss"]) > 0
+    # a second step on the same batch must reduce the loss (sanity)
+    p2, o2, m2 = step(p1, o1, batch)
+    assert float(m2["loss"]) < float(m1["loss"]), arch
+    # params actually changed
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, p1)
+    assert max(jax.tree_util.tree_leaves(d)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode(arch):
+    """Prefill+decode path: shapes, finiteness, cache threading."""
+    cfg = reduced(get_config(arch))
+    B, S, steps = 2, 8, 3
+    if cfg.is_encdec:
+        params = encdec.init_encdec(jax.random.PRNGKey(0), cfg)
+        enc_in = frontend.stub_audio_frames(jax.random.PRNGKey(1), cfg, B,
+                                            n_frames=S)
+        enc_out = encdec.encode(params, cfg, enc_in)
+        toks = jnp.ones((B, S), jnp.int32)
+        logits, caches = encdec.dec_prefill(params, cfg, enc_out, toks,
+                                            cache_len=S + steps)
+        assert logits.shape == (B, cfg.vocab_size)
+        pos = jnp.full((B,), S, jnp.int32)
+        for i in range(steps):
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            logits, caches = encdec.dec_decode_step(
+                params, cfg, enc_out, caches, tok, pos + i)
+            assert np.isfinite(np.asarray(logits)).all(), arch
+        return
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jnp.ones((B, S), jnp.int32)
+    emb = (frontend.stub_frontend(jax.random.PRNGKey(1), cfg, B)
+           if cfg.frontend else None)
+    cache_len = S + steps + (cfg.frontend_len if cfg.frontend else 0)
+    logits, caches = lm.prefill(params, cfg, toks, cache_len, emb)
+    assert logits.shape == (B, cfg.vocab_size)
+    S_eff = S + (cfg.frontend_len if cfg.frontend else 0)
+    pos = jnp.full((B,), S_eff, jnp.int32)
+    for i in range(steps):
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits, caches = lm.decode_step(params, cfg, caches, tok, pos + i)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_shapes(arch):
+    """Every (arch × shape) cell has well-defined dry-run input specs."""
+    cfg = get_config(arch)
+    for shape in SHAPES:
+        specs = input_specs(cfg, shape)
+        assert specs, (arch, shape)
+        for name, s in specs.items():
+            assert all(d > 0 for d in s.shape), (arch, shape, name)
+
+
+def test_prefill_decode_equals_full_forward():
+    """Incremental decoding must reproduce teacher-forced logits."""
+    cfg = reduced(get_config("qwen2-1.5b"))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full_logits, _ = lm.forward_train(params, cfg, toks)
+    # prefill the first 6, decode the rest one by one
+    cut = 6
+    logits, caches = lm.prefill(params, cfg, toks[:, :cut], cache_len=S)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, cut - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for i in range(cut, S):
+        pos = jnp.full((B,), i, jnp.int32)
+        logits, caches = lm.decode_step(params, cfg, caches, toks[:, i],
+                                        pos)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full_logits[:, i]),
+                                   rtol=2e-3, atol=2e-3, err_msg=f"pos {i}")
+
+
+def test_mamba_decode_equals_prefill_state():
+    """SSM: step-by-step decode == chunked prefill (SSD duality)."""
+    cfg = reduced(get_config("mamba2-780m"))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full_logits, _ = lm.forward_train(params, cfg, toks)
+    logits, caches = lm.prefill(params, cfg, toks[:, :6], cache_len=S)
+    for i in range(6, S):
+        pos = jnp.full((B,), i, jnp.int32)
+        logits, caches = lm.decode_step(params, cfg, caches, toks[:, i], pos)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full_logits[:, i]),
+                                   rtol=5e-3, atol=5e-3, err_msg=f"pos {i}")
+
+
+def test_sliding_window_ring_cache():
+    """Mixtral-style rolling KV ring: decode far past the window size must
+    equal full attention restricted to the window. capacity_factor is
+    raised so MoE token-dropping (a train-vs-decode semantic difference by
+    design) cannot mask the attention comparison."""
+    base = reduced(get_config("mixtral-8x22b"))
+    cfg = dataclasses.replace(
+        base, sliding_window=8,
+        moe=dataclasses.replace(base.moe, capacity_factor=32.0))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full_logits, _ = lm.forward_train(params, cfg, toks)   # SWA inside
+    logits, caches = lm.prefill(params, cfg, toks[:, :8], cache_len=8)
+    for i in range(8, S):
+        pos = jnp.full((B,), i, jnp.int32)
+        logits, caches = lm.decode_step(params, cfg, caches, toks[:, i], pos)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, i]),
+            rtol=2e-2, atol=2e-2, err_msg=f"pos {i}")
+
+
+def test_param_count_matches_actual():
+    from repro.launch.steps import params_struct
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        ps = params_struct(cfg)
+        actual = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(ps))
+        analytic = param_count(cfg)
+        assert abs(analytic - actual) / actual < 0.01, (
+            arch, analytic, actual)
+
+
+def test_moe_grouped_dispatch_equals_global():
+    """Per-DP-shard dispatch groups (moe_groups>1) must produce
+    bit-identical outputs to the global dispatch when capacity admits
+    every token (only the load-balance regularizer becomes local)."""
+    from repro.models import moe as M
+    base = reduced(get_config("mixtral-8x22b"))
+    cfg = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, capacity_factor=64.0))
+    p = M.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                          jnp.float32)
+    y1, m1 = M.apply_moe(p, x, cfg)
+    y2, m2 = M.apply_moe(p, x, dataclasses.replace(cfg, moe_groups=4))
+    assert float(m1["moe_drop_frac"]) == 0.0
+    assert float(m2["moe_drop_frac"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # non-divisible group count falls back to global dispatch
+    y3, _ = M.apply_moe(p, x, dataclasses.replace(cfg, moe_groups=7))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y3))
+
+
+def test_moe_routing_flop_honesty():
+    """Dispatch slab is (E, cap, d) with cap ≈ T·topk·cf/E — active-params
+    compute, not dense all-experts."""
+    from repro.models.moe import expert_capacity
+    from repro.configs.base import MoEConfig
+    moe = MoEConfig(num_experts=8, top_k=2, d_ff_expert=64,
+                    capacity_factor=1.25)
+    cap = expert_capacity(1024, moe)
+    assert cap >= 1024 * 2 * 1.25 / 8
+    assert cap <= 1024  # far below the dense all-experts T

@@ -1,0 +1,139 @@
+"""Serving runtime: dynamic batcher semantics, feature server e2e,
+model server continuous batching, hedged dispatch."""
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serving.batcher import BatcherConfig, DynamicBatcher
+from repro.serving.server import FeatureServer, ModelServer, ServerConfig, hedged
+
+
+def echo_serve(keys, ts, payloads):
+    return {"k": np.asarray(keys, np.float32),
+            "t": np.asarray(ts, np.float32)}
+
+
+def test_batcher_batches_concurrent_requests():
+    b = DynamicBatcher(echo_serve, BatcherConfig(max_batch=8,
+                                                 max_delay_s=0.02))
+    out = {}
+
+    def client(i):
+        out[i] = b(i, float(i))
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    b.close()
+    assert all(out[i]["k"] == i for i in range(16))
+    assert b.stats["requests"] == 16
+    assert b.stats["batches"] < 16                 # actually batched
+    assert b.stats["max_batch_seen"] <= 8
+
+
+def test_batcher_deadline_flush():
+    b = DynamicBatcher(echo_serve, BatcherConfig(max_batch=64,
+                                                 max_delay_s=0.01))
+    t0 = time.perf_counter()
+    r = b(1, 1.0)                                   # single request
+    dt = time.perf_counter() - t0
+    b.close()
+    assert r["k"] == 1.0
+    assert dt < 0.5                                 # flushed by deadline
+
+
+def test_batcher_admission_control():
+    ev = threading.Event()
+
+    def slow(keys, ts, payloads):
+        ev.wait(1.0)
+        return echo_serve(keys, ts, payloads)
+
+    b = DynamicBatcher(slow, BatcherConfig(max_batch=4, max_delay_s=0.001,
+                                           max_queue=4))
+    reqs = []
+    rejected = 0
+    for i in range(12):
+        try:
+            reqs.append(b.submit(i, float(i)))
+        except RuntimeError:
+            rejected += 1
+    ev.set()
+    for r in reqs:
+        r.wait(2.0)
+    b.close()
+    assert rejected > 0
+    assert b.stats["rejected"] == rejected
+
+
+def test_batcher_propagates_errors():
+    def boom(keys, ts, payloads):
+        raise ValueError("boom")
+
+    b = DynamicBatcher(boom, BatcherConfig(max_delay_s=0.001))
+    with pytest.raises(ValueError, match="boom"):
+        b(1, 1.0)
+    b.close()
+
+
+def test_feature_server_end_to_end():
+    from repro.launch.serve import build_engine
+    eng = build_engine(2000, 32)
+    srv = FeatureServer(eng, "fraud_features",
+                        ServerConfig(BatcherConfig(max_batch=16,
+                                                   max_delay_s=0.005)))
+    outs = {}
+
+    def client(i):
+        outs[i] = srv.request(i % 32, 1e6 + i)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(32)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    srv.close()
+    assert len(outs) == 32
+    for o in outs.values():
+        assert "amt_sum_10" in o and np.isfinite(o["amt_sum_10"])
+
+
+def test_model_server_slots_and_decode():
+    from repro.configs.base import reduced
+    from repro.configs.registry import get_config
+    from repro.launch.steps import init_params
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    srv = ModelServer(cfg, params, batch=4, cache_len=32)
+    slots = srv.prefill(np.ones((2, 8), np.int32))
+    assert len(slots) == 2
+    toks = srv.decode(steps=4)
+    assert toks.shape == (4,)
+    assert all(len(srv.generated[s]) == 5 for s in slots)  # 1 prefill + 4
+    srv.release(slots)
+    slots2 = srv.prefill(np.ones((4, 8), np.int32))
+    assert len(slots2) == 4
+    with pytest.raises(RuntimeError, match="no free slots"):
+        srv.prefill(np.ones((1, 8), np.int32))
+
+
+def test_hedged_dispatch_takes_fast_attempt():
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def call():
+        with lock:
+            calls["n"] += 1
+            me = calls["n"]
+        if me == 1:
+            time.sleep(0.5)            # first attempt is the straggler
+        return me
+
+    v = hedged(call, after_s=0.05)
+    assert v == 2                       # hedge won

@@ -1,0 +1,132 @@
+"""Sharding rule tables: divisibility fallbacks, per-arch param specs,
+cache specs — validated against AbstractMesh (no devices needed)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config, list_archs
+from repro.distributed.sharding import (DEFAULT_RULES, batch_specs,
+                                        cache_specs_tree, dp_axes,
+                                        param_specs, spec_for_leaf)
+
+
+def mesh_pod():
+    return AbstractMesh((16, 16), ("data", "model"),
+                        axis_types=(AxisType.Auto,) * 2)
+
+
+def mesh_multipod():
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
+                        axis_types=(AxisType.Auto,) * 3)
+
+
+def test_dp_axes():
+    assert dp_axes(mesh_pod()) == ("data",)
+    assert dp_axes(mesh_multipod()) == ("pod", "data")
+
+
+def test_divisibility_fallback():
+    m = mesh_pod()
+    # 12 heads*64 = 768 divisible by 16 -> sharded
+    assert spec_for_leaf("blocks/0/attn/wq/w", (28, 1536, 768), m) == \
+        P(None, "data", "model")
+    # vocab 151936 divisible by 16; d 1536 divisible
+    assert spec_for_leaf("embed", (151936, 1536), m) == P("model", "data")
+    # a dim NOT divisible by the axis is replicated, not rejected
+    assert spec_for_leaf("blocks/0/attn/wq/w", (28, 1530, 768), m) == \
+        P(None, None, "model")
+    # norms replicated
+    assert spec_for_leaf("blocks/0/norm1/scale", (28, 1536), m) == P()
+
+
+def test_expert_sharding_rules():
+    m = mesh_pod()
+    # jamba: 16 experts | 16 -> EP over data, ff over model
+    s = spec_for_leaf("blocks/1/moe/experts/wi", (4, 16, 4096, 14336), m)
+    assert s == P(None, "data", None, "model")
+    # mixtral: 8 experts, 16 nmid E -> no EP; FSDP d + TP ff
+    s = spec_for_leaf("blocks/0/moe/experts/wi", (56, 8, 6144, 16384), m)
+    assert s == P(None, None, "data", "model")
+    # wo transposed roles
+    s = spec_for_leaf("blocks/0/moe/experts/wo", (56, 8, 16384, 6144), m)
+    assert s == P(None, None, "model", "data")
+
+
+def test_no_duplicate_axis_use():
+    """A PartitionSpec must never use one mesh axis on two dims."""
+    m = mesh_pod()
+    for arch in list_archs():
+        from repro.launch.steps import params_struct
+        cfg = get_config(arch)
+        ps = params_struct(cfg)
+        specs = param_specs(ps, m)
+
+        def check(path, spec):
+            used = []
+            for ax in spec:
+                if ax is None:
+                    continue
+                axes = (ax,) if isinstance(ax, str) else ax
+                used.extend(axes)
+            assert len(used) == len(set(used)), (arch, path, spec)
+
+        jax.tree_util.tree_map_with_path(
+            lambda p, s: check(p, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_divide_every_leaf(arch):
+    """Every spec'd axis must divide its dim on both production meshes
+    (the exact property jit enforces at lower time)."""
+    from repro.launch.steps import params_struct
+    cfg = get_config(arch)
+    ps = params_struct(cfg)
+    for mesh in (mesh_pod(), mesh_multipod()):
+        specs = param_specs(ps, mesh)
+
+        def check(leaf, spec):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is None:
+                    continue
+                axes = (ax,) if isinstance(ax, str) else ax
+                n = int(np.prod([mesh.shape[a] for a in axes]))
+                assert dim % n == 0, (arch, leaf.shape, spec)
+
+        jax.tree_util.tree_map(check, ps, specs,
+                               is_leaf=lambda x: hasattr(x, "shape"))
+        break  # specs identical across meshes for params
+
+
+def test_batch_specs_long_context_sp():
+    """long_500k (B=1): batch unshardable -> KV cache sequence sharded."""
+    from repro.launch.steps import cache_struct
+    cfg = get_config("jamba-v0.1-52b")
+    m = mesh_pod()
+    cs = cache_struct(cfg, 1, SHAPES["long_500k"].seq_len)
+    specs = cache_specs_tree(cs, cfg, m, 1)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    kv = [(p, s) for p, s in flat if "k" in str(p[-1]) or "v" in str(p[-1])]
+    # attention kv leaves (reps, B, S, H, D): S sharded over data (and,
+    # since jamba's 8 kv heads don't divide the 16-wide model axis, the
+    # model axis joins the sequence dim too — 256-way SP)
+    def s_axes(spec):
+        t = tuple(spec)
+        if len(t) < 3 or t[2] is None:
+            return ()
+        return (t[2],) if isinstance(t[2], str) else tuple(t[2])
+
+    found_sp = any("data" in s_axes(s) for _, s in kv if isinstance(s, P))
+    assert found_sp, kv
+
+
+def test_batch_specs_decode_dp():
+    cfg = get_config("qwen2-1.5b")
+    m = mesh_multipod()
+    bs = batch_specs(cfg, m, "decode", 128)
+    assert bs["token"] == P(("pod", "data"))
+    bs1 = batch_specs(cfg, m, "decode", 1)     # unshardable
+    assert bs1["token"] == P(None)
