@@ -1,0 +1,140 @@
+"""Stream/batch interference: the paper's "without interference" claim as
+a measurable curve.
+
+Query workload (fixed): online feature requests through ``Engine.request``
+over a deployed multi-window SQL query. Ingest workload (swept): a
+background thread replaying a synthetic trace through the streaming
+pipeline (watermark buffer -> background flusher -> copy-on-write
+publish) at
+
+* ``off``        — no concurrent ingest (baseline),
+* ``moderate``   — paced at ``MODERATE_RATE`` (~1k events/s, roughly a
+  tenth of the flusher's saturation rate on the reference host),
+* ``saturating`` — unpaced, as fast as the flusher drains.
+
+Reported per rate: query QPS, p50/p99 per-batch latency, events actually
+ingested during the measurement window, and the QPS degradation vs
+baseline. Acceptance target: < 20% QPS loss under moderate ingest —
+queries read atomically-swapped snapshots and never wait on the write
+path, so the residual loss is CPU contention only.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.data.synthetic import EventStreamConfig
+from repro.featurestore.table import TableSchema
+from repro.streaming import PipelineConfig, StreamSource
+
+from benchmarks.common import FEATURE_SQL, Reporter, replay
+
+N_BASE_EVENTS = 8_000          # pre-loaded history (warm table)
+N_STREAM_EVENTS = 60_000       # trace available to the ingest thread
+N_KEYS = 256
+REQ_BATCH = 256
+N_REQ_BATCHES = 40
+MODERATE_RATE = 1_000.0        # events/s (calibrate to the host: this is
+                               # ~1/10th of the flusher's saturation rate)
+
+# the two ingest-free baselines tightly bracket the moderate phase (the
+# acceptance-critical number): averaging them cancels machine drift right
+# where it matters. Saturating runs last — its degradation is expected to
+# be large and drift-tolerance matters less.
+RATES = (("off", 0.0), ("moderate", MODERATE_RATE),
+         ("off2", 0.0), ("saturating", None))
+
+
+def _build(lateness: float = 0.5):
+    eng = Engine(OptFlags())
+    schema = TableSchema("events", key_col="user", ts_col="ts",
+                         value_cols=("amount", "lat", "lon", "cat",
+                                     "drift", "drift2"))
+    # capacity ample: the stream must not evict the warm history mid-run
+    eng.create_table(schema, max_keys=N_KEYS, capacity=2048,
+                     bucket_size=64)
+    base = StreamSource.from_config(EventStreamConfig(
+        n_events=N_BASE_EVENTS, n_keys=N_KEYS, n_features=6))
+    base.backfill(eng.tables["events"])
+    # 20ms amortization: at moderate rates each flush carries ~40 events
+    # in one jitted dispatch instead of dribbling 1-4 events per dispatch
+    pipe = eng.attach_stream("events", cfg=PipelineConfig(
+        lateness=lateness, flush_interval_s=0.02, max_flush_batch=2048))
+    pipe.warm()          # compile all flush buckets outside the window
+    eng.deploy("bench", FEATURE_SQL)
+    # stream continues the timeline after the warm history
+    t0 = float(base.ts.max()) + 0.01
+    stream = StreamSource.from_config(EventStreamConfig(
+        n_events=N_STREAM_EVENTS, n_keys=N_KEYS, n_features=6, seed=7))
+    stream = StreamSource(keys=stream.keys, ts=stream.ts + t0,
+                          rows=stream.rows)
+    return eng, pipe, base, stream
+
+
+def run(rep: Reporter) -> dict:
+    # ONE engine for every phase: all phases hit the same compiled query
+    # executables and the same warm table, so the only varying factor is
+    # the concurrent ingest load (run-to-run recompilation would swamp
+    # the interference signal otherwise).
+    eng, pipe, base, stream = _build()
+    # the stream timeline is consumed monotonically: one segment per
+    # phase, so no phase replays event times behind the watermark
+    n_seg = sum(1 for _, r in RATES if r != 0.0)
+    seg_len = len(stream) // max(n_seg, 1)
+    segments = [StreamSource(keys=stream.keys[i * seg_len:(i + 1) * seg_len],
+                             ts=stream.ts[i * seg_len:(i + 1) * seg_len],
+                             rows=stream.rows[i * seg_len:(i + 1) * seg_len])
+                for i in range(n_seg)]
+    results = {}
+    seg_i = 0
+    for label, rate in RATES:
+        flushed_before = pipe.metrics()["events_flushed"]
+        stop = threading.Event()
+        ingest_thread = None
+        if rate != 0.0:
+            ingest_thread = threading.Thread(
+                target=segments[seg_i].replay, args=(pipe,),
+                kwargs=dict(batch_size=256, rate=rate, stop_event=stop),
+                daemon=True)
+            seg_i += 1
+            ingest_thread.start()
+        r = replay(eng, (base.keys, base.ts, base.rows),
+                   batch=REQ_BATCH, n_batches=N_REQ_BATCHES)
+        stop.set()
+        if ingest_thread is not None:
+            ingest_thread.join(timeout=10.0)
+            pipe.wait_idle()
+        m = pipe.metrics()
+        r["events_ingested"] = int(m["events_flushed"] - flushed_before)
+        r["ingest_rate_eps"] = (r["events_ingested"] / r["wall_s"]
+                                if r["wall_s"] else 0.0)
+        r["table_versions"] = int(m["table_version"])
+        assert pipe.last_error is None, pipe.last_error
+        results[label] = r
+    eng.close()
+
+    base_qps = (results["off"]["qps"] + results["off2"]["qps"]) / 2.0
+    for label, _ in RATES:
+        r = results[label]
+        degr = 1.0 - r["qps"] / base_qps
+        r["qps_degradation"] = degr
+        rep.add(f"interference/{label}", 1e6 / r["qps"],
+                qps=round(r["qps"], 1),
+                p50_batch_ms=round(r["p50_batch_ms"], 3),
+                p99_batch_ms=round(r["p99_batch_ms"], 3),
+                ingest_eps=round(r["ingest_rate_eps"], 1),
+                qps_degradation_pct=round(100 * degr, 2))
+    ok = results["moderate"]["qps_degradation"] < 0.20
+    rep.add("interference/moderate_under_20pct", 0.0, passed=bool(ok),
+            claim="stream+batch without interference")
+    results["pass_moderate_under_20pct"] = bool(ok)
+    return results
+
+
+if __name__ == "__main__":
+    rep = Reporter()
+    out = run(rep)
+    print(rep.emit())

@@ -18,7 +18,8 @@ import time
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,table1,preagg,eq3,eq4")
+                    help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
+                         "stream")
     ap.add_argument("--out", default="experiments/bench_results.json")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
@@ -51,6 +52,9 @@ def main(argv=None) -> int:
     if want("eq4"):
         from benchmarks import bench_parallel_scaling as b6
         results["eq4"] = b6.run(rep)
+    if want("stream"):
+        from benchmarks import bench_stream_interference as b7
+        results["stream"] = b7.run(rep)
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",

@@ -1,0 +1,84 @@
+"""Version-compatibility shims over the installed jax.
+
+The codebase targets the modern jax API (``AxisType`` meshes,
+``jax.shard_map(..., check_vma=..., axis_names=...)``). The baked-in
+toolchain may carry an older jax (0.4.x) where those spell differently:
+
+* ``jax.sharding.AxisType`` does not exist; ``jax.make_mesh`` /
+  ``AbstractMesh`` take no ``axis_types``;
+* ``AbstractMesh`` is constructed from ``((name, size), ...)`` pairs;
+* ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+  partially-manual entry as ``auto=`` (the complement of ``axis_names``)
+  and replication checking as ``check_rep``.
+
+Every call site goes through these helpers instead of feature-detecting
+inline, so the rest of the codebase reads as if only the modern API
+existed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax
+from jax.sharding import AbstractMesh, Mesh
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
+
+__all__ = ["AxisType", "HAS_AXIS_TYPE", "HAS_PARTIAL_MANUAL", "make_mesh",
+           "make_abstract_mesh", "shard_map"]
+
+HAS_AXIS_TYPE = AxisType is not None
+
+# Entering shard_map over a subset of mesh axes (manual subgroups) is only
+# reliably lowered by the modern stack; the 0.4.x XLA check-fails on it
+# (hlo_sharding_util: "Check failed: sharding.IsManualSubgroup()").
+HAS_PARTIAL_MANUAL = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types when the API supports them."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def make_abstract_mesh(axis_shapes: Sequence[int],
+                       axis_names: Sequence[str]) -> AbstractMesh:
+    """Device-less mesh for shape/spec validation (both API generations)."""
+    if HAS_AXIS_TYPE:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names),
+                            axis_types=(AxisType.Auto,) * len(axis_names))
+    return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+def shard_map(f: Optional[Callable] = None, *, mesh: Mesh,
+              in_specs, out_specs,
+              manual_axes: Optional[Iterable[str]] = None) -> Callable:
+    """``jax.shard_map`` with the Manual axis set spelled portably.
+
+    ``manual_axes`` names the axes entered manually (the modern API's
+    ``axis_names``); ``None`` means fully manual. Replication/VMA checking
+    is disabled on both paths (call sites mix manual and auto axes, which
+    the checkers reject).
+    """
+    if f is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs,
+                                 manual_axes=manual_axes)
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if manual_axes is not None:
+            kwargs["axis_names"] = frozenset(manual_axes)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if manual_axes is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, auto=auto)

@@ -71,6 +71,7 @@ class Engine:
         self.registry = FeatureRegistry()
         self.cache = PlanCache(max_entries=max_cache_entries,
                                enabled=flags.plan_cache)
+        self.streams: Dict[str, object] = {}   # table -> IngestPipeline
         self.stats = EngineStats()
         self._pool: Optional[cf.ThreadPoolExecutor] = None
         if flags.parallel_workers > 1:
@@ -89,7 +90,74 @@ class Engine:
 
     def insert(self, table: str, keys: Sequence, ts: Sequence[float],
                rows: np.ndarray) -> None:
+        """Synchronous bulk insert (offline/backfill path). Routes through
+        an attached stream when one exists — a table with a live pipeline
+        has a single writer, so direct donation-mode insert would race the
+        flusher.
+
+        Atomic: if any event is unrepairably late (beyond the stream's
+        released frontier), nothing is staged and ValueError is raised —
+        matching the direct path's validate-before-ingest contract. Note
+        the flush acts as a stream **barrier**: everything staged becomes
+        immediately queryable, which forfeits the reorder window for
+        events at or below the barrier (a later live push older than the
+        barrier is dropped as late — by then its ring neighborhood is
+        final)."""
+        stream = self.streams.get(table)
+        if stream is not None:
+            keys = list(keys)
+            n = stream.push_batch(keys, np.asarray(ts, np.float32),
+                                  np.asarray(rows, np.float32),
+                                  all_or_nothing=True)
+            if n < len(keys):
+                raise ValueError(
+                    f"insert on table {table!r} rejected atomically: the "
+                    f"batch contains event(s) beyond the stream's "
+                    f"released frontier (unrepairably late) or with "
+                    f"non-finite timestamps; nothing was staged")
+            errs_before = stream.stats["errors"]
+            stream.flush()
+            # raise only for failures that left events undelivered: a
+            # transient background-flusher error that the flush retried
+            # successfully (nothing staged after the flush_all barrier)
+            # is not THIS insert's failure
+            if (stream.stats["errors"] > errs_before
+                    and stream.buffer.n_staged > 0):
+                raise stream.last_error
+            return
         self.tables[table].insert(keys, ts, rows)
+
+    # ------------------------------------------------------------ streaming
+    def attach_stream(self, table: str, cfg=None, **cfg_kw):
+        """Attach a streaming ingest pipeline to an existing table.
+
+        ``cfg`` is a ``streaming.PipelineConfig`` (or pass its fields as
+        keywords: ``lateness=..., flush_interval_s=..., retention=...``).
+        Returns the ``IngestPipeline``; from now on events should arrive
+        via ``pipeline.push`` / ``Engine.insert`` (which routes to it).
+        """
+        from repro.streaming.pipeline import IngestPipeline, PipelineConfig
+        if table not in self.tables:
+            raise KeyError(f"unknown table {table!r}; create_table first")
+        if table in self.streams:
+            raise ValueError(f"table {table!r} already has a stream")
+        if cfg is None:
+            cfg = PipelineConfig(**cfg_kw)
+        elif cfg_kw:
+            raise ValueError("pass cfg or keywords, not both")
+        pipe = IngestPipeline(self.tables[table], cfg)
+        self.streams[table] = pipe
+        return pipe
+
+    def create_stream(self, schema: TableSchema, *, max_keys: int = 1024,
+                      capacity: int = 1024, bucket_size: int = 64,
+                      **cfg_kw):
+        """``create_table`` + ``attach_stream`` in one call.
+
+        Returns ``(table, pipeline)``."""
+        t = self.create_table(schema, max_keys=max_keys, capacity=capacity,
+                              bucket_size=bucket_size)
+        return t, self.attach_stream(schema.name, **cfg_kw)
 
     def register_model(self, name: str, fn: Callable,
                        params: object = None) -> None:
@@ -154,8 +222,9 @@ class Engine:
             # Warm up: compile for this bucket's shapes now (charged to
             # L_plan, as the paper charges planning+JIT on first execution).
             V = len(table.schema.value_cols)
+            snap = table.snapshot()
             dummy = jit_fn(
-                table.state, table.preagg,
+                snap.state, snap.preagg,
                 jnp.zeros((bucket,), jnp.int32),
                 jnp.zeros((bucket,), jnp.float32),
                 jnp.zeros((bucket, V), jnp.float32),
@@ -189,14 +258,17 @@ class Engine:
         row_arr = (np.asarray(rows, np.float32) if rows is not None
                    else np.zeros((B, V), np.float32))
 
+        # one snapshot per request regardless of execution strategy: a
+        # pooled/rowwise request must not mix table versions mid-response
+        snap = dep.table.snapshot()
         if self.flags.parallel_workers > 1 and self._pool is not None:
-            return self._request_pooled(dep, kidx, ts_arr, row_arr)
+            return self._request_pooled(dep, kidx, ts_arr, row_arr, snap)
         if not self.flags.vectorized:
-            return self._request_rowwise(dep, kidx, ts_arr, row_arr)
-        return self._request_batched(dep, kidx, ts_arr, row_arr)
+            return self._request_rowwise(dep, kidx, ts_arr, row_arr, snap)
+        return self._request_batched(dep, kidx, ts_arr, row_arr, snap=snap)
 
-    def _request_batched(self, dep: Deployment, kidx, ts_arr, row_arr
-                         ) -> Dict[str, np.ndarray]:
+    def _request_batched(self, dep: Deployment, kidx, ts_arr, row_arr,
+                         snap=None) -> Dict[str, np.ndarray]:
         B = len(kidx)
         bucket = bucket_batch(B)
         fn = self._compiled(dep, bucket)
@@ -205,9 +277,13 @@ class Engine:
             kidx = np.pad(kidx, (0, pad))
             ts_arr = np.pad(ts_arr, (0, pad))
             row_arr = np.pad(row_arr, ((0, pad), (0, 0)))
-        table = dep.table
+        # One snapshot for the whole batch: a concurrent stream flush must
+        # not swap the table out from under an in-flight query. Callers
+        # that span several batches (query_offline) pass their own.
+        if snap is None:
+            snap = dep.table.snapshot()
         t0 = time.perf_counter()
-        out = fn(table.state, table.preagg, jnp.asarray(kidx),
+        out = fn(snap.state, snap.preagg, jnp.asarray(kidx),
                  jnp.asarray(ts_arr), jnp.asarray(row_arr),
                  self._predict_params(dep))
         out = jax.block_until_ready(out)
@@ -216,17 +292,18 @@ class Engine:
         self.stats.n_batches += 1
         return {n: np.asarray(a)[:B] for n, a in out.items()}
 
-    def _request_rowwise(self, dep: Deployment, kidx, ts_arr, row_arr
-                         ) -> Dict[str, np.ndarray]:
+    def _request_rowwise(self, dep: Deployment, kidx, ts_arr, row_arr,
+                         snap=None) -> Dict[str, np.ndarray]:
         """Paper-faithful per-request execution (ablation: vectorized off)."""
         outs: List[Dict[str, np.ndarray]] = []
         for i in range(len(kidx)):
             outs.append(self._request_batched(
-                dep, kidx[i:i + 1], ts_arr[i:i + 1], row_arr[i:i + 1]))
+                dep, kidx[i:i + 1], ts_arr[i:i + 1], row_arr[i:i + 1],
+                snap=snap))
         return {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
 
-    def _request_pooled(self, dep: Deployment, kidx, ts_arr, row_arr
-                        ) -> Dict[str, np.ndarray]:
+    def _request_pooled(self, dep: Deployment, kidx, ts_arr, row_arr,
+                        snap=None) -> Dict[str, np.ndarray]:
         """Worker-pool fan-out (paper O4 'parallel processing')."""
         W = self.flags.parallel_workers
         n = len(kidx)
@@ -237,11 +314,11 @@ class Engine:
             if self.flags.vectorized:
                 futs.append(self._pool.submit(
                     self._request_batched, dep, kidx[sl], ts_arr[sl],
-                    row_arr[sl]))
+                    row_arr[sl], snap=snap))
             else:
                 futs.append(self._pool.submit(
                     self._request_rowwise, dep, kidx[sl], ts_arr[sl],
-                    row_arr[sl]))
+                    row_arr[sl], snap=snap))
         outs = [f.result() for f in futs]
         return {nme: np.concatenate([o[nme] for o in outs])
                 for nme in outs[0]}
@@ -256,7 +333,12 @@ class Engine:
         training-serving-skew guarantee."""
         dep = self.deployments[name]
         table = dep.table
-        st = table.state
+        # one snapshot for BOTH enumeration and execution: concurrent
+        # stream flushes must not shift the table between building the
+        # (key, ts) list and computing its features (point-in-time
+        # guarantee under live ingest)
+        offline_snap = table.snapshot()
+        st = offline_snap.state
         totals = np.asarray(st.total)
         C = table.capacity
         req_keys: List[int] = []
@@ -284,7 +366,8 @@ class Engine:
             for s in range(0, len(kidx), batch_size):
                 sl = slice(s, s + batch_size)
                 outs.append(self._request_batched(
-                    dep, kidx[sl], ts_all[sl], rows_all[sl]))
+                    dep, kidx[sl], ts_all[sl], rows_all[sl],
+                    snap=offline_snap))
         finally:
             self.flags = saved
         res = {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
@@ -300,5 +383,8 @@ class Engine:
                 "cache_hit_rate": self.cache.stats.hit_rate}
 
     def close(self) -> None:
+        for pipe in self.streams.values():
+            pipe.close()
+        self.streams.clear()
         if self._pool is not None:
             self._pool.shutdown(wait=False)

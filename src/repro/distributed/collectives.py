@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+
 __all__ = ["psum_int8", "pod_allreduce_int8", "crosspod_grad_mean"]
 
 
@@ -53,8 +55,8 @@ def pod_allreduce_int8(tree: Any, mesh: Mesh, *, axis: str = "pod",
     npods = mesh.shape[axis]
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
-        check_vma=False, axis_names=frozenset({axis}))
+        _shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+        manual_axes={axis})
     def reduce_fn(t):
         out = jax.tree_util.tree_map(
             lambda g: psum_int8(g, axis), t)
@@ -77,8 +79,8 @@ def crosspod_grad_mean(grads: Any, mesh: Mesh, *, compress: bool = False
     if compress:
         return pod_allreduce_int8(grads, mesh, axis="pod", mean=True)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
-                       check_vma=False, axis_names=frozenset({"pod"}))
+    @functools.partial(_shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+                       manual_axes={"pod"})
     def reduce_fn(t):
         return jax.tree_util.tree_map(
             lambda g: jax.lax.pmean(g, "pod"), t)

@@ -25,6 +25,7 @@ OpenMLDB too) and re-dispatches into the jitted kernels.
 from __future__ import annotations
 
 import functools
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -33,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["TableSchema", "TableState", "PreAggState", "Table",
-           "empty_state", "empty_preagg", "ingest", "NEG_INF", "POS_INF"]
+           "TableSnapshot", "empty_state", "empty_preagg", "ingest",
+           "ingest_nodonate", "NEG_INF", "POS_INF"]
 
 NEG_INF = jnp.float32(-3.0e38)
 POS_INF = jnp.float32(3.0e38)
@@ -112,6 +114,16 @@ def empty_preagg(max_keys: int, capacity: int, n_cols: int,
     )
 
 
+def _ingest_bucket(n: int, lo: int = 8) -> int:
+    """Power-of-two shape bucket for ingest batches (mirrors the query
+    path's ``plan_cache.bucket_batch``; local copy avoids an import cycle
+    through ``repro.core``)."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
 def _batch_seq_numbers(key_idx: jax.Array) -> jax.Array:
     """seq[i] = #{j < i : key[j] == key[i]} — per-key arrival rank inside one
     ingest batch. O(B²) elementwise, fine for B ≤ a few thousand."""
@@ -121,10 +133,10 @@ def _batch_seq_numbers(key_idx: jax.Array) -> jax.Array:
     return jnp.sum(same & lower, axis=1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("bucket_size",), donate_argnums=(0, 1))
-def ingest(state: TableState, preagg: Optional[PreAggState],
-           key_idx: jax.Array, ts: jax.Array, vals: jax.Array,
-           *, bucket_size: int = 0) -> Tuple[TableState, Optional[PreAggState]]:
+def _ingest_impl(state: TableState, preagg: Optional[PreAggState],
+                 key_idx: jax.Array, ts: jax.Array, vals: jax.Array,
+                 *, bucket_size: int = 0
+                 ) -> Tuple[TableState, Optional[PreAggState]]:
     """Append a batch of events. ``key_idx (B,) i32``, ``ts (B,) f32``,
     ``vals (B, V) f32``. Events must arrive in non-decreasing ts order per
     key (streaming ingest). Batch size must be ≤ capacity.
@@ -174,6 +186,33 @@ def ingest(state: TableState, preagg: Optional[PreAggState],
     return new_state, new_preagg
 
 
+# Hot-path variant: donates the old buffers for in-place reuse. Any
+# previously taken snapshot of those buffers becomes invalid — use only
+# when the table is not being read concurrently.
+ingest = jax.jit(_ingest_impl, static_argnames=("bucket_size",),
+                 donate_argnums=(0, 1))
+
+# Copy-on-write variant: the input buffers stay alive, so snapshots taken
+# before the call remain readable forever (streaming double-buffer path).
+ingest_nodonate = jax.jit(_ingest_impl, static_argnames=("bucket_size",))
+
+
+@dataclass(frozen=True)
+class TableSnapshot:
+    """An immutable, consistent (state, preagg) pair.
+
+    ``version`` increments on every publish; a reader that captures a
+    snapshot sees one table version for its whole computation regardless
+    of concurrent flushes (jax arrays are immutable — only the reference
+    swap needs to be atomic, which a single attribute read under the GIL
+    provides).
+    """
+
+    state: TableState
+    preagg: Optional[PreAggState]
+    version: int
+
+
 class Table:
     """Host-side table wrapper: schema + key dictionary + device state.
 
@@ -191,11 +230,52 @@ class Table:
         self.capacity = capacity
         self.bucket_size = bucket_size
         self.key_to_idx: Dict[object, int] = {}
-        self.state = empty_state(max_keys, capacity, len(schema.value_cols))
-        self.preagg: Optional[PreAggState] = (
-            empty_preagg(max_keys, capacity, len(schema.value_cols),
-                         bucket_size) if enable_preagg else None)
+        self._pub_lock = threading.Lock()
+        self._published = TableSnapshot(
+            state=empty_state(max_keys, capacity, len(schema.value_cols)),
+            preagg=(empty_preagg(max_keys, capacity,
+                                 len(schema.value_cols), bucket_size)
+                    if enable_preagg else None),
+            version=0)
         self._last_ts: Dict[int, float] = {}
+
+    # -- versioned state ---------------------------------------------------
+    @property
+    def state(self) -> TableState:
+        return self._published.state
+
+    @state.setter
+    def state(self, s: TableState) -> None:
+        with self._pub_lock:
+            p = self._published
+            self._published = TableSnapshot(s, p.preagg, p.version + 1)
+
+    @property
+    def preagg(self) -> Optional[PreAggState]:
+        return self._published.preagg
+
+    @preagg.setter
+    def preagg(self, pa: Optional[PreAggState]) -> None:
+        with self._pub_lock:
+            p = self._published
+            self._published = TableSnapshot(p.state, pa, p.version + 1)
+
+    @property
+    def version(self) -> int:
+        return self._published.version
+
+    def snapshot(self) -> TableSnapshot:
+        """Consistent (state, preagg, version) triple for one reader."""
+        return self._published
+
+    def publish(self, state: TableState,
+                preagg: Optional[PreAggState]) -> TableSnapshot:
+        """Atomically swap both tiers in (one version bump)."""
+        with self._pub_lock:
+            snap = TableSnapshot(state, preagg,
+                                 self._published.version + 1)
+            self._published = snap
+        return snap
 
     # -- key management ----------------------------------------------------
     def key_index(self, key, create: bool = False) -> int:
@@ -220,11 +300,29 @@ class Table:
     def n_keys(self) -> int:
         return len(self.key_to_idx)
 
+    def last_ts_by_key(self) -> Dict[object, float]:
+        """Per-key newest ingested timestamp (the authoritative write
+        frontier — streaming buffers seed/reset their frontiers from it)."""
+        return {k: self._last_ts.get(i, float("-inf"))
+                for k, i in self.key_to_idx.items()}
+
     # -- ingest ------------------------------------------------------------
     def insert(self, keys: Sequence, ts: Sequence[float],
-               rows: np.ndarray) -> None:
+               rows: np.ndarray, *, donate: bool = True,
+               pad_to_bucket: bool = True) -> None:
         """Append events. ``rows`` is (B, V) in schema column order. Events
-        must be in non-decreasing ts order per key."""
+        must be in non-decreasing ts order per key.
+
+        ``donate=True`` (default) reuses the old device buffers — fastest,
+        but invalidates outstanding snapshots. The streaming flusher calls
+        with ``donate=False`` so concurrent readers keep a live snapshot
+        (copy-on-write double buffering).
+
+        ``pad_to_bucket`` rounds the batch up to a power-of-two shape
+        bucket; pad rows carry the out-of-bounds key index ``max_keys``,
+        which every scatter (and the segment-sum) silently drops — so the
+        jitted ingest compiles once per bucket instead of once per batch
+        size (streaming flushes have arbitrary sizes)."""
         keys = list(keys)
         ts_arr = np.asarray(ts, np.float32)
         rows = np.asarray(rows, np.float32)
@@ -239,22 +337,69 @@ class Table:
             for s in range(0, rows.shape[0], self.capacity):
                 self.insert(keys[s:s + self.capacity],
                             ts_arr[s:s + self.capacity],
-                            rows[s:s + self.capacity])
+                            rows[s:s + self.capacity], donate=donate,
+                            pad_to_bucket=pad_to_bucket)
             return
         kidx = self.key_indices(keys, create=True)
+        # validate first, commit _last_ts only after the device call
+        # succeeds — last_ts_by_key() must reflect delivered data only
+        pending: Dict[int, float] = {}
         for i, k in enumerate(kidx):
-            last = self._last_ts.get(int(k), float("-inf"))
+            ki = int(k)
+            last = pending.get(ki, self._last_ts.get(ki, float("-inf")))
             t = float(ts_arr[i])
             if t < last:
                 raise ValueError(
-                    f"out-of-order ingest for key index {int(k)}: "
+                    f"out-of-order ingest for key index {ki}: "
                     f"{t} < {last} (streaming tables require per-key "
                     f"non-decreasing timestamps)")
-            self._last_ts[int(k)] = t
-        self.state, self.preagg = ingest(
-            self.state, self.preagg, jnp.asarray(kidx),
+            pending[ki] = t
+        B = rows.shape[0]
+        if pad_to_bucket:
+            bucket = min(_ingest_bucket(B), self.capacity)
+            if bucket > B:
+                pad = bucket - B
+                # OOB key index: dropped by scatters and the segment sum
+                kidx = np.pad(kidx, (0, pad),
+                              constant_values=self.max_keys)
+                ts_arr = np.pad(ts_arr, (0, pad))
+                rows = np.pad(rows, ((0, pad), (0, 0)))
+        fn = ingest if donate else ingest_nodonate
+        snap = self.snapshot()
+        new_state, new_preagg = fn(
+            snap.state, snap.preagg, jnp.asarray(kidx),
             jnp.asarray(ts_arr), jnp.asarray(rows),
             bucket_size=self.bucket_size)
+        self.publish(new_state, new_preagg)
+        self._last_ts.update(pending)
+
+    def warm_ingest(self, *, max_batch: Optional[int] = None) -> int:
+        """Pre-compile the (non-donating) ingest for every shape bucket up
+        to ``max_batch`` (default: capacity), so streaming flushes of
+        arbitrary size hit only cached executables. The warm batches carry
+        all-out-of-bounds key indices — a no-op ingest that never touches
+        stored data. Returns the number of buckets compiled."""
+        snap = self.snapshot()
+        V = len(self.schema.value_cols)
+        mx = min(max_batch or self.capacity, self.capacity)
+        # exactly the shapes insert pads to: pow-2 buckets clamped at
+        # capacity (which need not itself be a power of two)
+        sizes = []
+        b = 8
+        while True:
+            s = min(b, self.capacity)
+            sizes.append(s)
+            if s >= mx:
+                break
+            b <<= 1
+        for s in sizes:
+            k = jnp.full((s,), self.max_keys, jnp.int32)
+            out = ingest_nodonate(snap.state, snap.preagg, k,
+                                  jnp.zeros((s,), jnp.float32),
+                                  jnp.zeros((s, V), jnp.float32),
+                                  bucket_size=self.bucket_size)
+            jax.block_until_ready(jax.tree_util.tree_leaves(out[0]))
+        return len(sizes)
 
     # -- introspection -----------------------------------------------------
     def column_indices(self, cols: Sequence[str]) -> Tuple[int, ...]:

@@ -10,7 +10,9 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh as _make_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh", "POD_SHAPE",
            "MULTIPOD_SHAPE"]
@@ -22,8 +24,7 @@ MULTIPOD_SHAPE: Tuple[int, ...] = (2, 16, 16)    # 2 pods = 512 chips
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: Optional[int] = None, model: int = 1) -> Mesh:
@@ -31,5 +32,4 @@ def make_local_mesh(data: Optional[int] = None, model: int = 1) -> Mesh:
     n = len(jax.devices())
     if data is None:
         data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))

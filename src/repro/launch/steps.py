@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.configs.base import ModelConfig, ShapeSpec, SHAPES, input_specs
 from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
                                         batch_specs, cache_specs_tree,
@@ -161,9 +162,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
         bspec_in = jax.tree_util.tree_map(lambda _: P("pod"), batch)
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            _shard_map, mesh=mesh,
             in_specs=(P(), bspec_in), out_specs=P(),
-            check_vma=False, axis_names=frozenset({"pod"}))
+            manual_axes={"pod"})
         def pod_grads(p, b):
             g, loss, metrics = grads_of_local(p, b)
             g = jax.tree_util.tree_map(

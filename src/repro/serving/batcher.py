@@ -120,9 +120,16 @@ class DynamicBatcher:
                 continue
             keys = [r.key for r in batch]
             ts = np.asarray([r.ts for r in batch], np.float32)
+            # A batch may mix payload and payload-less requests; absent
+            # payloads become zero rows (the engine's own no-row default)
+            # so one np.stack shape fits all.
             payloads = None
-            if batch[0].payload is not None:
-                payloads = np.stack([r.payload for r in batch])
+            proto = next((r.payload for r in batch
+                          if r.payload is not None), None)
+            if proto is not None:
+                zero = np.zeros_like(proto)
+                payloads = np.stack([r.payload if r.payload is not None
+                                     else zero for r in batch])
             try:
                 res = self.serve_batch(keys, ts, payloads)
                 for i, r in enumerate(batch):

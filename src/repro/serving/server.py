@@ -38,7 +38,13 @@ class ServerConfig:
 
 
 class FeatureServer:
-    """Online feature serving over a deployed engine query."""
+    """Online feature serving over a deployed engine query.
+
+    When the deployment's table has a streaming pipeline attached (see
+    ``Engine.attach_stream``), the server also exposes the **write path**:
+    ``ingest`` stages an event into the watermark buffer and returns
+    immediately — it never blocks a concurrent ``request``, whose reads
+    come from atomically-published table snapshots (DESIGN.md §4)."""
 
     def __init__(self, engine: Engine, deployment: str,
                  cfg: ServerConfig = ServerConfig()):
@@ -51,6 +57,12 @@ class FeatureServer:
 
         self.batcher = DynamicBatcher(serve_batch, cfg.batcher)
 
+    @property
+    def pipeline(self):
+        """The table's attached IngestPipeline, or None."""
+        table = self.engine.deployments[self.deployment].table
+        return self.engine.streams.get(table.schema.name)
+
     def request(self, key, ts: float,
                 row: Optional[np.ndarray] = None,
                 timeout: float = 5.0) -> Dict[str, np.ndarray]:
@@ -58,6 +70,16 @@ class FeatureServer:
         if self.cfg.hedge_after_s is not None:
             return hedged(call, self.cfg.hedge_after_s)
         return call()
+
+    def ingest(self, key, ts: float, row: np.ndarray) -> bool:
+        """Non-blocking event ingestion (requires an attached stream).
+        Returns False iff the event was beyond the watermark (dropped)."""
+        pipe = self.pipeline
+        if pipe is None:
+            raise RuntimeError(
+                f"no stream attached to deployment {self.deployment!r}'s "
+                f"table; call Engine.attach_stream first")
+        return pipe.push(key, ts, row)
 
     def close(self) -> None:
         self.batcher.close()

@@ -1,0 +1,12 @@
+"""Streaming ingestion subsystem: watermarked reorder buffering, background
+flushing into the jitted ring-buffer ingest, TTL retention, and trace
+replay — continuous ingest without serving interference (DESIGN.md §4)."""
+from repro.streaming.buffer import StreamBuffer, StreamBufferStats
+from repro.streaming.pipeline import IngestPipeline, PipelineConfig
+from repro.streaming.retention import (RetentionPolicy, apply_retention,
+                                       compact_expired)
+from repro.streaming.source import StreamSource, online_offline_consistency
+
+__all__ = ["StreamBuffer", "StreamBufferStats", "IngestPipeline",
+           "PipelineConfig", "RetentionPolicy", "apply_retention",
+           "compact_expired", "StreamSource", "online_offline_consistency"]

@@ -1,0 +1,228 @@
+"""Background ingestion: arrival is decoupled from table mutation.
+
+``push`` stages an event into the ``StreamBuffer`` (host memory, O(log n))
+and returns immediately — the serving hot path never waits on device
+ingest. A flusher thread drains watermark-released events into the jitted
+``ingest`` in amortized batches, using the **copy-on-write double buffer**:
+
+    flush:   snapshot v ──ingest_nodonate──▶ buffers v+1 ──publish──▶ v+1
+    queries:       read snapshot v  (stays valid: nothing donated it)
+
+``Table.publish`` swaps the (state, preagg, version) triple atomically, so
+an in-flight query that captured version ``v`` computes against one
+consistent table no matter how many flushes land meanwhile — the paper's
+"batch and stream processing without interference", made concrete.
+
+Retention (TTL) piggybacks on the flusher: every ``every_n_flushes``
+cycles the expired prefix is compacted out and the preagg tier rebuilt
+(`streaming.retention`), published through the same atomic swap.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.featurestore.table import Table
+from repro.streaming.buffer import StreamBuffer
+from repro.streaming.retention import RetentionPolicy, apply_retention
+
+__all__ = ["IngestPipeline", "PipelineConfig"]
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    lateness: float = 1.0            # reorder window, event-time units
+    flush_interval_s: float = 0.002  # max staging delay before a flush
+    max_flush_batch: int = 1024      # amortization cap per ingest call
+    max_staged: int = 65536          # buffer bound (backpressure)
+    retention: RetentionPolicy = RetentionPolicy(ttl=0.0)
+
+
+class IngestPipeline:
+    """Owns a ``Table``'s write path; queries keep reading snapshots.
+
+    Single-writer discipline: while a pipeline is attached, all mutation
+    goes through it (``push``/``push_batch``); direct ``Table.insert``
+    would race the flusher and donate buffers out from under readers.
+    """
+
+    def __init__(self, table: Table, cfg: PipelineConfig = PipelineConfig()):
+        self.table = table
+        self.cfg = cfg
+        self.buffer = StreamBuffer(lateness=cfg.lateness,
+                                   max_staged=cfg.max_staged)
+        # attaching to a non-empty table: events older than the already-
+        # written history are unrepairable and must be rejected at push
+        self.buffer.seed_frontier(table.last_ts_by_key())
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._idle = threading.Condition(self._lock)
+        self._flush_mu = threading.Lock()   # single-flusher guarantee
+        self._stop = False
+        self._flushing = False
+        self._event_clock = float("-inf")   # max event-time released
+        self.stats: Dict[str, float] = {
+            "flushes": 0, "events_flushed": 0, "flush_s": 0.0,
+            "ttl_compactions": 0, "ttl_dropped": 0, "errors": 0}
+        self.last_error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._flush_loop,
+                                        daemon=True,
+                                        name=f"ingest-{table.schema.name}")
+        self._thread.start()
+
+    # ------------------------------------------------------------------ push
+    def push(self, key, ts: float, row: np.ndarray) -> bool:
+        """Stage one event; never blocks on device work. Returns False iff
+        the event was beyond the watermark (dropped, counted)."""
+        ok = self.buffer.push(key, ts, row)
+        with self._work:
+            self._work.notify()
+        return ok
+
+    def push_batch(self, keys: Sequence, ts: Sequence[float],
+                   rows: np.ndarray, *, all_or_nothing: bool = False) -> int:
+        n = self.buffer.push_batch(keys, ts, rows,
+                                   all_or_nothing=all_or_nothing)
+        with self._work:
+            self._work.notify()
+        return n
+
+    # ----------------------------------------------------------------- flush
+    def _flush_once(self, *, flush_all: bool = False) -> int:
+        with self._flush_mu:
+            return self._flush_once_locked(flush_all=flush_all)
+
+    def _flush_once_locked(self, *, flush_all: bool) -> int:
+        keys, ts, rows = self.buffer.ready(flush_all=flush_all)
+        if not keys:
+            return 0
+        n = len(keys)
+        t0 = time.perf_counter()
+        step = self.cfg.max_flush_batch
+        done = 0
+        try:
+            for s in range(0, n, step):
+                self.table.insert(keys[s:s + step], ts[s:s + step],
+                                  rows[s:s + step], donate=False)
+                done = min(s + step, n)
+        except ValueError as e:
+            # data error (per-key order violated by out-of-band table
+            # writes, bad shapes): retrying the chunk can never succeed —
+            # eject it, restage only the chunks after it
+            self.last_error = e
+            self.stats["errors"] += 1
+            skip = min(done + step, n)
+            self.buffer.restage(keys[skip:], ts[skip:], rows[skip:],
+                                frontier=self.table.last_ts_by_key())
+            n = done
+            if n == 0:
+                return 0
+        except BaseException as e:           # keep the flusher alive
+            self.last_error = e
+            self.stats["errors"] += 1
+            # transient failure: the undelivered tail goes back to staging
+            # (globally ts-sorted, so per-key order survives the retry),
+            # and the frontier rolls back to what the table actually holds
+            self.buffer.restage(keys[done:], ts[done:], rows[done:],
+                                frontier=self.table.last_ts_by_key())
+            n = done
+            if n == 0:
+                return 0
+        self._event_clock = max(self._event_clock, float(ts[n - 1]))
+        self.stats["flushes"] += 1
+        self.stats["events_flushed"] += n
+        self.stats["flush_s"] += time.perf_counter() - t0
+        ret = self.cfg.retention
+        if (ret.enabled and ret.every_n_flushes > 0
+                and self.stats["flushes"] % ret.every_n_flushes == 0):
+            self._compact()
+        return n
+
+    def _compact(self) -> None:
+        if self._event_clock == float("-inf"):
+            return
+        dropped = apply_retention(self.table, self.cfg.retention,
+                                  now=self._event_clock)
+        if dropped:
+            self.stats["ttl_compactions"] += 1
+            self.stats["ttl_dropped"] += dropped
+
+    def _flush_loop(self) -> None:
+        while True:
+            with self._work:
+                if self._stop:
+                    return
+                if not self.buffer.has_ready():
+                    # nothing releasable (empty, or all staged events are
+                    # still inside the reorder window): park instead of
+                    # spinning ready() scans
+                    self._work.wait(timeout=0.05)
+                if self._stop:
+                    return
+                self._flushing = True
+            try:
+                self._flush_once()
+            except BaseException as e:     # the daemon thread must never
+                self.last_error = e        # die silently mid-stream
+                self.stats["errors"] += 1
+                time.sleep(0.05)           # don't spin on a hard error
+            finally:
+                with self._idle:
+                    self._flushing = False
+                    self._idle.notify_all()
+            # amortization window: let pushes accumulate so each jitted
+            # ingest dispatch carries a worthwhile batch
+            if self.cfg.flush_interval_s > 0:
+                time.sleep(self.cfg.flush_interval_s)
+
+    def flush(self, *, flush_all: bool = True) -> None:
+        """Synchronously drain everything staged (ignores watermarks when
+        ``flush_all`` — end-of-stream / checkpoint barrier)."""
+        self.wait_idle()
+        with self._flush_mu:
+            self._flush_once_locked(flush_all=flush_all)
+
+    def wait_idle(self, timeout: float = 30.0) -> bool:
+        """Block until nothing releasable remains in flight. Events still
+        inside the reorder window stay staged (use ``flush`` to force)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._idle:
+                busy = self._flushing
+            has_ready = False
+            if not busy:
+                has_ready = self.buffer.has_ready()
+            if not busy and not has_ready:
+                return True
+            time.sleep(0.001)
+        return False
+
+    # ------------------------------------------------------------ lifecycle
+    def warm(self) -> int:
+        """Pre-compile every ingest shape bucket the flusher can hit, so
+        no compilation lands inside the serving window. Call once after
+        setup (benchmarks/servers); returns buckets compiled."""
+        return self.table.warm_ingest(max_batch=self.cfg.max_flush_batch)
+
+    @property
+    def version(self) -> int:
+        return self.table.version
+
+    def metrics(self) -> Dict[str, float]:
+        out = dict(self.stats)
+        out.update(self.buffer.stats.snapshot())
+        out["staged"] = self.buffer.n_staged
+        out["table_version"] = self.table.version
+        return out
+
+    def close(self, *, drain: bool = True) -> None:
+        with self._work:
+            self._stop = True
+            self._work.notify_all()
+        self._thread.join(timeout=5.0)
+        if drain:
+            self._flush_once(flush_all=True)

@@ -1,0 +1,114 @@
+"""TTL/retention: event-time expiry for the ring-buffer + preagg tiers.
+
+The ring buffer evicts *positionally* (capacity C keeps the newest C
+events per key) — OpenMLDB's ``ttl_type=latest``. Its ``ttl_type=absolute``
+(drop events older than a time horizon) has no positional analogue, so we
+implement it as periodic **compaction**: rewrite each key's live events
+with the expired prefix removed, reset the per-key totals, and rebuild the
+bucketed pre-aggregate tier from the compacted raw state via
+``rebuild_preagg`` (the non-hot-path recovery primitive — compaction *is*
+a controlled recovery).
+
+Compaction produces fresh buffers (it never mutates in place), so it
+composes with the streaming double-buffer protocol: build compacted state
+off to the side, then ``Table.publish`` it atomically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.featurestore.preagg import rebuild_preagg
+from repro.featurestore.table import (PreAggState, Table, TableState,
+                                      empty_state)
+
+__all__ = ["RetentionPolicy", "compact_expired", "apply_retention"]
+
+
+@dataclass(frozen=True)
+class RetentionPolicy:
+    """``ttl`` is in event-time units (same clock as event timestamps).
+
+    ``every_n_flushes`` throttles how often the pipeline pays the
+    compaction rebuild; 0 disables time-based retention entirely.
+    """
+
+    ttl: float = 0.0
+    every_n_flushes: int = 50
+
+    @property
+    def enabled(self) -> bool:
+        return self.ttl > 0
+
+
+def compact_expired(state: TableState, *, cutoff: float,
+                    bucket_size: int = 0, with_preagg: bool = True
+                    ) -> Tuple[TableState, Optional[PreAggState], int]:
+    """Drop every event with ``ts < cutoff``; repack survivors at global
+    positions ``[0, n_kept)`` per key. Returns ``(state, preagg | None,
+    n_dropped)``. Host-side gather + device-side preagg rebuild.
+
+    Per-key time order is preserved (survivors keep their relative
+    positions), so the compacted state satisfies the same invariants as a
+    freshly ingested one.
+    """
+    K, C, V = state.values.shape
+    values = np.asarray(state.values)
+    ts = np.asarray(state.ts)
+    total = np.asarray(state.total)
+
+    out = empty_state(K, C, V)
+    new_values = np.asarray(out.values).copy()
+    new_ts = np.asarray(out.ts).copy()
+    new_total = np.zeros((K,), np.int32)
+    n_dropped = 0
+    for k in range(K):
+        tot = int(total[k])
+        if tot == 0:
+            continue
+        n_live = min(tot, C)
+        pos = np.arange(tot - n_live, tot)
+        slots = pos % C
+        keep = ts[k, slots] >= cutoff
+        kept = slots[keep]
+        n_kept = int(kept.size)
+        n_dropped += n_live - n_kept
+        if n_kept:
+            new_values[k, :n_kept] = values[k, kept]
+            new_ts[k, :n_kept] = ts[k, kept]
+        new_total[k] = n_kept
+
+    import jax.numpy as jnp
+    new_state = TableState(values=jnp.asarray(new_values),
+                           ts=jnp.asarray(new_ts),
+                           total=jnp.asarray(new_total))
+    preagg = None
+    if with_preagg and bucket_size > 0:
+        preagg = rebuild_preagg(new_state, bucket_size=bucket_size)
+    return new_state, preagg, n_dropped
+
+
+def apply_retention(table: Table, policy: RetentionPolicy, *,
+                    now: float) -> int:
+    """Compact ``table`` in place (atomic publish); returns events dropped.
+
+    ``now`` is the stream's **global** event-time clock — the pipeline
+    passes the maximum released event time. Keys whose own timeline lags
+    that clock lose events older than ``now - ttl`` like everyone else:
+    absolute-TTL semantics (OpenMLDB ``ttl_type=absolute``), deliberately
+    not per-key. Repair is unaffected — the reorder buffer's frontier,
+    not table contents, decides late-event acceptance.
+    """
+    if not policy.enabled:
+        return 0
+    cutoff = now - policy.ttl
+    snap = table.snapshot()
+    new_state, new_preagg, n_dropped = compact_expired(
+        snap.state, cutoff=cutoff, bucket_size=table.bucket_size,
+        with_preagg=snap.preagg is not None)
+    if n_dropped == 0:
+        return 0
+    table.publish(new_state, new_preagg)
+    return n_dropped

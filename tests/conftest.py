@@ -1,6 +1,14 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real
-single CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+single CPU device; only launch/dryrun.py forces 512 placeholder devices.
+
+When the real ``hypothesis`` package is unavailable (the container image
+pins its deps), a deterministic mini-shim is installed in its place so the
+property tests still run: ``@given`` draws ``max_examples`` seeded samples
+per strategy and calls the test once per draw. It covers only what the
+suite uses (integers / floats / sampled_from, @settings)."""
 import os
+import sys
+import types
 
 # determinism + quiet logs for the whole suite
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -8,6 +16,57 @@ os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
 
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    def _sampled_from(xs):
+        xs = list(xs)
+        return _Strategy(lambda rng: xs[int(rng.integers(0, len(xs)))])
+
+    def _given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # NOTE: deliberately no functools.wraps — copying __wrapped__
+            # would make pytest read the inner signature and demand the
+            # strategy parameters as fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def _settings(max_examples=20, deadline=None, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

@@ -15,14 +15,13 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import sys, json
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.configs.registry import get_config
     from repro.configs.base import reduced
     from repro.launch.steps import init_params, make_train_step
     from repro.optim.adamw import AdamWConfig, adamw_init
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = reduced(get_config("qwen1.5-0.5b"))
     params = init_params(jax.random.PRNGKey(0), cfg)
     ocfg = AdamWConfig(lr=1e-3)
@@ -48,6 +47,10 @@ SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_multipod_train_step_with_int8_crosspod_reduce():
+    from repro.compat import HAS_PARTIAL_MANUAL
+    if not HAS_PARTIAL_MANUAL:
+        pytest.skip("partially-manual shard_map (pod subgroup) is not "
+                    "lowerable by this jax/XLA version")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))

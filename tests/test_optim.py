@@ -132,15 +132,14 @@ def test_error_feedback_reduces_bias():
 
 def test_psum_int8_collective_single_device():
     """psum_int8 inside shard_map on a 1-device mesh == identity-ish."""
+    from repro.compat import make_mesh, shard_map
     from repro.distributed.collectives import psum_int8
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     from jax.sharding import PartitionSpec as P
     x = jnp.asarray(np.random.default_rng(0).normal(0, 1, 16),
                     dtype=jnp.float32)
 
-    f = jax.shard_map(lambda a: psum_int8(a, "pod"), mesh=mesh,
-                      in_specs=P(), out_specs=P(), check_vma=False,
-                      axis_names=frozenset({"pod"}))
+    f = shard_map(lambda a: psum_int8(a, "pod"), mesh=mesh,
+                  in_specs=P(), out_specs=P(), manual_axes={"pod"})
     y = f(x)
     assert float(jnp.max(jnp.abs(x - y))) <= float(jnp.max(jnp.abs(x))) / 127.0

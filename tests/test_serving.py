@@ -72,6 +72,24 @@ def test_batcher_admission_control():
     assert b.stats["rejected"] == rejected
 
 
+def test_batcher_mixed_payload_batch():
+    """A batch mixing payload and payload-less requests must not crash
+    np.stack nor drop payloads: absent ones become zero rows."""
+    def serve(keys, ts, payloads):
+        assert payloads is not None
+        assert payloads.shape[0] == len(keys)
+        return {"p": payloads[:, 0]}
+
+    b = DynamicBatcher(serve, BatcherConfig(max_batch=8, max_delay_s=0.05))
+    reqs = [b.submit(i, float(i),
+                     np.asarray([7.0], np.float32) if i % 2 == 0 else None)
+            for i in range(8)]
+    outs = [r.wait(5.0) for r in reqs]
+    b.close()
+    for i, o in enumerate(outs):
+        assert float(o["p"]) == (7.0 if i % 2 == 0 else 0.0)
+
+
 def test_batcher_propagates_errors():
     def boom(keys, ts, payloads):
         raise ValueError("boom")

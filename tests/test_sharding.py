@@ -4,8 +4,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_abstract_mesh
 from repro.configs.base import SHAPES
 from repro.configs.registry import get_config, list_archs
 from repro.distributed.sharding import (DEFAULT_RULES, batch_specs,
@@ -14,13 +15,11 @@ from repro.distributed.sharding import (DEFAULT_RULES, batch_specs,
 
 
 def mesh_pod():
-    return AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh_multipod():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                        axis_types=(AxisType.Auto,) * 3)
+    return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_dp_axes():

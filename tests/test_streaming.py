@@ -1,0 +1,372 @@
+"""Streaming ingestion subsystem: watermark repair semantics, background
+flush + snapshot isolation, TTL compaction, and online/offline consistency
+over replayed streams."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.data.synthetic import EventStreamConfig
+from repro.featurestore.preagg import verify_preagg
+from repro.featurestore.table import Table, TableSchema
+from repro.streaming import (IngestPipeline, PipelineConfig,
+                             RetentionPolicy, StreamBuffer, StreamSource,
+                             compact_expired, online_offline_consistency)
+
+SQL = """
+SELECT SUM(amount) OVER w AS s,
+       COUNT(amount) OVER w AS c,
+       MAX(amount) OVER w AS mx
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)
+"""
+
+
+def schema3():
+    return TableSchema("events", key_col="user", ts_col="ts",
+                       value_cols=("amount", "lat", "lon"))
+
+
+def source(n=400, n_keys=8, seed=0):
+    return StreamSource.from_config(EventStreamConfig(
+        n_events=n, n_keys=n_keys, n_features=3, seed=seed))
+
+
+# ---------------------------------------------------------------- buffer
+def test_buffer_in_order_passthrough():
+    b = StreamBuffer(lateness=0.0)
+    for i in range(10):
+        assert b.push("a", float(i), np.asarray([i], np.float32))
+    keys, ts, rows = b.ready()
+    assert keys == ["a"] * 10
+    np.testing.assert_array_equal(ts, np.arange(10, dtype=np.float32))
+    assert b.stats.dropped_late == 0
+    assert b.stats.reordered == 0
+
+
+def test_buffer_repairs_within_watermark():
+    """Disorder smaller than the lateness window is sorted away."""
+    b = StreamBuffer(lateness=5.0)
+    order = [3.0, 1.0, 2.0, 0.5, 4.0]
+    for t in order:
+        assert b.push("a", t, np.asarray([t], np.float32))
+    # watermark = 4.0 - 5.0 < all events: nothing releasable yet
+    k, ts, _ = b.ready()
+    assert len(k) == 0
+    b.push("a", 9.5, np.asarray([9.5], np.float32))   # wm -> 4.5
+    k, ts, rows = b.ready()
+    assert list(ts) == sorted(ts)                      # repaired
+    assert list(ts) == [0.5, 1.0, 2.0, 3.0, 4.0]
+    assert b.stats.reordered > 0
+    assert b.stats.dropped_late == 0
+
+
+def test_buffer_drops_beyond_watermark():
+    """An event older than the released frontier is unrepairable."""
+    b = StreamBuffer(lateness=1.0)
+    b.push("a", 10.0, np.zeros(1, np.float32))
+    b.push("a", 12.0, np.zeros(1, np.float32))
+    k, ts, _ = b.ready()                   # releases ts <= 11.0 -> [10.0]
+    assert list(ts) == [10.0]
+    assert not b.push("a", 9.0, np.zeros(1, np.float32))   # < frontier
+    assert b.stats.dropped_late == 1
+    # but 11.5 (> frontier, inside window) is still accepted
+    assert b.push("a", 11.5, np.zeros(1, np.float32))
+
+
+def test_buffer_per_key_watermarks_independent():
+    b = StreamBuffer(lateness=1.0)
+    b.push("a", 100.0, np.zeros(1, np.float32))
+    b.push("a", 102.0, np.zeros(1, np.float32))
+    b.push("b", 1.0, np.zeros(1, np.float32))
+    b.push("b", 3.0, np.zeros(1, np.float32))
+    k, ts, _ = b.ready()
+    # a's watermark is 101 (hwm 102 - 1), b's is 2 — each key releases
+    # against its own clock; the newest event of a key always stays
+    # staged until a later event (or flush_all) moves the watermark past
+    assert set(zip(k, ts.tolist())) == {("a", 100.0), ("b", 1.0)}
+
+
+def test_buffer_bounded_state_force_release():
+    b = StreamBuffer(lateness=1e9, max_staged=8)   # nothing ever final
+    for i in range(16):
+        b.push("a", float(i), np.zeros(1, np.float32))
+    k, ts, _ = b.ready()
+    assert len(k) >= 8                     # oldest forced through
+    assert list(ts) == sorted(ts)
+
+
+# -------------------------------------------------- out-of-order == sorted
+def test_disordered_stream_features_equal_sorted_ingest():
+    """Events shuffled within the reorder window produce IDENTICAL
+    features to a cleanly sorted ingest (the repair guarantee)."""
+    src = source(400)
+    flags = OptFlags(assume_latest=False)
+
+    eng_sorted = Engine(flags)
+    t_sorted = eng_sorted.create_table(schema3(), max_keys=16,
+                                       capacity=128, bucket_size=16)
+    src.backfill(t_sorted)
+    eng_sorted.deploy("f", SQL)
+
+    eng_stream = Engine(flags)
+    _, pipe = eng_stream.create_stream(schema3(), max_keys=16,
+                                       capacity=128, bucket_size=16,
+                                       lateness=2.0,
+                                       flush_interval_s=0.001)
+    disordered = src.with_disorder(jitter=1.5, seed=3)
+    disordered.replay(pipe, batch_size=32)
+    pipe.flush()
+    eng_stream.deploy("f", SQL)
+    assert pipe.metrics()["reordered"] > 0          # disorder happened
+    assert pipe.metrics()["dropped_late"] == 0      # all inside window
+
+    off_a = eng_sorted.query_offline("f")
+    off_b = eng_stream.query_offline("f")
+    oa = np.lexsort((off_a["__ts"], off_a["__key"]))
+    ob = np.lexsort((off_b["__ts"], off_b["__key"]))
+    for name in ("s", "c", "mx"):
+        np.testing.assert_allclose(off_a[name][oa], off_b[name][ob],
+                                   rtol=1e-6, atol=1e-6, err_msg=name)
+    eng_sorted.close()
+    eng_stream.close()
+
+
+def test_stream_replay_online_offline_consistency():
+    """Point-in-time parity of the two execution modes survives streaming
+    delivery (paper's training-serving-skew guarantee)."""
+    eng = Engine(OptFlags(assume_latest=False))
+    _, pipe = eng.create_stream(schema3(), max_keys=16, capacity=128,
+                                bucket_size=16, lateness=2.0)
+    source(300).with_disorder(jitter=1.0, seed=5).replay(pipe,
+                                                         batch_size=64)
+    pipe.flush()
+    eng.deploy("f", SQL)
+    ok, errs = online_offline_consistency(eng, "f")
+    assert ok, errs
+    eng.close()
+
+
+# ------------------------------------------------------ background flusher
+def test_pipeline_background_flush_without_explicit_flush():
+    """Pushes drain on their own once past the watermark."""
+    t = Table(schema3(), max_keys=8, capacity=64, bucket_size=8)
+    pipe = IngestPipeline(t, PipelineConfig(lateness=0.0,
+                                            flush_interval_s=0.001))
+    for i in range(20):
+        pipe.push("u", float(i), np.asarray([i, 0, 0], np.float32))
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        if int(np.asarray(t.state.total).sum()) == 20:
+            break
+        time.sleep(0.01)
+    assert int(np.asarray(t.state.total).sum()) == 20
+    assert pipe.last_error is None
+    assert pipe.metrics()["flushes"] >= 1
+    pipe.close()
+
+
+def test_pipeline_push_does_not_block_on_flush():
+    """push latency stays microseconds-scale even while ingest runs."""
+    t = Table(schema3(), max_keys=64, capacity=1024, bucket_size=64)
+    pipe = IngestPipeline(t, PipelineConfig(lateness=0.0,
+                                            flush_interval_s=0.0))
+    src = source(2000, n_keys=32)
+    lat = []
+    for i in range(len(src)):
+        t0 = time.perf_counter()
+        pipe.push(int(src.keys[i]), float(src.ts[i]), src.rows[i])
+        lat.append(time.perf_counter() - t0)
+    pipe.flush()
+    assert pipe.last_error is None
+    # p99 stage latency well under a single jitted ingest dispatch
+    assert float(np.percentile(lat, 99)) < 0.01
+    pipe.close()
+
+
+def test_snapshot_isolation_under_concurrent_flush():
+    """A reader's captured snapshot stays internally consistent (and
+    readable) while flushes publish new versions concurrently."""
+    t = Table(schema3(), max_keys=8, capacity=256, bucket_size=16)
+    pipe = IngestPipeline(t, PipelineConfig(lateness=0.0,
+                                            flush_interval_s=0.0))
+    src = source(1500, n_keys=8, seed=9)
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            snap = t.snapshot()
+            tot = np.asarray(snap.state.total)     # device read of v
+            ts = np.asarray(snap.state.ts)
+            # consistency inside one snapshot: per key, the number of
+            # live (non-sentinel) ts slots matches its total
+            for k in range(ts.shape[0]):
+                n_live = int((ts[k] > -1e38).sum())
+                if n_live != min(int(tot[k]), ts.shape[1]):
+                    errors.append((snap.version, k, n_live, int(tot[k])))
+            if snap.preagg is not None:
+                np.asarray(snap.preagg.sum)        # must not be donated
+
+    th = threading.Thread(target=reader, daemon=True)
+    th.start()
+    src.replay(pipe, batch_size=64)
+    pipe.flush()
+    stop.set()
+    th.join(timeout=5.0)
+    assert pipe.last_error is None
+    assert not errors, errors[:5]
+    assert t.version > 0
+    pipe.close()
+
+
+def test_versions_monotone_and_swap_atomic():
+    t = Table(schema3(), max_keys=4, capacity=64, bucket_size=8)
+    v0 = t.version
+    t.insert(["a"], [1.0], np.zeros((1, 3), np.float32))
+    assert t.version == v0 + 1
+    snap = t.snapshot()
+    t.insert(["a"], [2.0], np.zeros((1, 3), np.float32))
+    assert t.snapshot().version == snap.version + 1
+
+
+# ----------------------------------------------------------- TTL retention
+def test_ttl_compaction_after_wraparound_keeps_preagg_valid():
+    """Fill past capacity (ring wraparound), compact by TTL, and verify
+    the rebuilt preagg tier against the raw state."""
+    t = Table(schema3(), max_keys=4, capacity=32, bucket_size=8)
+    n = 100                                        # 100 > 32: wraps
+    ts = np.arange(n, dtype=np.float32)
+    rows = np.random.default_rng(0).normal(
+        0, 1, (n, 3)).astype(np.float32)
+    t.insert(["u"] * n, ts.tolist(), rows)
+
+    snap = t.snapshot()
+    new_state, new_preagg, dropped = compact_expired(
+        snap.state, cutoff=80.0, bucket_size=t.bucket_size)
+    # live events were ts 68..99 (last 32); cutoff 80 keeps 80..99
+    assert dropped == 12
+    assert int(np.asarray(new_state.total)[0]) == 20
+    kept_ts = np.asarray(new_state.ts)[0, :20]
+    np.testing.assert_array_equal(kept_ts,
+                                  np.arange(80, 100, dtype=np.float32))
+    ok, err = verify_preagg(new_state, new_preagg,
+                            bucket_size=t.bucket_size)
+    assert ok, err
+    # compaction never mutates the source snapshot
+    assert int(np.asarray(snap.state.total)[0]) == 100
+
+
+def test_pipeline_retention_hook_drops_expired():
+    t = Table(schema3(), max_keys=4, capacity=64, bucket_size=8)
+    pipe = IngestPipeline(t, PipelineConfig(
+        lateness=0.0, flush_interval_s=0.0,
+        retention=RetentionPolicy(ttl=10.0, every_n_flushes=1)))
+    for i in range(40):
+        pipe.push("u", float(i), np.asarray([i, 0, 0], np.float32))
+    pipe.flush()
+    m = pipe.metrics()
+    assert pipe.last_error is None
+    assert m["ttl_dropped"] > 0
+    live_ts = np.asarray(t.state.ts)[0]
+    live_ts = live_ts[live_ts > -1e38]
+    assert live_ts.min() >= 39.0 - 10.0            # event clock - ttl
+    ok, err = verify_preagg(t.state, t.preagg, bucket_size=8)
+    assert ok, err
+    pipe.close()
+
+
+# ------------------------------------------------------------ engine API
+def test_engine_insert_routes_through_attached_stream():
+    eng = Engine(OptFlags())
+    _, pipe = eng.create_stream(schema3(), max_keys=8, capacity=64,
+                                bucket_size=8, lateness=0.5)
+    src = source(60, n_keys=4)
+    order = np.argsort(src.ts, kind="stable")
+    eng.insert("events", src.keys[order].tolist(),
+               src.ts[order].tolist(), src.rows[order])
+    assert int(np.asarray(eng.tables["events"].state.total).sum()) == 60
+    assert pipe.metrics()["events_flushed"] == 60
+    eng.close()
+
+
+def test_engine_insert_is_atomic_on_late_events():
+    """A sync insert containing one unrepairably-late event stages
+    NOTHING (all-or-nothing), so a corrected retry cannot double-ingest."""
+    eng = Engine(OptFlags())
+    t, pipe = eng.create_stream(schema3(), max_keys=8, capacity=64,
+                                bucket_size=8, lateness=0.5)
+    eng.insert("events", ["u", "u"], [10.0, 12.0],
+               np.ones((2, 3), np.float32))
+    staged_before = pipe.buffer.n_staged
+    with pytest.raises(ValueError, match="rejected atomically"):
+        eng.insert("events", ["u", "u"], [13.0, 5.0],   # 5.0 < frontier
+                   np.ones((2, 3), np.float32))
+    assert pipe.buffer.n_staged == staged_before        # nothing staged
+    eng.insert("events", ["u", "u"], [13.0, 14.0],      # corrected retry
+               np.ones((2, 3), np.float32))
+    assert int(np.asarray(t.state.total).sum()) == 4    # no double-ingest
+    eng.close()
+
+
+def test_attach_to_nonempty_table_seeds_frontier():
+    """An event older than pre-attach history must be rejected at push
+    time — not accepted and then wedge the flusher in a retry loop."""
+    eng = Engine(OptFlags())
+    t = eng.create_table(schema3(), max_keys=8, capacity=64, bucket_size=8)
+    t.insert(["a"], [10.0], np.ones((1, 3), np.float32))
+    pipe = eng.attach_stream("events", lateness=0.0,
+                             flush_interval_s=0.001)
+    assert not pipe.push("a", 5.0, np.ones(3, np.float32))   # stale
+    assert pipe.push("a", 11.0, np.ones(3, np.float32))      # live
+    pipe.flush()
+    m = pipe.metrics()
+    assert m["dropped_late"] == 1 and m["errors"] == 0
+    assert int(np.asarray(t.state.total).sum()) == 2
+    assert pipe.last_error is None
+    eng.close()
+
+
+def test_non_finite_timestamp_rejected_loudly():
+    b = StreamBuffer(lateness=1.0)
+    with pytest.raises(ValueError, match="non-finite"):
+        b.push("a", float("nan"), np.zeros(1, np.float32))
+    assert b.n_staged == 0
+    assert not b.has_ready()                             # no poisoned state
+
+
+def test_attach_stream_validation():
+    eng = Engine(OptFlags())
+    eng.create_table(schema3(), max_keys=8, capacity=64, bucket_size=8)
+    eng.attach_stream("events")
+    with pytest.raises(ValueError, match="already has a stream"):
+        eng.attach_stream("events")
+    with pytest.raises(KeyError):
+        eng.attach_stream("nope")
+    eng.close()
+
+
+def test_feature_server_ingest_and_request():
+    from repro.serving.server import FeatureServer
+    eng = Engine(OptFlags())
+    _, pipe = eng.create_stream(schema3(), max_keys=8, capacity=64,
+                                bucket_size=8, lateness=0.0,
+                                flush_interval_s=0.001)
+    src = source(80, n_keys=4)
+    order = np.argsort(src.ts, kind="stable")
+    eng.insert("events", src.keys[order].tolist(),
+               src.ts[order].tolist(), src.rows[order])
+    eng.deploy("f", SQL)
+    srv = FeatureServer(eng, "f")
+    assert srv.pipeline is pipe
+    assert srv.ingest(int(src.keys[0]), float(src.ts.max()) + 1.0,
+                      np.asarray([5.0, 0, 0], np.float32))
+    pipe.flush()
+    out = srv.request(int(src.keys[0]), float(src.ts.max()) + 2.0)
+    assert float(out["c"]) >= 1.0
+    srv.close()
+    eng.close()
