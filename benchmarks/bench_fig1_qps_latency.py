@@ -9,11 +9,15 @@ from __future__ import annotations
 from repro.core.baselines import PROFILES, BaselineRunner, make_engine
 from repro.data.synthetic import EventStreamConfig, generate_events
 
-from benchmarks.common import FEATURE_SQL, N_EVENTS, N_KEYS, Reporter, replay
+from benchmarks.common import (FEATURE_SQL, N_EVENTS, N_KEYS, QUICK,
+                               Reporter, replay)
 
 # row_interpreter is ~1000x slower per request; keep its sample small
-BUDGET = {"openmldb": (256, 30), "microbatch": (256, 8),
-          "columnar_scan": (256, 12), "row_interpreter": (64, 2)}
+BUDGET = ({"openmldb": (64, 6), "microbatch": (64, 3),
+           "columnar_scan": (64, 3), "row_interpreter": (16, 1)}
+          if QUICK else
+          {"openmldb": (256, 30), "microbatch": (256, 8),
+           "columnar_scan": (256, 12), "row_interpreter": (64, 2)})
 
 
 def run(rep: Reporter) -> dict:

@@ -7,6 +7,7 @@ canonical CSV and writes experiments/bench_results.json.
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -18,12 +19,17 @@ from repro.data.synthetic import (EventStreamConfig, generate_events,
                                   request_stream)
 from repro.featurestore.table import TableSchema
 
+# REPRO_BENCH_QUICK=1 (or `benchmarks.run --quick`) shrinks every bench
+# to a CI-smoke size: same code paths, ~10x less work. Numbers from a
+# quick run are regression tripwires, not paper-validation figures.
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
 # The paper's workload shape: 100-500 records/batch, 6-12 parallel
 # requests/batch; we default to the midpoint.
-N_EVENTS = 20_000
-N_KEYS = 256
-REQ_BATCH = 256
-N_REQ_BATCHES = 30
+N_EVENTS = 2_000 if QUICK else 20_000
+N_KEYS = 64 if QUICK else 256
+REQ_BATCH = 64 if QUICK else 256
+N_REQ_BATCHES = 4 if QUICK else 30
 
 FEATURE_SQL = """
 SELECT

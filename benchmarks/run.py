@@ -19,9 +19,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
-                         "stream")
+                         "stream,hotswap")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced-size smoke mode (CI): same code paths, "
+                         "~10x less work; numbers are tripwires only")
     ap.add_argument("--out", default="experiments/bench_results.json")
     args = ap.parse_args(argv)
+    if args.quick:
+        # must land before benchmarks.common is imported — its workload
+        # constants are resolved at import time
+        os.environ["REPRO_BENCH_QUICK"] = "1"
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks.common import Reporter
@@ -55,6 +62,9 @@ def main(argv=None) -> int:
     if want("stream"):
         from benchmarks import bench_stream_interference as b7
         results["stream"] = b7.run(rep)
+    if want("hotswap"):
+        from benchmarks import bench_hotswap as b8
+        results["hotswap"] = b8.run(rep)
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",

@@ -49,40 +49,44 @@ def scorer(params, feats):
 
 engine.register_model("fraud", scorer, (jnp.asarray(w), jnp.asarray(b)))
 head, window = FEATURE_SQL.strip().split("FROM events")
-engine.deploy("fraud_scored",
-              head + ", PREDICT(fraud, " + ", ".join(names)
-              + ") AS score FROM events" + window)
+# deploy returns a versioned DeploymentHandle; warm_buckets pre-compiles
+# every power-of-2 shape bucket BEFORE the version goes live, so no
+# serving request ever pays a JIT compile (DESIGN.md §6)
+handle = engine.deploy("fraud_scored",
+                       head + ", PREDICT(fraud, " + ", ".join(names)
+                       + ") AS score FROM events" + window,
+                       warm_buckets=(1, 2, 4, 8, 16, 32, 64))
+print(f"deployed {handle.tag} [{handle.state}], "
+      f"{len(handle._fns)} executables pre-warmed")
 
 # ---- online: dynamic-batched serving with deadline SLO --------------------
-server = FeatureServer(engine, "fraud_scored",
-                       ServerConfig(BatcherConfig(max_batch=64,
-                                                  max_delay_s=0.002)))
 lat = []
 scores = {}
 
-def client(i):
-    t0 = time.perf_counter()
-    try:
-        r = server.request(int(keys[i]), float(ts.max()) + 1 + i,
-                           timeout=60.0)
-    except Exception as e:            # pragma: no cover - report & continue
-        print("request failed:", e)
-        return
-    lat.append(time.perf_counter() - t0)
-    scores[i] = float(r["score"])
+with FeatureServer(engine, "fraud_scored",
+                   ServerConfig(BatcherConfig(max_batch=64,
+                                              max_delay_s=0.002))) as server:
 
-# warm every power-of-2 shape bucket so the plan cache hits under load
-for bsz in (1, 2, 4, 8, 16, 32, 64):
-    engine.request("fraud_scored", [int(k) for k in keys[:bsz]],
-                   [float(ts.max()) + 0.5] * bsz)
-threads = [threading.Thread(target=client, args=(i,)) for i in range(256)]
-t0 = time.perf_counter()
-for t in threads:
-    t.start()
-for t in threads:
-    t.join()
-wall = time.perf_counter() - t0
-server.close()
+    def client(i):
+        t0 = time.perf_counter()
+        try:
+            r = server.request(int(keys[i]), float(ts.max()) + 1 + i,
+                               timeout=60.0)
+        except Exception as e:        # pragma: no cover - report & continue
+            print("request failed:", e)
+            return
+        lat.append(time.perf_counter() - t0)
+        assert r.version == handle.version and r.all_ok
+        scores[i] = float(r["score"])
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(256)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
 
 lat_ms = np.asarray(lat) * 1e3
 print(f"\nserved {len(scores)} concurrent requests in {wall:.3f}s "
@@ -95,3 +99,4 @@ thresh = np.percentile(vals, 95)      # review the top-5% riskiest
 flagged = int((vals > thresh).sum())
 print(f"flagged {flagged}/{len(scores)} requests for review "
       f"(score > p95 = {thresh:.4f})")
+engine.close()

@@ -6,14 +6,21 @@ Public API:
 """
 from repro.core.dsl import (QueryBuilder, parse_sql, col, lit, sum_, count_,
                             avg_, min_, max_, std_, var_, first_, last_)
-from repro.core.engine import Engine, Deployment, EngineStats
+from repro.core.engine import (Engine, Deployment, DeploymentHandle,
+                               EngineStats, HandleMetrics)
 from repro.core.optimizer import OptFlags, TableMeta, optimize
 from repro.core.logical import Query, LogicalPlan
-from repro.core.plan_cache import PlanCache, bucket_batch
+from repro.core.plan_cache import PlanCache, CacheStats, TagStats, bucket_batch
+from repro.core.results import (FeatureFrame, RequestContext,
+                                DeadlineExceeded, STATUS_OK,
+                                STATUS_UNKNOWN_KEY)
 
 __all__ = [
-    "Engine", "Deployment", "EngineStats", "OptFlags", "TableMeta",
-    "optimize", "Query", "LogicalPlan", "PlanCache", "bucket_batch",
+    "Engine", "Deployment", "DeploymentHandle", "EngineStats",
+    "HandleMetrics", "OptFlags", "TableMeta", "optimize", "Query",
+    "LogicalPlan", "PlanCache", "CacheStats", "TagStats", "bucket_batch",
+    "FeatureFrame", "RequestContext", "DeadlineExceeded", "STATUS_OK",
+    "STATUS_UNKNOWN_KEY",
     "QueryBuilder", "parse_sql", "col", "lit", "sum_", "count_", "avg_",
     "min_", "max_", "std_", "var_", "first_", "last_",
 ]

@@ -271,12 +271,12 @@ class _Parser:
     def parse(self) -> Query:
         self.expect("kw", "select")
         outputs: List[Tuple[str, E.Expr]] = []
-        predicts: List[Predict] = []
+        predicts: List[Tuple[str, List[E.Expr], str]] = []
         while True:
             item, name = self._select_item()
-            if isinstance(item, Predict):
-                predicts.append(Predict(item.model, item.features,
-                                        name or item.output))
+            if isinstance(item, tuple):            # pending PREDICT
+                model, args, out = item
+                predicts.append((model, args, name or out))
             else:
                 outputs.append((name or self._anon_name(), item))
             if not self.accept("op", ","):
@@ -295,9 +295,25 @@ class _Parser:
         self.expect("eof")
         if len(predicts) > 1:
             raise SyntaxError("at most one PREDICT per query")
+        predict = None
+        if predicts:
+            # resolve PREDICT args against the FULL select list so alias
+            # references work regardless of their position; expression
+            # (or raw request-column) args materialise as hidden outputs
+            model, args, out = predicts[0]
+            aliases = dict(outputs)
+            feats: List[str] = []
+            for e in args:
+                if isinstance(e, E.Col) and e.name in aliases:
+                    feats.append(e.name)
+                else:
+                    synth = f"__pred_arg{len(outputs)}"
+                    outputs.append((synth, _sub_aliases(e, aliases)))
+                    feats.append(synth)
+            predict = Predict(model, tuple(feats), out)
         return Query(table=table, outputs=tuple(outputs),
                      windows=tuple(windows), where=where,
-                     predict=predicts[0] if predicts else None)
+                     predict=predict)
 
     def _anon_name(self) -> str:
         self._anon += 1
@@ -308,14 +324,15 @@ class _Parser:
             self.next()
             self.expect("op", "(")
             model = self.expect("id").text
-            feats: List[str] = []
+            args: List[E.Expr] = []
             while self.accept("op", ","):
-                feats.append(self.expect("id").text)
+                args.append(self._expr())
             self.expect("op", ")")
             name = None
             if self.accept("kw", "as"):
                 name = self.expect("id").text
-            return Predict(model, tuple(feats), name or "prediction"), name
+            # pending: args resolve in parse() once every alias is known
+            return (model, args, name or "prediction"), name
         e = self._expr()
         name = None
         if self.accept("kw", "as"):
@@ -447,6 +464,19 @@ class _Parser:
         if fname in E.scalar_func_names():
             return E.Func(fname, tuple(args))
         raise SyntaxError(f"unknown function {fname!r}")
+
+
+def _sub_aliases(e: E.Expr, aliases: dict) -> E.Expr:
+    """Replace top-level references to earlier SELECT aliases with their
+    defining expressions (PREDICT expression arguments evaluate in event/
+    aggregate scope, where aliases don't exist). Agg nodes are leaves —
+    their arguments are event columns, never aliases."""
+    if isinstance(e, E.Agg):
+        return e
+    if isinstance(e, E.Col) and e.name in aliases:
+        return aliases[e.name]
+    kids = tuple(_sub_aliases(c, aliases) for c in E.children(e))
+    return E.replace_children(e, kids)
 
 
 def parse_sql(sql: str) -> Query:

@@ -8,6 +8,14 @@ Hot path anatomy (paper Eq. 3: ``L = L_parse + L_plan + L_exec``):
 * ``request`` — key lookup (host dict), pad to a shape bucket, run the
   compiled executable (L_exec), unpad.
 
+``deploy`` returns a first-class :class:`DeploymentHandle` — a versioned
+serving endpoint that OWNS its compiled per-bucket executables. Redeploying
+an existing name is a **hot swap**: version N+1 is built and pre-warmed
+(every configured shape bucket compiled) before an atomic publish, the
+retired version's plan-cache entries are invalidated by fingerprint, and
+``rollback`` restores the prior version instantly (retired handles keep
+their executables). See DESIGN.md §6 for the lifecycle contract.
+
 "Parallel processing" (paper O4) has two forms here: vectorised batch
 execution (TPU-native; default) and a worker-pool mode
 (``flags.parallel_workers > 1``) that reproduces the paper's thread-level
@@ -17,9 +25,10 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
+import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,10 +39,13 @@ from repro.core.logical import LogicalPlan, Query
 from repro.core.optimizer import OptFlags, TableMeta, optimize
 from repro.core.physical import PhysicalPlan, compile_plan
 from repro.core.plan_cache import PlanCache, bucket_batch
+from repro.core.results import (STATUS_UNKNOWN_KEY, DeadlineExceeded,
+                                FeatureFrame, RequestContext)
 from repro.featurestore.registry import FeatureRegistry, FeatureSet
 from repro.featurestore.table import Table, TableSchema
 
-__all__ = ["Engine", "Deployment", "EngineStats"]
+__all__ = ["Engine", "Deployment", "DeploymentHandle", "HandleMetrics",
+           "EngineStats"]
 
 
 @dataclass
@@ -51,29 +63,273 @@ class EngineStats:
 
 
 @dataclass
-class Deployment:
-    name: str
-    query: Query
-    plan: LogicalPlan
-    phys: PhysicalPlan
-    opt_log: List[str]
-    table: Table
+class HandleMetrics:
+    """Per-deployment-version serving counters."""
+
+    requests: int = 0
+    batches: int = 0
+    serve_s: float = 0.0
+    unknown_keys: int = 0
+    canary_batches: int = 0
+    canary_max_abs_diff: float = 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+class DeploymentHandle:
+    """One versioned deployment of a query: the serving endpoint.
+
+    Lifecycle: ``building -> warming -> live -> retired`` (a redeploy with
+    a canary fraction parks the new version in ``canary`` between warming
+    and live). The handle owns its compiled per-bucket executables in
+    ``_fns`` — the first-level lookup on the hot path — so plan-cache
+    invalidation of a retired version can never stall an in-flight batch,
+    and ``rollback`` re-lives a retired version without recompiling.
+    """
+
+    BUILDING = "building"
+    WARMING = "warming"
+    CANARY = "canary"
+    LIVE = "live"
+    RETIRED = "retired"
+
+    def __init__(self, engine: "Engine", name: str, version: int,
+                 query: Query, plan: LogicalPlan, phys: PhysicalPlan,
+                 opt_log: List[str], table: Table):
+        self.engine = engine
+        self.name = name
+        self.version = version
+        self.query = query
+        self.plan = plan
+        self.phys = phys
+        self.opt_log = opt_log
+        self.table = table
+        self.state = self.BUILDING
+        self.metrics = HandleMetrics()
+        self.buckets_seen: Set[int] = set()
+        self._fns: Dict[Tuple[int, bool], Callable] = {}
+        self._canary: Optional[Tuple["DeploymentHandle", float]] = None
+        self._canary_counter = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ identity
+    @property
+    def tag(self) -> str:
+        """Plan-cache attribution tag for this version."""
+        return f"{self.name}@v{self.version}"
+
+    @property
+    def live(self) -> bool:
+        return self.state == self.LIVE
+
+    def __repr__(self) -> str:
+        return (f"DeploymentHandle({self.name!r} v{self.version} "
+                f"[{self.state}] on {self.table.schema.name!r})")
+
+    # ------------------------------------------------------ compiled lookup
+    def _compiled(self, bucket: int, record: bool = True) -> Callable:
+        eng = self.engine
+        assume_latest = eng.flags.assume_latest
+        # buckets_seen drives redeploy pre-warming: only ONLINE-served
+        # buckets belong in it (warm() and query_offline would otherwise
+        # propagate their shapes into every future swap forever)
+        if record and bucket not in self.buckets_seen:
+            with self._lock:  # deploy/rollback snapshot this set mid-swap
+                self.buckets_seen.add(bucket)
+        fn = self._fns.get((bucket, assume_latest))
+        if fn is not None:
+            # first-level hit: still a plan-cache hit for Eq. 3 accounting
+            eng.cache.record_hit(self.tag)
+            return fn
+        key = (self.phys.fingerprint(), bucket, assume_latest,
+               self.name if self.plan.predict else "")
+        table = self.table
+
+        def make() -> Callable:
+            executor = self.phys.executor_for(assume_latest)
+            jit_fn = jax.jit(executor)
+            # Warm up: compile for this bucket's shapes now (charged to
+            # L_plan, as the paper charges planning+JIT on first execution).
+            V = len(table.schema.value_cols)
+            snap = table.snapshot()
+            dummy = jit_fn(
+                snap.state, snap.preagg,
+                jnp.zeros((bucket,), jnp.int32),
+                jnp.zeros((bucket,), jnp.float32),
+                jnp.zeros((bucket, V), jnp.float32),
+                eng._predict_params(self))
+            jax.block_until_ready(dummy)
+            return jit_fn
+
+        fn, plan_dt = eng.cache.get_or_compile(key, make, tag=self.tag)
+        eng.stats.plan_s += plan_dt
+        if eng.cache.enabled:
+            # the handle owns its executables; disabled-cache ablations
+            # must keep paying the recompile, so no memo there
+            self._fns[(bucket, assume_latest)] = fn
+        return fn
+
+    def warm(self, buckets: Sequence[int]) -> int:
+        """Compile every listed shape bucket now (off the serving path).
+        Sizes are rounded through ``bucket_batch`` — the only shapes the
+        request path can ever ask for — and deduplicated. Returns the
+        number of buckets compiled or refreshed."""
+        rounded = sorted({bucket_batch(int(b)) for b in buckets})
+        for b in rounded:
+            self._compiled(b, record=False)
+        return len(rounded)
+
+    def release(self) -> None:
+        """Drop owned executables (memory reclamation for old versions)."""
+        self._fns.clear()
+
+    # --------------------------------------------------------------- serve
+    def request(self, keys: Sequence, ts: Sequence[float],
+                rows: Optional[np.ndarray] = None,
+                ctx: Optional[RequestContext] = None) -> FeatureFrame:
+        """Serve a batch of online feature requests on THIS version."""
+        if ctx is not None and ctx.expired:
+            raise DeadlineExceeded(
+                f"deadline expired before serving {self.tag}")
+        cand = None
+        # pinned traffic asked for THIS version: never reroute it to a
+        # canary (it would both violate the pin and pollute the
+        # candidate's promote-decision metrics)
+        pinned = ctx is not None and ctx.version_pin is not None
+        canary = None if pinned else self._canary   # read once:
+        if canary is not None:      # promote/rollback/deploy clear it
+            cand_handle, frac = canary
+            with self._lock:
+                self._canary_counter += 1
+                n = self._canary_counter
+            if int(n * frac) > int((n - 1) * frac):
+                cand = cand_handle
+        if cand is None:
+            return self._serve(keys, ts, rows, ctx)
+        # canary slice: the new version serves the batch; the incumbent
+        # computes the same batch as reference and the divergence is
+        # recorded on the candidate (promote/rollback evidence).
+        base = self._serve(keys, ts, rows, ctx)
+        new = cand._serve(keys, ts, rows, ctx)
+        diff = 0.0
+        for nme, v in new.columns.items():
+            ref = base.columns.get(nme)
+            if ref is not None and np.size(v):
+                diff = max(diff, float(np.max(np.abs(
+                    np.asarray(v, np.float64) - np.asarray(ref, np.float64)))))
+        with cand._lock:
+            cand.metrics.canary_batches += 1
+            cand.metrics.canary_max_abs_diff = max(
+                cand.metrics.canary_max_abs_diff, diff)
+        return new
+
+    def request_async(self, keys: Sequence, ts: Sequence[float],
+                      rows: Optional[np.ndarray] = None,
+                      ctx: Optional[RequestContext] = None) -> cf.Future:
+        """``request`` on a background thread; returns a Future[FeatureFrame]."""
+        return self.engine._ensure_async_pool().submit(
+            self.request, keys, ts, rows, ctx)
+
+    def _serve(self, keys: Sequence, ts: Sequence[float],
+               rows: Optional[np.ndarray],
+               ctx: Optional[RequestContext]) -> FeatureFrame:
+        eng = self.engine
+        table = self.table
+        B = len(keys)
+        trace = ctx.trace_id if ctx is not None else None
+        if B == 0:
+            return FeatureFrame(
+                {n: np.zeros((0,), np.float32)
+                 for n in self.phys.feature_names},
+                status=np.zeros((0,), np.int8), deployment=self.name,
+                version=self.version, table_version=table.version,
+                trace_id=trace)
+        t_start = time.perf_counter()
+        # unknown keys are masked (index 0, empty history) instead of
+        # raising: the caller gets per-request status, the rest of the
+        # batch is unaffected
+        kidx = np.zeros(B, np.int32)
+        status = np.zeros(B, np.int8)
+        k2i = table.key_to_idx
+        for i, k in enumerate(keys):
+            idx = k2i.get(k)
+            if idx is None:
+                status[i] = STATUS_UNKNOWN_KEY
+            else:
+                kidx[i] = idx
+        ts_arr = np.asarray(ts, np.float32)
+        V = len(table.schema.value_cols)
+        row_arr = (np.asarray(rows, np.float32) if rows is not None
+                   else np.zeros((B, V), np.float32))
+        plan_before = eng.cache.tag_stats(self.tag).compile_seconds
+        # one snapshot per request regardless of execution strategy: a
+        # pooled/rowwise request must not mix table versions mid-response
+        snap = table.snapshot()
+        if eng.flags.parallel_workers > 1 and eng._pool is not None:
+            out = eng._request_pooled(self, kidx, ts_arr, row_arr, snap)
+        elif not eng.flags.vectorized:
+            out = eng._request_rowwise(self, kidx, ts_arr, row_arr, snap)
+        else:
+            out = eng._request_batched(self, kidx, ts_arr, row_arr, snap=snap)
+        unknown = status == STATUS_UNKNOWN_KEY
+        n_unknown = int(unknown.sum())
+        if n_unknown:
+            out = {n: np.asarray(v).copy() for n, v in out.items()}
+            for v in out.values():
+                v[unknown] = 0.0
+        wall = time.perf_counter() - t_start
+        with self._lock:
+            m = self.metrics
+            m.requests += B
+            m.batches += 1
+            m.serve_s += wall
+            m.unknown_keys += n_unknown
+        plan_dt = eng.cache.tag_stats(self.tag).compile_seconds - plan_before
+        return FeatureFrame(
+            out, status=status, deployment=self.name, version=self.version,
+            table_version=snap.version,
+            latency={"serve_s": wall, "plan_s": max(plan_dt, 0.0)},
+            trace_id=trace)
+
+    # ----------------------------------------------------------- lifecycle
+    def rollback(self) -> "DeploymentHandle":
+        """Restore the previous version of this deployment name."""
+        return self.engine.rollback(self.name)
+
+
+# Backwards-compatible alias: the old thin record grew into the handle.
+Deployment = DeploymentHandle
 
 
 class Engine:
     def __init__(self, flags: OptFlags = OptFlags(), *,
-                 max_cache_entries: int = 128):
+                 max_cache_entries: int = 128,
+                 warm_buckets: Sequence[int] = (),
+                 max_retained_versions: int = 2):
         self.flags = flags
         self.tables: Dict[str, Table] = {}
         self.models: Dict[str, Callable] = {}
         self.model_params: Dict[str, object] = {}
-        self.deployments: Dict[str, Deployment] = {}
+        self.deployments: Dict[str, DeploymentHandle] = {}
         self.registry = FeatureRegistry()
         self.cache = PlanCache(max_entries=max_cache_entries,
                                enabled=flags.plan_cache)
         self.streams: Dict[str, object] = {}   # table -> IngestPipeline
         self.stats = EngineStats()
+        # shape buckets every new deployment version pre-compiles before
+        # going live (redeploys additionally warm the buckets the retired
+        # version actually served)
+        self.warm_buckets: Tuple[int, ...] = tuple(warm_buckets)
+        self.max_retained_versions = max_retained_versions
+        self._versions: Dict[str, Dict[int, DeploymentHandle]] = {}
+        self._next_version: Dict[str, int] = {}   # monotonic even after
+        self._history: Dict[str, List[DeploymentHandle]] = {}  # pruning
+        self._deploy_lock = threading.RLock()
+        self._async_lock = threading.Lock()
         self._pool: Optional[cf.ThreadPoolExecutor] = None
+        self._async_pool: Optional[cf.ThreadPoolExecutor] = None
+        self._closed = False
         if flags.parallel_workers > 1:
             self._pool = cf.ThreadPoolExecutor(flags.parallel_workers)
 
@@ -167,7 +423,30 @@ class Engine:
 
     # --------------------------------------------------------------- deploy
     def deploy(self, name: str, query: Union[str, Query, dsl.QueryBuilder],
-               ) -> Deployment:
+               *, warm_buckets: Optional[Sequence[int]] = None,
+               canary: float = 0.0) -> DeploymentHandle:
+        """Deploy (or hot-swap redeploy) a query as a versioned handle.
+
+        Redeploying an existing name builds version N+1, pre-warms every
+        configured shape bucket (``warm_buckets`` ∪ engine defaults ∪ the
+        retired version's observed buckets), then atomically publishes the
+        new version — no request ever pays a JIT compile on the new
+        version, and in-flight batches finish on the old one. With
+        ``canary > 0`` the new version instead serves that fraction of
+        batches (outputs compared against the incumbent) until
+        ``promote``/``rollback`` decides.
+        """
+        if canary:
+            if not (0.0 < canary <= 1.0):
+                raise ValueError(f"canary fraction must be in (0, 1], "
+                                 f"got {canary}")
+            if name not in self.deployments:
+                # fail BEFORE the plan build: compiling a whole physical
+                # plan for a guaranteed error wastes seconds under load
+                raise ValueError(
+                    f"canary deploy of {name!r} requires an existing live "
+                    f"deployment to compare against; deploy without "
+                    f"canary= first")
         t0 = time.perf_counter()
         if isinstance(query, str):
             q = dsl.parse_sql(query)
@@ -175,32 +454,173 @@ class Engine:
             q = query.build()
         else:
             q = query
-        parse_dt = time.perf_counter() - t0
-        self.stats.parse_s += parse_dt
+        self.stats.parse_s += time.perf_counter() - t0
 
         table = self.tables.get(q.table)
         if table is None:
             raise KeyError(f"unknown table {q.table!r}; create_table first")
-        t1 = time.perf_counter()
-        meta = TableMeta(capacity=table.capacity,
-                         bucket_size=table.bucket_size,
-                         n_value_cols=len(table.schema.value_cols),
-                         has_preagg=table.preagg is not None)
-        plan, log = optimize(q.to_logical(), meta, self.flags)
-        phys = compile_plan(plan, table.schema, flags=self.flags,
-                            bucket_size=table.bucket_size,
-                            model_fns=self.models)
-        self.stats.plan_s += time.perf_counter() - t1
+        with self._deploy_lock:
+            t1 = time.perf_counter()
+            meta = TableMeta(capacity=table.capacity,
+                             bucket_size=table.bucket_size,
+                             n_value_cols=len(table.schema.value_cols),
+                             has_preagg=table.preagg is not None)
+            plan, log = optimize(q.to_logical(), meta, self.flags)
+            phys = compile_plan(plan, table.schema, flags=self.flags,
+                                bucket_size=table.bucket_size,
+                                model_fns=self.models)
+            self.stats.plan_s += time.perf_counter() - t1
 
-        dep = Deployment(name=name, query=q, plan=plan, phys=phys,
-                         opt_log=log, table=table)
-        self.deployments[name] = dep
-        self.registry.register(FeatureSet(name=name, query=q))
-        return dep
+            prev = self.deployments.get(name)
+            if canary > 0.0 and prev is None:
+                raise ValueError(
+                    f"canary deploy of {name!r} requires an existing live "
+                    f"deployment to compare against; deploy without "
+                    f"canary= first")
+            versions = self._versions.setdefault(name, {})
+            version = self._next_version.get(name, 0) + 1
+            self._next_version[name] = version
+            h = DeploymentHandle(self, name, version, q, plan, phys, log,
+                                 table)
+            h.state = DeploymentHandle.WARMING
+            if self.cache.enabled:
+                # with the plan cache ablated nothing retains a warmed
+                # executable, so warming would be N discarded compiles
+                warm = set(self.warm_buckets)
+                if warm_buckets is not None:
+                    warm |= {int(b) for b in warm_buckets}
+                if prev is not None:
+                    with prev._lock:   # serving threads add concurrently
+                        warm |= prev.buckets_seen
+                h.warm(sorted(warm))
+            versions[version] = h
+            self.registry.register(FeatureSet(name=name, query=q,
+                                              version=version))
+            if canary > 0.0:
+                # attach the new canary BEFORE retiring a displaced one:
+                # _invalidate_if_unused must see h as a live user of a
+                # shared fingerprint, or it would evict the entries h was
+                # just warmed from
+                displaced = prev._canary[0] if prev._canary else None
+                h.state = DeploymentHandle.CANARY
+                prev._canary = (h, float(canary))
+                if displaced is not None:
+                    displaced.state = DeploymentHandle.RETIRED
+                    self._invalidate_if_unused(displaced)
+                    self._versions.get(name, {}).pop(
+                        displaced.version, None)
+            else:
+                self._swap(name, h, prev)
+            return h
+
+    def _retire_canary(self, holder: Optional[DeploymentHandle]) -> None:
+        """Detach and retire ``holder``'s active canary (aborted or
+        displaced): drop its executables and cache entries so it cannot
+        become the stale-executable leak redeploys are meant to fix."""
+        if holder is None or holder._canary is None:
+            return
+        cand, _ = holder._canary
+        holder._canary = None
+        cand.state = DeploymentHandle.RETIRED
+        self._invalidate_if_unused(cand)
+        # never-promoted candidates don't join the rollback history, so
+        # prune them from the version map (no unbounded accretion). Their
+        # handle-owned executables are NOT released: an in-flight batch
+        # that already chose the canary finishes compile-free, and once
+        # the last reference drops the whole handle is garbage anyway.
+        self._versions.get(cand.name, {}).pop(cand.version, None)
+
+    def _swap(self, name: str, new: DeploymentHandle,
+              prev: Optional[DeploymentHandle]) -> None:
+        """Atomic publish: one dict store flips the live version."""
+        new._canary = None
+        new.state = DeploymentHandle.LIVE
+        self.deployments[name] = new
+        self.registry.set_active(name, new.version)
+        if prev is not None:
+            if prev._canary is not None and prev._canary[0] is not new:
+                self._retire_canary(prev)     # displaced, never promoted
+            prev._canary = None
+            prev.state = DeploymentHandle.RETIRED
+            hist = self._history.setdefault(name, [])
+            hist.append(prev)
+            self._invalidate_if_unused(prev)
+            while len(hist) > self.max_retained_versions:
+                # beyond the retention window a version is gone for good:
+                # executables dropped AND the handle unpinnable, so a
+                # redeploy-heavy engine doesn't accrete retired plans
+                dropped = hist.pop(0)
+                dropped.release()
+                self._versions.get(name, {}).pop(dropped.version, None)
+
+    def _invalidate_if_unused(self, retired: DeploymentHandle) -> None:
+        """Drop a retired version's plan-cache entries unless a live or
+        canary deployment shares the same plan fingerprint (a same-query
+        redeploy must not nuke the entries it was just warmed from)."""
+        fp = retired.phys.fingerprint()
+        for h in self.deployments.values():
+            if h.phys.fingerprint() == fp:
+                return
+            if h._canary is not None and \
+                    h._canary[0].phys.fingerprint() == fp:
+                return
+        self.cache.invalidate(fp)
+
+    def handle(self, name: str, version: Optional[int] = None
+               ) -> DeploymentHandle:
+        """The live handle for ``name``, or a specific pinned version."""
+        if version is None:
+            dep = self.deployments.get(name)
+            if dep is None:
+                raise KeyError(f"unknown deployment {name!r}; deployed: "
+                               f"{sorted(self.deployments)}")
+            return dep
+        try:
+            return self._versions[name][version]
+        except KeyError:
+            raise KeyError(
+                f"deployment {name!r} has no version {version}; known: "
+                f"{sorted(self._versions.get(name, {}))}") from None
+
+    def promote(self, name: str) -> DeploymentHandle:
+        """Make the canary version the live one (atomic swap)."""
+        with self._deploy_lock:
+            live = self.handle(name)
+            if live._canary is None:
+                raise ValueError(f"deployment {name!r} has no active canary")
+            cand, _ = live._canary
+            live._canary = None
+            self._swap(name, cand, live)
+            return cand
+
+    def rollback(self, name: str) -> DeploymentHandle:
+        """Undo: abort an active canary, or restore the previous version.
+
+        Retired handles keep their compiled executables, so restoring one
+        is swap-only — no recompile on the serving path (a handle whose
+        executables were released under ``max_retained_versions`` is
+        re-warmed here, off the hot path, before the swap)."""
+        with self._deploy_lock:
+            live = self.deployments.get(name)
+            if live is not None and live._canary is not None:
+                self._retire_canary(live)
+                return live
+            hist = self._history.get(name)
+            if not hist:
+                raise ValueError(
+                    f"no prior version of {name!r} to roll back to")
+            prev = hist.pop()
+            if not prev._fns and self.cache.enabled:
+                with prev._lock:       # pinned traffic may still add
+                    buckets = sorted(prev.buckets_seen)
+                prev.warm(buckets)
+            self._swap(name, prev, live)
+            return prev
 
     def explain(self, name: str) -> str:
-        dep = self.deployments[name]
-        lines = [f"deployment {name!r} on table {dep.table.schema.name!r}"]
+        dep = self.handle(name)
+        lines = [f"deployment {name!r} v{dep.version} [{dep.state}] "
+                 f"on table {dep.table.schema.name!r}"]
         lines += [f"  plan: {dep.plan.fingerprint()[:160]}"]
         lines += [f"  opt : {l}" for l in dep.opt_log]
         for g in dep.phys.groups:
@@ -209,69 +629,41 @@ class Engine:
                          f"aggs={len(g.slots)}")
         return "\n".join(lines)
 
-    # ------------------------------------------------------ compiled lookup
-    def _compiled(self, dep: Deployment, bucket: int) -> Callable:
-        key = (dep.phys.fingerprint(), bucket, self.flags.assume_latest,
-               dep.name if dep.plan.predict else "")
-        table = dep.table
-
-        def make() -> Callable:
-            executor = dep.phys.executor_for(
-                self.flags.assume_latest)
-            jit_fn = jax.jit(executor)
-            # Warm up: compile for this bucket's shapes now (charged to
-            # L_plan, as the paper charges planning+JIT on first execution).
-            V = len(table.schema.value_cols)
-            snap = table.snapshot()
-            dummy = jit_fn(
-                snap.state, snap.preagg,
-                jnp.zeros((bucket,), jnp.int32),
-                jnp.zeros((bucket,), jnp.float32),
-                jnp.zeros((bucket, V), jnp.float32),
-                self._predict_params(dep))
-            jax.block_until_ready(dummy)
-            return jit_fn
-
-        fn, plan_dt = self.cache.get_or_compile(key, make)
-        self.stats.plan_s += plan_dt
-        return fn
-
-    def _predict_params(self, dep: Deployment):
+    def _predict_params(self, dep: DeploymentHandle):
         if dep.plan.predict is None:
             return None
         return self.model_params.get(dep.plan.predict.model)
 
+    def _ensure_async_pool(self) -> cf.ThreadPoolExecutor:
+        # dedicated lock: piggybacking on _deploy_lock would stall the
+        # first request_async behind an in-flight deploy's build+warm
+        if self._async_pool is None:
+            with self._async_lock:
+                if self._closed:
+                    raise RuntimeError("engine is closed")
+                if self._async_pool is None:
+                    self._async_pool = cf.ThreadPoolExecutor(
+                        2, thread_name_prefix="req-async")
+        return self._async_pool
+
     # --------------------------------------------------------------- online
     def request(self, name: str, keys: Sequence, ts: Sequence[float],
-                rows: Optional[np.ndarray] = None
-                ) -> Dict[str, np.ndarray]:
-        """Serve a batch of online feature requests."""
-        dep = self.deployments[name]
-        table = dep.table
-        B = len(keys)
-        if B == 0:
-            return {n: np.zeros((0,), np.float32)
-                    for n in dep.phys.feature_names}
-        kidx = table.key_indices(keys, create=False)
-        ts_arr = np.asarray(ts, np.float32)
-        V = len(table.schema.value_cols)
-        row_arr = (np.asarray(rows, np.float32) if rows is not None
-                   else np.zeros((B, V), np.float32))
+                rows: Optional[np.ndarray] = None,
+                ctx: Optional[RequestContext] = None) -> FeatureFrame:
+        """Serve a batch of online feature requests (delegating shim).
 
-        # one snapshot per request regardless of execution strategy: a
-        # pooled/rowwise request must not mix table versions mid-response
-        snap = dep.table.snapshot()
-        if self.flags.parallel_workers > 1 and self._pool is not None:
-            return self._request_pooled(dep, kidx, ts_arr, row_arr, snap)
-        if not self.flags.vectorized:
-            return self._request_rowwise(dep, kidx, ts_arr, row_arr, snap)
-        return self._request_batched(dep, kidx, ts_arr, row_arr, snap=snap)
+        Kept for the string-keyed callers; the hot path lives on the
+        handle. Honors ``ctx.version_pin`` like the server path does.
+        The returned :class:`FeatureFrame` is dict-compatible."""
+        pin = ctx.version_pin if ctx is not None else None
+        return self.handle(name, pin).request(keys, ts, rows, ctx=ctx)
 
-    def _request_batched(self, dep: Deployment, kidx, ts_arr, row_arr,
-                         snap=None) -> Dict[str, np.ndarray]:
+    def _request_batched(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
+                         snap=None, record_bucket: bool = True
+                         ) -> Dict[str, np.ndarray]:
         B = len(kidx)
         bucket = bucket_batch(B)
-        fn = self._compiled(dep, bucket)
+        fn = dep._compiled(bucket, record=record_bucket)
         pad = bucket - B
         if pad:
             kidx = np.pad(kidx, (0, pad))
@@ -292,7 +684,7 @@ class Engine:
         self.stats.n_batches += 1
         return {n: np.asarray(a)[:B] for n, a in out.items()}
 
-    def _request_rowwise(self, dep: Deployment, kidx, ts_arr, row_arr,
+    def _request_rowwise(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
                          snap=None) -> Dict[str, np.ndarray]:
         """Paper-faithful per-request execution (ablation: vectorized off)."""
         outs: List[Dict[str, np.ndarray]] = []
@@ -302,7 +694,7 @@ class Engine:
                 snap=snap))
         return {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
 
-    def _request_pooled(self, dep: Deployment, kidx, ts_arr, row_arr,
+    def _request_pooled(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
                         snap=None) -> Dict[str, np.ndarray]:
         """Worker-pool fan-out (paper O4 'parallel processing')."""
         W = self.flags.parallel_workers
@@ -331,7 +723,7 @@ class Engine:
         materialisation). Point-in-time: each event sees only history up to
         its own timestamp — exactly the online semantics, which is the
         training-serving-skew guarantee."""
-        dep = self.deployments[name]
+        dep = self.handle(name)
         table = dep.table
         # one snapshot for BOTH enumeration and execution: concurrent
         # stream flushes must not shift the table between building the
@@ -367,7 +759,7 @@ class Engine:
                 sl = slice(s, s + batch_size)
                 outs.append(self._request_batched(
                     dep, kidx[sl], ts_all[sl], rows_all[sl],
-                    snap=offline_snap))
+                    snap=offline_snap, record_bucket=False))
         finally:
             self.flags = saved
         res = {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
@@ -382,9 +774,26 @@ class Engine:
                 "n_requests": s.n_requests,
                 "cache_hit_rate": self.cache.stats.hit_rate}
 
+    # ------------------------------------------------------------ lifecycle
     def close(self) -> None:
+        """Idempotent shutdown: streams, worker pool, async pool."""
+        with self._async_lock:     # a racing request_async must not
+            if self._closed:       # create the pool after this point
+                return
+            self._closed = True
+            if self._async_pool is not None:
+                self._async_pool.shutdown(wait=False)
+                self._async_pool = None
         for pipe in self.streams.values():
             pipe.close()
         self.streams.clear()
         if self._pool is not None:
             self._pool.shutdown(wait=False)
+            self._pool = None
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False

@@ -147,6 +147,26 @@ def validate(plan: LogicalPlan) -> None:
                 raise ValueError(
                     f"output {name!r} references undefined window "
                     f"{agg.window!r}; defined: {sorted(wmap)}")
+    if plan.filter.pred is not None:
+        # WHERE filters raw events BEFORE window aggregation: windowed
+        # outputs (and window aggregates themselves) are out of scope.
+        if E.collect_aggs(plan.filter.pred):
+            raise ValueError(
+                "WHERE cannot contain window aggregates; it filters raw "
+                "events before window aggregation (filter on event "
+                "columns, or post-filter the feature outputs)")
+        # any non-identity SELECT alias (windowed or derived) is out of
+        # scope in WHERE; identity aliases (SELECT user_id) still name
+        # the underlying event column and stay legal
+        aliased = {n for n, e in plan.project.outputs
+                   if not (isinstance(e, E.Col) and e.name == n)}
+        bad = sorted(c for c in E.collect_columns(plan.filter.pred)
+                     if c in aliased)
+        if bad:
+            raise ValueError(
+                f"WHERE references SELECT alias(es) {bad}; WHERE filters "
+                f"raw events before projection and window aggregation — "
+                f"reference event columns instead")
     if plan.predict is not None:
         out_names = {n for n, _ in plan.project.outputs}
         missing = [f for f in plan.predict.features if f not in out_names]

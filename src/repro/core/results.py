@@ -1,0 +1,126 @@
+"""Structured serving results + request context.
+
+The hot path used to speak ``Dict[str, np.ndarray]`` and nothing else:
+no way to tell which deployment *version* served a batch, whether a key
+was unknown, or what the request actually cost. :class:`FeatureFrame`
+carries that metadata while remaining a drop-in ``Mapping`` — every
+pre-existing call site (``out["amt_sum_10"]``, ``res.items()``,
+``for name in out``) keeps working unchanged.
+
+:class:`RequestContext` flows from ``FeatureServer.request`` through the
+``DynamicBatcher`` into the engine. Its ``version_pin`` is the batch
+grouping key — the batcher never mixes differently-pinned requests in
+one batch, which (together with the engine resolving ONE handle per
+batch) is what keeps a batch on a single deployment version mid-swap.
+"""
+from __future__ import annotations
+
+import time
+from collections.abc import Mapping
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+__all__ = ["FeatureFrame", "RequestContext", "DeadlineExceeded",
+           "STATUS_OK", "STATUS_UNKNOWN_KEY"]
+
+STATUS_OK = 0
+STATUS_UNKNOWN_KEY = 1
+
+
+class DeadlineExceeded(TimeoutError):
+    """A request's deadline passed before (or while) it could be served."""
+
+
+@dataclass(frozen=True)
+class RequestContext:
+    """Per-request serving context.
+
+    ``deadline`` is an absolute ``time.monotonic()`` instant; expired
+    requests are dropped by the batcher instead of wasting a batch slot.
+    ``version_pin`` routes the request to one specific deployment version
+    (e.g. replaying traffic against a retired version after a swap).
+    """
+
+    deadline: Optional[float] = None
+    trace_id: Optional[str] = None
+    version_pin: Optional[int] = None
+
+    @classmethod
+    def with_timeout(cls, timeout_s: float, **kw) -> "RequestContext":
+        return cls(deadline=time.monotonic() + timeout_s, **kw)
+
+    @property
+    def expired(self) -> bool:
+        return self.deadline is not None and time.monotonic() > self.deadline
+
+    def remaining(self) -> Optional[float]:
+        if self.deadline is None:
+            return None
+        return self.deadline - time.monotonic()
+
+
+class FeatureFrame(Mapping):
+    """Named feature columns + per-request status + serving metadata.
+
+    Mapping protocol is over the feature columns, so a FeatureFrame is
+    backwards-compatible with the raw dict the engine used to return.
+    """
+
+    __slots__ = ("columns", "status", "deployment", "version",
+                 "table_version", "latency", "trace_id")
+
+    def __init__(self, columns: Dict[str, np.ndarray], *,
+                 status: Optional[np.ndarray] = None,
+                 deployment: str = "", version: int = 0,
+                 table_version: int = -1,
+                 latency: Optional[Dict[str, float]] = None,
+                 trace_id: Optional[str] = None):
+        self.columns = dict(columns)
+        if status is None:
+            status = np.zeros((0,), np.int8)
+        self.status = np.asarray(status, np.int8)
+        self.deployment = deployment
+        self.version = version
+        self.table_version = table_version
+        self.latency = dict(latency) if latency else {}
+        self.trace_id = trace_id
+
+    # ---------------------------------------------------- Mapping protocol
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.columns[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.columns)
+
+    def __len__(self) -> int:
+        return len(self.columns)
+
+    # ------------------------------------------------------------- helpers
+    def to_dict(self) -> Dict[str, np.ndarray]:
+        """Plain dict of the feature columns (metadata dropped)."""
+        return dict(self.columns)
+
+    @property
+    def all_ok(self) -> bool:
+        return bool((self.status == STATUS_OK).all())
+
+    @property
+    def n_unknown(self) -> int:
+        return int((self.status == STATUS_UNKNOWN_KEY).sum())
+
+    def row(self, i: int) -> "FeatureFrame":
+        """Single-request view (scalar columns), keeping the metadata —
+        how the batcher splits one engine batch into per-caller results."""
+        return FeatureFrame(
+            {n: v[i] for n, v in self.columns.items()},
+            status=self.status[i:i + 1] if self.status.size else None,
+            deployment=self.deployment, version=self.version,
+            table_version=self.table_version, latency=self.latency,
+            trace_id=self.trace_id)
+
+    def __repr__(self) -> str:
+        return (f"FeatureFrame({sorted(self.columns)}, "
+                f"deployment={self.deployment!r} v{self.version}, "
+                f"n={self.status.size}, unknown={self.n_unknown})")

@@ -5,6 +5,11 @@ a :class:`FeatureSet` couples a table schema with a feature query. The SAME
 optimized plan is executed by the offline batch path (training data) and the
 online request path (serving), which is what eliminates training–serving
 skew. ``tests/test_consistency.py`` asserts bit-equality between the two.
+
+Feature sets are **versioned**: every redeploy of a name registers the next
+version, all versions stay addressable (``get(name, version=...)``), and the
+``active`` pointer tracks which version the engine is currently serving —
+it moves on hot-swap, promote, and rollback (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -37,6 +42,11 @@ class FeatureRegistry:
 
     schemas: Dict[str, TableSchema] = field(default_factory=dict)
     feature_sets: Dict[str, FeatureSet] = field(default_factory=dict)
+    # name -> version -> FeatureSet (full history; feature_sets keeps the
+    # latest registered for backwards compatibility)
+    versions: Dict[str, Dict[int, FeatureSet]] = field(default_factory=dict)
+    # name -> the version currently serving (set by the engine on swap)
+    active: Dict[str, int] = field(default_factory=dict)
 
     def register_schema(self, schema: TableSchema) -> None:
         if schema.name in self.schemas:
@@ -54,8 +64,33 @@ class FeatureRegistry:
                 f"feature set {fs.name!r} v{fs.version} does not supersede "
                 f"registered v{prev.version}")
         self.feature_sets[fs.name] = fs
+        self.versions.setdefault(fs.name, {})[fs.version] = fs
 
-    def get(self, name: str) -> FeatureSet:
+    def set_active(self, name: str, version: int) -> None:
+        """Point ``name`` at the serving version (swap/promote/rollback)."""
+        if version not in self.versions.get(name, {}):
+            raise KeyError(f"feature set {name!r} has no version {version}; "
+                           f"known: {sorted(self.versions.get(name, {}))}")
+        self.active[name] = version
+
+    def latest_version(self, name: str) -> int:
+        vs = self.versions.get(name)
+        if not vs:
+            raise KeyError(f"unknown feature set {name!r}; registered: "
+                           f"{sorted(self.feature_sets)}")
+        return max(vs)
+
+    def get(self, name: str, version: Optional[int] = None) -> FeatureSet:
+        """The active version by default; any version by number."""
+        if version is not None:
+            try:
+                return self.versions[name][version]
+            except KeyError:
+                raise KeyError(
+                    f"feature set {name!r} has no version {version}; "
+                    f"known: {sorted(self.versions.get(name, {}))}") from None
+        if name in self.active:
+            return self.versions[name][self.active[name]]
         try:
             return self.feature_sets[name]
         except KeyError:

@@ -12,16 +12,27 @@ forms batches by a deadline/size policy:
 Admission control: a bounded queue — when the system is saturated the
 caller sees backpressure instead of unbounded latency (the "balancing
 CPU and memory under high concurrency" knob from the paper, adapted).
+
+Requests may carry a :class:`~repro.core.results.RequestContext`. Its
+``version_pin`` is the **batch grouping key**: one batch never mixes
+requests pinned to different deployment versions, so a batch is always
+served end-to-end by a single version even while a hot-swap redeploy is
+in flight. Requests whose context deadline has already passed are
+expired in the queue (``DeadlineExceeded``) instead of occupying batch
+slots.
 """
 from __future__ import annotations
 
 import collections
+import inspect
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.core.results import DeadlineExceeded, RequestContext
 
 __all__ = ["BatcherConfig", "DynamicBatcher", "Request"]
 
@@ -39,12 +50,13 @@ class Request:
     key: Any
     ts: float
     payload: Optional[np.ndarray] = None
+    ctx: Optional[RequestContext] = None
     enqueued_at: float = field(default_factory=time.perf_counter)
     done: threading.Event = field(default_factory=threading.Event)
-    result: Optional[Dict[str, np.ndarray]] = None
+    result: Optional[Any] = None
     error: Optional[Exception] = None
 
-    def wait(self, timeout: Optional[float] = None) -> Dict[str, np.ndarray]:
+    def wait(self, timeout: Optional[float] = None) -> Any:
         if not self.done.wait(timeout):
             raise TimeoutError("request timed out")
         if self.error is not None:
@@ -52,22 +64,35 @@ class Request:
         assert self.result is not None
         return self.result
 
+    @property
+    def group(self):
+        """Batch grouping key: requests in one batch must share it."""
+        return None if self.ctx is None else self.ctx.version_pin
+
 
 class DynamicBatcher:
     """Groups requests and dispatches them to ``serve_batch``.
 
-    ``serve_batch(keys, ts, payloads) -> {name: (B,) np.ndarray}``.
+    ``serve_batch(keys, ts, payloads) -> {name: (B,) np.ndarray}``; a
+    serve function that also accepts ``ctx=`` receives the batch's shared
+    :class:`RequestContext` (version pin) and may return a
+    ``FeatureFrame`` — its ``row(i)`` split keeps per-request metadata.
     """
 
     def __init__(self, serve_batch: Callable, cfg: BatcherConfig = BatcherConfig()):
         self.serve_batch = serve_batch
         self.cfg = cfg
+        try:
+            self._wants_ctx = "ctx" in inspect.signature(
+                serve_batch).parameters
+        except (TypeError, ValueError):
+            self._wants_ctx = False
         self._q: Deque[Request] = collections.deque()
         self._lock = threading.Lock()
         self._new = threading.Condition(self._lock)
         self._stop = False
         self.stats = {"batches": 0, "requests": 0, "rejected": 0,
-                      "sum_batch": 0, "max_batch_seen": 0}
+                      "expired": 0, "sum_batch": 0, "max_batch_seen": 0}
         self._threads = [
             threading.Thread(target=self._dispatch_loop, daemon=True)
             for _ in range(cfg.num_dispatchers)]
@@ -76,8 +101,12 @@ class DynamicBatcher:
 
     # ---------------------------------------------------------------- client
     def submit(self, key, ts: float,
-               payload: Optional[np.ndarray] = None) -> Request:
-        r = Request(key=key, ts=ts, payload=payload)
+               payload: Optional[np.ndarray] = None,
+               ctx: Optional[RequestContext] = None) -> Request:
+        if ctx is not None and ctx.expired:
+            self.stats["expired"] += 1
+            raise DeadlineExceeded("deadline expired before enqueue")
+        r = Request(key=key, ts=ts, payload=payload, ctx=ctx)
         with self._lock:
             if len(self._q) >= self.cfg.max_queue:
                 self.stats["rejected"] += 1
@@ -88,8 +117,9 @@ class DynamicBatcher:
 
     def __call__(self, key, ts: float,
                  payload: Optional[np.ndarray] = None,
-                 timeout: float = 5.0) -> Dict[str, np.ndarray]:
-        return self.submit(key, ts, payload).wait(timeout)
+                 timeout: float = 5.0,
+                 ctx: Optional[RequestContext] = None) -> Any:
+        return self.submit(key, ts, payload, ctx=ctx).wait(timeout)
 
     # -------------------------------------------------------------- dispatch
     def _take_batch(self) -> List[Request]:
@@ -106,9 +136,29 @@ class DynamicBatcher:
             while (len(self._q) < cfg.max_batch
                    and time.perf_counter() < deadline and not self._stop):
                 self._new.wait(max(deadline - time.perf_counter(), 0.0001))
-            out = []
+            if not self._q:
+                # another dispatcher drained the queue while we waited
+                # (the wait releases the lock)
+                return []
+            # one group per batch: take the head's group, skip (and keep
+            # queued, in order) requests pinned to a different version
+            group = self._q[0].group
+            out: List[Request] = []
+            kept: List[Request] = []
             while self._q and len(out) < cfg.max_batch:
-                out.append(self._q.popleft())
+                r = self._q.popleft()
+                if r.ctx is not None and r.ctx.expired:
+                    r.error = DeadlineExceeded(
+                        "deadline expired while queued")
+                    r.done.set()
+                    self.stats["expired"] += 1
+                    continue
+                if r.group == group:
+                    out.append(r)
+                else:
+                    kept.append(r)
+            for r in reversed(kept):
+                self._q.appendleft(r)
             return out
 
     def _dispatch_loop(self) -> None:
@@ -131,10 +181,21 @@ class DynamicBatcher:
                 payloads = np.stack([r.payload if r.payload is not None
                                      else zero for r in batch])
             try:
-                res = self.serve_batch(keys, ts, payloads)
-                for i, r in enumerate(batch):
-                    r.result = {k: v[i] for k, v in res.items()}
-                    r.done.set()
+                if self._wants_ctx:
+                    pin = batch[0].group
+                    bctx = (RequestContext(version_pin=pin)
+                            if pin is not None else None)
+                    res = self.serve_batch(keys, ts, payloads, ctx=bctx)
+                else:
+                    res = self.serve_batch(keys, ts, payloads)
+                if hasattr(res, "row"):
+                    for i, r in enumerate(batch):
+                        r.result = res.row(i)
+                        r.done.set()
+                else:
+                    for i, r in enumerate(batch):
+                        r.result = {k: v[i] for k, v in res.items()}
+                        r.done.set()
             except Exception as e:
                 for r in batch:
                     r.error = e

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import Engine
+from repro.core.engine import DeploymentHandle, Engine
+from repro.core.results import FeatureFrame, RequestContext
 from repro.serving.batcher import BatcherConfig, DynamicBatcher
 
 __all__ = ["ServerConfig", "FeatureServer", "ModelServer", "hedged"]
@@ -35,10 +36,21 @@ __all__ = ["ServerConfig", "FeatureServer", "ModelServer", "hedged"]
 class ServerConfig:
     batcher: BatcherConfig = BatcherConfig()
     hedge_after_s: Optional[float] = None     # straggler re-dispatch
+    # shape buckets to pre-compile at server construction (off the
+    # serving path); () = first requests pay the compile, as the paper
+    # charges it. Tight SLOs should warm 1..batcher.max_batch.
+    warm_buckets: tuple = ()
 
 
 class FeatureServer:
-    """Online feature serving over a deployed engine query.
+    """Online feature serving session over a deployed engine query.
+
+    Each dispatched batch resolves the deployment handle ONCE — together
+    with the batcher's version-pin grouping this guarantees a batch is
+    served end-to-end by a single deployment version, even while a
+    hot-swap redeploy publishes a new one mid-flight. A request may pin a
+    version explicitly via ``RequestContext(version_pin=...)`` (retired
+    versions keep serving for pinned traffic, e.g. shadow replay).
 
     When the deployment's table has a streaming pipeline attached (see
     ``Engine.attach_stream``), the server also exposes the **write path**:
@@ -51,25 +63,49 @@ class FeatureServer:
         self.engine = engine
         self.deployment = deployment
         self.cfg = cfg
+        self._closed = False
 
-        def serve_batch(keys, ts, payloads):
-            return self.engine.request(self.deployment, keys, ts, payloads)
+        def serve_batch(keys, ts, payloads, ctx=None):
+            handle = self._resolve(ctx)
+            return handle.request(keys, ts, payloads, ctx=ctx)
 
+        if cfg.warm_buckets and engine.cache.enabled:
+            engine.handle(deployment).warm(cfg.warm_buckets)
         self.batcher = DynamicBatcher(serve_batch, cfg.batcher)
+
+    def _resolve(self, ctx: Optional[RequestContext]) -> DeploymentHandle:
+        """One handle per batch — the no-version-mixing pivot."""
+        if ctx is not None and ctx.version_pin is not None:
+            return self.engine.handle(self.deployment,
+                                      version=ctx.version_pin)
+        return self.engine.handle(self.deployment)
+
+    @property
+    def handle(self) -> DeploymentHandle:
+        """The currently-live deployment handle."""
+        return self.engine.handle(self.deployment)
 
     @property
     def pipeline(self):
         """The table's attached IngestPipeline, or None."""
-        table = self.engine.deployments[self.deployment].table
+        table = self.engine.handle(self.deployment).table
         return self.engine.streams.get(table.schema.name)
 
     def request(self, key, ts: float,
                 row: Optional[np.ndarray] = None,
-                timeout: float = 5.0) -> Dict[str, np.ndarray]:
-        call = lambda: self.batcher(key, ts, row, timeout=timeout)
+                timeout: float = 30.0,
+                ctx: Optional[RequestContext] = None) -> FeatureFrame:
+        # timeout is the client's give-up bound (generous: a cold bucket
+        # compile on a loaded box can take seconds); per-request serving
+        # deadlines belong in ctx, which the batcher enforces.
+        call = lambda: self.batcher(key, ts, row, timeout=timeout, ctx=ctx)
         if self.cfg.hedge_after_s is not None:
-            return hedged(call, self.cfg.hedge_after_s)
-        return call()
+            res = hedged(call, self.cfg.hedge_after_s)
+        else:
+            res = call()
+        if ctx is not None and isinstance(res, FeatureFrame):
+            res.trace_id = ctx.trace_id
+        return res
 
     def ingest(self, key, ts: float, row: np.ndarray) -> bool:
         """Non-blocking event ingestion (requires an attached stream).
@@ -82,7 +118,19 @@ class FeatureServer:
         return pipe.push(key, ts, row)
 
     def close(self) -> None:
+        """Idempotent: benchmarks/tests may close via context manager AND
+        explicitly without leaking or double-joining dispatcher threads."""
+        if self._closed:
+            return
+        self._closed = True
         self.batcher.close()
+
+    def __enter__(self) -> "FeatureServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
 
 
 class ModelServer:

@@ -220,9 +220,20 @@ class IngestPipeline:
         return out
 
     def close(self, *, drain: bool = True) -> None:
+        """Idempotent: a second close (e.g. context-manager exit after an
+        explicit close, or Engine.close after FeatureServer teardown) is a
+        no-op instead of re-draining a stopped pipeline."""
         with self._work:
+            already = self._stop
             self._stop = True
             self._work.notify_all()
         self._thread.join(timeout=5.0)
-        if drain:
+        if drain and not already:
             self._flush_once(flush_all=True)
+
+    def __enter__(self) -> "IngestPipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False

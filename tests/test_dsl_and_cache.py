@@ -165,3 +165,101 @@ def test_plan_cache_disabled_always_compiles():
     cache.get_or_compile("k", make)
     cache.get_or_compile("k", make)
     assert n["c"] == 2
+
+
+# ---------------------------------------------------------------------------
+# parser edge cases (ISSUE 2 satellites) + plan-cache invalidation/tags
+# ---------------------------------------------------------------------------
+
+def test_parse_mixed_rows_and_range_windows():
+    q = dsl.parse_sql("""
+        SELECT SUM(x) OVER wr AS s, AVG(x) OVER wt AS a FROM t
+        WINDOW wr AS (PARTITION BY k ORDER BY ts
+                      ROWS BETWEEN 10 PRECEDING AND CURRENT ROW),
+               wt AS (PARTITION BY k ORDER BY ts
+                      RANGE BETWEEN 60 PRECEDING AND CURRENT ROW)""")
+    specs = dict(q.windows)
+    assert specs["wr"].rows_preceding == 10
+    assert specs["wr"].range_preceding is None
+    assert specs["wt"].range_preceding == 60.0
+    assert specs["wt"].rows_preceding is None
+    q.to_logical()                                 # validates cleanly
+
+
+def test_parse_predict_expression_arguments():
+    q = dsl.parse_sql("""
+        SELECT SUM(x) OVER w AS s,
+               PREDICT(m, s + 1, COUNT(x) OVER w * 2, k) AS p
+        FROM t
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    assert q.predict is not None and q.predict.model == "m"
+    names = [n for n, _ in q.outputs]
+    # expression and raw-column args materialise as hidden outputs
+    assert all(f.startswith("__pred_arg") for f in q.predict.features)
+    assert set(q.predict.features) <= set(names)
+    # the raw request column `k` became Col-valued hidden output
+    assert dict(q.outputs)[q.predict.features[2]] == E.Col("k")
+    # the alias `s` was substituted by its defining aggregate
+    synth = dict(q.outputs)[q.predict.features[0]]
+    assert any(a.func == E.AggFunc.SUM for a in E.collect_aggs(synth))
+    q.to_logical()
+
+
+def test_where_windowed_alias_rejected_clearly():
+    q = dsl.parse_sql("""
+        SELECT SUM(x) OVER w AS s FROM t
+        WHERE s > 3
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    with pytest.raises(ValueError, match="SELECT alias"):
+        q.to_logical()
+    # plain derived aliases are just as out-of-scope in WHERE
+    qd = dsl.parse_sql("""
+        SELECT x * 2 AS d, SUM(x) OVER w AS s FROM t
+        WHERE d > 0
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    with pytest.raises(ValueError, match="SELECT alias"):
+        qd.to_logical()
+    # identity aliases still name the event column (legal)
+    qi = dsl.parse_sql("""
+        SELECT x, COUNT(x) OVER w AS c FROM t
+        WHERE x > 0
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    qi.to_logical()
+    q2 = dsl.parse_sql("""
+        SELECT COUNT(x) OVER w AS c FROM t
+        WHERE SUM(x) OVER w > 3
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    with pytest.raises(ValueError, match="window aggregates"):
+        q2.to_logical()
+
+
+def test_undefined_over_window_error_names_alternatives():
+    q = dsl.parse_sql("""
+        SELECT SUM(x) OVER nope AS s FROM t
+        WINDOW w AS (PARTITION BY k ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    with pytest.raises(ValueError,
+                       match=r"undefined window 'nope'.*'w'"):
+        q.to_logical()
+
+
+def test_plan_cache_invalidate_and_tag_stats():
+    pc = PlanCache(max_entries=8)
+    for fp, b in [("planA", 1), ("planA", 2), ("planB", 1)]:
+        pc.get_or_compile((fp, b), lambda: (lambda: None), tag=f"d@{fp}")
+    pc.get_or_compile(("planA", 1), lambda: (lambda: None),
+                      tag="d@planA")               # hit
+    assert pc.tag_stats("d@planA").misses == 2
+    assert pc.tag_stats("d@planA").hits == 1
+    assert pc.invalidate("planA") == 2
+    assert len(pc) == 1
+    assert pc.stats.invalidations == 2
+    assert pc.invalidate("nope") == 0
+    pc.record_hit("d@planB")                       # handle-owned hit
+    assert pc.tag_stats("d@planB").hits == 1
+    assert pc.stats.hits == 2

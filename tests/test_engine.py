@@ -220,3 +220,178 @@ def test_baseline_profiles_agree_on_results():
             np.testing.assert_allclose(
                 out[name], base[name], rtol=1e-3, atol=1e-3,
                 err_msg=f"{profile}:{name}")
+
+
+# ---------------------------------------------------------------------------
+# versioned deployment handles: hot swap, rollback, canary, structured results
+# ---------------------------------------------------------------------------
+
+SQL_SHORT = SQL.replace("50 PRECEDING", "5 PRECEDING")
+
+
+def test_redeploy_hot_swap_prewarmed_and_rollback():
+    import threading
+    eng, (keys, ts, rows) = make_engine()
+    h1 = eng.deploy("f", SQL)
+    assert h1.version == 1 and h1.live
+    rk, rt = keys[:8].tolist(), (ts[:8] + 2000).tolist()
+    v1_out = eng.request("f", rk, rt)
+    assert v1_out.version == 1 and v1_out.all_ok
+
+    h2 = eng.deploy("f", SQL_SHORT)
+    assert h2.version == 2 and h2.live and h1.state == "retired"
+    assert eng.registry.get("f").version == 2
+    # retired version's executables were invalidated (different plan)
+    assert eng.cache.stats.invalidations > 0
+    # all buckets v1 served were pre-warmed before the swap: requesting
+    # the same batch shape on v2 must not compile
+    misses = eng.cache.stats.misses
+    v2_out = eng.request("f", rk, rt)
+    assert eng.cache.stats.misses == misses
+    assert v2_out.version == 2
+    assert not np.allclose(v2_out["s"], v1_out["s"])   # 5- vs 50-row window
+
+    # rollback is swap-only: retired handles keep their executables
+    prev = eng.rollback("f")
+    assert prev is h1 and prev.live and h2.state == "retired"
+    assert eng.registry.get("f").version == 1
+    v1_again = eng.request("f", rk, rt)
+    assert eng.cache.stats.misses == misses
+    assert v1_again.version == 1
+    np.testing.assert_allclose(v1_again["s"], v1_out["s"], rtol=1e-6)
+    # the displaced version joined the history: rollback toggles back
+    assert eng.rollback("f") is h2
+    assert eng.request("f", rk, rt).version == 2
+    with pytest.raises(ValueError, match="no prior version"):
+        eng.rollback("nope")
+    eng.close()
+
+
+def test_redeploy_under_concurrent_traffic_no_mix():
+    import threading
+    import time as _time
+    eng, (keys, ts, _) = make_engine()
+    eng.deploy("f", SQL)
+    rk, rt = keys[:4].tolist(), (ts[:4] + 2000).tolist()
+    eng.request("f", rk, rt)                       # compile bucket 4
+    stop = threading.Event()
+    frames, errors = [], []
+
+    def hammer():
+        i = 0
+        while not stop.is_set():
+            i += 1
+            try:
+                frames.append(eng.request("f", rk, [t + i for t in rt]))
+            except Exception as e:                 # pragma: no cover
+                errors.append(e)
+                return
+
+    th = threading.Thread(target=hammer)
+    th.start()
+    try:
+        eng.deploy("f", SQL_SHORT)                 # hot swap under load
+        _time.sleep(0.2)
+    finally:
+        stop.set()
+        th.join(10.0)
+    assert not errors
+    versions = {f.version for f in frames}
+    assert versions <= {1, 2} and 2 in versions
+    for f in frames:                               # every response coherent
+        assert set(f.keys()) == {"s", "a", "sd", "c", "mx"}
+        assert f.all_ok
+    eng.close()
+
+
+def test_canary_deploy_compare_promote_and_abort():
+    eng, (keys, ts, _) = make_engine()
+    eng.deploy("f", SQL)
+    rk, rt = keys[:4].tolist(), (ts[:4] + 2000).tolist()
+    eng.request("f", rk, rt)
+    cand = eng.deploy("f", SQL, canary=0.5)        # identical query
+    assert cand.state == "canary" and eng.handle("f").version == 1
+    vers = [eng.request("f", rk, rt).version for _ in range(6)]
+    assert set(vers) == {1, 2}                     # ~half routed to canary
+    assert cand.metrics.canary_batches >= 2
+    assert cand.metrics.canary_max_abs_diff < 1e-4  # same query, same answers
+    live = eng.promote("f")
+    assert live is cand and live.live
+    assert eng.request("f", rk, rt).version == 2
+    with pytest.raises(ValueError, match="no active canary"):
+        eng.promote("f")
+    # aborting a canary keeps the incumbent live
+    c2 = eng.deploy("f", SQL_SHORT, canary=0.25)
+    back = eng.rollback("f")
+    assert back.version == 2 and c2.state == "retired"
+    assert eng.request("f", rk, rt).version == 2
+    # a redeploy over an active canary retires (not orphans) the canary:
+    # unpinnable, pruned from the version map, incumbent's traffic intact
+    c3 = eng.deploy("f", SQL_SHORT, canary=0.25)
+    h4 = eng.deploy("f", SQL)
+    assert c3.state == "retired"
+    assert c3.version not in eng._versions["f"]
+    assert h4.live and eng.request("f", rk, rt).version == h4.version
+    # and canary on a fresh name is refused, not silently ignored
+    with pytest.raises(ValueError, match="requires an existing live"):
+        eng.deploy("g_fresh", SQL, canary=0.5)
+    eng.close()
+
+
+def test_unknown_key_masked_with_status():
+    from repro.core.results import STATUS_OK, STATUS_UNKNOWN_KEY
+    eng, (keys, ts, rows) = make_engine()
+    eng.deploy("f", SQL)
+    rk = [int(keys[0]), 9999]                      # second key never ingested
+    rt = [float(ts.max()) + 10.0] * 2
+    out = eng.request("f", rk, rt)
+    assert list(out.status) == [STATUS_OK, STATUS_UNKNOWN_KEY]
+    assert out.n_unknown == 1 and not out.all_ok
+    for n in ("s", "a", "sd", "c", "mx"):
+        assert out[n][1] == 0.0                    # masked, not garbage
+    want = brute_force(keys, ts, rows, np.asarray(rk[:1]),
+                       np.asarray(rt[:1], np.float32))
+    np.testing.assert_allclose(out["s"][:1], want["s"], rtol=1e-3, atol=1e-3)
+    assert eng.handle("f").metrics.unknown_keys == 1
+    eng.close()
+
+
+def test_engine_context_manager_and_idempotent_close():
+    with Engine(OptFlags(parallel_workers=2)) as eng:
+        assert eng._pool is not None
+        eng.close()
+        eng.close()                                # second close is a no-op
+        assert eng._pool is None
+
+
+def test_request_async_matches_sync():
+    eng, (keys, ts, _) = make_engine()
+    h = eng.deploy("f", SQL)
+    rk, rt = keys[:4].tolist(), (ts[:4] + 2000).tolist()
+    sync = h.request(rk, rt)
+    out = h.request_async(rk, rt).result(timeout=60)
+    assert out.version == sync.version
+    np.testing.assert_allclose(out["s"], sync["s"], rtol=1e-6)
+    eng.close()
+
+
+def test_predict_with_expression_arguments_end_to_end():
+    eng, (keys, ts, _) = make_engine()
+
+    def scorer(params, feats):
+        return jnp.asarray(feats) @ jnp.asarray(params)
+
+    eng.register_model("scorer", scorer,
+                       np.asarray([1.0, 0.5], np.float32))
+    q = """SELECT SUM(amount) OVER w AS fs,
+                  PREDICT(scorer, fs + 1, COUNT(amount) OVER w * 2) AS score
+           FROM events
+           WINDOW w AS (PARTITION BY user ORDER BY ts
+                        ROWS BETWEEN 50 PRECEDING AND CURRENT ROW)"""
+    eng.deploy("mlx", q)
+    got = eng.request("mlx", keys[:5].tolist(), (ts[:5] + 2000).tolist())
+    eng.deploy("plainx", SQL)
+    feats = eng.request("plainx", keys[:5].tolist(), (ts[:5] + 2000).tolist())
+    want = (feats["s"] + 1.0) * 1.0 + 0.5 * (feats["c"] * 2.0)
+    np.testing.assert_allclose(got["score"], want, rtol=1e-4, atol=1e-4)
+    eng.close()

@@ -155,3 +155,131 @@ def test_hedged_dispatch_takes_fast_attempt():
 
     v = hedged(call, after_s=0.05)
     assert v == 2                       # hedge won
+
+
+# ---------------------------------------------------------------------------
+# request contexts: version-pin batch grouping, deadlines, serving sessions
+# ---------------------------------------------------------------------------
+
+from repro.core.results import (DeadlineExceeded, FeatureFrame,
+                                RequestContext)
+
+
+def test_batcher_groups_by_version_pin():
+    """One batch never mixes requests pinned to different versions."""
+    batches = []
+
+    def serve(keys, ts, payloads, ctx=None):
+        batches.append((None if ctx is None else ctx.version_pin,
+                        list(keys)))
+        return {"k": np.asarray(keys, np.float32)}
+
+    b = DynamicBatcher(serve, BatcherConfig(max_batch=16, max_delay_s=0.02))
+    reqs = [b.submit(pin, float(i), ctx=RequestContext(version_pin=pin))
+            for i, pin in enumerate([1, 2] * 8)]
+    for r in reqs:
+        r.wait(5.0)
+    b.close()
+    assert len(batches) >= 2
+    for pin, ks in batches:              # key == its pin, by construction
+        assert pin is not None and all(k == pin for k in ks)
+
+
+def test_batcher_expires_deadlined_requests():
+    ev = threading.Event()
+
+    def slow(keys, ts, payloads):
+        ev.wait(1.0)
+        return echo_serve(keys, ts, payloads)
+
+    b = DynamicBatcher(slow, BatcherConfig(max_batch=2, max_delay_s=0.001))
+    r1 = b.submit(1, 1.0)                       # occupies the dispatcher
+    time.sleep(0.05)
+    r2 = b.submit(2, 2.0, ctx=RequestContext.with_timeout(0.01))
+    time.sleep(0.1)                             # r2's deadline passes queued
+    ev.set()
+    assert r1.wait(5.0)["k"] == 1.0
+    with pytest.raises(DeadlineExceeded):
+        r2.wait(5.0)
+    assert b.stats["expired"] == 1
+    with pytest.raises(DeadlineExceeded):       # pre-expired: rejected at submit
+        b.submit(3, 3.0, ctx=RequestContext(deadline=0.0))
+    b.close()
+
+
+def _small_engine():
+    from repro.core.engine import Engine
+    from repro.core.optimizer import OptFlags
+    from repro.featurestore.table import TableSchema
+    eng = Engine(OptFlags())
+    schema = TableSchema("events", key_col="user", ts_col="ts",
+                         value_cols=("amount",))
+    eng.create_table(schema, max_keys=16, capacity=64, bucket_size=8)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 8, 200)
+    ts = np.sort(rng.uniform(0, 1000, 200)).astype(np.float32)
+    rows = rng.normal(size=(200, 1)).astype(np.float32)
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    return eng, keys, ts
+
+
+SQL_A = """SELECT SUM(amount) OVER w AS s, COUNT(amount) OVER w AS c
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)"""
+SQL_B = SQL_A.replace("20 PRECEDING", "5 PRECEDING")
+
+
+def test_feature_server_swap_under_load_and_version_pin():
+    eng, keys, ts = _small_engine()
+    eng.deploy("q", SQL_A)
+    # pre-warm every bucket the batcher can form: v1 compiles here, and
+    # the redeploy warms the same observed buckets before its swap — so
+    # no compile ever lands between the clients and their deadline
+    cfg = ServerConfig(BatcherConfig(max_batch=8, max_delay_s=0.002),
+                       warm_buckets=(1, 2, 4, 8))
+    with FeatureServer(eng, "q", cfg) as srv:
+        base = srv.request(int(keys[0]), float(ts.max()) + 1, timeout=30.0)
+        assert isinstance(base, FeatureFrame) and base.version == 1
+        stop = threading.Event()
+        frames, errs = [], []
+
+        def client(seed):
+            i = seed
+            while not stop.is_set():
+                i += 1
+                try:
+                    frames.append(srv.request(
+                        int(keys[i % 8]), float(ts.max()) + 1 + i,
+                        timeout=30.0))
+                except Exception as e:            # pragma: no cover
+                    errs.append(e)
+                    return
+
+        threads = [threading.Thread(target=client, args=(s,))
+                   for s in (0, 1000, 2000)]
+        for t in threads:
+            t.start()
+        eng.deploy("q", SQL_B)                    # hot swap under live load
+        deadline = time.time() + 30.0             # wait for v2 responses
+        while time.time() < deadline:
+            if any(f.version == 2 for f in list(frames)):
+                break
+            time.sleep(0.02)
+        stop.set()
+        for t in threads:
+            t.join(10.0)
+        assert not errs
+        versions = {f.version for f in frames}
+        assert versions <= {1, 2} and 2 in versions
+        for f in frames:                          # responses never mix schema
+            assert set(f.keys()) == {"s", "c"} and f.all_ok
+
+        # pinning routes to the retired version (shadow replay)
+        pinned = srv.request(int(keys[0]), float(ts.max()) + 500,
+                             timeout=30.0,
+                             ctx=RequestContext(version_pin=1,
+                                                trace_id="t-123"))
+        assert pinned.version == 1 and pinned.trace_id == "t-123"
+    srv.close()                                   # idempotent second close
+    eng.close()

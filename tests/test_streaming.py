@@ -370,3 +370,42 @@ def test_feature_server_ingest_and_request():
     assert float(out["c"]) >= 1.0
     srv.close()
     eng.close()
+
+
+def test_handle_serves_across_republish_during_swap():
+    """A hot-swap redeploy while the stream republishes the table: both
+    versions read consistent snapshots, requests never fail, and the
+    pipeline context-manager close is idempotent."""
+    eng = Engine(OptFlags())
+    _, pipe = eng.create_stream(schema3(), max_keys=8, capacity=64,
+                                bucket_size=8, lateness=0.0,
+                                flush_interval_s=0.001)
+    src = source(120, n_keys=4)
+    half = len(src.keys) // 2
+    with pipe:
+        pipe.push_batch(src.keys[:half].tolist(), src.ts[:half],
+                        src.rows[:half])
+        pipe.flush()
+        v_before = pipe.version
+        h1 = eng.deploy("q", SQL)
+        rk = [src.keys[0]]
+        rt = [float(src.ts.max()) + 1.0]
+        f1 = h1.request(rk, rt)
+        assert f1.version == 1 and f1.table_version >= v_before
+
+        # ingest the second half (republishes) while redeploying
+        pipe.push_batch(src.keys[half:].tolist(), src.ts[half:],
+                        src.rows[half:])
+        h2 = eng.deploy("q", SQL.replace("20 PRECEDING", "5 PRECEDING"))
+        pipe.flush()
+        assert pipe.version > v_before             # table republished
+        f2 = h2.request(rk, rt)
+        assert f2.version == 2 and f2.table_version >= pipe.version
+        # the retired handle still serves (pinned/shadow traffic) and
+        # reads the CURRENT snapshot, not a stale one
+        f1b = h1.request(rk, rt)
+        assert f1b.version == 1
+        assert f1b.table_version == f2.table_version
+        assert float(f1b["c"][0]) >= float(f1["c"][0])
+    pipe.close()                                   # idempotent second close
+    eng.close()
