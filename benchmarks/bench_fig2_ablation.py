@@ -23,7 +23,22 @@ AXES = {
     "preagg_materialization": dict(preagg=False),      # O3 (caching/mat.)
     "parallel_vectorized": dict(vectorized=False),     # O4
     "resource_assume_latest": dict(assume_latest=False),  # O5 (mgmt fastpath)
+    "window_fusion": dict(fuse_windows=False),         # O1b (multi-window
+                                                       # shared scan)
 }
+
+# FEATURE_SQL keeps only ONE window on the raw-scan path, so ablating
+# fusion there is a no-op whose delta would be pure machine noise — the
+# fusion axis measures its own leave-one-out PAIR on a multi-window
+# workload instead (same SQL for baseline and ablated run).
+AXIS_SQL = {}
+
+
+def _axis_sql(name):
+    if name == "window_fusion" and name not in AXIS_SQL:
+        from benchmarks.bench_multiwindow import make_sql
+        AXIS_SQL[name] = make_sql(4)
+    return AXIS_SQL.get(name)
 
 # row-at-a-time is pathologically slow; use a smaller replay for it
 BUDGET = {"parallel_vectorized": (64, 3)}
@@ -37,11 +52,22 @@ def run(rep: Reporter) -> dict:
     rep.add("fig2/all_on", 1e6 / full["qps"], qps=round(full["qps"], 1))
 
     qps_without = {}
+    base_qps = {}               # per-axis all-on reference
     for name, overrides in AXES.items():
         flags = dataclasses.replace(base_flags, **overrides)
-        eng, data = build_engine(flags)
+        sql = _axis_sql(name)
         batch, nb = BUDGET.get(name, (256, 10))
-        r = replay(eng, data, batch=batch, n_batches=nb)
+        if sql is not None:
+            # paired baseline on the axis's own workload
+            eng, data_ax = build_engine(base_flags, sql=sql)
+            base_qps[name] = replay(eng, data_ax, batch=batch,
+                                    n_batches=nb)["qps"]
+            eng.close()
+            eng, data_ax = build_engine(flags, sql=sql)
+        else:
+            base_qps[name] = full["qps"]
+            eng, data_ax = build_engine(flags)
+        r = replay(eng, data_ax, batch=batch, n_batches=nb)
         qps_without[name] = r["qps"]
         eng.close()
         rep.add(f"fig2/without_{name}", 1e6 / r["qps"],
@@ -51,11 +77,11 @@ def run(rep: Reporter) -> dict:
     # linear share (paper's presentation) and log share (multiplicative
     # speedups made additive — fairer when one axis dominates).
     import math
-    deltas = {n: max(full["qps"] / q - 1.0, 0.0)
+    deltas = {n: max(base_qps[n] / q - 1.0, 0.0)
               for n, q in qps_without.items()}
     total = sum(deltas.values()) or 1.0
     contrib = {n: 100.0 * d / total for n, d in deltas.items()}
-    logs = {n: math.log(max(full["qps"] / q, 1.0))
+    logs = {n: math.log(max(base_qps[n] / q, 1.0))
             for n, q in qps_without.items()}
     log_total = sum(logs.values()) or 1.0
     log_contrib = {n: 100.0 * v / log_total for n, v in logs.items()}
@@ -63,11 +89,11 @@ def run(rep: Reporter) -> dict:
         rep.add(f"fig2/contribution_{n}", 0.0,
                 linear_pct=round(contrib[n], 1),
                 log_pct=round(log_contrib[n], 1),
-                speedup=round(full["qps"] / qps_without[n], 2))
+                speedup=round(base_qps[n] / qps_without[n], 2))
     rep.add("fig2/paper_bands", 0.0,
             query_plan="30-35%", caching_mat="15-25%",
             parallel="20-25%", resource="~10%",
             note="TPU substrate shifts weight to vectorization; "
                  "see EXPERIMENTS.md Paper-validation")
-    return {"full": full, "without": qps_without,
+    return {"full": full, "without": qps_without, "baselines": base_qps,
             "contribution": contrib, "log_contribution": log_contrib}

@@ -34,6 +34,7 @@ def run(rep: Reporter) -> dict:
             plan_ms_total=round(steady_plan_ms, 4),
             exec_ms_total=round(steady_exec_ms, 2),
             cache_hit_rate=round(d2["cache_hit_rate"], 3),
+            kernel_launches=d2["kernel_launches"],
             plan_share=round(steady_plan_ms
                              / max(steady_exec_ms + steady_plan_ms, 1e-9), 4))
     eng.close()

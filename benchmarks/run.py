@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
-                         "stream,hotswap")
+                         "stream,hotswap,multiwindow")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-size smoke mode (CI): same code paths, "
                          "~10x less work; numbers are tripwires only")
@@ -65,6 +65,9 @@ def main(argv=None) -> int:
     if want("hotswap"):
         from benchmarks import bench_hotswap as b8
         results["hotswap"] = b8.run(rep)
+    if want("multiwindow"):
+        from benchmarks import bench_multiwindow as b9
+        results["multiwindow"] = b9.run(rep)
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",

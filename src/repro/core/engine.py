@@ -5,8 +5,9 @@ Hot path anatomy (paper Eq. 3: ``L = L_parse + L_plan + L_exec``):
 
 * ``deploy``  — parse (L_parse) + optimize + lower (L_plan, amortised by the
   plan cache across deployments and batch buckets);
-* ``request`` — key lookup (host dict), pad to a shape bucket, run the
-  compiled executable (L_exec), unpad.
+* ``request`` — key lookup (device-resident hash directory for integer key
+  batches, host dict otherwise), pad to a shape bucket, run the compiled
+  executable (L_exec; per-request input buffers are donated), unpad.
 
 ``deploy`` returns a first-class :class:`DeploymentHandle` — a versioned
 serving endpoint that OWNS its compiled per-bucket executables. Redeploying
@@ -39,8 +40,9 @@ from repro.core.logical import LogicalPlan, Query
 from repro.core.optimizer import OptFlags, TableMeta, optimize
 from repro.core.physical import PhysicalPlan, compile_plan
 from repro.core.plan_cache import PlanCache, bucket_batch
-from repro.core.results import (STATUS_UNKNOWN_KEY, DeadlineExceeded,
-                                FeatureFrame, RequestContext)
+from repro.core.results import (STATUS_OK, STATUS_UNKNOWN_KEY,
+                                DeadlineExceeded, FeatureFrame,
+                                RequestContext)
 from repro.featurestore.registry import FeatureRegistry, FeatureSet
 from repro.featurestore.table import Table, TableSchema
 
@@ -57,6 +59,9 @@ class EngineStats:
     exec_s: float = 0.0
     n_requests: int = 0
     n_batches: int = 0
+    # window-kernel invocations dispatched (fused multi-window plans count
+    # ONE per batch for their whole plain-window set)
+    kernel_launches: int = 0
 
     def snapshot(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -148,7 +153,12 @@ class DeploymentHandle:
 
         def make() -> Callable:
             executor = self.phys.executor_for(assume_latest)
-            jit_fn = jax.jit(executor)
+            # the per-request f32 arrays (req ts, req row) are transient —
+            # donating them lets XLA reuse their buffers for outputs on
+            # every dispatch (table state/preagg are shared, NOT donated;
+            # the int32 key index can't alias f32 outputs, so donating it
+            # would only produce unusable-buffer warnings)
+            jit_fn = jax.jit(executor, donate_argnums=(3, 4))
             # Warm up: compile for this bucket's shapes now (charged to
             # L_plan, as the paper charges planning+JIT on first execution).
             V = len(table.schema.value_cols)
@@ -248,16 +258,26 @@ class DeploymentHandle:
         t_start = time.perf_counter()
         # unknown keys are masked (index 0, empty history) instead of
         # raising: the caller gets per-request status, the rest of the
-        # batch is unaffected
-        kidx = np.zeros(B, np.int32)
-        status = np.zeros(B, np.int8)
-        k2i = table.key_to_idx
-        for i, k in enumerate(keys):
-            idx = k2i.get(k)
-            if idx is None:
-                status[i] = STATUS_UNKNOWN_KEY
-            else:
-                kidx[i] = idx
+        # batch is unaffected. Integer key batches resolve through the
+        # device-resident directory (one jitted probe; kidx never leaves
+        # the device and the found-mask is materialised only AFTER the
+        # executor dispatch, so the probe round-trip overlaps feature
+        # computation); anything else falls back to the host dict loop.
+        karr = np.asarray(keys)
+        kd = table.keydir
+        found = None
+        if karr.dtype.kind in "iu" and kd.covers(karr):
+            kidx, found = kd.lookup(karr)
+        else:
+            kidx = np.zeros(B, np.int32)
+            status = np.zeros(B, np.int8)
+            k2i = table.key_to_idx
+            for i, k in enumerate(keys):
+                idx = k2i.get(k)
+                if idx is None:
+                    status[i] = STATUS_UNKNOWN_KEY
+                else:
+                    kidx[i] = idx
         ts_arr = np.asarray(ts, np.float32)
         V = len(table.schema.value_cols)
         row_arr = (np.asarray(rows, np.float32) if rows is not None
@@ -272,6 +292,9 @@ class DeploymentHandle:
             out = eng._request_rowwise(self, kidx, ts_arr, row_arr, snap)
         else:
             out = eng._request_batched(self, kidx, ts_arr, row_arr, snap=snap)
+        if found is not None:
+            status = np.where(np.asarray(found), STATUS_OK,
+                              STATUS_UNKNOWN_KEY).astype(np.int8)
         unknown = status == STATUS_UNKNOWN_KEY
         n_unknown = int(unknown.sum())
         if n_unknown:
@@ -627,6 +650,14 @@ class Engine:
             lines.append(f"  window {g.name}: impl={g.impl} "
                          f"cols={g.plain_cols} fields={g.fields} "
                          f"aggs={len(g.slots)}")
+        fused = [g.name for g in dep.phys.groups if g.impl == "fused"]
+        if fused:
+            lines.append(f"  fused scan: {len(fused)} window(s) in ONE "
+                         f"launch ({', '.join(fused)})")
+        elif not self.flags.fuse_windows:
+            lines.append("  fused scan: disabled (fuse_windows=False)")
+        lines.append(f"  kernel launches/batch: "
+                     f"{dep.phys.n_kernel_launches}")
         return "\n".join(lines)
 
     def _predict_params(self, dep: DeploymentHandle):
@@ -666,7 +697,9 @@ class Engine:
         fn = dep._compiled(bucket, record=record_bucket)
         pad = bucket - B
         if pad:
-            kidx = np.pad(kidx, (0, pad))
+            # kidx may already live on device (keydir fast path)
+            pad_fn = jnp.pad if isinstance(kidx, jax.Array) else np.pad
+            kidx = pad_fn(kidx, (0, pad))
             ts_arr = np.pad(ts_arr, (0, pad))
             row_arr = np.pad(row_arr, ((0, pad), (0, 0)))
         # One snapshot for the whole batch: a concurrent stream flush must
@@ -682,6 +715,7 @@ class Engine:
         self.stats.exec_s += time.perf_counter() - t0
         self.stats.n_requests += B
         self.stats.n_batches += 1
+        self.stats.kernel_launches += dep.phys.n_kernel_launches
         return {n: np.asarray(a)[:B] for n, a in out.items()}
 
     def _request_rowwise(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
@@ -772,6 +806,7 @@ class Engine:
         s = self.stats
         return {"parse_s": s.parse_s, "plan_s": s.plan_s, "exec_s": s.exec_s,
                 "n_requests": s.n_requests,
+                "kernel_launches": s.kernel_launches,
                 "cache_hit_rate": self.cache.stats.hit_rate}
 
     # ------------------------------------------------------------ lifecycle

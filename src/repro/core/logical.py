@@ -96,7 +96,8 @@ class LogicalPlan:
     project: WindowProject
     predict: Optional[Predict] = None
     # Physical hints attached by the optimizer (not part of SQL semantics).
-    # window name -> "naive" | "preagg"
+    # window name -> "naive" | "preagg" | "fused" (fused = member of the
+    # deployment's single-scan multi-window launch)
     window_impl: Tuple[Tuple[str, str], ...] = field(default=())
 
     def fingerprint(self) -> str:

@@ -13,6 +13,11 @@ attribute gains):
 6.  ``column_pruning``        — narrow the storage scan to referenced cols.
 7.  ``select_window_impl``    — cost-based choice of naive scan vs
                                 pre-aggregated execution per window (O3).
+8.  ``fuse_windows``          — windows left on the raw-scan path join ONE
+                                fused multi-window launch (shared ring
+                                scan); preagg windows whose columns the
+                                shared scan already reads are pulled in
+                                when that is marginally cheaper.
 
 Passes are pure ``LogicalPlan -> LogicalPlan`` rewrites; ``optimize``
 returns the new plan plus a human-readable rewrite log (surfaced by
@@ -28,7 +33,8 @@ from repro.core import expr as E
 from repro.core.logical import (Filter, LogicalPlan, Scan, WindowProject,
                                 validate)
 
-__all__ = ["OptFlags", "TableMeta", "optimize", "estimate_window_cost"]
+__all__ = ["OptFlags", "TableMeta", "optimize", "estimate_window_cost",
+           "pass_fuse_windows"]
 
 
 @dataclass(frozen=True)
@@ -51,6 +57,7 @@ class OptFlags:
     vectorized: bool = True       # engine: batched vs per-row execution
     assume_latest: bool = True    # engine: online fast path (req_ts is newest)
     parallel_workers: int = 1     # engine: worker-pool fan-out (paper Fig. 2)
+    fuse_windows: bool = True     # pass 8: single-scan multi-window launch
 
 
 # ---------------------------------------------------------------------------
@@ -244,12 +251,23 @@ def _tiered_arg(a: E.Agg) -> bool:
 
 def estimate_window_cost(spec: E.WindowSpec, meta: TableMeta, *,
                          impl: str, n_cols: int,
-                         needs_ts_scan: bool) -> float:
-    """Rough elements-touched cost model (f32 reads per request)."""
+                         needs_ts_scan: bool,
+                         shared_scan: int = 1) -> float:
+    """Rough elements-touched cost model (f32 reads per request).
+
+    ``shared_scan`` is the number of windows sharing one fused launch
+    (``impl in ("naive", "fused")``): the timestamp scan and the
+    window-bound math are computed once per launch, so their C-sized cost
+    amortises across the members — the shared-scan discount that makes
+    fusing a window into an existing launch cheaper than running it alone.
+    For a raw-scan impl, ``needs_ts_scan=False`` prices the *marginal*
+    member of an existing launch (the ts scan is already paid for).
+    """
     C, B = meta.capacity, meta.bucket_size
     nb = C // B
-    if impl == "naive":
-        return C * (n_cols + 1)                   # values + ts
+    if impl in ("naive", "fused"):
+        ts_cost = C / max(shared_scan, 1) if needs_ts_scan else 0.0
+        return C * n_cols + ts_cost                   # values + shared ts
     ts_cost = C if needs_ts_scan else 0
     return nb * (n_cols + 1) + 2 * B * n_cols + ts_cost
 
@@ -293,6 +311,95 @@ def pass_select_window_impl(plan: LogicalPlan, log: List[str], *,
     return plan.with_(window_impl=tuple(sorted(impl.items())))
 
 
+def _window_colset(aggs: List[E.Agg]) -> set:
+    """Distinct value columns a window's aggregates read from the scan.
+
+    Derived (non-Col) arguments count as virtual columns keyed by their
+    expression fingerprint — they occupy one stacked column in the fused
+    scan exactly like a storage column does."""
+    cols: set = set()
+    for a in aggs:
+        if isinstance(a.arg, E.Col):
+            cols.add(a.arg.name)
+        elif isinstance(a.arg, E.Lit):
+            continue                      # COUNT(*) reads no column
+        else:
+            cols.add(a.arg.fingerprint())
+    return cols
+
+
+def pass_fuse_windows(plan: LogicalPlan, log: List[str], *,
+                      meta: TableMeta,
+                      flags: OptFlags) -> LogicalPlan:
+    """Mark windows for single-scan fused execution (multi-window launch).
+
+    Every window the impl-selection pass left on the raw-scan path joins
+    ONE fused launch when there are at least two of them: the launch, the
+    ring-block read, the timestamp scan and the window-bound math are all
+    shared (the ``shared_scan`` discount in ``estimate_window_cost``).
+    Pre-aggregated windows are then pulled into the shared scan when the
+    marginal cost of adding their columns to the union undercuts their
+    tier lookup — e.g. a window over columns the scan already streams.
+    """
+    impl = dict(plan.window_impl)
+    naive = sorted(w for w, v in impl.items() if v == "naive")
+    if not flags.fuse_windows:
+        if len(naive) >= 2:
+            log.append(f"fuse_windows disabled: {len(naive)} raw-scan "
+                       f"window(s) execute per-group")
+        return plan
+    if len(naive) < 2:
+        return plan                       # nothing to share a scan with
+
+    by_window: Dict[str, List[E.Agg]] = {}
+    for _, e in plan.project.outputs:
+        for agg in E.collect_aggs(e):
+            by_window.setdefault(agg.window, []).append(agg)
+    specs = plan.project.window_map()
+    naive = [w for w in naive if by_window.get(w)]
+    if len(naive) < 2:
+        return plan
+
+    cost_sep = sum(
+        estimate_window_cost(specs[w], meta, impl="naive",
+                             n_cols=len(_window_colset(by_window[w])) or 1,
+                             needs_ts_scan=True)
+        for w in naive)
+    union: set = set()
+    for w in naive:
+        union |= _window_colset(by_window[w])
+        impl[w] = "fused"
+    fused_set = list(naive)
+    # whole-launch cost: union scan + ONE shared ts read
+    cost_fused = estimate_window_cost(
+        specs[naive[0]], meta, impl="fused",
+        n_cols=len(union) or 1, needs_ts_scan=True, shared_scan=1)
+
+    # pull preagg windows into the shared scan when marginally cheaper
+    for w in sorted(w for w, v in impl.items() if v == "preagg"):
+        cols = _window_colset(by_window.get(w, []))
+        # marginal member of an existing launch: only its NEW columns
+        # cost anything (the ts scan is already paid by the fused set)
+        marginal = estimate_window_cost(
+            specs[w], meta, impl="fused", n_cols=len(cols - union),
+            needs_ts_scan=False, shared_scan=len(fused_set) + 1)
+        needs_ts = (not specs[w].is_rows) or (not flags.assume_latest)
+        c_pre = estimate_window_cost(specs[w], meta, impl="preagg",
+                                     n_cols=len(cols) or 1,
+                                     needs_ts_scan=needs_ts)
+        if marginal < c_pre:
+            impl[w] = "fused"
+            union |= cols
+            fused_set.append(w)
+            log.append(f"fuse_windows: pulled {w!r} into the shared scan "
+                       f"(marginal={marginal:.0f} < preagg={c_pre:.0f})")
+
+    log.append(f"fuse_windows: {len(fused_set)} window(s) -> ONE fused "
+               f"launch ({', '.join(sorted(fused_set))}; "
+               f"cost separate={cost_sep:.0f} fused={cost_fused:.0f})")
+    return plan.with_(window_impl=tuple(sorted(impl.items())))
+
+
 # ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
@@ -310,5 +417,6 @@ def optimize(plan: LogicalPlan, meta: TableMeta,
     else:
         log.append("query_opt disabled: plan executed as written")
     plan = pass_select_window_impl(plan, log, meta=meta, flags=flags)
+    plan = pass_fuse_windows(plan, log, meta=meta, flags=flags)
     validate(plan)
     return plan, log

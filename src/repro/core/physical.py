@@ -1,9 +1,18 @@
 """Physical planning: LogicalPlan → pure JAX executable.
 
 The physical plan materialises every *unique* aggregate once (CSE), groups
-aggregates by window so each window runs ONE fused scan (window merge), and
-lowers each window group through either the naive fused-scan kernel or the
-pre-aggregation kernel as chosen by the optimizer (``plan.window_impl``).
+aggregates by window so each window runs ONE fused scan (window merge),
+and lowers the window groups through three execution paths chosen by the
+optimizer (``plan.window_impl``):
+
+* ``fused``  — every group in this set executes in ONE multi-window kernel
+  launch (``ops.fused_window``): a per-deployment spec table (per-group
+  ROWS/RANGE bounds + field masks) over the UNION of the groups' columns,
+  scanned once. Column positions are remapped group→union at compile time
+  (``_FusedScan.posmaps``) so slot reads stay O(1) indexing.
+* ``naive``  — per-group single-window scan (``ops.window_agg``); only
+  reached when a plan has exactly one raw-scan group or fusion is off.
+* ``preagg`` — bucketed pre-aggregate lookup (``ops.preagg_window``).
 
 The emitted executor is a pure function
 
@@ -11,7 +20,11 @@ The emitted executor is a pure function
         -> {output_name: (B,) or (B, k) array}
 
 suitable for ``jax.jit`` (the plan cache owns compilation) and for
-``shard_map``/``pjit`` batch sharding in the offline path.
+``shard_map``/``pjit`` batch sharding in the offline path. Column-gather
+index arrays are precomputed at compile time, and
+``PhysicalPlan.n_kernel_launches`` exposes how many window-kernel
+invocations one batch costs (surfaced by ``Engine.latency_decomposition``
+as the ``kernel_launches`` counter).
 """
 from __future__ import annotations
 
@@ -67,11 +80,30 @@ class AggSlot:
 class WindowGroup:
     name: str
     spec: E.WindowSpec
-    impl: str                         # "naive" | "preagg"
+    impl: str                         # "naive" | "preagg" | "fused"
     plain_cols: Tuple[int, ...]       # storage column indices gathered
-    derived_args: Tuple[E.Expr, ...]  # virtual columns (naive impl only)
+    derived_args: Tuple[E.Expr, ...]  # virtual columns (raw-scan impls only)
     slots: Tuple[AggSlot, ...]
     fields: Tuple[str, ...]           # kernel fields to materialise
+
+
+@dataclass(frozen=True)
+class _FusedScan:
+    """Compile-time layout of the single-scan multi-window launch.
+
+    ``idx`` are group indices (into ``PhysicalPlan.groups``) in spec-table
+    order; the union column stack is [plain storage columns][derived
+    virtual columns], and ``posmaps[gi]`` maps a member group's local
+    stacked-column position to its union position.
+    """
+
+    idx: Tuple[int, ...]
+    union_plain: Tuple[int, ...]          # storage column indices
+    union_derived: Tuple[E.Expr, ...]     # virtual columns (WHERE-side env)
+    spec_rows: Tuple[Optional[int], ...]
+    spec_ranges: Tuple[Optional[float], ...]
+    spec_fields: Tuple[Tuple[str, ...], ...]
+    posmaps: Tuple[Tuple[int, ...], ...]  # parallel to ``idx``
 
 
 @dataclass
@@ -84,6 +116,8 @@ class PhysicalPlan:
     # assume_latest is a *request-time* property (online fast path vs
     # point-in-time offline), so the executor is built per mode
     executor_factory: Optional[Callable] = None
+    # window-kernel invocations per batch: all fused groups count as ONE
+    n_kernel_launches: int = 0
 
     def executor_for(self, assume_latest: bool) -> Callable:
         if self.executor_factory is None:
@@ -98,6 +132,39 @@ def _internal_name(agg: E.Agg) -> str:
     import hashlib
     h = hashlib.md5(agg.fingerprint().encode()).hexdigest()[:10]
     return f"__agg_{h}"
+
+
+def _fill_slots(env: Dict[str, jax.Array], grp: WindowGroup,
+                get: Callable[[str, int], jax.Array]) -> None:
+    """Materialise a group's aggregate slots into the scalar env.
+
+    ``get(field, pos)`` reads one (B,)-shaped kernel output column for
+    this group — the indirection is what lets fused groups (indexed
+    ``[:, spec, union_pos]``) and per-group launches (``[:, pos]``) share
+    the empty-window masking and derived-moment math below.
+    """
+    cnt = get("count", -1) if "count" in grp.fields else None
+    nonempty = (cnt > 0) if cnt is not None else None
+    for s in grp.slots:
+        if s.func == E.AggFunc.COUNT:
+            env[s.internal] = cnt
+            continue
+        if s.func in _DERIVED:
+            c = jnp.maximum(cnt, 1.0)
+            mean = get("sum", s.col_pos) / c
+            if s.func == E.AggFunc.AVG:
+                val = mean
+            else:
+                var = jnp.maximum(
+                    get("sumsq", s.col_pos) / c - mean * mean, 0.0)
+                val = var if s.func == E.AggFunc.VAR else jnp.sqrt(var)
+            env[s.internal] = jnp.where(nonempty, val, 0.0)
+            continue
+        val = get(s.field or _FIELD_OF[s.func], s.col_pos)
+        if s.func in (E.AggFunc.MIN, E.AggFunc.MAX,
+                      E.AggFunc.FIRST, E.AggFunc.LAST):
+            val = jnp.where(nonempty, val, 0.0)
+        env[s.internal] = val
 
 
 def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
@@ -169,6 +236,12 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
                            field=field)
             slots.append(slot)
             slot_by_fp[agg.fingerprint()] = slot
+        # MIN/MAX/FIRST/LAST zero-fill empty windows via the count field
+        if ("count" not in fields
+                and any(s.func in (E.AggFunc.MIN, E.AggFunc.MAX,
+                                   E.AggFunc.FIRST, E.AggFunc.LAST)
+                        for s in slots)):
+            fields.append("count")
         # fix provisional derived positions now that plain count is final
         n_plain = len(plain)
         fixed = []
@@ -201,6 +274,55 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
     ts_col = schema.ts_col
     groups_t = tuple(groups)
 
+    # ---- 3b. fused-scan layout: union columns + group→union remaps ------
+    fused_idx = tuple(i for i, g in enumerate(groups_t)
+                      if g.impl == "fused")
+    fused: Optional[_FusedScan] = None
+    if fused_idx:
+        union_plain: List[int] = []
+        plain_upos: Dict[int, int] = {}
+        union_derived: List[E.Expr] = []
+        derived_upos: Dict[str, int] = {}
+        for i in fused_idx:
+            g = groups_t[i]
+            for ci in g.plain_cols:
+                if ci not in plain_upos:
+                    plain_upos[ci] = len(union_plain)
+                    union_plain.append(ci)
+            for a in g.derived_args:
+                fp = a.fingerprint()
+                if fp not in derived_upos:
+                    derived_upos[fp] = len(union_derived)
+                    union_derived.append(a)
+        n_up = len(union_plain)
+        posmaps = []
+        for i in fused_idx:
+            g = groups_t[i]
+            pm = [plain_upos[ci] for ci in g.plain_cols]
+            pm += [n_up + derived_upos[a.fingerprint()]
+                   for a in g.derived_args]
+            posmaps.append(tuple(pm))
+        fused = _FusedScan(
+            idx=fused_idx,
+            union_plain=tuple(union_plain),
+            union_derived=tuple(union_derived),
+            spec_rows=tuple(groups_t[i].spec.rows_preceding
+                            for i in fused_idx),
+            spec_ranges=tuple(groups_t[i].spec.range_preceding
+                              for i in fused_idx),
+            spec_fields=tuple(groups_t[i].fields for i in fused_idx),
+            posmaps=tuple(posmaps))
+    n_launches = (1 if fused_idx else 0) + sum(
+        1 for g in groups_t if g.impl != "fused")
+
+    # ---- 3c. precomputed column-gather indices (once, not per trace) ----
+    scan_col_idx = tuple((c, schema.col_index(c)) for c in scan_cols
+                         if c in schema.value_cols)
+    fused_gather = (jnp.asarray(fused.union_plain, jnp.int32)
+                    if fused is not None else None)
+    group_gather = {i: jnp.asarray(g.plain_cols, jnp.int32)
+                    for i, g in enumerate(groups_t) if g.impl != "fused"}
+
     # ---- 4. the executor --------------------------------------------------
     # assume_latest is request-time (online fast path vs point-in-time
     # offline materialisation), so the executor is a factory over it.
@@ -212,9 +334,9 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
                  model_params: Optional[Dict] = None
                  ) -> Dict[str, jax.Array]:
         # event-level environment for WHERE / derived aggregate args
+        # (column indices resolved once at compile time)
         def event_env():
-            env = {c: state.values[:, :, schema.col_index(c)]
-                   for c in scan_cols if c in schema.value_cols}
+            env = {c: state.values[:, :, ci] for c, ci in scan_col_idx}
             env[ts_col] = state.ts
             return env
 
@@ -229,54 +351,62 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
             env[c] = req_row[:, j]
         env[ts_col] = req_ts
 
-        for grp in groups_t:
+        def stack_cols(gather, derived):
+            cols = (state.values[:, :, gather] if gather is not None
+                    else state.values[:, :, :0])
+            if derived:
+                ev = event_env()
+                dv = jnp.stack([E.eval_scalar(a, ev).astype(jnp.float32)
+                                for a in derived], axis=-1)
+                cols = jnp.concatenate([cols, dv], axis=-1)
+            return cols
+
+        # ONE launch for the whole fused set: every plain window spec of
+        # the deployment is answered from a single scan of the union
+        # columns (the multi-window optimization this plan layer is for).
+        fused_raw = None
+        if fused is not None:
+            fused_raw = ops.fused_window(
+                stack_cols(fused_gather, fused.union_derived),
+                state.ts, state.total, key_idx, req_ts,
+                spec_rows=fused.spec_rows,
+                spec_ranges=fused.spec_ranges,
+                spec_fields=fused.spec_fields,
+                evt_mask=evt_mask, assume_latest=assume_latest)
+
+        for gi, grp in enumerate(groups_t):
             spec = grp.spec
-            kw = dict(rows_preceding=spec.rows_preceding,
-                      range_preceding=spec.range_preceding,
-                      assume_latest=assume_latest)
-            if grp.impl == "preagg":
-                assert preagg is not None
-                idx = jnp.asarray(grp.plain_cols, jnp.int32)
-                raw = ops.preagg_window(
-                    state.values[:, :, idx], state.ts, state.total,
-                    preagg.sum[:, :, idx], preagg.sumsq[:, :, idx],
-                    preagg.min[:, :, idx], preagg.max[:, :, idx],
-                    preagg.count, key_idx, req_ts,
-                    bucket_size=bucket_size,
-                    fields=grp.fields, **kw)
+            if grp.impl == "fused":
+                si = fused.idx.index(gi)
+                pm = fused.posmaps[si]
+                def get(field, pos, _si=si, _pm=pm):
+                    if field == "count":
+                        return fused_raw["count"][:, _si]
+                    return fused_raw[field][:, _si, _pm[pos]]
             else:
-                cols = [state.values[:, :, ci] for ci in grp.plain_cols]
-                if grp.derived_args:
-                    ev = event_env()
-                    cols += [E.eval_scalar(a, ev).astype(jnp.float32)
-                             for a in grp.derived_args]
-                v = (jnp.stack(cols, axis=-1) if cols
-                     else state.values[:, :, :0])
-                raw = ops.window_agg(
-                    v, state.ts, state.total, key_idx, req_ts,
-                    evt_mask=evt_mask, fields=grp.fields, **kw)
-            cnt = raw.get("count")
-            nonempty = (cnt > 0) if cnt is not None else None
-            for s in grp.slots:
-                if s.func == E.AggFunc.COUNT:
-                    env[s.internal] = raw["count"]
-                    continue
-                if s.func in _DERIVED:
-                    c = jnp.maximum(raw["count"], 1.0)
-                    mean = raw["sum"][:, s.col_pos] / c
-                    if s.func == E.AggFunc.AVG:
-                        val = mean
-                    else:
-                        var = jnp.maximum(
-                            raw["sumsq"][:, s.col_pos] / c - mean * mean, 0.0)
-                        val = var if s.func == E.AggFunc.VAR else jnp.sqrt(var)
-                    env[s.internal] = jnp.where(nonempty, val, 0.0)
-                    continue
-                val = raw[s.field or _FIELD_OF[s.func]][:, s.col_pos]
-                if s.func in (E.AggFunc.MIN, E.AggFunc.MAX,
-                              E.AggFunc.FIRST, E.AggFunc.LAST):
-                    val = jnp.where(nonempty, val, 0.0)
-                env[s.internal] = val
+                kw = dict(rows_preceding=spec.rows_preceding,
+                          range_preceding=spec.range_preceding,
+                          assume_latest=assume_latest)
+                if grp.impl == "preagg":
+                    assert preagg is not None
+                    idx = group_gather[gi]
+                    raw = ops.preagg_window(
+                        state.values[:, :, idx], state.ts, state.total,
+                        preagg.sum[:, :, idx], preagg.sumsq[:, :, idx],
+                        preagg.min[:, :, idx], preagg.max[:, :, idx],
+                        preagg.count, key_idx, req_ts,
+                        bucket_size=bucket_size,
+                        fields=grp.fields, **kw)
+                else:
+                    raw = ops.window_agg(
+                        stack_cols(group_gather.get(gi), grp.derived_args),
+                        state.ts, state.total, key_idx, req_ts,
+                        evt_mask=evt_mask, fields=grp.fields, **kw)
+                def get(field, pos, _raw=raw):
+                    if field == "count":
+                        return _raw["count"]
+                    return _raw[field][:, pos]
+            _fill_slots(env, grp, get)
 
         out = {n: E.eval_scalar(e, env) for n, e in outputs}
         if predict is not None:
@@ -292,4 +422,5 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
     return PhysicalPlan(plan=plan, groups=groups_t, outputs=outputs,
                         executor=make_executor(flags.assume_latest),
                         executor_factory=make_executor,
-                        feature_names=feature_names)
+                        feature_names=feature_names,
+                        n_kernel_launches=n_launches)

@@ -1,0 +1,170 @@
+"""Device-resident key→dense-index directory (open-addressing hash).
+
+``Table.key_to_idx`` (a host dict) stays authoritative for arbitrary key
+types; this directory mirrors integer keys into a device-side linear-
+probing hash table so the serving hot path resolves a WHOLE request batch
+with one jitted probe (hash → gather → compare) instead of a per-key
+Python dict loop (``engine.DeploymentHandle._serve``). Unknown keys come
+back as ``found=False`` and index 0 — exactly the engine's masking
+contract for ``STATUS_UNKNOWN_KEY``.
+
+Scope: keys must fit int32 (user/account ids do; the sentinel INT32_MIN
+is reserved). The first non-integer or out-of-range key permanently
+deactivates the directory (``active = False``) and the engine falls back
+to the dict loop — correctness never depends on this mirror.
+
+Hashing: multiplicative (Knuth) on the low 32 bits. Device int32
+multiplication wraps mod 2^32 exactly like the host-side
+``(k & 0xFFFFFFFF) * MULT`` computation, so host inserts and device
+probes agree bit-for-bit on slot sequences. Since multiplication by an
+odd constant is a bijection mod the (power-of-two) table size, dense id
+spaces probe in one step almost always; ``max_probe`` tracks the true
+worst case and is a static arg of the jitted probe.
+
+Concurrency: inserts (ingest path) and lookups (serving path) may race.
+Values are written before keys, so a concurrent snapshot never maps a
+key to an uninitialised index; a lookup racing an insert may simply not
+see the brand-new key yet (one stale-miss, masked as unknown — the same
+visibility a caller gets by requesting before ingesting).
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["KeyDirectory"]
+
+_EMPTY = -(2 ** 31)                 # int32 sentinel; rejected as a user key
+_MULT = 2654435761                  # Knuth multiplicative constant (odd)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("probe", "mask"))
+def _probe(tkeys: jax.Array, tvals: jax.Array, q: jax.Array, *,
+           probe: int, mask: int) -> Tuple[jax.Array, jax.Array]:
+    # int32 multiply wraps; & mask keeps the (positive) low bits
+    h = (q * jnp.int32(np.int64(_MULT).astype(np.int32))) & jnp.int32(mask)
+    offs = jnp.arange(probe, dtype=jnp.int32)[None, :]
+    slots = (h[:, None] + offs) & jnp.int32(mask)       # (B, P)
+    cand = tkeys[slots]
+    match = cand == q[:, None]
+    found = jnp.any(match, axis=1)
+    j = jnp.argmax(match, axis=1)
+    vals = jnp.take_along_axis(tvals[slots], j[:, None], axis=1)[:, 0]
+    return jnp.where(found, vals, 0).astype(jnp.int32), found
+
+
+class KeyDirectory:
+    def __init__(self, max_keys: int):
+        self.slots = _next_pow2(max(2 * max_keys, 16))
+        self._mask = self.slots - 1
+        self._hkeys = np.full(self.slots, _EMPTY, np.int64)
+        self._hvals = np.zeros(self.slots, np.int32)
+        self.max_probe = 1
+        self.n = 0
+        self.active = True
+        # device mirror is built once, then patched incrementally: inserts
+        # queue their slot index and lookup applies them as one small
+        # scatter — O(new keys), never an O(slots) re-upload per dirty.
+        # _mu orders concurrent patch/build: without it a lookup could
+        # observe an emptied queue but a not-yet-swapped mirror and serve
+        # stale misses for long-since-ingested keys
+        self._pending: list = []
+        self._dev: Optional[Tuple[jax.Array, jax.Array]] = None
+        self._mu = threading.Lock()
+
+    def insert(self, key, idx: int) -> None:
+        """Mirror one (key, dense index) pair; deactivate on unsupported
+        keys. Idempotent for re-inserts of the same (key, idx)."""
+        if not self.active:
+            return
+        if isinstance(key, bool) or not isinstance(key, (int, np.integer)):
+            self.active = False
+            return
+        k = int(key)
+        if not (_EMPTY < k < 2 ** 31):
+            self.active = False
+            return
+        h = ((k & 0xFFFFFFFF) * _MULT) & self._mask
+        # whole commit under _mu: an append racing lookup's queue swap
+        # would otherwise land on the orphaned list and never be patched
+        # into the device mirror (a permanently invisible key)
+        with self._mu:
+            for i in range(self.slots):
+                s = (h + i) & self._mask
+                existing = self._hkeys[s]
+                if existing != _EMPTY and existing != k:
+                    continue
+                if existing == k and self._hvals[s] == idx:
+                    return                # true re-insert: nothing changed
+                self._hvals[s] = idx      # value first: commit point is
+                self._hkeys[s] = k        # the key becoming visible
+                if existing == _EMPTY:
+                    self.n += 1
+                if i + 1 > self.max_probe:
+                    self.max_probe = i + 1
+                self._pending.append(s)
+                return
+            self.active = False           # table full (max_keys overflow)
+
+    def covers(self, keys: np.ndarray) -> bool:
+        """True if ``keys`` (an integer ndarray) can be probed exactly:
+        every queried value fits the directory's int32 key domain."""
+        if not self.active or keys.size == 0:
+            return False
+        lo, hi = int(keys.min()), int(keys.max())
+        return _EMPTY < lo and hi < 2 ** 31
+
+    def lookup(self, keys: np.ndarray) -> Tuple[jax.Array, jax.Array]:
+        """Resolve a batch: (idx (B,) i32, found (B,) bool), on device.
+
+        Caller must have checked :meth:`covers`."""
+        with self._mu:
+            if self._dev is None:
+                self._pending = []        # full build supersedes patches
+                self._dev = (jnp.asarray(self._hkeys.astype(np.int32)),
+                             jnp.asarray(self._hvals))
+            elif self._pending:
+                # swap the queue out under the lock: an insert racing this
+                # patch lands in the fresh list for a later lookup, and no
+                # concurrent lookup can observe emptied-queue + old mirror
+                pend, self._pending = self._pending, []
+                s = np.asarray(pend, np.int32)
+                tkeys, tvals = self._dev
+                self._dev = (
+                    tkeys.at[s].set(jnp.asarray(
+                        self._hkeys[s].astype(np.int32))),
+                    tvals.at[s].set(jnp.asarray(self._hvals[s])))
+            tkeys, tvals = self._dev
+        # pad to a power-of-two shape bucket (mirrors the query path's
+        # plan_cache.bucket_batch; local rounding avoids an import cycle
+        # through repro.core) so the jitted probe compiles once per
+        # bucket, not once per distinct batch size. The probe length is
+        # bucketed too: max_probe ratchets up one collision at a time,
+        # and an exact static value would recompile on every step
+        # (probing extra empty slots is free of false matches).
+        qh = np.asarray(keys, np.int64).astype(np.int32)
+        B = qh.shape[0]
+        bucket = _next_pow2(max(B, 8))
+        if bucket > B:
+            # pad rows probe like any key and are sliced off below (the
+            # engine re-pads kidx to its batch bucket — one small slice +
+            # pad kept deliberately, so _request_batched's length-derived
+            # accounting stays uniform across serve strategies)
+            qh = np.pad(qh, (0, bucket - B))
+        q = jnp.asarray(qh)
+        probe = min(_next_pow2(self.max_probe), self.slots)
+        idx, found = _probe(tkeys, tvals, q, probe=probe,
+                            mask=self._mask)
+        return idx[:B], found[:B]

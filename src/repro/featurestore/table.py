@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.featurestore.keydir import KeyDirectory
+
 __all__ = ["TableSchema", "TableState", "PreAggState", "Table",
            "TableSnapshot", "empty_state", "empty_preagg", "ingest",
            "ingest_nodonate", "NEG_INF", "POS_INF"]
@@ -230,6 +232,9 @@ class Table:
         self.capacity = capacity
         self.bucket_size = bucket_size
         self.key_to_idx: Dict[object, int] = {}
+        # device-side mirror of the key dict for batched hot-path lookup
+        # (engine._serve); deactivates itself on non-int32 keys
+        self.keydir = KeyDirectory(max_keys)
         self._pub_lock = threading.Lock()
         self._published = TableSnapshot(
             state=empty_state(max_keys, capacity, len(schema.value_cols)),
@@ -290,6 +295,7 @@ class Table:
                     f"table {self.schema.name!r} key space exhausted "
                     f"({self.max_keys}); resize via Table(max_keys=...)")
             self.key_to_idx[key] = idx
+            self.keydir.insert(key, idx)
         return idx
 
     def key_indices(self, keys: Sequence, create: bool = False) -> np.ndarray:

@@ -7,6 +7,8 @@ oracles (tests/test_kernels.py sweeps shapes/dtypes).
 
 Kernels:
     window_agg       — fused multi-aggregate sliding-window scan (engine)
+    fused_window     — single-scan MULTI-WINDOW form: a deployment's whole
+                       spec table (S distinct frames) in one launch
     preagg_window    — bucketed pre-aggregate window lookup, DMA partials
     flash_attention  — causal/SWA GQA flash attention (train/prefill)
     decode_attention — grouped-head KV-cache decode attention (serving)

@@ -1,0 +1,198 @@
+"""Pallas TPU kernel: single-scan fused MULTI-WINDOW aggregation.
+
+``window_agg`` fuses N aggregates of ONE window frame into one scan; this
+kernel goes one level up and fuses N window *frames* (the per-deployment
+spec table) into one scan — the TPU analogue of OpenMLDB's multi-window
+parallel execution (Zhou et al., §"query optimization"): a deployment with
+S distinct plain windows costs ONE kernel launch and ONE HBM read of the
+request's ring block instead of S.
+
+One grid step per request. The request's ring buffer (the union of the
+specs' value columns, ``(C, V)``, plus the ``(C,)`` timestamp block) is
+staged into VMEM once via scalar-prefetched request keys. The kernel
+derives the slot→position map and the shared upper bound ``p1`` (it
+depends only on req_ts, not on the frame) once, then unrolls over the
+static spec table: per spec a lower bound ``p0_s`` (ROWS count or RANGE
+time predicate), a window mask, and the spec's requested aggregate fields.
+
+Block layout:
+    values (K, C, V)  ->  (1, C, V) VMEM block at row ``req_key[i]``
+    ts     (K, C)     ->  (1, C)    VMEM block at row ``req_key[i]``
+    outputs           ->  (1, S, V) / (1, S) blocks at row ``i``
+
+VMEM working set per step = C·(V+1)·4 bytes (+C mask) — identical to the
+single-window kernel because the scan is shared; only the (tiny) output
+blocks scale with S. Fields a spec did not request are written as ZERO
+(out blocks must not carry garbage), matching ``ref.fused_window_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import FUSED_FIELDS, check_fused_specs
+
+# python scalars on purpose: jnp constants would be captured as traced
+# consts by the kernel body, which pallas_call rejects
+NEG_INF = -3.0e38
+POS_INF = 3.0e38
+_BIG_I32 = 2**30
+
+__all__ = ["fused_window_pallas"]
+
+
+def _kernel(req_key_ref, tot_ref, rts_ref,    # scalar prefetch (SMEM)
+            v_ref, ts_ref, mask_ref,          # VMEM blocks (mask optional)
+            *out_refs,
+            fields: Tuple[str, ...],
+            spec_rows: Tuple[Optional[int], ...],
+            spec_ranges: Tuple[Optional[float], ...],
+            spec_fields: Tuple[Tuple[str, ...], ...],
+            C: int, V: int,
+            assume_latest: bool, has_mask: bool):
+    i = pl.program_id(0)
+    tot = tot_ref[i]
+    t_req = rts_ref[i]
+    v = v_ref[0]                                     # (C, V)
+    tsb = ts_ref[0][:, None]                         # (C, 1)
+
+    # ---- shared scan state: positions + upper bound (once per request)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (C, 1), 0)
+    head = tot % C
+    rel = jax.lax.rem(slots - head + C, C)
+    p = tot - C + rel                                # (C, 1) global positions
+    valid = (p >= 0) & (p < tot)
+    if assume_latest:
+        p1 = tot
+    else:
+        after = valid & (tsb > t_req)
+        p1 = tot - jnp.sum(after.astype(jnp.int32))
+    base = valid
+    if has_mask:
+        base = base & mask_ref[0][:, None]
+
+    # ---- static unroll over the spec table ------------------------------
+    for s, (w_rows, w_range, sf) in enumerate(
+            zip(spec_rows, spec_ranges, spec_fields)):
+        if w_rows is not None:
+            p0 = p1 - jnp.int32(w_rows)
+        else:
+            in_range = valid & (tsb >= t_req - w_range) & (tsb <= t_req)
+            p0 = p1 - jnp.sum(in_range.astype(jnp.int32))
+        p0 = jnp.maximum(jnp.maximum(p0, 0), tot - C)
+        win = base & (p >= p0) & (p < p1)            # (C, 1)
+        winf = win.astype(jnp.float32)
+
+        zv = jnp.zeros((V,), jnp.float32)
+        o = 0
+        for f in fields:
+            want = f in sf
+            if f == "count":
+                out_refs[o][0, s] = jnp.sum(winf) if want else 0.0
+            elif f == "sum":
+                out_refs[o][0, s, :] = (jnp.sum(v * winf, axis=0)
+                                        if want else zv)
+            elif f == "sumsq":
+                out_refs[o][0, s, :] = (jnp.sum(v * v * winf, axis=0)
+                                        if want else zv)
+            elif f == "min":
+                out_refs[o][0, s, :] = (
+                    jnp.min(jnp.where(win, v, POS_INF), axis=0)
+                    if want else zv)
+            elif f == "max":
+                out_refs[o][0, s, :] = (
+                    jnp.max(jnp.where(win, v, NEG_INF), axis=0)
+                    if want else zv)
+            elif f == "first":
+                if want:
+                    # unique positions -> exact one-hot select, no gather
+                    p_first = jnp.min(jnp.where(win, p, _BIG_I32))
+                    sel = (p == p_first) & win
+                    out_refs[o][0, s, :] = jnp.sum(
+                        v * sel.astype(jnp.float32), axis=0)
+                else:
+                    out_refs[o][0, s, :] = zv
+            elif f == "last":
+                if want:
+                    p_last = jnp.max(jnp.where(win, p, -1))
+                    sel = (p == p_last) & win
+                    out_refs[o][0, s, :] = jnp.sum(
+                        v * sel.astype(jnp.float32), axis=0)
+                else:
+                    out_refs[o][0, s, :] = zv
+            o += 1
+
+
+def fused_window_pallas(values: jax.Array, ts: jax.Array, total: jax.Array,
+                        req_key: jax.Array, req_ts: jax.Array, *,
+                        spec_rows: Tuple[Optional[int], ...],
+                        spec_ranges: Tuple[Optional[float], ...],
+                        spec_fields: Tuple[Tuple[str, ...], ...],
+                        evt_mask: Optional[jax.Array] = None,
+                        assume_latest: bool = False,
+                        interpret: bool = False) -> Dict[str, jax.Array]:
+    """Pallas implementation of :func:`repro.kernels.ref.fused_window_ref`."""
+    check_fused_specs(spec_rows, spec_ranges, spec_fields)
+    S = len(spec_rows)
+    fields = tuple(f for f in FUSED_FIELDS
+                   if any(f in sf for sf in spec_fields))
+    K, C, V = values.shape
+    B = req_key.shape[0]
+    tot_req = total[req_key].astype(jnp.int32)
+    req_ts = req_ts.astype(jnp.float32)
+    has_mask = evt_mask is not None
+
+    def key_block3(i, keys, tots, rtss):
+        return (keys[i], 0, 0)
+
+    def key_block2(i, keys, tots, rtss):
+        return (keys[i], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, C, V), key_block3),
+        pl.BlockSpec((1, C), key_block2),
+    ]
+    inputs = [values.astype(jnp.float32), ts.astype(jnp.float32)]
+    if has_mask:
+        in_specs.append(pl.BlockSpec((1, C), key_block2))
+        inputs.append(evt_mask.astype(jnp.bool_))
+    else:
+        # dummy (1,1) block the kernel ignores
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, k, t, r: (0, 0)))
+        inputs.append(jnp.zeros((1, 1), jnp.bool_))
+
+    out_specs = []
+    out_shapes = []
+    for f in fields:
+        if f == "count":
+            out_specs.append(pl.BlockSpec((1, S), lambda i, k, t, r: (i, 0)))
+            out_shapes.append(jax.ShapeDtypeStruct((B, S), jnp.float32))
+        else:
+            out_specs.append(
+                pl.BlockSpec((1, S, V), lambda i, k, t, r: (i, 0, 0)))
+            out_shapes.append(jax.ShapeDtypeStruct((B, S, V), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    kern = functools.partial(
+        _kernel, fields=fields, spec_rows=tuple(spec_rows),
+        spec_ranges=tuple(spec_ranges),
+        spec_fields=tuple(tuple(sf) for sf in spec_fields),
+        C=C, V=V, assume_latest=assume_latest, has_mask=has_mask)
+    outs = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=tuple(out_shapes),
+        interpret=interpret,
+    )(req_key.astype(jnp.int32), tot_req, req_ts, *inputs)
+
+    return dict(zip(fields, outs))

@@ -14,6 +14,7 @@ sweep shapes/dtypes asserting allclose against ref.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -21,11 +22,20 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 
-__all__ = ["window_agg", "preagg_window", "flash_attention",
-           "decode_attention", "set_backend", "get_backend"]
+__all__ = ["window_agg", "fused_window", "preagg_window",
+           "flash_attention", "decode_attention", "set_backend",
+           "get_backend"]
 
-_BACKEND = "auto"
 _VALID = ("auto", "pallas", "ref")
+# REPRO_KERNEL_BACKEND pins the dispatch for a whole process (the CI ref
+# leg runs the suite with it set to "ref" so the pure-JAX fallback cannot
+# rot on machines whose default backend would pick Pallas). A typo must
+# fail loudly — silently coercing to "auto" would turn the pinned CI leg
+# into a no-op that tests the default path.
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+if _BACKEND not in _VALID:
+    raise ValueError(
+        f"REPRO_KERNEL_BACKEND={_BACKEND!r} invalid; use one of {_VALID}")
 
 
 def set_backend(name: str) -> None:
@@ -71,6 +81,36 @@ def window_agg(values: jax.Array, ts: jax.Array, total: jax.Array,
         values, ts, total, req_key, req_ts,
         rows_preceding=rows_preceding, range_preceding=range_preceding,
         evt_mask=evt_mask, assume_latest=assume_latest, fields=fields)
+
+
+def fused_window(values: jax.Array, ts: jax.Array, total: jax.Array,
+                 req_key: jax.Array, req_ts: jax.Array, *,
+                 spec_rows: Tuple[Optional[int], ...],
+                 spec_ranges: Tuple[Optional[float], ...],
+                 spec_fields: Tuple[Tuple[str, ...], ...],
+                 evt_mask: Optional[jax.Array] = None,
+                 assume_latest: bool = False,
+                 interpret: bool = False) -> Dict[str, jax.Array]:
+    """Single-scan fused MULTI-WINDOW aggregation.
+
+    Computes every window spec in the static per-deployment spec table
+    (``spec_rows`` / ``spec_ranges`` / per-spec ``spec_fields`` masks)
+    from ONE scan of the union value columns — one kernel launch for all
+    of a deployment's plain windows. Returns dict field -> (B, S, V)
+    (count -> (B, S)); fields a spec did not request are zero.
+    """
+    if _use_pallas() or interpret:
+        from repro.kernels import fused_window as k
+        return k.fused_window_pallas(
+            values, ts, total, req_key, req_ts,
+            spec_rows=spec_rows, spec_ranges=spec_ranges,
+            spec_fields=spec_fields, evt_mask=evt_mask,
+            assume_latest=assume_latest, interpret=interpret)
+    return ref.fused_window_ref(
+        values, ts, total, req_key, req_ts,
+        spec_rows=spec_rows, spec_ranges=spec_ranges,
+        spec_fields=spec_fields, evt_mask=evt_mask,
+        assume_latest=assume_latest)
 
 
 def preagg_window(values: jax.Array, ts: jax.Array, total: jax.Array,

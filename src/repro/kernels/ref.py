@@ -11,6 +11,10 @@ request at time ``t`` the window is a position interval ``[p0, p1)`` with
 Both clamped to retention. All aggregates reduce over that interval.
 
 ``window_agg_ref``   — naive fused multi-aggregate scan, O(C) per request.
+``fused_window_ref``  — single-scan MULTI-WINDOW form: all of a deployment's
+                        plain window specs answered from ONE gather of the
+                        ring block (shared positions/p1, batched einsum
+                        reductions over a (B, S, C) mask tensor).
 ``preagg_window_ref`` — bucketed pre-aggregation path (paper Eq. 2), reading
                         O(NB + 2·bucket) instead of O(C·V).
 ``decode_attention_ref`` / ``flash_attention_ref`` — model-side oracles.
@@ -22,14 +26,17 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = jnp.float32(-3.0e38)
 POS_INF = jnp.float32(3.0e38)
 _BIG_I32 = jnp.int32(2**30)
 
-__all__ = ["window_agg_ref", "preagg_window_ref", "derive_features",
-            "window_bounds", "flash_attention_ref", "flash_attention_xla",
-            "decode_attention_ref"]
+__all__ = ["window_agg_ref", "fused_window_ref", "preagg_window_ref",
+            "derive_features", "window_bounds", "flash_attention_ref",
+            "flash_attention_xla", "decode_attention_ref"]
+
+FUSED_FIELDS = ("sum", "sumsq", "count", "min", "max", "first", "last")
 
 
 def _positions(ts: jax.Array, total: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -44,6 +51,34 @@ def _positions(ts: jax.Array, total: jax.Array) -> Tuple[jax.Array, jax.Array]:
     p = total[:, None].astype(jnp.int32) - C + rel
     valid = (p >= 0) & (p < total[:, None])
     return p, valid
+
+
+def _upper_bound(ts_rows: jax.Array, total_rows: jax.Array,
+                 valid: jax.Array, req_ts: jax.Array,
+                 assume_latest: bool) -> jax.Array:
+    """``p1 = P_t`` — #events with ts ≤ req_ts. Depends only on the
+    request time, never on the frame, so fused multi-window execution
+    computes it ONCE and shares it across every spec."""
+    if assume_latest:
+        return total_rows
+    after = valid & (ts_rows > req_ts[:, None])
+    return total_rows - jnp.sum(after, axis=1).astype(jnp.int32)
+
+
+def _lower_bound(p1: jax.Array, ts_rows: jax.Array, total_rows: jax.Array,
+                 valid: jax.Array, req_ts: jax.Array, *,
+                 rows_preceding: Optional[int],
+                 range_preceding: Optional[float]) -> jax.Array:
+    """Per-frame ``p0`` (ROWS count back from p1, or RANGE time predicate),
+    clamped to [0, retention)."""
+    C = ts_rows.shape[1]
+    if rows_preceding is not None:
+        p0 = p1 - jnp.int32(rows_preceding)
+    else:
+        in_range = (valid & (ts_rows >= (req_ts - range_preceding)[:, None])
+                    & (ts_rows <= req_ts[:, None]))
+        p0 = p1 - jnp.sum(in_range, axis=1).astype(jnp.int32)
+    return jnp.maximum(jnp.maximum(p0, 0), total_rows - C)
 
 
 def window_bounds(ts_rows: jax.Array, total_rows: jax.Array,
@@ -64,19 +99,11 @@ def window_bounds(ts_rows: jax.Array, total_rows: jax.Array,
         p0 = jnp.maximum(p1 - jnp.int32(rows_preceding), 0)
         p0 = jnp.maximum(p0, total_rows - C)
         return p0, p1
-    p, valid = _positions(ts_rows, total_rows)
-    if assume_latest:
-        p1 = total_rows
-    else:
-        after = valid & (ts_rows > req_ts[:, None])
-        p1 = total_rows - jnp.sum(after, axis=1).astype(jnp.int32)
-    if rows_preceding is not None:
-        p0 = p1 - jnp.int32(rows_preceding)
-    else:
-        in_range = (valid & (ts_rows >= (req_ts - range_preceding)[:, None])
-                    & (ts_rows <= req_ts[:, None]))
-        p0 = p1 - jnp.sum(in_range, axis=1).astype(jnp.int32)
-    p0 = jnp.maximum(jnp.maximum(p0, 0), total_rows - C)
+    _, valid = _positions(ts_rows, total_rows)
+    p1 = _upper_bound(ts_rows, total_rows, valid, req_ts, assume_latest)
+    p0 = _lower_bound(p1, ts_rows, total_rows, valid, req_ts,
+                      rows_preceding=rows_preceding,
+                      range_preceding=range_preceding)
     return p0, p1
 
 
@@ -136,6 +163,121 @@ def window_agg_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
         if "last" in fields:
             out["last"] = jnp.take_along_axis(
                 v, idx_last[:, None, None], axis=1)[:, 0, :] * nonempty
+    return out
+
+
+def check_fused_specs(spec_rows, spec_ranges, spec_fields) -> None:
+    """Validate a fused-window spec table (shared by all backends)."""
+    S = len(spec_rows)
+    if not (len(spec_ranges) == S == len(spec_fields)) or S == 0:
+        raise ValueError(
+            f"spec table lengths must match and be non-empty: "
+            f"rows={len(spec_rows)} ranges={len(spec_ranges)} "
+            f"fields={len(spec_fields)}")
+    for s in range(S):
+        if (spec_rows[s] is None) == (spec_ranges[s] is None):
+            raise ValueError(
+                f"spec {s}: exactly one of rows/range must be given "
+                f"(rows={spec_rows[s]}, range={spec_ranges[s]})")
+        bad = [f for f in spec_fields[s] if f not in FUSED_FIELDS]
+        if bad:
+            raise ValueError(f"spec {s}: unknown fields {bad}")
+
+
+def fused_window_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
+                     req_key: jax.Array, req_ts: jax.Array, *,
+                     spec_rows: Tuple[Optional[int], ...],
+                     spec_ranges: Tuple[Optional[float], ...],
+                     spec_fields: Tuple[Tuple[str, ...], ...],
+                     evt_mask: Optional[jax.Array] = None,
+                     assume_latest: bool = False
+                     ) -> Dict[str, jax.Array]:
+    """Single-scan fused MULTI-WINDOW aggregation (the OpenMLDB
+    multi-window parallel-execution optimization, TPU/XLA form).
+
+    One deployment usually carries several distinct window frames over the
+    same partition; executing them per group re-gathers and re-scans the
+    same ring block once per frame. This op gathers the block ONCE, derives
+    the shared upper bound ``p1`` (it depends only on req_ts) once, builds a
+    ``(B, S, C)`` window-mask tensor, and reduces every spec with batched
+    matmul-shaped contractions instead of S separate scan chains.
+
+    values (K, C, V) — the UNION of the specs' columns; ``spec_rows`` /
+    ``spec_ranges`` / ``spec_fields`` are length-S static tuples (exactly
+    one of rows/range per spec; per-spec field masks). Semantics per spec
+    are identical to :func:`window_agg_ref`; fields a spec did not request
+    are ZERO in its output rows.
+
+    Returns dict: sum/sumsq/min/max/first/last (B, S, V), count (B, S).
+    """
+    check_fused_specs(spec_rows, spec_ranges, spec_fields)
+    S = len(spec_rows)
+    fields = tuple(f for f in FUSED_FIELDS
+                   if any(f in sf for sf in spec_fields))
+    v = values[req_key].astype(jnp.float32)     # (B, C, V) — ONE gather
+    t = ts[req_key]                             # (B, C)
+    tot = total[req_key].astype(jnp.int32)      # (B,)
+    Bq, C, V = v.shape
+    p, valid = _positions(t, tot)
+    # shared upper bound, per-spec lower bounds — the same helpers
+    # window_bounds lowers through, so single- and multi-window semantics
+    # cannot drift apart
+    p1 = _upper_bound(t, tot, valid, req_ts, assume_latest)
+    p0s = jnp.stack(
+        [_lower_bound(p1, t, tot, valid, req_ts,
+                      rows_preceding=spec_rows[s],
+                      range_preceding=spec_ranges[s])
+         for s in range(S)], axis=1)            # (B, S)
+
+    base = valid
+    if evt_mask is not None:
+        base = base & evt_mask[req_key]
+    win = (base[:, None, :] & (p[:, None, :] >= p0s[:, :, None])
+           & (p[:, None, :] < p1[:, None, None]))          # (B, S, C)
+    winf = win.astype(jnp.float32)
+
+    # static per-field spec selector: un-requested fields are zeroed
+    def need(f):
+        return jnp.asarray(np.asarray(
+            [f in sf for sf in spec_fields], np.bool_))
+
+    out: Dict[str, jax.Array] = {}
+    if "sum" in fields:
+        r = jnp.einsum("bsc,bcv->bsv", winf, v)
+        out["sum"] = jnp.where(need("sum")[None, :, None], r, 0.0)
+    if "sumsq" in fields:
+        r = jnp.einsum("bsc,bcv->bsv", winf, v * v)
+        out["sumsq"] = jnp.where(need("sumsq")[None, :, None], r, 0.0)
+    if "count" in fields:
+        r = jnp.sum(winf, axis=2)
+        out["count"] = jnp.where(need("count")[None, :], r, 0.0)
+    # min/max loop the static spec axis so the peak temporary stays
+    # (B, C, V) like the per-group path — a broadcast over S would
+    # materialise (B, S, C, V)
+    if "min" in fields:
+        r = jnp.stack(
+            [jnp.min(jnp.where(win[:, s, :, None], v, POS_INF), axis=1)
+             for s in range(S)], axis=1)
+        out["min"] = jnp.where(need("min")[None, :, None], r, 0.0)
+    if "max" in fields:
+        r = jnp.stack(
+            [jnp.max(jnp.where(win[:, s, :, None], v, NEG_INF), axis=1)
+             for s in range(S)], axis=1)
+        out["max"] = jnp.where(need("max")[None, :, None], r, 0.0)
+    if "first" in fields or "last" in fields:
+        # positions are unique per key -> exact one-hot select (an empty
+        # window selects nothing and yields 0, matching window_agg_ref)
+        if "first" in fields:
+            p_first = jnp.min(jnp.where(win, p[:, None, :], _BIG_I32),
+                              axis=2)
+            sel = ((p[:, None, :] == p_first[:, :, None]) & win)
+            r = jnp.einsum("bsc,bcv->bsv", sel.astype(jnp.float32), v)
+            out["first"] = jnp.where(need("first")[None, :, None], r, 0.0)
+        if "last" in fields:
+            p_last = jnp.max(jnp.where(win, p[:, None, :], -1), axis=2)
+            sel = ((p[:, None, :] == p_last[:, :, None]) & win)
+            r = jnp.einsum("bsc,bcv->bsv", sel.astype(jnp.float32), v)
+            out["last"] = jnp.where(need("last")[None, :, None], r, 0.0)
     return out
 
 

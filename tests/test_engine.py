@@ -1,5 +1,7 @@
 """Engine behaviour: deploy/request/offline, optimizer passes, plan cache,
 latency decomposition, baselines — the paper's system surface."""
+from dataclasses import replace as dataclasses_replace
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -353,6 +355,167 @@ def test_unknown_key_masked_with_status():
                        np.asarray(rt[:1], np.float32))
     np.testing.assert_allclose(out["s"][:1], want["s"], rtol=1e-3, atol=1e-3)
     assert eng.handle("f").metrics.unknown_keys == 1
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# fused multi-window execution + device-resident key directory
+# ---------------------------------------------------------------------------
+
+SQL_MULTI = """
+SELECT SUM(amount) OVER w1 AS s1, LAST(amount) OVER w1 AS l1,
+       AVG(amount) OVER w2 AS a2, LAST(amount) OVER w2 AS l2,
+       STD(amount) OVER w3 AS d3, LAST(lat) OVER w3 AS l3,
+       SUM(amount*amount) OVER w4 AS q4, LAST(amount) OVER w4 AS l4
+FROM events
+WINDOW w1 AS (PARTITION BY user ORDER BY ts
+              ROWS BETWEEN 5 PRECEDING AND CURRENT ROW),
+       w2 AS (PARTITION BY user ORDER BY ts
+              ROWS BETWEEN 10 PRECEDING AND CURRENT ROW),
+       w3 AS (PARTITION BY user ORDER BY ts
+              ROWS BETWEEN 20 PRECEDING AND CURRENT ROW),
+       w4 AS (PARTITION BY user ORDER BY ts
+              ROWS BETWEEN 40 PRECEDING AND CURRENT ROW)
+"""
+
+
+@pytest.mark.parametrize("point_in_time", [False, True])
+def test_fused_multiwindow_matches_pergroup_single_launch(point_in_time):
+    """≥4 distinct plain window specs execute in ONE fused kernel launch
+    (kernel_launches counter) with outputs equal to the per-group path."""
+    flags = OptFlags(assume_latest=not point_in_time)
+    eng_f, (keys, ts, _) = make_engine(flags)
+    eng_p, _ = make_engine(dataclasses_replace(flags, fuse_windows=False))
+    hf = eng_f.deploy("m", SQL_MULTI)
+    hp = eng_p.deploy("m", SQL_MULTI)
+    assert all(g.impl == "fused" for g in hf.phys.groups)
+    assert hf.phys.n_kernel_launches == 1
+    assert all(g.impl == "naive" for g in hp.phys.groups)
+    assert hp.phys.n_kernel_launches == 4
+    assert "fused scan: 4 window(s) in ONE launch" in eng_f.explain("m")
+    assert any("fuse_windows" in l for l in hf.opt_log)
+
+    rng = np.random.default_rng(7)
+    rk = rng.integers(0, 16, 16).tolist()
+    lo, hi = (200, 900) if point_in_time else (1100, 1500)
+    rt = np.sort(rng.uniform(lo, hi, 16)).astype(np.float32).tolist()
+    a = eng_f.request("m", rk, rt)
+    b = eng_p.request("m", rk, rt)
+    for name in a.keys():
+        np.testing.assert_allclose(a[name], b[name], rtol=1e-3, atol=1e-3,
+                                   err_msg=name)
+    # the counter observes the fusion win: one batch = one launch
+    assert eng_f.latency_decomposition()["kernel_launches"] == 1
+    assert eng_p.latency_decomposition()["kernel_launches"] == 4
+    eng_f.close()
+    eng_p.close()
+
+
+def test_fused_multiwindow_with_where_clause():
+    """WHERE pushes every window onto the raw-scan path — they still fuse
+    and still agree with the per-group execution (shared event mask)."""
+    q = """SELECT COUNT(amount) OVER w1 AS c1, SUM(amount) OVER w2 AS s2,
+                  MAX(amount) OVER w3 AS m3, AVG(amount) OVER w4 AS a4
+           FROM events WHERE amount > 0
+           WINDOW w1 AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 8 PRECEDING AND CURRENT ROW),
+                  w2 AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 16 PRECEDING AND CURRENT ROW),
+                  w3 AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 32 PRECEDING AND CURRENT ROW),
+                  w4 AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 64 PRECEDING AND CURRENT ROW)"""
+    eng_f, (keys, ts, _) = make_engine()
+    eng_p, _ = make_engine(OptFlags(fuse_windows=False))
+    hf = eng_f.deploy("fw", q)
+    eng_p.deploy("fw", q)
+    assert hf.phys.n_kernel_launches == 1
+    rk, rt = keys[:8].tolist(), (ts[:8] + 2000).tolist()
+    a = eng_f.request("fw", rk, rt)
+    b = eng_p.request("fw", rk, rt)
+    for name in a.keys():
+        np.testing.assert_allclose(a[name], b[name], rtol=1e-3, atol=1e-3,
+                                   err_msg=name)
+    eng_f.close()
+    eng_p.close()
+
+
+def test_fuse_windows_pulls_shared_column_preagg():
+    """A preagg-eligible window whose columns the fused scan already
+    streams is pulled into the shared scan (marginal cost ~0)."""
+    q = """SELECT LAST(amount) OVER w1 AS l1, LAST(amount) OVER w2 AS l2,
+                  SUM(amount) OVER w3 AS s3
+           FROM events
+           WINDOW w1 AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 5 PRECEDING AND CURRENT ROW),
+                  w2 AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 10 PRECEDING AND CURRENT ROW),
+                  w3 AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)"""
+    eng, (keys, ts, rows) = make_engine()
+    dep = eng.deploy("p", q)
+    impl = {g.name: g.impl for g in dep.phys.groups}
+    assert impl == {"w1": "fused", "w2": "fused", "w3": "fused"}
+    assert dep.phys.n_kernel_launches == 1
+    assert any("pulled 'w3'" in l for l in dep.opt_log)
+    # and it still computes the right SUM
+    got = eng.request("p", keys[:6].tolist(), (ts[:6] + 2000).tolist())
+    want = brute_force(keys, ts, rows, keys[:6], ts[:6] + 2000, w=20)
+    np.testing.assert_allclose(got["s3"], want["s"], rtol=1e-3, atol=1e-3)
+    eng.close()
+
+
+def test_device_key_directory_matches_dict_fallback():
+    """The device-resident key lookup must agree with the host dict loop
+    on hits, misses, and masking."""
+    eng, (keys, ts, _) = make_engine()
+    eng.deploy("f", SQL)
+    assert eng.tables["events"].keydir.active
+    rk = [int(keys[0]), 9999, int(keys[1]), -7]     # 2 known, 2 unknown
+    rt = [float(ts.max()) + 10.0] * 4
+    fast = eng.request("f", rk, rt)
+    eng.tables["events"].keydir.active = False      # force dict fallback
+    slow = eng.request("f", rk, rt)
+    assert list(fast.status) == list(slow.status)
+    for n in fast.keys():
+        np.testing.assert_allclose(fast[n], slow[n], rtol=1e-6,
+                                   err_msg=n)
+    eng.close()
+
+
+def test_key_directory_incremental_patch_after_new_keys():
+    """Keys ingested after the device mirror is built must be visible via
+    the incremental scatter patch (no full re-upload, no stale misses)."""
+    eng, (keys, ts, _) = make_engine()
+    eng.deploy("f", SQL)
+    t_now = float(ts.max()) + 10.0
+    first = eng.request("f", [int(keys[0]), 777], [t_now] * 2)
+    assert list(first.status) == [0, 1]             # 777 unknown so far
+    eng.insert("events", [777], [t_now + 1.0],
+               np.ones((1, 3), np.float32))
+    out = eng.request("f", [int(keys[0]), 777], [t_now + 2.0] * 2)
+    assert list(out.status) == [0, 0]               # patched in, now found
+    assert out["c"][1] == pytest.approx(1.0)
+    eng.close()
+
+
+def test_key_directory_deactivates_on_non_integer_keys():
+    from repro.featurestore.table import TableSchema as TS
+    eng = Engine(OptFlags())
+    eng.create_table(TS("ev", key_col="k", ts_col="ts",
+                        value_cols=("x",)), max_keys=8, capacity=64,
+                     bucket_size=8)
+    eng.insert("ev", ["alice", "bob"], [1.0, 2.0],
+               np.ones((2, 1), np.float32))
+    t = eng.tables["ev"]
+    assert not t.keydir.active                      # strings deactivate it
+    q = """SELECT SUM(x) OVER w AS s FROM ev
+           WINDOW w AS (PARTITION BY k ORDER BY ts
+                        ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)"""
+    eng.deploy("f", q)
+    out = eng.request("f", ["alice", "carol"], [10.0, 10.0])
+    assert out.status[0] == 0 and out.status[1] == 1
+    np.testing.assert_allclose(out["s"][0], 1.0, rtol=1e-6)
     eng.close()
 
 

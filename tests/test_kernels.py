@@ -54,6 +54,111 @@ def test_window_agg_fields_subset():
 
 
 # ---------------------------------------------------------------------------
+# fused_window (single-scan multi-window)
+# ---------------------------------------------------------------------------
+
+# mixed ROWS/RANGE spec table with per-spec field masks
+FUSED_SPEC_ROWS = (10, None, 31, None)
+FUSED_SPEC_RANGES = (None, 50.0, None, 400.0)
+FUSED_SPEC_FIELDS = (
+    ("sum", "count", "max"),
+    ("sum", "sumsq", "count"),
+    ("sum", "sumsq", "count", "min", "max", "first", "last"),
+    ("min", "first", "last", "count"),
+)
+
+
+def _fused_setup(seed=13, with_mask=False):
+    t, _ = make_table_with_events(n_keys=5, n_events=300, n_cols=3,
+                                  capacity=128, bucket_size=16, seed=seed)
+    st = t.state
+    B = 12
+    rng = np.random.default_rng(3)
+    req_key = jnp.asarray(rng.integers(0, 5, B), jnp.int32)
+    req_ts = jnp.asarray(np.sort(rng.uniform(100, 1300, B)), jnp.float32)
+    mask = (st.values[:, :, 0] > 0) if with_mask else None
+    return st, req_key, req_ts, mask
+
+
+@pytest.mark.parametrize("assume_latest", [False, True])
+@pytest.mark.parametrize("with_mask", [False, True])
+def test_fused_window_pallas_vs_ref(assume_latest, with_mask):
+    from repro.kernels.fused_window import fused_window_pallas
+    st, req_key, req_ts, mask = _fused_setup(with_mask=with_mask)
+    kw = dict(spec_rows=FUSED_SPEC_ROWS, spec_ranges=FUSED_SPEC_RANGES,
+              spec_fields=FUSED_SPEC_FIELDS, evt_mask=mask,
+              assume_latest=assume_latest)
+    out_p = fused_window_pallas(st.values, st.ts, st.total, req_key,
+                                req_ts, interpret=True, **kw)
+    out_r = ref.fused_window_ref(st.values, st.ts, st.total, req_key,
+                                 req_ts, **kw)
+    assert set(out_p) == set(out_r)
+    for name in out_r:
+        np.testing.assert_allclose(np.asarray(out_p[name]),
+                                   np.asarray(out_r[name]),
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("with_mask", [False, True])
+def test_fused_window_matches_per_group_window_agg(with_mask):
+    """Every spec row of the fused output must equal an independent
+    single-window ``window_agg_ref`` call with the same frame/fields —
+    fusing may share the scan, never change the answer."""
+    st, req_key, req_ts, mask = _fused_setup(with_mask=with_mask)
+    fused = ref.fused_window_ref(
+        st.values, st.ts, st.total, req_key, req_ts,
+        spec_rows=FUSED_SPEC_ROWS, spec_ranges=FUSED_SPEC_RANGES,
+        spec_fields=FUSED_SPEC_FIELDS, evt_mask=mask)
+    for s in range(len(FUSED_SPEC_ROWS)):
+        per = ref.window_agg_ref(
+            st.values, st.ts, st.total, req_key, req_ts,
+            rows_preceding=FUSED_SPEC_ROWS[s],
+            range_preceding=FUSED_SPEC_RANGES[s],
+            evt_mask=mask, fields=FUSED_SPEC_FIELDS[s])
+        for f in FUSED_SPEC_FIELDS[s]:
+            got = (fused["count"][:, s] if f == "count"
+                   else fused[f][:, s, :])
+            np.testing.assert_allclose(np.asarray(got), np.asarray(per[f]),
+                                       rtol=2e-4, atol=2e-4,
+                                       err_msg=f"spec{s}:{f}")
+
+
+def test_fused_window_empty_windows_and_field_zeroing():
+    """Requests before any event: empty windows (count 0, min POS_INF —
+    parity with window_agg_ref's raw outputs); and fields a spec did not
+    request are exactly zero on every backend."""
+    from repro.kernels.fused_window import fused_window_pallas
+    st, req_key, _, _ = _fused_setup()
+    req_ts = jnp.full((12,), -100.0, jnp.float32)   # before all events
+    kw = dict(spec_rows=(5, None), spec_ranges=(None, 30.0),
+              spec_fields=(("sum", "count", "min"), ("count",)),
+              assume_latest=False)
+    for out in (ref.fused_window_ref(st.values, st.ts, st.total, req_key,
+                                     req_ts, **kw),
+                fused_window_pallas(st.values, st.ts, st.total, req_key,
+                                    req_ts, interpret=True, **kw)):
+        assert np.all(np.asarray(out["count"]) == 0.0)
+        assert np.all(np.asarray(out["sum"][:, 0]) == 0.0)
+        # empty window min stays POS_INF for the requesting spec ...
+        assert np.all(np.asarray(out["min"][:, 0]) > 1e38)
+        # ... and is exactly zero for the spec that never asked for it
+        assert np.all(np.asarray(out["min"][:, 1]) == 0.0)
+        assert np.all(np.asarray(out["sum"][:, 1]) == 0.0)
+
+
+def test_fused_window_spec_validation():
+    st, req_key, req_ts, _ = _fused_setup()
+    with pytest.raises(ValueError, match="exactly one"):
+        ref.fused_window_ref(st.values, st.ts, st.total, req_key, req_ts,
+                             spec_rows=(5, 7), spec_ranges=(None, 30.0),
+                             spec_fields=(("sum",), ("sum",)))
+    with pytest.raises(ValueError, match="lengths"):
+        ref.fused_window_ref(st.values, st.ts, st.total, req_key, req_ts,
+                             spec_rows=(5,), spec_ranges=(None, 30.0),
+                             spec_fields=(("sum",),))
+
+
+# ---------------------------------------------------------------------------
 # preagg_window
 # ---------------------------------------------------------------------------
 
