@@ -1,0 +1,179 @@
+"""Relational tier: QPS / p50 / p99 vs number of LAST JOINed tables.
+
+The paper's flagship scenarios are multi-table (a transaction request
+enriched with the latest merchant/account/device rows as of the request
+timestamp); this bench measures what that enrichment costs on the serving
+hot path: the same two-window feature query served with 0, 1, 2, and 3
+point-in-time LAST JOINs, each join adding exactly ONE kernel launch
+(asserted from the plan counter).
+
+Drift bracketing (the 2-core CI host swings ±2x run-to-run): the 0-join
+baseline is measured BEFORE and AFTER the joined sweep on the same warmed
+engine, and the joined p50s are compared against the MEAN of the two
+brackets — machine drift cancels at the comparison point.
+
+Acceptance tripwire (ISSUE 4): a 3-table joined request must stay within
+2.5x the single-table baseline p50. Emits
+``experiments/BENCH_lastjoin.json`` (quick mode writes to an ignored
+``_quick`` path so CI smoke runs never clobber the committed trajectory).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import dsl
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.featurestore.table import TableSchema
+
+from benchmarks.common import QUICK, Reporter
+
+N_EVENTS = 2_000 if QUICK else 20_000
+N_KEYS = 64 if QUICK else 256
+REQ_BATCH = 64 if QUICK else 256
+N_REQ_BATCHES = 4 if QUICK else 24
+N_DIM_KEYS = 64
+JOIN_COUNTS = (0, 1, 2, 3)
+
+OUT_PATH = os.path.join(
+    "experiments",
+    "bench_lastjoin_quick.json" if QUICK else "BENCH_lastjoin.json")
+
+
+def build_engine(n_joins: int):
+    eng = Engine(OptFlags())
+    eng.create_table(
+        TableSchema("events", key_col="user", ts_col="ts",
+                    value_cols=("amount", "lat", "m0", "m1", "m2")),
+        max_keys=N_KEYS, capacity=1024, bucket_size=64)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, N_KEYS, N_EVENTS)
+    ts = np.sort(rng.uniform(0, 2000.0, N_EVENTS)).astype(np.float32)
+    rows = np.stack(
+        [rng.lognormal(1.0, 1.0, N_EVENTS),
+         rng.normal(0, 1, N_EVENTS)]
+        + [rng.integers(0, N_DIM_KEYS, N_EVENTS).astype(np.float64)
+           for _ in range(3)], -1).astype(np.float32)
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+
+    for d in range(n_joins):
+        # the join key column shares its name across both sides (the
+        # left table's m<d> column holds dim<d> keys)
+        eng.create_table(
+            TableSchema(f"dim{d}", key_col=f"m{d}", ts_col="dts",
+                        value_cols=("a", "b")),
+            max_keys=N_DIM_KEYS, capacity=128, bucket_size=16)
+        # a few profile re-publishes per dim key (point-in-time history)
+        for t0 in (100.0, 700.0, 1500.0):
+            dk = list(range(N_DIM_KEYS))
+            eng.insert(f"dim{d}", dk, [t0] * N_DIM_KEYS,
+                       np.stack([np.arange(N_DIM_KEYS) + t0,
+                                 np.arange(N_DIM_KEYS) * 0.5],
+                                -1).astype(np.float32))
+
+    qb = (dsl.QueryBuilder("events")
+          .window("w1", partition_by="user", order_by="ts", rows=16)
+          .window("w2", partition_by="user", order_by="ts", rows=64)
+          .select(s1=dsl.sum_(dsl.col("amount")).over("w1"),
+                  a1=dsl.avg_(dsl.col("amount")).over("w1"),
+                  l1=dsl.last_(dsl.col("amount")).over("w1"),
+                  s2=dsl.sum_(dsl.col("amount")).over("w2"),
+                  x2=dsl.max_(dsl.col("lat")).over("w2")))
+    for d in range(n_joins):
+        qb.last_join(f"dim{d}", on=f"m{d}", order_by="dts")
+        qb.select(**{f"ja{d}": dsl.tbl(f"dim{d}").a,
+                     f"jb{d}": dsl.tbl(f"dim{d}").b})
+    eng.deploy("bench", qb, warm_buckets=(REQ_BATCH,))
+    return eng, (keys, ts, rows)
+
+
+def run_phase(eng, data, *, seed=11) -> Dict[str, float]:
+    keys, ts, rows = data
+    rng = np.random.default_rng(seed)
+    t_hi = float(ts.max())
+    lats, n = [], 0
+    t_start = time.perf_counter()
+    for b in range(N_REQ_BATCHES):
+        idx = rng.integers(0, len(keys), REQ_BATCH)
+        rk = keys[idx].tolist()
+        rt = np.full(REQ_BATCH, t_hi + 1.0 + b, np.float32).tolist()
+        rr = rows[idx]                      # join probe keys ride along
+        t0 = time.perf_counter()
+        eng.request("bench", rk, rt, rows=rr)
+        lats.append(time.perf_counter() - t0)
+        n += REQ_BATCH
+    wall = time.perf_counter() - t_start
+    lat = np.asarray(lats)
+    return {"qps": n / wall,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3)}
+
+
+def run(rep: Reporter) -> dict:
+    engines = {}
+    for n in JOIN_COUNTS:
+        engines[n] = build_engine(n)
+        run_phase(*engines[n], seed=99)     # warm every bucket/path
+
+    launches = {n: engines[n][0].handle("bench").phys.n_kernel_launches
+                for n in JOIN_COUNTS}
+    base_pre = run_phase(*engines[0])
+    joined = {n: run_phase(*engines[n]) for n in JOIN_COUNTS if n > 0}
+    base_post = run_phase(*engines[0])
+    for eng, _ in engines.values():
+        eng.close()
+
+    base_p50 = 0.5 * (base_pre["p50_ms"] + base_post["p50_ms"])
+    results = {0: {"qps": 0.5 * (base_pre["qps"] + base_post["qps"]),
+                   "p50_ms": base_p50,
+                   "p99_ms": 0.5 * (base_pre["p99_ms"]
+                                    + base_post["p99_ms"]),
+                   "launches": launches[0], "extra_launches": 0}}
+    for n, r in joined.items():
+        results[n] = {**r, "launches": launches[n],
+                      "extra_launches": launches[n] - launches[0],
+                      "p50_vs_baseline": r["p50_ms"] / base_p50}
+        rep.add(f"lastjoin/joins={n}", 1e6 / r["qps"],
+                qps=round(r["qps"], 1), p50_ms=round(r["p50_ms"], 3),
+                p99_ms=round(r["p99_ms"], 3),
+                p50_vs_baseline=round(r["p50_ms"] / base_p50, 3),
+                launches=launches[n])
+    rep.add("lastjoin/baseline_bracketed", 1e6 / results[0]["qps"],
+            qps=round(results[0]["qps"], 1),
+            p50_ms=round(base_p50, 3),
+            p50_ms_pre=round(base_pre["p50_ms"], 3),
+            p50_ms_post=round(base_post["p50_ms"], 3))
+
+    summary = {
+        "quick": QUICK,
+        "join_counts": list(JOIN_COUNTS),
+        "by_joins": {str(n): results[n] for n in JOIN_COUNTS},
+        "baseline_bracket": {"pre": base_pre, "post": base_post},
+        "p50_ratio_3_vs_0": results[3]["p50_ms"] / base_p50,
+        # acceptance views (ISSUE 4)
+        "three_joins_within_2_5x": results[3]["p50_ms"] < 2.5 * base_p50,
+        "one_extra_launch_per_join": all(
+            results[n]["extra_launches"] == n for n in JOIN_COUNTS),
+    }
+    if not summary["one_extra_launch_per_join"]:
+        # launch accounting is structural — a miscount is a bug, not noise
+        raise RuntimeError(
+            f"per-join launch accounting broke: "
+            f"{({n: results[n]['extra_launches'] for n in JOIN_COUNTS})}")
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(summary, f, indent=1)
+    return summary
+
+
+if __name__ == "__main__":
+    r = Reporter()
+    out = run(r)
+    print(r.emit())
+    print(json.dumps({k: v for k, v in out.items() if k != "by_joins"},
+                     indent=1))

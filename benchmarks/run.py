@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
-                         "stream,hotswap,multiwindow")
+                         "stream,hotswap,multiwindow,lastjoin")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-size smoke mode (CI): same code paths, "
                          "~10x less work; numbers are tripwires only")
@@ -68,6 +68,9 @@ def main(argv=None) -> int:
     if want("multiwindow"):
         from benchmarks import bench_multiwindow as b9
         results["multiwindow"] = b9.run(rep)
+    if want("lastjoin"):
+        from benchmarks import bench_lastjoin as b10
+        results["lastjoin"] = b10.run(rep)
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",
@@ -76,7 +79,80 @@ def main(argv=None) -> int:
     with open(args.out, "w") as f:
         json.dump({"rows": [(n, u, d) for n, u, d in rep.rows],
                    "results": results}, f, indent=1, default=str)
+    summarize_benches()
     return 0
+
+
+# ---------------------------------------------------------------------------
+# cross-PR perf trajectory: experiments/BENCH_summary.json
+# ---------------------------------------------------------------------------
+
+def _headline(name: str, doc: dict):
+    """Extract one headline {qps, p50_ms, p99_ms} row from a per-bench
+    JSON. Known schemas are pulled exactly; anything else falls back to
+    the first nested dict carrying qps+latency keys."""
+    if name == "multiwindow" and "by_specs" in doc:
+        top = doc["by_specs"][max(doc["by_specs"], key=int)]
+        return {"qps": top["fused"]["qps"],
+                "p50_ms": top["fused"]["p50_ms"],
+                "p99_ms": top["fused"]["p99_ms"],
+                "detail": f"fused, {top['n_specs']} specs"}
+    if name == "lastjoin" and "by_joins" in doc:
+        top = doc["by_joins"][max(doc["by_joins"], key=int)]
+        return {"qps": top["qps"], "p50_ms": top["p50_ms"],
+                "p99_ms": top["p99_ms"],
+                "detail": f"{top['extra_launches']} joined table(s)"}
+
+    def find(d):
+        if isinstance(d, dict):
+            keys = set(d)
+            if "qps" in keys and ({"p50_ms", "p99_ms"} & keys
+                                  or "p50_batch_ms" in keys):
+                return {"qps": d["qps"],
+                        "p50_ms": d.get("p50_ms", d.get("p50_batch_ms")),
+                        "p99_ms": d.get("p99_ms", d.get("p99_batch_ms"))}
+            for v in d.values():
+                r = find(v)
+                if r is not None:
+                    return r
+        return None
+
+    return find(doc)
+
+
+def summarize_benches(exp_dir: str = "experiments",
+                      out_name: str = "BENCH_summary.json") -> str:
+    """Aggregate every per-bench ``BENCH_*.json`` into one machine-readable
+    name -> headline (QPS/p50/p99) map, so the perf trajectory across PRs
+    is a single file diff instead of N schemas."""
+    import glob
+    summary = {}
+    for path in sorted(glob.glob(os.path.join(exp_dir, "BENCH_*.json"))):
+        fname = os.path.basename(path)
+        if fname == out_name:
+            continue
+        name = fname[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            summary[name] = {"error": str(e), "source": fname}
+            continue
+        head = _headline(name, doc)
+        summary[name] = {
+            **({k: round(v, 3) if isinstance(v, float) else v
+                for k, v in head.items()} if head else
+               {"error": "no qps/p50 headline found"}),
+            "quick": bool(doc.get("quick", False)) if isinstance(doc, dict)
+            else False,
+            "source": fname,
+        }
+    out_path = os.path.join(exp_dir, out_name)
+    os.makedirs(exp_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+    print(f"# wrote {out_path}: {sorted(summary)}", file=sys.stderr)
+    return out_path
 
 
 if __name__ == "__main__":

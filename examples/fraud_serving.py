@@ -1,8 +1,17 @@
-"""Real-time fraud detection — the paper's flagship use case, end to end:
+"""Real-time fraud detection — the paper's flagship use case, end to end,
+now MULTI-TABLE (DESIGN.md §8):
 
-synthetic transaction stream -> feature store -> offline training features
--> logistic scorer -> PREDICT() deployed in-query -> dynamic-batched
-serving with latency SLO.
+transactions stream  ──┐
+                       ├─ LAST JOIN merchants (point-in-time risk profile)
+merchant profiles  ────┘
+        -> window features + joined features -> offline training set
+        -> logistic scorer -> PREDICT() deployed in-query
+        -> dynamic-batched serving with latency SLO
+
+The merchant risk profile is re-published mid-stream: offline training
+sees each transaction joined against the profile that was live AT THAT
+TRANSACTION'S TIME (no leakage), while online serving joins the latest
+profile — the same plan, two execution modes.
 
     PYTHONPATH=src python examples/fraud_serving.py
 """
@@ -12,20 +21,70 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
 from repro.data.synthetic import (EventStreamConfig, generate_events,
                                   make_labels)
-from repro.launch.serve import FEATURE_SQL, build_engine
+from repro.featurestore.table import TableSchema
 from repro.serving.batcher import BatcherConfig
 from repro.serving.server import FeatureServer, ServerConfig
 
-N_EVENTS, N_KEYS = 20_000, 256
+N_EVENTS, N_KEYS, N_MERCHANTS = 20_000, 256, 12
 
-# ---- offline: features + labels -> train the scorer ----------------------
-engine = build_engine(N_EVENTS, N_KEYS)
+FEATURE_SQL = """
+SELECT
+  SUM(amount)   OVER w1 AS amt_sum_10,
+  AVG(amount)   OVER w1 AS amt_avg_10,
+  STD(amount)   OVER w1 AS amt_std_10,
+  COUNT(amount) OVER w2 AS txn_cnt_100,
+  MAX(amount)   OVER w2 AS amt_max_100,
+  merchants.risk   AS m_risk,
+  merchants.volume AS m_volume
+FROM events
+LAST JOIN merchants ORDER BY mts ON merchant
+WINDOW w1 AS (PARTITION BY user ORDER BY ts
+              ROWS BETWEEN 10 PRECEDING AND CURRENT ROW),
+       w2 AS (PARTITION BY user ORDER BY ts
+              ROWS BETWEEN 100 PRECEDING AND CURRENT ROW)
+"""
+
+# ---- two tables: transactions + merchant profiles -------------------------
+engine = Engine(OptFlags())
+engine.create_table(
+    TableSchema("events", key_col="user", ts_col="ts",
+                value_cols=("amount", "lat", "lon", "merchant")),
+    max_keys=N_KEYS, capacity=1024, bucket_size=64)
+engine.create_table(
+    TableSchema("merchants", key_col="merchant", ts_col="mts",
+                value_cols=("risk", "volume")),
+    max_keys=N_MERCHANTS, capacity=64, bucket_size=8)
+
 keys, ts, rows = generate_events(
-    EventStreamConfig(n_events=N_EVENTS, n_keys=N_KEYS, n_features=6))
-y_all = make_labels(keys, ts, rows, amount_thresh=35.0, dist_thresh=2.5)
+    EventStreamConfig(n_events=N_EVENTS, n_keys=N_KEYS, n_features=4))
+engine.insert("events", keys.tolist(), ts.tolist(), rows)
 
+# merchant risk profiles, re-published mid-stream (risk regime change)
+rng = np.random.default_rng(7)
+risk_epochs = rng.uniform(0, 1, (2, N_MERCHANTS)).astype(np.float32)
+t_mid = float(ts[N_EVENTS // 2])
+for epoch, t0 in enumerate((float(ts[0]), t_mid)):
+    engine.insert(
+        "merchants", list(range(N_MERCHANTS)), [t0] * N_MERCHANTS,
+        np.stack([risk_epochs[epoch],
+                  rng.uniform(10, 500, N_MERCHANTS)], -1)
+        .astype(np.float32))
+
+# labels: planted per-user rule + risky-merchant rule (epoch-aware, so the
+# JOINED feature is genuinely predictive and point-in-time matters)
+mid = rows[:, 3].astype(np.int64)
+risk_at_event = np.where(ts >= t_mid, risk_epochs[1][mid],
+                         risk_epochs[0][mid])
+y_all = make_labels(keys, ts, rows, amount_thresh=60.0, dist_thresh=4.0)
+y_all = np.maximum(y_all, ((risk_at_event > 0.8)
+                           & (rows[:, 0] > 25.0)).astype(np.float32))
+
+# ---- offline: point-in-time features (windows + join) -> train ------------
+engine.deploy("fraud_features", FEATURE_SQL)
 off = engine.query_offline("fraud_features")
 names = sorted(n for n in off if not n.startswith("__"))
 X = np.stack([off[n] for n in names], -1)
@@ -38,26 +97,25 @@ for _ in range(300):
     p = 1 / (1 + np.exp(-(Xn @ w + b)))
     w -= 1.0 * (Xn.T @ (p - y) / len(y)).astype(np.float32)
     b -= 1.0 * float(np.mean(p - y))
-print(f"trained scorer on {len(y)} point-in-time rows; "
+print(f"trained scorer on {len(y)} point-in-time rows "
+      f"({len(names)} features incl. joined {', '.join(n for n in names if n.startswith('m_'))}); "
       f"base rate {y.mean():.3f}, mean score on positives "
       f"{p[y == 1].mean():.3f} vs negatives {p[y == 0].mean():.3f}")
 
-# ---- deploy PREDICT() over the SAME feature definition --------------------
+# ---- deploy PREDICT() over the SAME two-table definition ------------------
 def scorer(params, feats):
     wj, bj = params
     return 1 / (1 + jnp.exp(-(((feats - mu) / sd) @ wj + bj)))
 
 engine.register_model("fraud", scorer, (jnp.asarray(w), jnp.asarray(b)))
 head, window = FEATURE_SQL.strip().split("FROM events")
-# deploy returns a versioned DeploymentHandle; warm_buckets pre-compiles
-# every power-of-2 shape bucket BEFORE the version goes live, so no
-# serving request ever pays a JIT compile (DESIGN.md §6)
 handle = engine.deploy("fraud_scored",
                        head + ", PREDICT(fraud, " + ", ".join(names)
                        + ") AS score FROM events" + window,
                        warm_buckets=(1, 2, 4, 8, 16, 32, 64))
 print(f"deployed {handle.tag} [{handle.state}], "
       f"{len(handle._fns)} executables pre-warmed")
+print(engine.explain("fraud_scored"))
 
 # ---- online: dynamic-batched serving with deadline SLO --------------------
 lat = []
@@ -70,8 +128,10 @@ with FeatureServer(engine, "fraud_scored",
     def client(i):
         t0 = time.perf_counter()
         try:
+            # the request row carries the in-flight transaction, incl.
+            # the merchant id the LAST JOIN probes
             r = server.request(int(keys[i]), float(ts.max()) + 1 + i,
-                               timeout=60.0)
+                               row=rows[i], timeout=60.0)
         except Exception as e:        # pragma: no cover - report & continue
             print("request failed:", e)
             return
@@ -90,7 +150,8 @@ with FeatureServer(engine, "fraud_scored",
 
 lat_ms = np.asarray(lat) * 1e3
 print(f"\nserved {len(scores)} concurrent requests in {wall:.3f}s "
-      f"({len(scores) / wall:,.0f} QPS)")
+      f"({len(scores) / wall:,.0f} QPS), each LAST JOINed against the "
+      f"live merchant profile")
 print(f"client latency p50={np.percentile(lat_ms, 50):.2f}ms "
       f"p99={np.percentile(lat_ms, 99):.2f}ms "
       f"(mean batch {server.batcher.mean_batch:.1f})")

@@ -7,13 +7,19 @@ OpenMLDB feature-query subset the paper exercises::
            SUM(amount)   OVER w  AS amt_sum,
            AVG(amount)   OVER w  AS amt_avg,
            COUNT(*)      OVER w2 AS n_recent,
-           PREDICT(fraud_model, amt_sum, amt_avg, n_recent) AS score
+           merchants.risk        AS m_risk,
+           PREDICT(fraud_model, amt_sum, amt_avg, n_recent, m_risk) AS score
     FROM events
+    LAST JOIN merchants ORDER BY mts ON merchant
     WHERE amount >= 0
     WINDOW w  AS (PARTITION BY user_id ORDER BY ts
                   ROWS BETWEEN 100 PRECEDING AND CURRENT ROW),
            w2 AS (PARTITION BY user_id ORDER BY ts
                   RANGE BETWEEN 3600 PRECEDING AND CURRENT ROW)
+
+``LAST JOIN`` is the relational tier's point-in-time enrichment
+(DESIGN.md §8): the latest right-table row with ORDER-BY-timestamp ≤ the
+request timestamp, probed through the right table's declared join key.
 """
 from __future__ import annotations
 
@@ -22,10 +28,11 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.core import expr as E
-from repro.core.logical import Predict, Query
+from repro.core.logical import Join, Predict, Query
 
-__all__ = ["Ex", "col", "lit", "sum_", "count_", "avg_", "min_", "max_",
-           "std_", "var_", "first_", "last_", "QueryBuilder", "parse_sql"]
+__all__ = ["Ex", "col", "lit", "tbl", "TableRef", "sum_", "count_", "avg_",
+           "min_", "max_", "std_", "var_", "first_", "last_",
+           "QueryBuilder", "parse_sql"]
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +105,36 @@ def col(name: str) -> Ex:
     return Ex(E.Col(name))
 
 
+class TableRef:
+    """``t.col`` disambiguation for joined tables.
+
+    ``tbl("merchants").rating`` (or ``tbl("merchants")["rating"]``) builds
+    a qualified column reference ``Col("merchants.rating")`` — required
+    when an unqualified name is ambiguous across the main table and the
+    LAST JOINed tables, handy always.
+    """
+
+    __slots__ = ("_name",)
+
+    def __init__(self, name: str):
+        object.__setattr__(self, "_name", name)
+
+    def __getattr__(self, column: str) -> Ex:
+        if column.startswith("_"):
+            raise AttributeError(column)
+        return Ex(E.Col(f"{self._name}.{column}"))
+
+    def __getitem__(self, column: str) -> Ex:
+        return Ex(E.Col(f"{self._name}.{column}"))
+
+    def __repr__(self) -> str:
+        return f"TableRef({self._name!r})"
+
+
+def tbl(name: str) -> TableRef:
+    return TableRef(name)
+
+
 def lit(v: float) -> Ex:
     return Ex(E.Lit(float(v)))
 
@@ -154,6 +191,20 @@ class QueryBuilder:
         self._windows: List[Tuple[str, E.WindowSpec]] = []
         self._where: Optional[E.Expr] = None
         self._predict: Optional[Predict] = None
+        self._joins: List[Join] = []
+
+    def last_join(self, table: str, *, on: str,
+                  order_by: Optional[str] = None) -> "QueryBuilder":
+        """Point-in-time LAST JOIN against ``table``.
+
+        ``on`` names the main-table column holding ``table``'s keys (a
+        declared join key of the right table); ``order_by`` is the right
+        table's timestamp column — mandatory, because LAST JOIN selects
+        the latest right row with that timestamp <= the request time.
+        Reference joined columns as ``tbl(table).column``.
+        """
+        self._joins.append(Join(table=table, on=on, order_by=order_by))
+        return self
 
     def window(self, name: str, *, partition_by: str, order_by: str,
                rows: Optional[int] = None,
@@ -180,7 +231,7 @@ class QueryBuilder:
     def build(self) -> Query:
         return Query(table=self._table, outputs=tuple(self._outputs),
                      windows=tuple(self._windows), where=self._where,
-                     predict=self._predict)
+                     predict=self._predict, joins=tuple(self._joins))
 
 
 # ---------------------------------------------------------------------------
@@ -194,10 +245,13 @@ _TOKEN_RE = re.compile(r"""
   | (?P<op><=|>=|!=|<>|==|[-+*/%(),.<>=])
 """, re.VERBOSE)
 
+# NOTE: "last" is deliberately NOT a keyword (LAST(x) OVER w is an
+# aggregate call); the LAST JOIN clause is detected as the identifier
+# "last" followed by the keyword "join".
 _KEYWORDS = {
     "select", "from", "where", "window", "as", "partition", "by", "order",
     "rows", "range", "between", "preceding", "and", "current", "row", "or",
-    "not", "over", "predict",
+    "not", "over", "predict", "join", "on",
 }
 
 _AGG_NAMES = {
@@ -244,8 +298,9 @@ class _Parser:
         self._anon = 0
 
     # -- token helpers -----------------------------------------------------
-    def peek(self) -> _Tok:
-        return self.toks[self.i]
+    def peek(self, ahead: int = 0) -> _Tok:
+        j = self.i + ahead
+        return self.toks[j] if j < len(self.toks) else self.toks[-1]
 
     def next(self) -> _Tok:
         t = self.toks[self.i]
@@ -283,6 +338,10 @@ class _Parser:
                 break
         self.expect("kw", "from")
         table = self.expect("id").text
+        joins: List[Join] = []
+        while (self.peek().kind == "id" and self.peek().text.lower() == "last"
+               and self.peek(1).kind == "kw" and self.peek(1).text == "join"):
+            joins.append(self._last_join())
         where = None
         if self.accept("kw", "where"):
             where = self._expr()
@@ -313,11 +372,48 @@ class _Parser:
             predict = Predict(model, tuple(feats), out)
         return Query(table=table, outputs=tuple(outputs),
                      windows=tuple(windows), where=where,
-                     predict=predict)
+                     predict=predict, joins=tuple(joins))
 
     def _anon_name(self) -> str:
         self._anon += 1
         return f"_col{self._anon}"
+
+    def _colname(self, strip_table: Optional[str] = None) -> str:
+        """Possibly-qualified column name ``id[.id]``. When the qualifier
+        equals ``strip_table`` it is dropped (``m.ts`` in a join clause of
+        table ``m`` names its own ``ts`` column)."""
+        name = self.expect("id").text
+        if self.accept("op", "."):
+            field = self.expect("id").text
+            if strip_table is not None and name == strip_table:
+                return field
+            return f"{name}.{field}"
+        return name
+
+    def _last_join(self) -> Join:
+        """``LAST JOIN <table> [ORDER BY <ts_col>] ON <key> [ORDER BY ...]``
+
+        ORDER BY is accepted on either side of ON (OpenMLDB writes it
+        before); it is mandatory for point-in-time semantics, but the
+        missing-order_by error is raised by ``logical.validate`` so SQL
+        and builder queries share one actionable message.
+        """
+        self.next()                       # "last" (id)
+        self.expect("kw", "join")
+        jtable = self.expect("id").text
+
+        def order_clause() -> Optional[str]:
+            if self.accept("kw", "order"):
+                self.expect("kw", "by")
+                return self._colname(strip_table=jtable)
+            return None
+
+        order_by = order_clause()
+        self.expect("kw", "on")
+        on = self._colname(strip_table=jtable)
+        if order_by is None:
+            order_by = order_clause()
+        return Join(table=jtable, on=on, order_by=order_by)
 
     def _select_item(self):
         if self.peek().kind == "kw" and self.peek().text == "predict":
@@ -347,10 +443,10 @@ class _Parser:
         self.expect("op", "(")
         self.expect("kw", "partition")
         self.expect("kw", "by")
-        part = self.expect("id").text
+        part = self._colname()
         self.expect("kw", "order")
         self.expect("kw", "by")
-        order = self.expect("id").text
+        order = self._colname()
         rows = rng = None
         if self.accept("kw", "rows"):
             rows = int(self._frame_bound())
@@ -442,6 +538,10 @@ class _Parser:
             low = t.text.lower()
             if self.peek().kind == "op" and self.peek().text == "(":
                 return self._call(low)
+            if (self.peek().kind == "op" and self.peek().text == "."
+                    and self.peek(1).kind == "id"):
+                self.next()                      # "." — qualified t.col ref
+                return E.Col(f"{t.text}.{self.next().text}")
             return E.Col(t.text)
         raise SyntaxError(f"unexpected token {t.text!r} at char {t.pos}")
 

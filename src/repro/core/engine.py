@@ -44,7 +44,8 @@ from repro.core.results import (STATUS_OK, STATUS_UNKNOWN_KEY,
                                 DeadlineExceeded, FeatureFrame,
                                 RequestContext)
 from repro.featurestore.registry import FeatureRegistry, FeatureSet
-from repro.featurestore.table import Table, TableSchema
+from repro.featurestore.table import Table, TableSchema, TableSnapshot
+from repro.relational.catalog import Catalog
 
 __all__ = ["Engine", "Deployment", "DeploymentHandle", "HandleMetrics",
            "EngineStats"]
@@ -110,6 +111,11 @@ class DeploymentHandle:
         self.phys = phys
         self.opt_log = opt_log
         self.table = table
+        # right tables of the plan's LAST JOINs, in probe order (the
+        # optimizer ordered them); resolved once so the hot path never
+        # touches the catalog
+        self.join_tables: Tuple[Table, ...] = tuple(
+            engine.catalog.get(j.table).table for j in plan.joins)
         self.state = self.BUILDING
         self.metrics = HandleMetrics()
         self.buckets_seen: Set[int] = set()
@@ -168,7 +174,11 @@ class DeploymentHandle:
                 jnp.zeros((bucket,), jnp.int32),
                 jnp.zeros((bucket,), jnp.float32),
                 jnp.zeros((bucket, V), jnp.float32),
-                eng._predict_params(self))
+                eng._predict_params(self),
+                tuple((jt.snapshot().state,
+                       jnp.zeros((bucket,), jnp.int32),
+                       jnp.zeros((bucket,), jnp.bool_))
+                      for jt in self.join_tables))
             jax.block_until_ready(dummy)
             return jit_fn
 
@@ -193,6 +203,46 @@ class DeploymentHandle:
     def release(self) -> None:
         """Drop owned executables (memory reclamation for old versions)."""
         self._fns.clear()
+
+    # ---------------------------------------------------------------- joins
+    def join_snapshots(self) -> Tuple[TableSnapshot, ...]:
+        """One consistent snapshot per joined table (probe order). A batch
+        (or a whole offline materialisation) must join against a single
+        version of each right table regardless of concurrent ingest."""
+        return tuple(jt.snapshot() for jt in self.join_tables)
+
+    def _resolve_join_keys(self, row_arr: np.ndarray) -> List[Tuple]:
+        """Per join: ``(right_key_index (B,) i32, found (B,) bool)``.
+
+        Probe values come from the request rows' ``on`` column; integer
+        key batches resolve through the right table's device-resident
+        key directory (one jitted probe), anything else falls back to
+        the host dict — the same contract as the main-table lookup.
+        Unknown keys come back ``found=False`` and are masked to zero
+        joined columns by the executor.
+        """
+        out: List[Tuple] = []
+        for j, jt in zip(self.plan.joins, self.join_tables):
+            ci = self.table.schema.col_index(j.on)
+            vals = np.asarray(row_arr[:, ci], np.float64)
+            ki = np.rint(vals).astype(np.int64)
+            integral = np.abs(vals - ki) < 1e-6
+            kd = jt.keydir
+            if bool(integral.all()) and kd.covers(ki):
+                kidx, found = kd.lookup(ki)
+            else:
+                B = len(ki)
+                kidx = np.zeros(B, np.int32)
+                found = np.zeros(B, np.bool_)
+                k2i = jt.key_to_idx
+                for i in range(B):
+                    if integral[i]:
+                        idx = k2i.get(int(ki[i]))
+                        if idx is not None:
+                            kidx[i] = idx
+                            found[i] = True
+            out.append((kidx, found))
+        return out
 
     # --------------------------------------------------------------- serve
     def request(self, keys: Sequence, ts: Sequence[float],
@@ -280,18 +330,33 @@ class DeploymentHandle:
                     kidx[i] = idx
         ts_arr = np.asarray(ts, np.float32)
         V = len(table.schema.value_cols)
+        if rows is None and self.plan.joins:
+            # the no-row zero default would silently probe right-table
+            # key 0 for every request — plausible-but-wrong joined
+            # features, so joined deployments require the request row
+            raise ValueError(
+                f"deployment {self.name!r} has {len(self.plan.joins)} "
+                f"LAST JOIN(s); online requests must pass rows= — the "
+                f"join probes read the request row's "
+                f"{sorted({j.on for j in self.plan.joins})} column(s), "
+                f"and the zero-row default would probe key 0 instead")
         row_arr = (np.asarray(rows, np.float32) if rows is not None
                    else np.zeros((B, V), np.float32))
         plan_before = eng.cache.tag_stats(self.tag).compile_seconds
         # one snapshot per request regardless of execution strategy: a
         # pooled/rowwise request must not mix table versions mid-response
+        # (join snapshots included — every joined table is pinned too)
         snap = table.snapshot()
+        jsnaps = self.join_snapshots()
         if eng.flags.parallel_workers > 1 and eng._pool is not None:
-            out = eng._request_pooled(self, kidx, ts_arr, row_arr, snap)
+            out = eng._request_pooled(self, kidx, ts_arr, row_arr, snap,
+                                      join_snaps=jsnaps)
         elif not eng.flags.vectorized:
-            out = eng._request_rowwise(self, kidx, ts_arr, row_arr, snap)
+            out = eng._request_rowwise(self, kidx, ts_arr, row_arr, snap,
+                                       join_snaps=jsnaps)
         else:
-            out = eng._request_batched(self, kidx, ts_arr, row_arr, snap=snap)
+            out = eng._request_batched(self, kidx, ts_arr, row_arr,
+                                       snap=snap, join_snaps=jsnaps)
         if found is not None:
             status = np.where(np.asarray(found), STATUS_OK,
                               STATUS_UNKNOWN_KEY).astype(np.int8)
@@ -332,6 +397,7 @@ class Engine:
                  max_retained_versions: int = 2):
         self.flags = flags
         self.tables: Dict[str, Table] = {}
+        self.catalog = Catalog()        # relational tier (DESIGN.md §8)
         self.models: Dict[str, Callable] = {}
         self.model_params: Dict[str, object] = {}
         self.deployments: Dict[str, DeploymentHandle] = {}
@@ -358,11 +424,19 @@ class Engine:
 
     # ------------------------------------------------------------------ DDL
     def create_table(self, schema: TableSchema, *, max_keys: int = 1024,
-                     capacity: int = 1024, bucket_size: int = 64) -> Table:
+                     capacity: int = 1024, bucket_size: int = 64,
+                     join_keys: Sequence[str] = ()) -> Table:
+        """Create a table and register it in the relational catalog.
+
+        ``join_keys`` declares which columns LAST JOIN may probe; the
+        partition key is always declared (it is what the device key
+        directory indexes) and is currently the only supported choice.
+        """
         if schema.name in self.tables:
             raise ValueError(f"table {schema.name!r} exists")
         t = Table(schema, max_keys=max_keys, capacity=capacity,
                   bucket_size=bucket_size, enable_preagg=self.flags.preagg)
+        self.catalog.register(t, join_keys=join_keys)
         self.tables[schema.name] = t
         self.registry.register_schema(schema)
         return t
@@ -488,10 +562,14 @@ class Engine:
                              bucket_size=table.bucket_size,
                              n_value_cols=len(table.schema.value_cols),
                              has_preagg=table.preagg is not None)
-            plan, log = optimize(q.to_logical(), meta, self.flags)
+            plan, log = optimize(q.to_logical(), meta, self.flags,
+                                 catalog=self.catalog)
             phys = compile_plan(plan, table.schema, flags=self.flags,
                                 bucket_size=table.bucket_size,
-                                model_fns=self.models)
+                                model_fns=self.models,
+                                join_schemas={j.table:
+                                              self.catalog.schema(j.table)
+                                              for j in plan.joins})
             self.stats.plan_s += time.perf_counter() - t1
 
             prev = self.deployments.get(name)
@@ -646,6 +724,18 @@ class Engine:
                  f"on table {dep.table.schema.name!r}"]
         lines += [f"  plan: {dep.plan.fingerprint()[:160]}"]
         lines += [f"  opt : {l}" for l in dep.opt_log]
+        if dep.plan.joins:
+            lines.append(f"  join probe order: "
+                         f"{' -> '.join(j.table for j in dep.plan.joins)}")
+            for j, jt in zip(dep.plan.joins, dep.join_tables):
+                kd = ("device-keydir" if jt.keydir.active
+                      else "host-dict(fallback)")
+                kept = j.columns or jt.schema.value_cols
+                pruned = [c for c in jt.schema.value_cols if c not in kept]
+                lines.append(
+                    f"  join {j.table}: LAST JOIN on={j.on} "
+                    f"order_by={j.order_by} cols={list(kept)} "
+                    f"pruned={pruned} keydir={kd}")
         for g in dep.phys.groups:
             lines.append(f"  window {g.name}: impl={g.impl} "
                          f"cols={g.plain_cols} fields={g.fields} "
@@ -690,11 +780,19 @@ class Engine:
         return self.handle(name, pin).request(keys, ts, rows, ctx=ctx)
 
     def _request_batched(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
-                         snap=None, record_bucket: bool = True
-                         ) -> Dict[str, np.ndarray]:
+                         snap=None, record_bucket: bool = True,
+                         join_snaps=None) -> Dict[str, np.ndarray]:
         B = len(kidx)
         bucket = bucket_batch(B)
         fn = dep._compiled(bucket, record=record_bucket)
+        # resolve join probe keys BEFORE padding (from the live B rows);
+        # per-join snapshots default here so direct callers are covered,
+        # while _serve/query_offline pass one consistent set per request
+        jin = ()
+        if dep.join_tables:
+            if join_snaps is None:
+                join_snaps = dep.join_snapshots()
+            resolved = dep._resolve_join_keys(row_arr)
         pad = bucket - B
         if pad:
             # kidx may already live on device (keydir fast path)
@@ -702,6 +800,16 @@ class Engine:
             kidx = pad_fn(kidx, (0, pad))
             ts_arr = np.pad(ts_arr, (0, pad))
             row_arr = np.pad(row_arr, ((0, pad), (0, 0)))
+        if dep.join_tables:
+            jlist = []
+            for (jk, jf), jsnap in zip(resolved, join_snaps):
+                if pad:
+                    jk_pad = jnp.pad if isinstance(jk, jax.Array) else np.pad
+                    jf_pad = jnp.pad if isinstance(jf, jax.Array) else np.pad
+                    jk = jk_pad(jk, (0, pad))      # pad rows probe key 0,
+                    jf = jf_pad(jf, (0, pad))      # masked found=False
+                jlist.append((jsnap.state, jnp.asarray(jk), jnp.asarray(jf)))
+            jin = tuple(jlist)
         # One snapshot for the whole batch: a concurrent stream flush must
         # not swap the table out from under an in-flight query. Callers
         # that span several batches (query_offline) pass their own.
@@ -710,7 +818,7 @@ class Engine:
         t0 = time.perf_counter()
         out = fn(snap.state, snap.preagg, jnp.asarray(kidx),
                  jnp.asarray(ts_arr), jnp.asarray(row_arr),
-                 self._predict_params(dep))
+                 self._predict_params(dep), jin)
         out = jax.block_until_ready(out)
         self.stats.exec_s += time.perf_counter() - t0
         self.stats.n_requests += B
@@ -719,17 +827,17 @@ class Engine:
         return {n: np.asarray(a)[:B] for n, a in out.items()}
 
     def _request_rowwise(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
-                         snap=None) -> Dict[str, np.ndarray]:
+                         snap=None, join_snaps=None) -> Dict[str, np.ndarray]:
         """Paper-faithful per-request execution (ablation: vectorized off)."""
         outs: List[Dict[str, np.ndarray]] = []
         for i in range(len(kidx)):
             outs.append(self._request_batched(
                 dep, kidx[i:i + 1], ts_arr[i:i + 1], row_arr[i:i + 1],
-                snap=snap))
+                snap=snap, join_snaps=join_snaps))
         return {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
 
     def _request_pooled(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
-                        snap=None) -> Dict[str, np.ndarray]:
+                        snap=None, join_snaps=None) -> Dict[str, np.ndarray]:
         """Worker-pool fan-out (paper O4 'parallel processing')."""
         W = self.flags.parallel_workers
         n = len(kidx)
@@ -740,11 +848,11 @@ class Engine:
             if self.flags.vectorized:
                 futs.append(self._pool.submit(
                     self._request_batched, dep, kidx[sl], ts_arr[sl],
-                    row_arr[sl], snap=snap))
+                    row_arr[sl], snap=snap, join_snaps=join_snaps))
             else:
                 futs.append(self._pool.submit(
                     self._request_rowwise, dep, kidx[sl], ts_arr[sl],
-                    row_arr[sl], snap=snap))
+                    row_arr[sl], snap=snap, join_snaps=join_snaps))
         outs = [f.result() for f in futs]
         return {nme: np.concatenate([o[nme] for o in outs])
                 for nme in outs[0]}
@@ -762,8 +870,10 @@ class Engine:
         # one snapshot for BOTH enumeration and execution: concurrent
         # stream flushes must not shift the table between building the
         # (key, ts) list and computing its features (point-in-time
-        # guarantee under live ingest)
+        # guarantee under live ingest). Joined tables are pinned the same
+        # way — every offline row joins against ONE right-table version.
         offline_snap = table.snapshot()
+        offline_jsnaps = dep.join_snapshots()
         st = offline_snap.state
         totals = np.asarray(st.total)
         C = table.capacity
@@ -793,7 +903,8 @@ class Engine:
                 sl = slice(s, s + batch_size)
                 outs.append(self._request_batched(
                     dep, kidx[sl], ts_all[sl], rows_all[sl],
-                    snap=offline_snap, record_bucket=False))
+                    snap=offline_snap, record_bucket=False,
+                    join_snaps=offline_jsnaps))
         finally:
             self.flags = saved
         res = {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}

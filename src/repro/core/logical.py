@@ -23,6 +23,7 @@ __all__ = [
     "LogicalPlan",
     "Scan",
     "Filter",
+    "Join",
     "WindowProject",
     "Predict",
     "Query",
@@ -50,6 +51,34 @@ class Filter:
 
     def __repr__(self) -> str:
         return f"Filter({self.pred!r})"
+
+
+@dataclass(frozen=True)
+class Join:
+    """Point-in-time ``LAST JOIN`` against one right-hand table.
+
+    For every request the engine resolves ``on`` (a main-table column
+    holding right-table keys) through the right table's key directory and
+    selects the **latest** right row with ``order_by``-timestamp ≤ the
+    request timestamp — OpenMLDB's LAST JOIN semantics on ring buffers.
+    Joined columns enter the slot environment as ``"<table>.<col>"`` and
+    behave exactly like request-row columns downstream.
+
+    ``order_by`` is the right table's timestamp column; it is mandatory
+    (LAST JOIN without an ordering is ambiguous) and must equal the right
+    table's ``ts_col`` — the ring buffer is physically ordered by it.
+    ``columns`` is narrowed by the optimizer's join-aware column pruning;
+    ``()`` means "not yet pruned" (all right value columns).
+    """
+
+    table: str
+    on: str
+    order_by: Optional[str] = None
+    columns: Tuple[str, ...] = ()
+
+    def __repr__(self) -> str:
+        return (f"LastJoin({self.table},on={self.on},"
+                f"order_by={self.order_by},cols={list(self.columns)})")
 
 
 @dataclass(frozen=True)
@@ -95,6 +124,9 @@ class LogicalPlan:
     filter: Filter
     project: WindowProject
     predict: Optional[Predict] = None
+    # LAST JOINs in probe order (the optimizer's join-ordering pass sorts
+    # them by estimated right-table probe cost)
+    joins: Tuple[Join, ...] = field(default=())
     # Physical hints attached by the optimizer (not part of SQL semantics).
     # window name -> "naive" | "preagg" | "fused" (fused = member of the
     # deployment's single-scan multi-window launch)
@@ -102,8 +134,9 @@ class LogicalPlan:
 
     def fingerprint(self) -> str:
         """Stable structural fingerprint — the plan-cache key component."""
-        return (f"{self.scan!r}|{self.filter!r}|{self.project!r}|"
-                f"{self.predict!r}|{dict(self.window_impl)!r}")
+        return (f"{self.scan!r}|{self.filter!r}|{self.joins!r}|"
+                f"{self.project!r}|{self.predict!r}|"
+                f"{dict(self.window_impl)!r}")
 
     def with_(self, **kw) -> "LogicalPlan":
         return dataclasses.replace(self, **kw)
@@ -118,22 +151,28 @@ class Query:
     windows: Tuple[Tuple[str, E.WindowSpec], ...]
     where: Optional[E.Expr] = None
     predict: Optional[Predict] = None
+    joins: Tuple[Join, ...] = ()
 
     def to_logical(self) -> LogicalPlan:
         # Before optimization, scan conservatively requests every column
-        # referenced anywhere (pruning narrows this later).
+        # referenced anywhere (pruning narrows this later). Qualified
+        # "table.col" references belong to joined tables, never to the
+        # main scan.
         cols: Dict[str, None] = {}
         for _, e in self.outputs:
             for c in E.collect_columns(e):
-                cols.setdefault(c)
+                if "." not in c:
+                    cols.setdefault(c)
         if self.where is not None:
             for c in E.collect_columns(self.where):
-                cols.setdefault(c)
+                if "." not in c:
+                    cols.setdefault(c)
         plan = LogicalPlan(
             scan=Scan(self.table, tuple(cols)),
             filter=Filter(self.where),
             project=WindowProject(self.outputs, self.windows),
             predict=self.predict,
+            joins=self.joins,
         )
         validate(plan)
         return plan
@@ -141,6 +180,52 @@ class Query:
 
 def validate(plan: LogicalPlan) -> None:
     """Check window references + predict feature references resolve."""
+    # -- joins: structural checks that need no catalog ---------------------
+    seen_tables = set()
+    for j in plan.joins:
+        if j.table == plan.scan.table:
+            raise ValueError(
+                f"LAST JOIN of table {j.table!r} with itself is not "
+                f"supported; the right side must be a different table")
+        if j.table in seen_tables:
+            raise ValueError(
+                f"table {j.table!r} is LAST JOINed twice; join each right "
+                f"table at most once (alias support is a ROADMAP item)")
+        seen_tables.add(j.table)
+        if not j.order_by:
+            raise ValueError(
+                f"last_join on table {j.table!r} requires order_by: LAST "
+                f"JOIN is point-in-time — it selects the latest right-table "
+                f"row with timestamp <= the request timestamp, so the "
+                f"ordering column is part of the semantics. Pass "
+                f"order_by=<the right table's timestamp column>")
+    # Windows index the main table's (key, ts) only: a joined table's
+    # columns are per-request values and can neither partition nor order
+    # a window over the main ring buffer.
+    for wname, spec in plan.project.windows:
+        for role, c in (("partition_by", spec.partition_by),
+                        ("order_by", spec.order_by)):
+            if "." in c and c.split(".", 1)[0] in seen_tables:
+                raise ValueError(
+                    f"window {wname!r} {role.upper().replace('_', ' ')} "
+                    f"references joined-table column {c!r}; windows index "
+                    f"the main table's (key, ts) only — LAST JOIN results "
+                    f"are per-request values and cannot partition or order "
+                    f"a window. Partition/order by main-table columns, or "
+                    f"deploy the window query on {c.split('.', 1)[0]!r} "
+                    f"directly")
+    # Every qualified "table.col" reference must name a LAST JOINed table
+    # — deploy-time error, never a KeyError on the serving path.
+    for where, exprs in (("SELECT", [e for _, e in plan.project.outputs]),
+                         ("WHERE", [plan.filter.pred]
+                          if plan.filter.pred is not None else [])):
+        for e in exprs:
+            for c in E.collect_columns(e):
+                if "." in c and c.split(".", 1)[0] not in seen_tables:
+                    raise ValueError(
+                        f"{where} references qualified column {c!r}, but "
+                        f"table {c.split('.', 1)[0]!r} is not LAST JOINed "
+                        f"in this query (joined: {sorted(seen_tables)})")
     wmap = plan.project.window_map()
     for name, e in plan.project.outputs:
         for agg in E.collect_aggs(e):

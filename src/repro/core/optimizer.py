@@ -30,11 +30,12 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import expr as E
-from repro.core.logical import (Filter, LogicalPlan, Scan, WindowProject,
-                                validate)
+from repro.core.logical import (Filter, Join, LogicalPlan, Scan,
+                                WindowProject, validate)
 
 __all__ = ["OptFlags", "TableMeta", "optimize", "estimate_window_cost",
-           "pass_fuse_windows"]
+           "estimate_join_cost", "pass_fuse_windows", "pass_resolve_joins",
+           "pass_prune_join_columns", "pass_order_joins"]
 
 
 @dataclass(frozen=True)
@@ -401,12 +402,232 @@ def pass_fuse_windows(plan: LogicalPlan, log: List[str], *,
 
 
 # ---------------------------------------------------------------------------
+# Relational passes (LAST JOIN)
+# ---------------------------------------------------------------------------
+
+def _main_columns(schema) -> set:
+    return set(schema.value_cols) | {schema.ts_col, schema.key_col}
+
+
+def pass_resolve_joins(plan: LogicalPlan, log: List[str], *,
+                       catalog) -> LogicalPlan:
+    """Validate every LAST JOIN against the catalog and resolve column
+    references.
+
+    * the right table must be registered; ``on`` must be one of its
+      *declared* join keys AND a main-table value column (the left side
+      supplies the probe values);
+    * ``order_by`` must be the right table's timestamp column — the ring
+      buffer is physically ordered by it, which is what makes the
+      point-in-time lookup a masked argmax instead of a sort;
+    * unqualified column names that live only on one joined table are
+      qualified to ``"table.col"``; ambiguous names are rejected;
+    * window aggregates and WHERE may not reference joined columns
+      (windows scan the main ring; WHERE filters raw events).
+    """
+    if not plan.joins:
+        return plan
+    try:
+        main = catalog.get(plan.scan.table).schema
+    except KeyError as e:
+        raise ValueError(str(e)) from None
+    jmap = {}
+    for j in plan.joins:
+        try:
+            entry = catalog.get(j.table)
+        except KeyError:
+            raise ValueError(
+                f"LAST JOIN references unknown table {j.table!r}; "
+                f"registered tables: {list(catalog.tables())} "
+                f"(create_table first)") from None
+        if j.on not in entry.join_keys:
+            raise ValueError(
+                f"LAST JOIN {j.table!r} ON {j.on!r}: {j.on!r} is not a "
+                f"declared join key of {j.table!r} (declared: "
+                f"{sorted(entry.join_keys)}); joins must probe a declared "
+                f"key so they resolve through the table's key directory")
+        if j.on not in main.value_cols:
+            raise ValueError(
+                f"LAST JOIN {j.table!r} ON {j.on!r}: the main table "
+                f"{main.name!r} has no value column {j.on!r} to supply the "
+                f"probe keys (columns: {list(main.value_cols)})")
+        if j.order_by != entry.schema.ts_col:
+            raise ValueError(
+                f"LAST JOIN {j.table!r} ORDER BY {j.order_by!r}: the "
+                f"point-in-time ordering must be the right table's "
+                f"timestamp column {entry.schema.ts_col!r} — the ring "
+                f"buffer is physically ordered by it")
+        jmap[j.table] = entry.schema
+
+    main_cols = _main_columns(main)
+
+    def owners(name: str) -> List[str]:
+        return [t for t, rs in jmap.items() if name in rs.value_cols]
+
+    def check_no_join_cols(e: E.Expr, what: str) -> None:
+        for c in E.collect_columns(e):
+            if "." in c:
+                t = c.split(".", 1)[0]
+                if t in jmap:
+                    raise ValueError(
+                        f"{what} references joined column {c!r}; "
+                        f"{what.split()[0]} evaluates over main-table "
+                        f"events — joined columns are per-request values "
+                        f"and are out of scope there")
+            elif c not in main_cols and owners(c):
+                raise ValueError(
+                    f"{what} references column {c!r}, which only exists "
+                    f"on joined table(s) {owners(c)}; {what.split()[0]} "
+                    f"evaluates over main-table events — joined columns "
+                    f"are per-request values and are out of scope there")
+
+    def resolve(e: E.Expr) -> E.Expr:
+        if isinstance(e, E.Agg):
+            check_no_join_cols(
+                e.arg, f"window aggregate {e.func.value.upper()} over "
+                       f"{e.window!r}")
+            return e
+        if isinstance(e, E.Col):
+            n = e.name
+            if "." in n:
+                t, c = n.split(".", 1)
+                if t not in jmap:
+                    raise ValueError(
+                        f"qualified column {n!r} references table {t!r}, "
+                        f"which is not LAST JOINed in this query (joined: "
+                        f"{sorted(jmap)})")
+                if c not in jmap[t].value_cols:
+                    raise ValueError(
+                        f"joined table {t!r} has no value column {c!r}; "
+                        f"columns: {list(jmap[t].value_cols)}")
+                return e
+            if n in main_cols:
+                return e
+            own = owners(n)
+            if len(own) > 1:
+                raise ValueError(
+                    f"column {n!r} is ambiguous across joined tables "
+                    f"{sorted(own)}; qualify it as <table>.{n}")
+            if own:
+                return E.Col(f"{own[0]}.{n}")
+            return e
+        kids = tuple(resolve(c) for c in E.children(e))
+        return E.replace_children(e, kids)
+
+    n_qual = [0]
+
+    def resolve_counting(e: E.Expr) -> E.Expr:
+        before = sum(1 for x in E.walk(e)
+                     if isinstance(x, E.Col) and "." in x.name)
+        out = resolve(e)
+        after = sum(1 for x in E.walk(out)
+                    if isinstance(x, E.Col) and "." in x.name)
+        n_qual[0] += after - before
+        return out
+
+    outs = tuple((n, resolve_counting(e)) for n, e in plan.project.outputs)
+    if plan.filter.pred is not None:
+        check_no_join_cols(plan.filter.pred,
+                           "WHERE (raw-event filter before the join)")
+    for wname, spec in plan.project.windows:
+        for role, c in (("PARTITION BY", spec.partition_by),
+                        ("ORDER BY", spec.order_by)):
+            if c not in main_cols and (owners(c) or "." in c):
+                raise ValueError(
+                    f"window {wname!r} {role} references joined-table "
+                    f"column {c!r}; windows index the main table's "
+                    f"(key, ts) only — LAST JOIN results are per-request "
+                    f"values and cannot partition or order a window")
+    if n_qual[0]:
+        log.append(f"resolve_joins: qualified {n_qual[0]} joined column "
+                   f"reference(s)")
+    return plan.with_(project=dataclasses.replace(plan.project,
+                                                  outputs=outs))
+
+
+def pass_prune_join_columns(plan: LogicalPlan, log: List[str], *,
+                            catalog) -> LogicalPlan:
+    """Join-aware column pruning: each join carries only the right-table
+    columns the query references; a join nothing references is dropped
+    entirely (its probe + launch would be pure waste)."""
+    if not plan.joins:
+        return plan
+    used: Dict[str, Dict[str, None]] = {j.table: {} for j in plan.joins}
+    for _, e in plan.project.outputs:
+        for c in E.collect_columns(e):
+            if "." in c:
+                t, cc = c.split(".", 1)
+                if t in used:
+                    used[t].setdefault(cc)
+    joins: List[Join] = []
+    for j in plan.joins:
+        cols = tuple(used[j.table])
+        if not cols:
+            log.append(f"join_prune: dropped unused join {j.table!r} "
+                       f"(no joined column referenced)")
+            continue
+        full = catalog.get(j.table).schema.value_cols
+        dropped = [c for c in full if c not in cols]
+        if dropped:
+            log.append(f"join_prune: {j.table!r} -> {list(cols)} "
+                       f"(dropped {dropped})")
+        joins.append(dataclasses.replace(j, columns=cols))
+    return plan.with_(joins=tuple(joins))
+
+
+def estimate_join_cost(capacity: int, n_cols: int, *,
+                       assume_latest: bool) -> float:
+    """Elements-touched probe cost of one LAST JOIN (f32 reads/request):
+    the right ring block (C·n_cols), the timestamp scan (skipped on the
+    online fast path where the newest row wins), and the key-directory
+    probe."""
+    ts_cost = 0.0 if assume_latest else float(capacity)
+    return float(capacity) * n_cols + ts_cost + 2.0
+
+
+def pass_order_joins(plan: LogicalPlan, log: List[str], *,
+                     catalog, flags: OptFlags) -> LogicalPlan:
+    """Order joins by estimated right-table probe cost (cheapest first).
+
+    LAST JOINs here are independent probes off the request row (no join
+    chains yet), so ordering does not change results — it fixes the
+    launch order so the cheapest lookups complete first and the probe
+    order in EXPLAIN reflects the cost model.
+    """
+    if len(plan.joins) < 2:
+        return plan
+    costed = []
+    for j in plan.joins:
+        entry = catalog.get(j.table)
+        n_cols = len(j.columns or entry.schema.value_cols)
+        cost = estimate_join_cost(entry.table.capacity, n_cols,
+                                  assume_latest=flags.assume_latest)
+        costed.append((cost, j.table, j))
+    costed.sort(key=lambda x: (x[0], x[1]))
+    ordered = tuple(j for _, _, j in costed)
+    if ordered != plan.joins:
+        log.append("join_order: probe order "
+                   + " -> ".join(f"{t}({c:.0f})" for c, t, _ in costed))
+    return plan.with_(joins=ordered)
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
 def optimize(plan: LogicalPlan, meta: TableMeta,
-             flags: OptFlags = OptFlags()) -> Tuple[LogicalPlan, List[str]]:
+             flags: OptFlags = OptFlags(),
+             catalog=None) -> Tuple[LogicalPlan, List[str]]:
     log: List[str] = []
+    if plan.joins:
+        if catalog is None:
+            raise ValueError(
+                "plan contains LAST JOIN(s) but no relational catalog was "
+                "provided; joins validate against Catalog-declared join "
+                "keys (Engine passes its catalog automatically)")
+        # resolution is semantics (name binding + validation), not an
+        # optimization — it runs even with query_opt ablated
+        plan = pass_resolve_joins(plan, log, catalog=catalog)
     if flags.query_opt:
         plan = pass_constant_folding(plan, log)
         plan = pass_simplify_filter(plan, log)
@@ -414,6 +635,15 @@ def optimize(plan: LogicalPlan, meta: TableMeta,
         plan = pass_decompose_aggregates(plan, log)
         plan = pass_cse(plan, log)
         plan = pass_column_pruning(plan, log)
+        if plan.joins:
+            plan = pass_prune_join_columns(plan, log, catalog=catalog)
+            plan = pass_order_joins(plan, log, catalog=catalog, flags=flags)
+            if plan.filter.pred is not None and plan.joins:
+                # WHERE references main-table event columns only (resolve
+                # enforced it), so it stays pushed below every join on the
+                # raw scan — joined rows never widen the filtered set
+                log.append(f"filter_pushdown: WHERE stays on the main-table "
+                           f"scan below {len(plan.joins)} join(s)")
     else:
         log.append("query_opt disabled: plan executed as written")
     plan = pass_select_window_impl(plan, log, meta=meta, flags=flags)

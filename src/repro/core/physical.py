@@ -16,8 +16,14 @@ optimizer (``plan.window_impl``):
 
 The emitted executor is a pure function
 
-    executor(state, preagg, key_idx, req_ts, req_row, model_params)
+    executor(state, preagg, key_idx, req_ts, req_row, model_params,
+             join_inputs)
         -> {output_name: (B,) or (B, k) array}
+
+``join_inputs`` carries one ``(right_state, right_kidx, found)`` triple
+per LAST JOIN in plan order (empty tuple for single-table plans); each
+join costs exactly one extra kernel launch (``ops.last_join``) and its
+columns enter the scalar env as ``"table.col"`` request-level values.
 
 suitable for ``jax.jit`` (the plan cache owns compilation) and for
 ``shard_map``/``pjit`` batch sharding in the offline path. Column-gather
@@ -170,12 +176,29 @@ def _fill_slots(env: Dict[str, jax.Array], grp: WindowGroup,
 def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
                  flags: OptFlags = OptFlags(),
                  bucket_size: int,
-                 model_fns: Optional[Dict[str, Callable]] = None
+                 model_fns: Optional[Dict[str, Callable]] = None,
+                 join_schemas: Optional[Dict[str, TableSchema]] = None
                  ) -> PhysicalPlan:
     """Lower an optimized logical plan to an executor function."""
     model_fns = model_fns or {}
+    join_schemas = join_schemas or {}
     impl_map = dict(plan.window_impl)
     wmap = plan.project.window_map()
+
+    # ---- 0. LAST JOIN layout: per join, the right columns to gather and
+    # the slot-env names they land under (one kernel launch per join) ----
+    join_layout: List[Tuple[str, Tuple[int, ...], Tuple[str, ...]]] = []
+    for j in plan.joins:
+        rs = join_schemas.get(j.table)
+        if rs is None:
+            raise KeyError(
+                f"compile_plan: no schema supplied for joined table "
+                f"{j.table!r} (join_schemas has {sorted(join_schemas)})")
+        cols = j.columns or rs.value_cols
+        gather = tuple(rs.col_index(c) for c in cols)
+        names = tuple(f"{j.table}.{c}" for c in cols)
+        join_layout.append((j.table, gather, names))
+    join_layout_t = tuple(join_layout)
 
     # ---- 1. unique aggregates (CSE) -------------------------------------
     uniq: Dict[str, E.Agg] = {}
@@ -313,7 +336,7 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
             spec_fields=tuple(groups_t[i].fields for i in fused_idx),
             posmaps=tuple(posmaps))
     n_launches = (1 if fused_idx else 0) + sum(
-        1 for g in groups_t if g.impl != "fused")
+        1 for g in groups_t if g.impl != "fused") + len(join_layout_t)
 
     # ---- 3c. precomputed column-gather indices (once, not per trace) ----
     scan_col_idx = tuple((c, schema.col_index(c)) for c in scan_cols
@@ -331,7 +354,8 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
      def executor(state: TableState, preagg: Optional[PreAggState],
                  key_idx: jax.Array, req_ts: jax.Array,
                  req_row: jax.Array,
-                 model_params: Optional[Dict] = None
+                 model_params: Optional[Dict] = None,
+                 join_inputs: Tuple = ()
                  ) -> Dict[str, jax.Array]:
         # event-level environment for WHERE / derived aggregate args
         # (column indices resolved once at compile time)
@@ -350,6 +374,19 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
         for j, c in enumerate(schema.value_cols):
             env[c] = req_row[:, j]
         env[ts_col] = req_ts
+
+        # LAST JOINs: one kernel launch per joined table resolves the
+        # latest right row as of req_ts; joined columns land in the slot
+        # env exactly like request-row columns (zeroed when the probe key
+        # is unknown or no right row qualifies — the empty-window policy)
+        for ji, (_jt, jgather, jnames) in enumerate(join_layout_t):
+            jstate, jkidx, jfound = join_inputs[ji]
+            jrow, jmatched = ops.last_join(
+                jstate.values, jstate.ts, jstate.total, jkidx, req_ts,
+                col_idx=jgather, assume_latest=assume_latest)
+            okf = (jfound & jmatched).astype(jnp.float32)
+            for t_i, nm in enumerate(jnames):
+                env[nm] = jrow[:, t_i] * okf
 
         def stack_cols(gather, derived):
             cols = (state.values[:, :, gather] if gather is not None

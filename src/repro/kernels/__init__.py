@@ -10,6 +10,8 @@ Kernels:
     fused_window     — single-scan MULTI-WINDOW form: a deployment's whole
                        spec table (S distinct frames) in one launch
     preagg_window    — bucketed pre-aggregate window lookup, DMA partials
+    last_join        — point-in-time LAST JOIN row lookup over a right
+                       table's ring (relational tier, DESIGN.md §8)
     flash_attention  — causal/SWA GQA flash attention (train/prefill)
     decode_attention — grouped-head KV-cache decode attention (serving)
 """

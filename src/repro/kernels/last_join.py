@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: point-in-time LAST JOIN row lookup.
+
+The relational tier's device-side join (DESIGN.md §8): for each request,
+stage the RIGHT table's ring block for the join-resolved key into VMEM,
+derive the slot→position map, and select the **latest** retained row with
+``ts <= req_ts`` as a masked argmax over global positions — OpenMLDB's
+LAST JOIN on ring buffers. One launch joins a whole request batch against
+one right table; a deployment with J joined tables costs exactly J extra
+launches (asserted by ``bench_lastjoin`` and the engine's
+``n_kernel_launches`` accounting).
+
+One grid step per request. Block layout mirrors ``window_agg``:
+
+    values (K, C, V)  ->  (1, C, V) VMEM block at row ``req_key[i]``
+    ts     (K, C)     ->  (1, C)    VMEM block at row ``req_key[i]``
+    row out           ->  (1, Vc)   block at row ``i``  (selected columns)
+    matched out       ->  (1, 1)    block at row ``i``  (1.0 / 0.0)
+
+The joined columns are selected *statically* (``col_idx`` is part of the
+compiled spec), so column pruning at the plan layer directly shrinks the
+output block; the full ``(1, C, V)`` block still streams through VMEM —
+the ring read is the dominant cost either way and keeping the input spec
+identical to the window kernels lets XLA reuse the same staging pattern.
+
+Empty/unmatched requests (empty ring, or every retained row newer than
+``req_ts``) write a ZERO row and ``matched = 0`` — the engine masks
+joined columns with the match flag, matching the empty-window policy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["last_join_pallas"]
+
+
+def _kernel(req_key_ref, tot_ref, rts_ref,    # scalar prefetch (SMEM)
+            v_ref, ts_ref,                    # VMEM blocks
+            row_ref, m_ref,
+            *, col_idx: Tuple[int, ...], C: int, V: int,
+            assume_latest: bool):
+    i = pl.program_id(0)
+    tot = tot_ref[i]
+    t_req = rts_ref[i]
+    v = v_ref[0]                                     # (C, V)
+    tsb = ts_ref[0][:, None]                         # (C, 1)
+
+    slots = jax.lax.broadcasted_iota(jnp.int32, (C, 1), 0)
+    head = tot % C
+    rel = jax.lax.rem(slots - head + C, C)
+    p = tot - C + rel                                # (C, 1) global positions
+    valid = (p >= 0) & (p < tot)
+    if assume_latest:
+        # online fast path: req_ts >= every ingested right-table ts, so
+        # the newest retained row is the join partner — no ts scan
+        win = valid
+    else:
+        # per-key ts is non-decreasing, so {p : ts_p <= t} is the prefix
+        # [0, p1) — the same set the window kernels' upper bound selects
+        win = valid & (tsb <= t_req)
+    p_last = jnp.max(jnp.where(win, p, -1))
+    sel = ((p == p_last) & win).astype(jnp.float32)  # exact one-hot (C, 1)
+    row = jnp.sum(v * sel, axis=0)                   # (V,)
+    for oi, ci in enumerate(col_idx):
+        row_ref[0, oi] = row[ci]
+    m_ref[0, 0] = (p_last >= 0).astype(jnp.float32)
+
+
+def last_join_pallas(values: jax.Array, ts: jax.Array, total: jax.Array,
+                     req_key: jax.Array, req_ts: jax.Array, *,
+                     col_idx: Tuple[int, ...],
+                     assume_latest: bool = False,
+                     interpret: bool = False
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Pallas implementation of :func:`repro.kernels.ref.last_join_ref`."""
+    if not col_idx:
+        raise ValueError("last_join needs at least one value column")
+    K, C, V = values.shape
+    B = req_key.shape[0]
+    Vc = len(col_idx)
+    tot_req = total[req_key].astype(jnp.int32)
+    req_ts = req_ts.astype(jnp.float32)
+
+    def key_block3(i, keys, tots, rtss):
+        return (keys[i], 0, 0)
+
+    def key_block2(i, keys, tots, rtss):
+        return (keys[i], 0)
+
+    def req_block(i, keys, tots, rtss):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, C, V), key_block3),
+            pl.BlockSpec((1, C), key_block2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Vc), req_block),
+            pl.BlockSpec((1, 1), req_block),
+        ],
+    )
+    kern = functools.partial(_kernel, col_idx=tuple(col_idx), C=C, V=V,
+                             assume_latest=assume_latest)
+    row, m = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B, Vc), jnp.float32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.float32)),
+        interpret=interpret,
+    )(req_key.astype(jnp.int32), tot_req, req_ts,
+      values.astype(jnp.float32), ts.astype(jnp.float32))
+    return row, m[:, 0] > 0.5

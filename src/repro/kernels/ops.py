@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 
-__all__ = ["window_agg", "fused_window", "preagg_window",
+__all__ = ["window_agg", "fused_window", "preagg_window", "last_join",
            "flash_attention", "decode_attention", "set_backend",
            "get_backend"]
 
@@ -110,6 +110,27 @@ def fused_window(values: jax.Array, ts: jax.Array, total: jax.Array,
         values, ts, total, req_key, req_ts,
         spec_rows=spec_rows, spec_ranges=spec_ranges,
         spec_fields=spec_fields, evt_mask=evt_mask,
+        assume_latest=assume_latest)
+
+
+def last_join(values: jax.Array, ts: jax.Array, total: jax.Array,
+              req_key: jax.Array, req_ts: jax.Array, *,
+              col_idx: Tuple[int, ...],
+              assume_latest: bool = False,
+              interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Point-in-time LAST JOIN row lookup against a right table's ring.
+
+    Selects, per request, the latest retained row of ``req_key`` with
+    ``ts <= req_ts`` and gathers its ``col_idx`` columns. Returns
+    ``(row (B, len(col_idx)) f32, matched (B,) bool)``.
+    """
+    if _use_pallas() or interpret:
+        from repro.kernels import last_join as k
+        return k.last_join_pallas(
+            values, ts, total, req_key, req_ts, col_idx=col_idx,
+            assume_latest=assume_latest, interpret=interpret)
+    return ref.last_join_ref(
+        values, ts, total, req_key, req_ts, col_idx=col_idx,
         assume_latest=assume_latest)
 
 

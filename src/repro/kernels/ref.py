@@ -17,6 +17,9 @@ Both clamped to retention. All aggregates reduce over that interval.
                         reductions over a (B, S, C) mask tensor).
 ``preagg_window_ref`` — bucketed pre-aggregation path (paper Eq. 2), reading
                         O(NB + 2·bucket) instead of O(C·V).
+``last_join_ref``     — point-in-time LAST JOIN row lookup: latest right-
+                        table row with ts ≤ req_ts, as a masked argmax over
+                        positions + one-hot gather of the joined columns.
 ``decode_attention_ref`` / ``flash_attention_ref`` — model-side oracles.
 """
 from __future__ import annotations
@@ -33,8 +36,9 @@ POS_INF = jnp.float32(3.0e38)
 _BIG_I32 = jnp.int32(2**30)
 
 __all__ = ["window_agg_ref", "fused_window_ref", "preagg_window_ref",
-            "derive_features", "window_bounds", "flash_attention_ref",
-            "flash_attention_xla", "decode_attention_ref"]
+            "last_join_ref", "derive_features", "window_bounds",
+            "flash_attention_ref", "flash_attention_xla",
+            "decode_attention_ref"]
 
 FUSED_FIELDS = ("sum", "sumsq", "count", "min", "max", "first", "last")
 
@@ -164,6 +168,46 @@ def window_agg_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
             out["last"] = jnp.take_along_axis(
                 v, idx_last[:, None, None], axis=1)[:, 0, :] * nonempty
     return out
+
+
+def last_join_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
+                  req_key: jax.Array, req_ts: jax.Array, *,
+                  col_idx: Tuple[int, ...],
+                  assume_latest: bool = False
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Point-in-time LAST JOIN row lookup (the relational tier's kernel).
+
+    For each request ``i`` over the RIGHT table's ring buffer: select the
+    **latest** retained row of key ``req_key[i]`` with
+    ``ts <= req_ts[i]`` — a masked argmax over global positions — and
+    gather its ``col_idx`` value columns. Per-key timestamps are
+    non-decreasing (the ingest contract), so the qualifying positions are
+    exactly ``[max(0, total-C), p1)`` with ``p1`` the shared upper bound
+    the window kernels use; the join and the windows can therefore never
+    disagree about what "as of t" means.
+
+    ``assume_latest`` is the online fast path (req_ts ≥ every ingested
+    right-table ts): the newest retained row wins without a ts scan.
+
+    values (K, C, V), ts (K, C), total (K,), req_key (B,), req_ts (B,).
+    Returns ``(row (B, len(col_idx)) f32, matched (B,) bool)``; unmatched
+    requests (empty ring, or every row newer than req_ts) get zero rows.
+    """
+    if not col_idx:
+        raise ValueError("last_join needs at least one value column")
+    cols = jnp.asarray(col_idx, jnp.int32)
+    v = values[req_key][:, :, cols].astype(jnp.float32)   # (B, C, Vc)
+    t = ts[req_key]                                       # (B, C)
+    tot = total[req_key].astype(jnp.int32)                # (B,)
+    p, valid = _positions(t, tot)
+    p1 = _upper_bound(t, tot, valid, req_ts, assume_latest)
+    win = valid & (p < p1[:, None])
+    p_last = jnp.max(jnp.where(win, p, -1), axis=1)       # (B,)
+    matched = p_last >= 0
+    # unique positions -> exact one-hot select (matches the LAST aggregate)
+    sel = ((p == p_last[:, None]) & win).astype(jnp.float32)
+    row = jnp.einsum("bc,bcv->bv", sel, v)
+    return row, matched
 
 
 def check_fused_specs(spec_rows, spec_ranges, spec_fields) -> None:

@@ -1,0 +1,9 @@
+"""Relational tier: multi-table catalog + point-in-time LAST JOIN.
+
+See DESIGN.md §8. The logical ``Join`` node lives in ``repro.core.logical``
+(it is part of the plan IR); this package owns the table catalog the
+optimizer validates joins against.
+"""
+from repro.relational.catalog import Catalog, CatalogEntry
+
+__all__ = ["Catalog", "CatalogEntry"]

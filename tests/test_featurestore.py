@@ -107,3 +107,114 @@ def test_property_preagg_window_equals_naive(w, seed):
         np.testing.assert_allclose(np.asarray(fast[name]),
                                    np.asarray(naive[name]),
                                    rtol=5e-4, atol=5e-4, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# KeyDirectory under key-slot pressure (device mirror of the key dict)
+# ---------------------------------------------------------------------------
+
+def _collision_chain(kd, n, start=1):
+    """First ``n`` positive int32 keys whose initial probe slot collides
+    with ``start``'s — forces a linear probe chain of length ``n``."""
+    from repro.featurestore.keydir import _MULT
+    target = ((start & 0xFFFFFFFF) * _MULT) & kd._mask
+    out, k = [], start
+    while len(out) < n:
+        if ((k & 0xFFFFFFFF) * _MULT) & kd._mask == target:
+            out.append(k)
+        k += 1
+    return out
+
+
+def test_keydir_fills_to_slot_capacity_then_deactivates():
+    """Directory at capacity: every slot usable; one key past the slot
+    count deactivates it (fallback boundary), never corrupts it."""
+    import numpy as np
+    from repro.featurestore.keydir import KeyDirectory
+    kd = KeyDirectory(max_keys=4)           # slots = next_pow2(8) = 16
+    assert kd.slots == 16
+    keys = list(range(100, 100 + kd.slots))
+    for i, k in enumerate(keys):
+        kd.insert(k, i)
+    assert kd.active and kd.n == kd.slots
+    idx, found = kd.lookup(np.asarray(keys))
+    assert bool(np.asarray(found).all())
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(kd.slots))
+    # 17th key: probe chain exhausts every slot -> permanent fallback
+    kd.insert(999_999, 16)
+    assert not kd.active
+    assert not kd.covers(np.asarray([100]))  # engine takes the dict path
+
+
+def test_keydir_colliding_probe_chains_resolve_exactly():
+    """Keys hashing to the SAME initial slot must chain and still resolve
+    to their own values (no aliasing), with max_probe ratcheting up."""
+    import numpy as np
+    from repro.featurestore.keydir import KeyDirectory
+    kd = KeyDirectory(max_keys=8)           # slots = 16
+    chain = _collision_chain(kd, 5)
+    for i, k in enumerate(chain):
+        kd.insert(k, 10 + i)
+    assert kd.max_probe >= 5
+    idx, found = kd.lookup(np.asarray(chain))
+    assert bool(np.asarray(found).all())
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  10 + np.arange(len(chain)))
+    # a non-inserted key on the same chain misses (no false positive)
+    probe_more = _collision_chain(kd, 6)[-1]
+    idx, found = kd.lookup(np.asarray([probe_more]))
+    assert not bool(np.asarray(found)[0])
+    # re-insert idempotence: same (key, value) changes nothing
+    n_before, mp_before = kd.n, kd.max_probe
+    kd.insert(chain[0], 10)
+    assert (kd.n, kd.max_probe) == (n_before, mp_before)
+
+
+def test_keydir_fallback_boundary_int32_domain():
+    """Keys outside the int32 domain deactivate the mirror; queries
+    outside the domain are refused by covers() while the directory stays
+    active for in-range keys."""
+    import numpy as np
+    from repro.featurestore.keydir import KeyDirectory
+    kd = KeyDirectory(max_keys=8)
+    kd.insert(42, 0)
+    # out-of-domain QUERY: covers() says no, directory stays active
+    assert not kd.covers(np.asarray([2 ** 40]))
+    assert not kd.covers(np.asarray([-(2 ** 31)]))   # sentinel value
+    assert kd.covers(np.asarray([42]))
+    assert kd.active
+    # out-of-domain INSERT: permanent deactivation
+    kd.insert(2 ** 40, 1)
+    assert not kd.active
+    kd2 = KeyDirectory(max_keys=8)
+    kd2.insert(True, 0)                    # bools are not keys
+    assert not kd2.active
+    kd3 = KeyDirectory(max_keys=8)
+    kd3.insert(-(2 ** 31), 0)              # the EMPTY sentinel itself
+    assert not kd3.active
+
+
+def test_table_serving_survives_keydir_overflow():
+    """Engine-level fallback boundary: more distinct keys than the
+    directory can mirror must degrade to the host dict, not misroute."""
+    import numpy as np
+    from repro.core.engine import Engine
+    from repro.core.optimizer import OptFlags
+    eng = Engine(OptFlags())
+    schema = TableSchema("ev", key_col="k", ts_col="ts", value_cols=("x",))
+    eng.create_table(schema, max_keys=64, capacity=64, bucket_size=8)
+    t = eng.tables["ev"]
+    # force the mirror into fallback with an out-of-domain key, then keep
+    # ingesting normal keys (the dict keeps growing past the mirror)
+    eng.insert("ev", [2 ** 40], [0.0], np.ones((1, 1), np.float32))
+    assert not t.keydir.active
+    keys = list(range(40))
+    eng.insert("ev", keys, [1.0] * 40, np.ones((40, 1), np.float32))
+    eng.deploy("f", """SELECT COUNT(x) OVER w AS c FROM ev
+                       WINDOW w AS (PARTITION BY k ORDER BY ts
+                       ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""")
+    out = eng.request("f", [2 ** 40, 7, 12345], [10.0] * 3)
+    assert list(out.status) == [0, 0, 1]
+    np.testing.assert_allclose(np.asarray(out["c"])[:2], [1.0, 1.0])
+    assert np.asarray(out["c"])[2] == 0.0
+    eng.close()

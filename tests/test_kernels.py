@@ -335,3 +335,114 @@ def test_decode_attention_matches_flash_last_row():
     dec = ref.decode_attention_ref(q_full[:, -1], k, v, lengths)
     np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# last_join (relational tier, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _join_table(seed=7, capacity=64):
+    """Right table with keys 0..5 populated (6, 7 empty), duplicate
+    timestamps for tie coverage, and enough events to wrap the ring."""
+    from repro.featurestore.table import Table, TableSchema
+    rng = np.random.default_rng(seed)
+    schema = TableSchema("right", key_col="k", ts_col="ts",
+                         value_cols=("a", "b", "c"))
+    t = Table(schema, max_keys=8, capacity=capacity, bucket_size=8)
+    keys = rng.integers(0, 6, 500)
+    ts = rng.uniform(1.0, 1000, 500)
+    ts[50:60] = ts[50]                       # ties within one timestamp
+    ts = np.sort(ts).astype(np.float32)
+    rows = rng.normal(0, 2, (500, 3)).astype(np.float32)
+    # prime keys 0..5 in order so key VALUE == dense index (the kernel
+    # probes dense indices; the brute oracle filters by value)
+    keys = np.concatenate([np.arange(6), keys])
+    ts = np.concatenate([np.zeros(6, np.float32), ts])
+    rows = np.concatenate([np.zeros((6, 3), np.float32), rows])
+    t.insert(keys.tolist(), ts.tolist(), rows)
+    assert all(t.key_to_idx[v] == v for v in range(6))
+    return t, (keys, ts, rows)
+
+
+def _brute_last_join(keys, ts, rows, rk, rt, col, capacity,
+                     assume_latest=False):
+    """Host oracle: latest RETAINED row of key rk with ts <= rt."""
+    idx = np.where(keys == rk)[0][-capacity:]          # ring retention
+    if assume_latest:
+        sel = idx
+    else:
+        sel = idx[ts[idx] <= rt]
+    if len(sel) == 0:
+        return 0.0, False
+    return float(rows[sel[-1], col]), True
+
+
+@pytest.mark.parametrize("assume_latest", [False, True])
+@pytest.mark.parametrize("col_idx", [(0,), (2, 0)])
+def test_last_join_pallas_vs_ref_vs_brute(assume_latest, col_idx):
+    from repro.kernels.last_join import last_join_pallas
+    t, (keys, ts, rows) = _join_table()
+    st = t.state
+    rng = np.random.default_rng(5)
+    # empty-key (6), pre-history (rt < first event), stale (rt far past
+    # the last event), and ordinary mid-history requests
+    req_key = jnp.asarray(
+        list(rng.integers(0, 6, 12)) + [6, 0, 1, 2], jnp.int32)
+    req_ts = jnp.asarray(
+        list(np.sort(rng.uniform(100, 900, 12)))
+        + [500.0, -5.0, 1e6, float(ts[55])], jnp.float32)
+    kw = dict(col_idx=col_idx, assume_latest=assume_latest)
+    row_p, m_p = last_join_pallas(st.values, st.ts, st.total, req_key,
+                                  req_ts, interpret=True, **kw)
+    row_r, m_r = ref.last_join_ref(st.values, st.ts, st.total, req_key,
+                                   req_ts, **kw)
+    np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_r))
+    np.testing.assert_allclose(np.asarray(row_p), np.asarray(row_r),
+                               rtol=1e-6, atol=1e-6)
+    for i in range(len(req_key)):
+        for oi, ci in enumerate(col_idx):
+            want, matched = _brute_last_join(
+                keys, ts, rows, int(req_key[i]), float(req_ts[i]), ci,
+                t.capacity, assume_latest=assume_latest)
+            assert bool(m_r[i]) == matched, i
+            got = float(row_r[i, oi]) if matched else None
+            if matched:
+                assert got == pytest.approx(want, abs=1e-5), (i, ci)
+            else:
+                assert float(row_r[i, oi]) == 0.0, (i, ci)
+
+
+def test_last_join_empty_table_and_single_row():
+    """Degenerate rings: an entirely empty right table never matches; a
+    single-row table matches exactly when its one ts qualifies."""
+    from repro.featurestore.table import Table, TableSchema
+    from repro.kernels.last_join import last_join_pallas
+    schema = TableSchema("right", key_col="k", ts_col="ts",
+                         value_cols=("a",))
+    t = Table(schema, max_keys=4, capacity=16, bucket_size=4)
+    st = t.state
+    rk = jnp.asarray([0, 1, 2], jnp.int32)
+    rt = jnp.asarray([10.0, 0.0, 1e9], jnp.float32)
+    for fn in (ref.last_join_ref,
+               lambda *a, **k: last_join_pallas(*a, interpret=True, **k)):
+        row, m = fn(st.values, st.ts, st.total, rk, rt, col_idx=(0,))
+        assert not np.any(np.asarray(m))
+        np.testing.assert_array_equal(np.asarray(row), 0.0)
+    t.insert([0], [100.0], np.asarray([[7.5]], np.float32))
+    st = t.state
+    rt = jnp.asarray([99.0, 100.0, 101.0], jnp.float32)
+    rk = jnp.asarray([0, 0, 0], jnp.int32)
+    for fn in (ref.last_join_ref,
+               lambda *a, **k: last_join_pallas(*a, interpret=True, **k)):
+        row, m = fn(st.values, st.ts, st.total, rk, rt, col_idx=(0,))
+        assert list(np.asarray(m)) == [False, True, True]
+        np.testing.assert_allclose(np.asarray(row[:, 0]), [0.0, 7.5, 7.5])
+
+
+def test_last_join_requires_columns():
+    t, _ = _join_table()
+    st = t.state
+    with pytest.raises(ValueError, match="at least one value column"):
+        ref.last_join_ref(st.values, st.ts, st.total,
+                          jnp.asarray([0], jnp.int32),
+                          jnp.asarray([1.0], jnp.float32), col_idx=())

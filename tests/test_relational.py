@@ -1,0 +1,475 @@
+"""Relational tier: point-in-time LAST JOIN across tables (DESIGN.md §8).
+
+Covers the acceptance surface of the multi-table tier: online/offline
+joined-feature parity on a disordered streamed load, empty/missing-key/
+stale-row semantics, catalog-backed validation errors, join-aware column
+pruning + probe ordering, EXPLAIN's join section, per-join kernel-launch
+accounting, and the host-dict keydir fallback.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dsl
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.featurestore.table import TableSchema
+
+JOIN_SQL = """
+SELECT SUM(amount) OVER w AS s,
+       merchants.rating AS rating,
+       risk AS risk
+FROM events
+LAST JOIN merchants ORDER BY mts ON merchant
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)
+"""
+
+
+def make_join_engine(flags=OptFlags(), n_events=400, n_merchants=6,
+                     seed=0, merchant_snaps=(100.0, 400.0, 800.0)):
+    """events(amount, merchant) LAST JOIN merchants(rating, risk).
+
+    Merchant profiles are re-published at each timestamp in
+    ``merchant_snaps`` so point-in-time requests see different versions.
+    """
+    eng = Engine(flags)
+    eng.create_table(TableSchema("events", key_col="user", ts_col="ts",
+                                 value_cols=("amount", "merchant")),
+                     max_keys=32, capacity=512, bucket_size=32)
+    eng.create_table(TableSchema("merchants", key_col="merchant",
+                                 ts_col="mts",
+                                 value_cols=("rating", "risk")),
+                     max_keys=16, capacity=64, bucket_size=8)
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 8, n_events)
+    ts = np.sort(rng.uniform(0, 1000, n_events)).astype(np.float32)
+    mids = rng.integers(0, n_merchants, n_events)
+    rows = np.stack([rng.normal(0, 2, n_events),
+                     mids.astype(np.float64)], -1).astype(np.float32)
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+
+    mkeys, mts, mrows = [], [], []
+    for t0 in merchant_snaps:
+        for m in range(n_merchants):
+            mkeys.append(m)
+            mts.append(t0 + m * 0.01)
+            mrows.append([m + t0 / 1000.0, m * 0.1 + t0])
+    order = np.argsort(mts, kind="stable")
+    eng.insert("merchants", [mkeys[i] for i in order],
+               [mts[i] for i in order],
+               np.asarray(mrows, np.float32)[order])
+    mdata = (np.asarray(mkeys)[order],
+             np.asarray(mts, np.float32)[order],
+             np.asarray(mrows, np.float32)[order])
+    return eng, (keys, ts, rows), mdata
+
+
+def brute_join(mdata, probe, req_ts, col):
+    """Latest merchant row with mts <= req_ts; 0.0 when none."""
+    mkeys, mts, mrows = mdata
+    out = []
+    for k, t in zip(probe, req_ts):
+        m = (mkeys == k) & (mts <= t)
+        out.append(mrows[np.where(m)[0][-1], col] if m.any() else 0.0)
+    return np.asarray(out, np.float32)
+
+
+def test_last_join_enriches_online_requests():
+    eng, (keys, ts, rows), mdata = make_join_engine()
+    eng.deploy("f", JOIN_SQL)
+    rk, rt, rr = keys[:8].tolist(), (ts[:8] + 2000).tolist(), rows[:8]
+    out = eng.request("f", rk, rt, rows=rr)
+    np.testing.assert_allclose(
+        out["rating"], brute_join(mdata, rr[:, 1], rt, 0), rtol=1e-5)
+    np.testing.assert_allclose(
+        out["risk"], brute_join(mdata, rr[:, 1], rt, 1), rtol=1e-5)
+    eng.close()
+
+
+def test_builder_tcol_equivalent_to_sql():
+    eng, (keys, ts, rows), _ = make_join_engine()
+    eng.deploy("sql", JOIN_SQL)
+    m = dsl.tbl("merchants")
+    qb = (dsl.QueryBuilder("events")
+          .window("w", partition_by="user", order_by="ts", rows=20)
+          .last_join("merchants", on="merchant", order_by="mts")
+          .select(s=dsl.sum_(dsl.col("amount")).over("w"),
+                  rating=m.rating, risk=m["risk"]))
+    eng.deploy("py", qb)
+    rk, rt, rr = keys[:6].tolist(), (ts[:6] + 2000).tolist(), rows[:6]
+    a = eng.request("sql", rk, rt, rows=rr)
+    b = eng.request("py", rk, rt, rows=rr)
+    for name in a.keys():
+        np.testing.assert_array_equal(np.asarray(a[name]),
+                                      np.asarray(b[name]), err_msg=name)
+    eng.close()
+
+
+def test_point_in_time_parity_online_offline_disordered_stream():
+    """The acceptance property: handle.request and query_offline produce
+    BIT-IDENTICAL joined features for every stored event, with the events
+    arriving as a disordered stream (repaired by the watermark buffer)."""
+    eng = Engine(OptFlags(assume_latest=False))
+    eng.create_table(TableSchema("events", key_col="user", ts_col="ts",
+                                 value_cols=("amount", "merchant")),
+                     max_keys=16, capacity=512, bucket_size=32)
+    eng.create_table(TableSchema("merchants", key_col="merchant",
+                                 ts_col="mts", value_cols=("rating",)),
+                     max_keys=8, capacity=64, bucket_size=8)
+    eng.attach_stream("events", lateness=50.0)
+    rng = np.random.default_rng(4)
+    N = 300
+    keys = rng.integers(0, 6, N)
+    ts = np.sort(rng.uniform(0, 500, N)).astype(np.float32)
+    rows = np.stack([rng.normal(0, 2, N),
+                     rng.integers(0, 4, N).astype(np.float64)],
+                    -1).astype(np.float32)
+    # disordered delivery: shuffle within lateness-sized chunks; the
+    # reorder buffer repairs it before publication
+    order = np.arange(N)
+    for s in range(0, N, 40):
+        rng.shuffle(order[s:s + 40])
+    pipe = eng.streams["events"]
+    for i in order:
+        assert pipe.push(int(keys[i]), float(ts[i]), rows[i])
+    pipe.flush()
+    for t0 in (50.0, 250.0):
+        eng.insert("merchants", [0, 1, 2, 3],
+                   [t0, t0, t0, t0],
+                   np.asarray([[m + t0] for m in range(4)], np.float32))
+
+    eng.deploy("f", """
+        SELECT SUM(amount) OVER w AS s, COUNT(amount) OVER w AS c,
+               merchants.rating AS rating
+        FROM events LAST JOIN merchants ORDER BY mts ON merchant
+        WINDOW w AS (PARTITION BY user ORDER BY ts
+                     ROWS BETWEEN 10 PRECEDING AND CURRENT ROW)""")
+    off = eng.query_offline("f")
+    assert len(off["s"]) == N
+    # online replay of every stored event at its own timestamp
+    h = eng.handle("f")
+    on = h.request(keys.tolist(), ts.tolist(), rows=rows)
+    assert on.all_ok
+    k2i = eng.tables["events"].key_to_idx
+    pos = {}
+    for i, (k, t) in enumerate(zip(off["__key"], off["__ts"])):
+        pos.setdefault((int(k), np.float32(t)), []).append(i)
+    for j in range(N):
+        cand = pos[(k2i[int(keys[j])], np.float32(ts[j]))]
+        matches = [i for i in cand
+                   if all(np.asarray(off[n][i]) == np.asarray(on[n][j])
+                          for n in ("s", "c", "rating"))]
+        assert matches, (j, [(off["s"][i], on["s"][j]) for i in cand])
+    eng.close()
+
+
+def test_missing_key_empty_table_and_stale_rows():
+    eng, (keys, ts, rows), mdata = make_join_engine()
+    # a third, EMPTY right table joined in the same query
+    eng.create_table(TableSchema("devices", key_col="merchant",
+                                 ts_col="dts", value_cols=("trust",)),
+                     max_keys=8, capacity=16, bucket_size=4)
+    eng.deploy("f", """
+        SELECT SUM(amount) OVER w AS s, merchants.rating AS rating,
+               devices.trust AS trust
+        FROM events
+        LAST JOIN merchants ORDER BY mts ON merchant
+        LAST JOIN devices ORDER BY dts ON merchant
+        WINDOW w AS (PARTITION BY user ORDER BY ts
+                     ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)""")
+    rk = keys[:4].tolist()
+    rt = (ts[:4] + 5000).tolist()          # stale: far past last update
+    rr = rows[:4].copy()
+    rr[0, 1] = 999.0                       # missing right key
+    out = eng.request("f", rk, rt, rows=rr)
+    assert out.all_ok                      # main keys are known
+    assert out["rating"][0] == 0.0         # missing key -> masked zero
+    np.testing.assert_allclose(            # stale rows still join (latest)
+        out["rating"][1:], brute_join(mdata, rr[1:, 1], rt[1:], 0),
+        rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out["trust"]), 0.0)  # empty
+    eng.close()
+
+
+def test_point_in_time_before_first_right_row_is_unmatched():
+    eng, (keys, ts, rows), mdata = make_join_engine(
+        OptFlags(assume_latest=False))
+    eng.deploy("f", JOIN_SQL)
+    idx = np.where(ts < 99.0)[0][:4]       # before the first profile snap
+    out = eng.request("f", keys[idx].tolist(), ts[idx].tolist(),
+                      rows=rows[idx])
+    np.testing.assert_array_equal(np.asarray(out["rating"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out["risk"]), 0.0)
+    eng.close()
+
+
+def test_predict_over_joined_features():
+    eng, (keys, ts, rows), mdata = make_join_engine()
+
+    def scorer(params, feats):
+        return jnp.asarray(feats) @ jnp.asarray(params)
+
+    eng.register_model("scorer", scorer, np.asarray([2.0, 0.5], np.float32))
+    eng.deploy("ml", """
+        SELECT SUM(amount) OVER w AS s,
+               PREDICT(scorer, s, merchants.risk) AS score
+        FROM events LAST JOIN merchants ORDER BY mts ON merchant
+        WINDOW w AS (PARTITION BY user ORDER BY ts
+                     ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)""")
+    rk, rt, rr = keys[:5].tolist(), (ts[:5] + 2000).tolist(), rows[:5]
+    got = eng.request("ml", rk, rt, rows=rr)
+    want = (np.asarray(got["s"]) * 2.0
+            + 0.5 * brute_join(mdata, rr[:, 1], rt, 1))
+    np.testing.assert_allclose(got["score"], want, rtol=1e-4, atol=1e-4)
+    eng.close()
+
+
+def test_join_launch_accounting():
+    """Exactly one extra kernel launch per joined table, observed both in
+    the plan counter and the engine's cumulative launch stats."""
+    eng, (keys, ts, rows), _ = make_join_engine()
+    eng.create_table(TableSchema("devices", key_col="merchant",
+                                 ts_col="dts", value_cols=("trust",)),
+                     max_keys=8, capacity=16, bucket_size=4)
+    eng.insert("devices", [0, 1], [1.0, 1.0],
+               np.ones((2, 1), np.float32))
+    base = eng.deploy("plain", """
+        SELECT SUM(amount) OVER w AS s, amount AS amount
+        FROM events
+        WINDOW w AS (PARTITION BY user ORDER BY ts
+                     ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)""")
+    joined = eng.deploy("j2", """
+        SELECT SUM(amount) OVER w AS s, merchants.rating AS rating,
+               devices.trust AS trust
+        FROM events
+        LAST JOIN merchants ORDER BY mts ON merchant
+        LAST JOIN devices ORDER BY dts ON merchant
+        WINDOW w AS (PARTITION BY user ORDER BY ts
+                     ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)""")
+    assert joined.phys.n_kernel_launches == base.phys.n_kernel_launches + 2
+    before = eng.stats.kernel_launches
+    eng.request("j2", keys[:4].tolist(), (ts[:4] + 2000).tolist(),
+                rows=rows[:4])
+    assert (eng.stats.kernel_launches - before
+            == joined.phys.n_kernel_launches)
+    eng.close()
+
+
+def test_join_pruning_ordering_and_explain_shape():
+    """EXPLAIN prints the join section: probe order, per-join keydir,
+    pruned right-table columns; the optimizer orders probes by cost and
+    drops unused joins."""
+    eng, (keys, ts, rows), _ = make_join_engine()
+    # wide right table, cheap to probe only when pruned
+    eng.create_table(TableSchema("devices", key_col="merchant",
+                                 ts_col="dts",
+                                 value_cols=("trust", "age", "score")),
+                     max_keys=8, capacity=16, bucket_size=4)
+    eng.insert("devices", [0, 1], [1.0, 1.0],
+               np.full((2, 3), 2.0, np.float32))
+    dep = eng.deploy("f", """
+        SELECT SUM(amount) OVER w AS s, devices.trust AS trust,
+               merchants.rating AS rating
+        FROM events
+        LAST JOIN merchants ORDER BY mts ON merchant
+        LAST JOIN devices ORDER BY dts ON merchant
+        WINDOW w AS (PARTITION BY user ORDER BY ts
+                     ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)""")
+    # pruning: devices carries only 'trust'; ordering: devices (C=16,
+    # 1 col) probes before merchants (C=64, 1 col)
+    jmap = {j.table: j for j in dep.plan.joins}
+    assert jmap["devices"].columns == ("trust",)
+    assert [j.table for j in dep.plan.joins] == ["devices", "merchants"]
+    assert any("join_prune" in l for l in dep.opt_log)
+    assert any("join_order" in l for l in dep.opt_log)
+
+    txt = eng.explain("f")
+    lines = txt.splitlines()
+    order_lines = [l for l in lines if "join probe order:" in l]
+    assert len(order_lines) == 1
+    assert "devices -> merchants" in order_lines[0]
+    jlines = [l.strip() for l in lines if l.strip().startswith("join ")
+              and "LAST JOIN" in l]
+    assert len(jlines) == 2
+    for l in jlines:
+        assert "on=merchant" in l and "keydir=" in l and "pruned=" in l
+    assert ("join devices: LAST JOIN on=merchant order_by=dts "
+            "cols=['trust'] pruned=['age', 'score'] "
+            "keydir=device-keydir" in txt)
+    # a join nothing references is dropped from the plan entirely
+    dep2 = eng.deploy("g", """
+        SELECT SUM(amount) OVER w AS s
+        FROM events LAST JOIN merchants ORDER BY mts ON merchant
+        WINDOW w AS (PARTITION BY user ORDER BY ts
+                     ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)""")
+    assert dep2.plan.joins == ()
+    assert any("dropped unused join" in l for l in dep2.opt_log)
+    eng.close()
+
+
+def test_keydir_fallback_matches_device_probe():
+    eng, (keys, ts, rows), _ = make_join_engine()
+    eng.deploy("f", JOIN_SQL)
+    rk, rt = keys[:6].tolist(), (ts[:6] + 2000).tolist()
+    rr = rows[:6].copy()
+    rr[2, 1] = 777.0                        # one unknown probe key
+    fast = eng.request("f", rk, rt, rows=rr)
+    eng.tables["merchants"].keydir.active = False
+    slow = eng.request("f", rk, rt, rows=rr)
+    for n in fast.keys():
+        np.testing.assert_array_equal(np.asarray(fast[n]),
+                                      np.asarray(slow[n]), err_msg=n)
+    assert "keydir=host-dict(fallback)" in eng.explain("f")
+    eng.close()
+
+
+def test_joined_deployment_requires_request_rows():
+    """rows=None would zero-fill the probe column and silently join
+    right-table key 0 for every request — must be rejected instead."""
+    eng, (keys, ts, rows), _ = make_join_engine()
+    eng.deploy("f", JOIN_SQL)
+    with pytest.raises(ValueError, match="must pass rows="):
+        eng.request("f", keys[:2].tolist(), (ts[:2] + 2000).tolist())
+    eng.close()
+
+
+def test_non_integral_probe_values_never_match():
+    eng, (keys, ts, rows), _ = make_join_engine()
+    eng.deploy("f", JOIN_SQL)
+    rr = rows[:2].copy()
+    rr[:, 1] = [0.5, 2.25]                 # not representable as keys
+    out = eng.request("f", keys[:2].tolist(), (ts[:2] + 2000).tolist(),
+                      rows=rr)
+    np.testing.assert_array_equal(np.asarray(out["rating"]), 0.0)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# validation errors (satellite: clear, actionable messages)
+# ---------------------------------------------------------------------------
+
+def _deploy_err(eng, q, match):
+    with pytest.raises(ValueError, match=match):
+        eng.deploy("bad", q)
+
+
+def test_validation_error_messages():
+    eng, *_ = make_join_engine()
+    W = """ WINDOW w AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)"""
+    # last_join without order_by: its own actionable message
+    _deploy_err(eng, (dsl.QueryBuilder("events")
+                      .window("w", partition_by="user", order_by="ts",
+                              rows=5)
+                      .last_join("merchants", on="merchant")
+                      .select(s=dsl.sum_(dsl.col("amount")).over("w"),
+                              r=dsl.tbl("merchants").rating)),
+                "requires order_by")
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, merchants.rating AS r"
+                     " FROM events LAST JOIN merchants ON merchant" + W,
+                "requires order_by")
+    # order_by must be the right table's ts column
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, merchants.rating AS r"
+                     " FROM events LAST JOIN merchants ORDER BY rating "
+                     "ON merchant" + W,
+                "timestamp column 'mts'")
+    # unknown right table / undeclared join key / missing left column
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, nope.x AS r"
+                     " FROM events LAST JOIN nope ORDER BY ts ON merchant"
+                     + W, "unknown table 'nope'")
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, merchants.rating AS r"
+                     " FROM events LAST JOIN merchants ORDER BY mts "
+                     "ON rating" + W,
+                "not a declared join key")
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, merchants.rating AS r"
+                     " FROM events LAST JOIN merchants ORDER BY mts "
+                     "ON merchant_id" + W,
+                "not a declared join key")
+    eng.close()
+
+
+def test_window_over_joined_columns_rejected():
+    eng, *_ = make_join_engine()
+    base = ("SELECT SUM(amount) OVER w AS s, merchants.rating AS r "
+            "FROM events LAST JOIN merchants ORDER BY mts ON merchant ")
+    # qualified partition_by: caught structurally (no catalog needed)
+    _deploy_err(eng, base + "WINDOW w AS (PARTITION BY merchants.rating "
+                "ORDER BY ts ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)",
+                r"windows index the main table's \(key, ts\) only")
+    # unqualified right-only order_by: caught by catalog resolution
+    _deploy_err(eng, base + "WINDOW w AS (PARTITION BY user ORDER BY "
+                "risk ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)",
+                r"windows index the main table's \(key, ts\) only")
+    # window aggregate over a joined column: the scan never sees it
+    _deploy_err(eng, "SELECT SUM(merchants.risk) OVER w AS s "
+                "FROM events LAST JOIN merchants ORDER BY mts ON merchant "
+                "WINDOW w AS (PARTITION BY user ORDER BY ts "
+                "ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)",
+                "window aggregate")
+    # WHERE over a joined column: filters run on raw events pre-join
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, "
+                "merchants.rating AS r FROM events "
+                "LAST JOIN merchants ORDER BY mts ON merchant "
+                "WHERE risk > 0 "
+                "WINDOW w AS (PARTITION BY user ORDER BY ts "
+                "ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)",
+                "WHERE")
+    eng.close()
+
+
+def test_ambiguous_and_duplicate_joins_rejected():
+    eng, *_ = make_join_engine()
+    # second right table sharing the 'rating' column name
+    eng.create_table(TableSchema("shops", key_col="merchant",
+                                 ts_col="sts", value_cols=("rating",)),
+                     max_keys=8, capacity=16, bucket_size=4)
+    W = """ WINDOW w AS (PARTITION BY user ORDER BY ts
+                         ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)"""
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, rating AS r"
+                     " FROM events"
+                     " LAST JOIN merchants ORDER BY mts ON merchant"
+                     " LAST JOIN shops ORDER BY sts ON merchant" + W,
+                "ambiguous")
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, merchants.rating AS r"
+                     " FROM events"
+                     " LAST JOIN merchants ORDER BY mts ON merchant"
+                     " LAST JOIN merchants ORDER BY mts ON merchant" + W,
+                "JOINed twice")
+    _deploy_err(eng, "SELECT SUM(amount) OVER w AS s, events.amount AS r"
+                     " FROM events"
+                     " LAST JOIN events ORDER BY ts ON merchant" + W,
+                "itself")
+    eng.close()
+
+
+def test_qualified_column_without_join_rejected():
+    eng, *_ = make_join_engine()
+    _deploy_err(eng, """
+        SELECT SUM(amount) OVER w AS s, merchants.rating AS r FROM events
+        WINDOW w AS (PARTITION BY user ORDER BY ts
+                     ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)""",
+                "not LAST JOINed")
+    eng.close()
+
+
+def test_catalog_rejects_secondary_join_keys():
+    eng = Engine(OptFlags())
+    with pytest.raises(ValueError, match="multi-key indexes"):
+        eng.create_table(TableSchema("t", key_col="k", ts_col="ts",
+                                     value_cols=("a", "b")),
+                         join_keys=("a",))
+    eng.close()
+
+
+def test_optimize_without_catalog_rejects_joins():
+    from repro.core.optimizer import TableMeta, optimize
+    q = (dsl.QueryBuilder("events")
+         .window("w", partition_by="user", order_by="ts", rows=5)
+         .last_join("merchants", on="merchant", order_by="mts")
+         .select(s=dsl.sum_(dsl.col("amount")).over("w"),
+                 r=dsl.tbl("merchants").rating)).build()
+    meta = TableMeta(capacity=64, bucket_size=8, n_value_cols=2,
+                     has_preagg=False)
+    with pytest.raises(ValueError, match="no relational catalog"):
+        optimize(q.to_logical(), meta, OptFlags())
