@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
-                         "stream,hotswap,multiwindow,lastjoin")
+                         "stream,hotswap,multiwindow,lastjoin,shard")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-size smoke mode (CI): same code paths, "
                          "~10x less work; numbers are tripwires only")
@@ -71,6 +71,12 @@ def main(argv=None) -> int:
     if want("lastjoin"):
         from benchmarks import bench_lastjoin as b10
         results["lastjoin"] = b10.run(rep)
+    if want("shard"):
+        # runs in a subprocess (needs --xla_force_host_platform_device_count
+        # in XLA_FLAGS before jax init; this parent already initialized jax)
+        from benchmarks import bench_shard_scaling as b11
+        results["shard"] = {k: v for k, v in b11.run(rep).items()
+                           if k != "per_round"}
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",
@@ -102,6 +108,13 @@ def _headline(name: str, doc: dict):
         return {"qps": top["qps"], "p50_ms": top["p50_ms"],
                 "p99_ms": top["p99_ms"],
                 "detail": f"{top['extra_launches']} joined table(s)"}
+    if name == "shard" and "by_shards" in doc:
+        top = doc["by_shards"][max(doc["by_shards"], key=int)]
+        return {"qps": top["qps"], "p50_ms": top["p50_ms"],
+                "p99_ms": top["p99_ms"],
+                "detail": (f"{max(doc['by_shards'], key=int)} shards, "
+                           f"{doc.get('four_shard_speedup_median', 0):.2f}x "
+                           f"vs 1")}
 
     def find(d):
         if isinstance(d, dict):

@@ -24,6 +24,7 @@ ablation semantics on CPU.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures as cf
 import dataclasses
 import threading
@@ -78,6 +79,10 @@ class HandleMetrics:
     unknown_keys: int = 0
     canary_batches: int = 0
     canary_max_abs_diff: float = 0.0
+    # LAST JOIN observability (per right table): how many probes found a
+    # right row, online only — offline materialisation doesn't count
+    join_probes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    join_matches: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def snapshot(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -123,6 +128,10 @@ class DeploymentHandle:
         self._canary: Optional[Tuple["DeploymentHandle", float]] = None
         self._canary_counter = 0
         self._lock = threading.Lock()
+        # bounded reservoir of right-row ages (req_ts − joined row ts, in
+        # event-time units) per joined table, for staleness percentiles
+        self._join_ages: Dict[str, "collections.deque"] = {
+            j.table: collections.deque(maxlen=4096) for j in plan.joins}
 
     # ------------------------------------------------------------ identity
     @property
@@ -167,17 +176,21 @@ class DeploymentHandle:
             jit_fn = jax.jit(executor, donate_argnums=(3, 4))
             # Warm up: compile for this bucket's shapes now (charged to
             # L_plan, as the paper charges planning+JIT on first execution).
+            # Dummy inputs go through table.put so their placement (and
+            # therefore the jit cache signature) matches what the request
+            # path will pass — a device-pinned shard table must not pay a
+            # surprise recompile on its first real batch.
             V = len(table.schema.value_cols)
             snap = table.snapshot()
             dummy = jit_fn(
                 snap.state, snap.preagg,
-                jnp.zeros((bucket,), jnp.int32),
-                jnp.zeros((bucket,), jnp.float32),
-                jnp.zeros((bucket, V), jnp.float32),
+                table.put(np.zeros((bucket,), np.int32)),
+                table.put(np.zeros((bucket,), np.float32)),
+                table.put(np.zeros((bucket, V), np.float32)),
                 eng._predict_params(self),
                 tuple((jt.snapshot().state,
-                       jnp.zeros((bucket,), jnp.int32),
-                       jnp.zeros((bucket,), jnp.bool_))
+                       table.put(np.zeros((bucket,), np.int32)),
+                       table.put(np.zeros((bucket,), np.bool_)))
                       for jt in self.join_tables))
             jax.block_until_ready(dummy)
             return jit_fn
@@ -205,6 +218,51 @@ class DeploymentHandle:
         self._fns.clear()
 
     # ---------------------------------------------------------------- joins
+    def _record_join_stats(self, res: Dict[str, np.ndarray], B: int,
+                           record: bool = True) -> None:
+        """Strip the executor's hidden ``__join_*`` outputs from ``res``
+        and (online only) fold them into the staleness metrics: per-table
+        match counts and a bounded reservoir of matched right-row ages."""
+        for j in self.plan.joins:
+            m = res.pop(f"__join_match_{j.table}", None)
+            age = res.pop(f"__join_age_{j.table}", None)
+            if not record or m is None:
+                continue
+            matched = np.asarray(m) > 0.5
+            n_match = int(matched.sum())
+            with self._lock:
+                mt = self.metrics
+                mt.join_probes[j.table] = (
+                    mt.join_probes.get(j.table, 0) + B)
+                mt.join_matches[j.table] = (
+                    mt.join_matches.get(j.table, 0) + n_match)
+                if age is not None and n_match:
+                    self._join_ages[j.table].extend(
+                        np.asarray(age)[matched].tolist())
+
+    def join_staleness(self) -> Dict[str, Dict[str, float]]:
+        """Per joined table: probe match-rate and right-row age
+        percentiles (event-time units) over the recent-age reservoir —
+        the serving-observability view of how stale each LAST JOIN's
+        right rows are (ROADMAP: right-table ring staleness metrics)."""
+        out: Dict[str, Dict[str, float]] = {}
+        with self._lock:
+            for j in self.plan.joins:
+                probes = self.metrics.join_probes.get(j.table, 0)
+                matches = self.metrics.join_matches.get(j.table, 0)
+                ages = np.asarray(self._join_ages[j.table], np.float64)
+                out[j.table] = {
+                    "probes": probes,
+                    "matches": matches,
+                    "match_rate": matches / probes if probes else 0.0,
+                    "age_p50": (float(np.percentile(ages, 50))
+                                if ages.size else float("nan")),
+                    "age_p99": (float(np.percentile(ages, 99))
+                                if ages.size else float("nan")),
+                    "age_samples": int(ages.size),
+                }
+        return out
+
     def join_snapshots(self) -> Tuple[TableSnapshot, ...]:
         """One consistent snapshot per joined table (probe order). A batch
         (or a whole offline materialisation) must join against a single
@@ -425,17 +483,22 @@ class Engine:
     # ------------------------------------------------------------------ DDL
     def create_table(self, schema: TableSchema, *, max_keys: int = 1024,
                      capacity: int = 1024, bucket_size: int = 64,
-                     join_keys: Sequence[str] = ()) -> Table:
+                     join_keys: Sequence[str] = (),
+                     device=None) -> Table:
         """Create a table and register it in the relational catalog.
 
         ``join_keys`` declares which columns LAST JOIN may probe; the
         partition key is always declared (it is what the device key
         directory indexes) and is currently the only supported choice.
+        ``device`` pins the table's state (and its key directory mirror)
+        to one jax device — the sharded runtime places one shard per
+        device so shard executions ride separate device streams.
         """
         if schema.name in self.tables:
             raise ValueError(f"table {schema.name!r} exists")
         t = Table(schema, max_keys=max_keys, capacity=capacity,
-                  bucket_size=bucket_size, enable_preagg=self.flags.preagg)
+                  bucket_size=bucket_size, enable_preagg=self.flags.preagg,
+                  device=device)
         self.catalog.register(t, join_keys=join_keys)
         self.tables[schema.name] = t
         self.registry.register_schema(schema)
@@ -519,31 +582,16 @@ class Engine:
         self.model_params[name] = params
 
     # --------------------------------------------------------------- deploy
-    def deploy(self, name: str, query: Union[str, Query, dsl.QueryBuilder],
-               *, warm_buckets: Optional[Sequence[int]] = None,
-               canary: float = 0.0) -> DeploymentHandle:
-        """Deploy (or hot-swap redeploy) a query as a versioned handle.
-
-        Redeploying an existing name builds version N+1, pre-warms every
-        configured shape bucket (``warm_buckets`` ∪ engine defaults ∪ the
-        retired version's observed buckets), then atomically publishes the
-        new version — no request ever pays a JIT compile on the new
-        version, and in-flight batches finish on the old one. With
-        ``canary > 0`` the new version instead serves that fraction of
-        batches (outputs compared against the incumbent) until
-        ``promote``/``rollback`` decides.
-        """
-        if canary:
-            if not (0.0 < canary <= 1.0):
-                raise ValueError(f"canary fraction must be in (0, 1], "
-                                 f"got {canary}")
-            if name not in self.deployments:
-                # fail BEFORE the plan build: compiling a whole physical
-                # plan for a guaranteed error wastes seconds under load
-                raise ValueError(
-                    f"canary deploy of {name!r} requires an existing live "
-                    f"deployment to compare against; deploy without "
-                    f"canary= first")
+    def build_version(self, name: str,
+                      query: Union[str, Query, dsl.QueryBuilder], *,
+                      warm_buckets: Optional[Sequence[int]] = None
+                      ) -> DeploymentHandle:
+        """Parse, optimize, lower and pre-warm a NEW version of ``name``
+        WITHOUT publishing it — the handle comes back in the ``warming``
+        state and serves only direct calls until ``publish_version`` flips
+        it live. This is the build half of ``deploy``; the sharded runtime
+        uses it to compile one version per shard and then publish the
+        whole set atomically (repro.shard.engine)."""
         t0 = time.perf_counter()
         if isinstance(query, str):
             q = dsl.parse_sql(query)
@@ -573,11 +621,6 @@ class Engine:
             self.stats.plan_s += time.perf_counter() - t1
 
             prev = self.deployments.get(name)
-            if canary > 0.0 and prev is None:
-                raise ValueError(
-                    f"canary deploy of {name!r} requires an existing live "
-                    f"deployment to compare against; deploy without "
-                    f"canary= first")
             versions = self._versions.setdefault(name, {})
             version = self._next_version.get(name, 0) + 1
             self._next_version[name] = version
@@ -597,6 +640,72 @@ class Engine:
             versions[version] = h
             self.registry.register(FeatureSet(name=name, query=q,
                                               version=version))
+            return h
+
+    def publish_version(self, handle: DeploymentHandle
+                        ) -> DeploymentHandle:
+        """Atomically make a built (or previously retired) version the
+        live one. Re-warms a version whose executables were released, off
+        the serving path — the publish itself is one dict store."""
+        with self._deploy_lock:
+            prev = self.deployments.get(handle.name)
+            if prev is handle:
+                return handle
+            hist = self._history.get(handle.name)
+            if hist and handle in hist:
+                hist.remove(handle)
+            if not handle._fns and self.cache.enabled:
+                with handle._lock:
+                    buckets = sorted(handle.buckets_seen)
+                handle.warm(buckets)
+            self._swap(handle.name, handle, prev)
+            return handle
+
+    def discard_version(self, handle: DeploymentHandle) -> None:
+        """Retire a built-but-never-published version (e.g. an aborted
+        cross-shard canary): invalidate its cache entries unless shared
+        with a live version, and drop it from the version map."""
+        with self._deploy_lock:
+            if self.deployments.get(handle.name) is handle:
+                raise ValueError(
+                    f"{handle.tag} is the live version; use rollback")
+            handle.state = DeploymentHandle.RETIRED
+            self._invalidate_if_unused(handle)
+            self._versions.get(handle.name, {}).pop(handle.version, None)
+
+    def deploy(self, name: str, query: Union[str, Query, dsl.QueryBuilder],
+               *, warm_buckets: Optional[Sequence[int]] = None,
+               canary: float = 0.0) -> DeploymentHandle:
+        """Deploy (or hot-swap redeploy) a query as a versioned handle.
+
+        Redeploying an existing name builds version N+1, pre-warms every
+        configured shape bucket (``warm_buckets`` ∪ engine defaults ∪ the
+        retired version's observed buckets), then atomically publishes the
+        new version — no request ever pays a JIT compile on the new
+        version, and in-flight batches finish on the old one. With
+        ``canary > 0`` the new version instead serves that fraction of
+        batches (outputs compared against the incumbent) until
+        ``promote``/``rollback`` decides.
+        """
+        if canary:
+            if not (0.0 < canary <= 1.0):
+                raise ValueError(f"canary fraction must be in (0, 1], "
+                                 f"got {canary}")
+            if name not in self.deployments:
+                # fail BEFORE the plan build: compiling a whole physical
+                # plan for a guaranteed error wastes seconds under load
+                raise ValueError(
+                    f"canary deploy of {name!r} requires an existing live "
+                    f"deployment to compare against; deploy without "
+                    f"canary= first")
+        with self._deploy_lock:
+            prev = self.deployments.get(name)
+            if canary > 0.0 and prev is None:
+                raise ValueError(
+                    f"canary deploy of {name!r} requires an existing live "
+                    f"deployment to compare against; deploy without "
+                    f"canary= first")
+            h = self.build_version(name, query, warm_buckets=warm_buckets)
             if canary > 0.0:
                 # attach the new canary BEFORE retiring a displaced one:
                 # _invalidate_if_unused must see h as a live user of a
@@ -727,6 +836,7 @@ class Engine:
         if dep.plan.joins:
             lines.append(f"  join probe order: "
                          f"{' -> '.join(j.table for j in dep.plan.joins)}")
+            stale = dep.join_staleness()
             for j, jt in zip(dep.plan.joins, dep.join_tables):
                 kd = ("device-keydir" if jt.keydir.active
                       else "host-dict(fallback)")
@@ -736,6 +846,17 @@ class Engine:
                     f"  join {j.table}: LAST JOIN on={j.on} "
                     f"order_by={j.order_by} cols={list(kept)} "
                     f"pruned={pruned} keydir={kd}")
+                st = stale.get(j.table, {})
+                if st.get("probes"):
+                    lines.append(
+                        f"  join {j.table} staleness: "
+                        f"match_rate={st['match_rate']:.3f} "
+                        f"age_p50={st['age_p50']:.3f} "
+                        f"age_p99={st['age_p99']:.3f} "
+                        f"({st['age_samples']} age samples)")
+                else:
+                    lines.append(
+                        f"  join {j.table} staleness: no online traffic")
         for g in dep.phys.groups:
             lines.append(f"  window {g.name}: impl={g.impl} "
                          f"cols={g.plain_cols} fields={g.fields} "
@@ -781,7 +902,8 @@ class Engine:
 
     def _request_batched(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
                          snap=None, record_bucket: bool = True,
-                         join_snaps=None) -> Dict[str, np.ndarray]:
+                         join_snaps=None,
+                         record_joins: bool = True) -> Dict[str, np.ndarray]:
         B = len(kidx)
         bucket = bucket_batch(B)
         fn = dep._compiled(bucket, record=record_bucket)
@@ -800,6 +922,7 @@ class Engine:
             kidx = pad_fn(kidx, (0, pad))
             ts_arr = np.pad(ts_arr, (0, pad))
             row_arr = np.pad(row_arr, ((0, pad), (0, 0)))
+        put = dep.table.put
         if dep.join_tables:
             jlist = []
             for (jk, jf), jsnap in zip(resolved, join_snaps):
@@ -808,7 +931,7 @@ class Engine:
                     jf_pad = jnp.pad if isinstance(jf, jax.Array) else np.pad
                     jk = jk_pad(jk, (0, pad))      # pad rows probe key 0,
                     jf = jf_pad(jf, (0, pad))      # masked found=False
-                jlist.append((jsnap.state, jnp.asarray(jk), jnp.asarray(jf)))
+                jlist.append((jsnap.state, put(jk), put(jf)))
             jin = tuple(jlist)
         # One snapshot for the whole batch: a concurrent stream flush must
         # not swap the table out from under an in-flight query. Callers
@@ -816,15 +939,18 @@ class Engine:
         if snap is None:
             snap = dep.table.snapshot()
         t0 = time.perf_counter()
-        out = fn(snap.state, snap.preagg, jnp.asarray(kidx),
-                 jnp.asarray(ts_arr), jnp.asarray(row_arr),
+        out = fn(snap.state, snap.preagg, put(kidx),
+                 put(ts_arr), put(row_arr),
                  self._predict_params(dep), jin)
         out = jax.block_until_ready(out)
         self.stats.exec_s += time.perf_counter() - t0
         self.stats.n_requests += B
         self.stats.n_batches += 1
         self.stats.kernel_launches += dep.phys.n_kernel_launches
-        return {n: np.asarray(a)[:B] for n, a in out.items()}
+        res = {n: np.asarray(a)[:B] for n, a in out.items()}
+        if dep.join_tables:
+            dep._record_join_stats(res, B, record=record_joins)
+        return res
 
     def _request_rowwise(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
                          snap=None, join_snaps=None) -> Dict[str, np.ndarray]:
@@ -904,7 +1030,7 @@ class Engine:
                 outs.append(self._request_batched(
                     dep, kidx[sl], ts_all[sl], rows_all[sl],
                     snap=offline_snap, record_bucket=False,
-                    join_snaps=offline_jsnaps))
+                    join_snaps=offline_jsnaps, record_joins=False))
         finally:
             self.flags = saved
         res = {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
@@ -915,10 +1041,27 @@ class Engine:
     # ---------------------------------------------------------------- stats
     def latency_decomposition(self) -> Dict[str, float]:
         s = self.stats
-        return {"parse_s": s.parse_s, "plan_s": s.plan_s, "exec_s": s.exec_s,
-                "n_requests": s.n_requests,
-                "kernel_launches": s.kernel_launches,
-                "cache_hit_rate": self.cache.stats.hit_rate}
+        out = {"parse_s": s.parse_s, "plan_s": s.plan_s, "exec_s": s.exec_s,
+               "n_requests": s.n_requests,
+               "kernel_launches": s.kernel_launches,
+               "cache_hit_rate": self.cache.stats.hit_rate}
+        # join staleness rollup across live deployments (ROADMAP: right-
+        # table ring staleness metrics): total probes/matches + the worst
+        # per-table age p99 currently observed
+        probes = matches = 0
+        worst_p99 = float("nan")
+        ages = []
+        for dep in self.deployments.values():
+            for st in dep.join_staleness().values():
+                probes += st["probes"]
+                matches += st["matches"]
+                if st["age_samples"]:
+                    ages.append(st["age_p99"])
+        if probes:
+            out["join_probes"] = probes
+            out["join_match_rate"] = matches / probes
+            out["join_age_p99"] = max(ages) if ages else worst_p99
+        return out
 
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:

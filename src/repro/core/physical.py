@@ -378,15 +378,20 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
         # LAST JOINs: one kernel launch per joined table resolves the
         # latest right row as of req_ts; joined columns land in the slot
         # env exactly like request-row columns (zeroed when the probe key
-        # is unknown or no right row qualifies — the empty-window policy)
+        # is unknown or no right row qualifies — the empty-window policy).
+        # The selected row's ts rides along as hidden ``__join_*`` outputs
+        # (stripped by the engine into per-deployment staleness metrics).
+        join_extras: Dict[str, jax.Array] = {}
         for ji, (_jt, jgather, jnames) in enumerate(join_layout_t):
             jstate, jkidx, jfound = join_inputs[ji]
-            jrow, jmatched = ops.last_join(
+            jrow, jmatched, jsel_ts = ops.last_join(
                 jstate.values, jstate.ts, jstate.total, jkidx, req_ts,
-                col_idx=jgather, assume_latest=assume_latest)
+                col_idx=jgather, assume_latest=assume_latest, with_ts=True)
             okf = (jfound & jmatched).astype(jnp.float32)
             for t_i, nm in enumerate(jnames):
                 env[nm] = jrow[:, t_i] * okf
+            join_extras[f"__join_match_{_jt}"] = okf
+            join_extras[f"__join_age_{_jt}"] = (req_ts - jsel_ts) * okf
 
         def stack_cols(gather, derived):
             cols = (state.values[:, :, gather] if gather is not None
@@ -446,6 +451,7 @@ def compile_plan(plan: LogicalPlan, schema: TableSchema, *,
             _fill_slots(env, grp, get)
 
         out = {n: E.eval_scalar(e, env) for n, e in outputs}
+        out.update(join_extras)
         if predict is not None:
             feats = jnp.stack([out[f] for f in predict.features], axis=-1)
             fn = model_fns.get(predict.model)

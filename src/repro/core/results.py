@@ -23,10 +23,14 @@ from typing import Dict, Iterator, Optional
 import numpy as np
 
 __all__ = ["FeatureFrame", "RequestContext", "DeadlineExceeded",
-           "STATUS_OK", "STATUS_UNKNOWN_KEY"]
+           "STATUS_OK", "STATUS_UNKNOWN_KEY", "STATUS_SHED"]
 
 STATUS_OK = 0
 STATUS_UNKNOWN_KEY = 1
+# the request was load-shed (deadline passed, or admission control dropped
+# it) BEFORE any feature computation — the whole batch carries this status,
+# never a mix of shed and computed rows (repro.shard.resource)
+STATUS_SHED = 2
 
 
 class DeadlineExceeded(TimeoutError):
@@ -69,14 +73,15 @@ class FeatureFrame(Mapping):
     """
 
     __slots__ = ("columns", "status", "deployment", "version",
-                 "table_version", "latency", "trace_id")
+                 "table_version", "latency", "trace_id", "version_vector")
 
     def __init__(self, columns: Dict[str, np.ndarray], *,
                  status: Optional[np.ndarray] = None,
                  deployment: str = "", version: int = 0,
                  table_version: int = -1,
                  latency: Optional[Dict[str, float]] = None,
-                 trace_id: Optional[str] = None):
+                 trace_id: Optional[str] = None,
+                 version_vector: Optional[tuple] = None):
         self.columns = dict(columns)
         if status is None:
             status = np.zeros((0,), np.int8)
@@ -86,6 +91,9 @@ class FeatureFrame(Mapping):
         self.table_version = table_version
         self.latency = dict(latency) if latency else {}
         self.trace_id = trace_id
+        # sharded serving: per-shard table snapshot versions (shard order)
+        # for the batch — the cross-shard analogue of ``table_version``
+        self.version_vector = version_vector
 
     # ---------------------------------------------------- Mapping protocol
     def __getitem__(self, name: str) -> np.ndarray:
@@ -110,6 +118,10 @@ class FeatureFrame(Mapping):
     def n_unknown(self) -> int:
         return int((self.status == STATUS_UNKNOWN_KEY).sum())
 
+    @property
+    def n_shed(self) -> int:
+        return int((self.status == STATUS_SHED).sum())
+
     def row(self, i: int) -> "FeatureFrame":
         """Single-request view (scalar columns), keeping the metadata —
         how the batcher splits one engine batch into per-caller results."""
@@ -118,7 +130,7 @@ class FeatureFrame(Mapping):
             status=self.status[i:i + 1] if self.status.size else None,
             deployment=self.deployment, version=self.version,
             table_version=self.table_version, latency=self.latency,
-            trace_id=self.trace_id)
+            trace_id=self.trace_id, version_vector=self.version_vector)
 
     def __repr__(self) -> str:
         return (f"FeatureFrame({sorted(self.columns)}, "

@@ -66,7 +66,12 @@ def _probe(tkeys: jax.Array, tvals: jax.Array, q: jax.Array, *,
 
 
 class KeyDirectory:
-    def __init__(self, max_keys: int):
+    def __init__(self, max_keys: int, device=None):
+        # ``device``: optional jax device the mirror (and therefore every
+        # probe) is pinned to. Sharded tables pin their directory to the
+        # shard's device so probes never serialize through device 0's
+        # execution stream (repro.shard). None = default placement.
+        self.device = device
         self.slots = _next_pow2(max(2 * max_keys, 16))
         self._mask = self.slots - 1
         self._hkeys = np.full(self.slots, _EMPTY, np.int64)
@@ -133,8 +138,14 @@ class KeyDirectory:
         with self._mu:
             if self._dev is None:
                 self._pending = []        # full build supersedes patches
-                self._dev = (jnp.asarray(self._hkeys.astype(np.int32)),
-                             jnp.asarray(self._hvals))
+                if self.device is not None:
+                    self._dev = (
+                        jax.device_put(self._hkeys.astype(np.int32),
+                                       self.device),
+                        jax.device_put(self._hvals, self.device))
+                else:
+                    self._dev = (jnp.asarray(self._hkeys.astype(np.int32)),
+                                 jnp.asarray(self._hvals))
             elif self._pending:
                 # swap the queue out under the lock: an insert racing this
                 # patch lands in the fresh list for a later lookup, and no
@@ -163,7 +174,8 @@ class KeyDirectory:
             # pad kept deliberately, so _request_batched's length-derived
             # accounting stays uniform across serve strategies)
             qh = np.pad(qh, (0, bucket - B))
-        q = jnp.asarray(qh)
+        q = (jax.device_put(qh, self.device) if self.device is not None
+             else jnp.asarray(qh))
         probe = min(_next_pow2(self.max_probe), self.slots)
         idx, found = _probe(tkeys, tvals, q, probe=probe,
                             mask=self._mask)

@@ -224,25 +224,44 @@ class Table:
 
     def __init__(self, schema: TableSchema, *, max_keys: int = 1024,
                  capacity: int = 1024, bucket_size: int = 64,
-                 enable_preagg: bool = True):
+                 enable_preagg: bool = True, device=None):
         if capacity % bucket_size != 0:
             raise ValueError("capacity must be a multiple of bucket_size")
         self.schema = schema
         self.max_keys = max_keys
         self.capacity = capacity
         self.bucket_size = bucket_size
+        # optional jax device this table's state (and every ingest/query
+        # input buffer) is pinned to. The sharded runtime (repro.shard)
+        # places one shard per device so shard executions ride separate
+        # device streams; None keeps jax's default placement (unchanged
+        # single-engine behavior).
+        self.device = device
         self.key_to_idx: Dict[object, int] = {}
         # device-side mirror of the key dict for batched hot-path lookup
         # (engine._serve); deactivates itself on non-int32 keys
-        self.keydir = KeyDirectory(max_keys)
+        self.keydir = KeyDirectory(max_keys, device=device)
         self._pub_lock = threading.Lock()
-        self._published = TableSnapshot(
-            state=empty_state(max_keys, capacity, len(schema.value_cols)),
-            preagg=(empty_preagg(max_keys, capacity,
-                                 len(schema.value_cols), bucket_size)
-                    if enable_preagg else None),
-            version=0)
+        state = empty_state(max_keys, capacity, len(schema.value_cols))
+        preagg = (empty_preagg(max_keys, capacity,
+                               len(schema.value_cols), bucket_size)
+                  if enable_preagg else None)
+        if device is not None:
+            state = jax.device_put(state, device)
+            preagg = (jax.device_put(preagg, device)
+                      if preagg is not None else None)
+        self._published = TableSnapshot(state=state, preagg=preagg,
+                                        version=0)
         self._last_ts: Dict[int, float] = {}
+
+    def put(self, x):
+        """Place a host array per this table's device policy: committed to
+        ``self.device`` when pinned, default (uncommitted) placement
+        otherwise. Every ingest/serve input buffer goes through this seam
+        so a sharded table's uploads target its own device stream."""
+        if self.device is not None:
+            return jax.device_put(x, self.device)
+        return jnp.asarray(x)
 
     # -- versioned state ---------------------------------------------------
     @property
@@ -373,8 +392,8 @@ class Table:
         fn = ingest if donate else ingest_nodonate
         snap = self.snapshot()
         new_state, new_preagg = fn(
-            snap.state, snap.preagg, jnp.asarray(kidx),
-            jnp.asarray(ts_arr), jnp.asarray(rows),
+            snap.state, snap.preagg, self.put(kidx),
+            self.put(ts_arr), self.put(rows),
             bucket_size=self.bucket_size)
         self.publish(new_state, new_preagg)
         self._last_ts.update(pending)
@@ -399,10 +418,10 @@ class Table:
                 break
             b <<= 1
         for s in sizes:
-            k = jnp.full((s,), self.max_keys, jnp.int32)
+            k = self.put(np.full((s,), self.max_keys, np.int32))
             out = ingest_nodonate(snap.state, snap.preagg, k,
-                                  jnp.zeros((s,), jnp.float32),
-                                  jnp.zeros((s, V), jnp.float32),
+                                  self.put(np.zeros((s,), np.float32)),
+                                  self.put(np.zeros((s, V), np.float32)),
                                   bucket_size=self.bucket_size)
             jax.block_until_ready(jax.tree_util.tree_leaves(out[0]))
         return len(sizes)

@@ -41,9 +41,9 @@ __all__ = ["last_join_pallas"]
 
 def _kernel(req_key_ref, tot_ref, rts_ref,    # scalar prefetch (SMEM)
             v_ref, ts_ref,                    # VMEM blocks
-            row_ref, m_ref,
-            *, col_idx: Tuple[int, ...], C: int, V: int,
-            assume_latest: bool):
+            row_ref, m_ref, *maybe_ts_ref,
+            col_idx: Tuple[int, ...], C: int, V: int,
+            assume_latest: bool, with_ts: bool):
     i = pl.program_id(0)
     tot = tot_ref[i]
     t_req = rts_ref[i]
@@ -69,14 +69,18 @@ def _kernel(req_key_ref, tot_ref, rts_ref,    # scalar prefetch (SMEM)
     for oi, ci in enumerate(col_idx):
         row_ref[0, oi] = row[ci]
     m_ref[0, 0] = (p_last >= 0).astype(jnp.float32)
+    if with_ts:
+        # selected row's timestamp (staleness metrics); zero if unmatched
+        maybe_ts_ref[0][0, 0] = jnp.sum(tsb[:, 0] * sel[:, 0])
 
 
 def last_join_pallas(values: jax.Array, ts: jax.Array, total: jax.Array,
                      req_key: jax.Array, req_ts: jax.Array, *,
                      col_idx: Tuple[int, ...],
                      assume_latest: bool = False,
+                     with_ts: bool = False,
                      interpret: bool = False
-                     ) -> Tuple[jax.Array, jax.Array]:
+                     ) -> Tuple[jax.Array, ...]:
     """Pallas implementation of :func:`repro.kernels.ref.last_join_ref`."""
     if not col_idx:
         raise ValueError("last_join needs at least one value column")
@@ -95,6 +99,15 @@ def last_join_pallas(values: jax.Array, ts: jax.Array, total: jax.Array,
     def req_block(i, keys, tots, rtss):
         return (i, 0)
 
+    out_specs = [
+        pl.BlockSpec((1, Vc), req_block),
+        pl.BlockSpec((1, 1), req_block),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((B, Vc), jnp.float32),
+                 jax.ShapeDtypeStruct((B, 1), jnp.float32)]
+    if with_ts:
+        out_specs.append(pl.BlockSpec((1, 1), req_block))
+        out_shape.append(jax.ShapeDtypeStruct((B, 1), jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B,),
@@ -102,19 +115,19 @@ def last_join_pallas(values: jax.Array, ts: jax.Array, total: jax.Array,
             pl.BlockSpec((1, C, V), key_block3),
             pl.BlockSpec((1, C), key_block2),
         ],
-        out_specs=[
-            pl.BlockSpec((1, Vc), req_block),
-            pl.BlockSpec((1, 1), req_block),
-        ],
+        out_specs=out_specs,
     )
     kern = functools.partial(_kernel, col_idx=tuple(col_idx), C=C, V=V,
-                             assume_latest=assume_latest)
-    row, m = pl.pallas_call(
+                             assume_latest=assume_latest, with_ts=with_ts)
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=(jax.ShapeDtypeStruct((B, Vc), jnp.float32),
-                   jax.ShapeDtypeStruct((B, 1), jnp.float32)),
+        out_shape=tuple(out_shape),
         interpret=interpret,
     )(req_key.astype(jnp.int32), tot_req, req_ts,
       values.astype(jnp.float32), ts.astype(jnp.float32))
+    if with_ts:
+        row, m, sel_ts = out
+        return row, m[:, 0] > 0.5, sel_ts[:, 0]
+    row, m = out
     return row, m[:, 0] > 0.5

@@ -117,21 +117,25 @@ def last_join(values: jax.Array, ts: jax.Array, total: jax.Array,
               req_key: jax.Array, req_ts: jax.Array, *,
               col_idx: Tuple[int, ...],
               assume_latest: bool = False,
-              interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+              with_ts: bool = False,
+              interpret: bool = False) -> Tuple[jax.Array, ...]:
     """Point-in-time LAST JOIN row lookup against a right table's ring.
 
     Selects, per request, the latest retained row of ``req_key`` with
     ``ts <= req_ts`` and gathers its ``col_idx`` columns. Returns
-    ``(row (B, len(col_idx)) f32, matched (B,) bool)``.
+    ``(row (B, len(col_idx)) f32, matched (B,) bool)``; with
+    ``with_ts=True`` also the selected row's timestamp ``(B,) f32``
+    (right-row staleness metrics input).
     """
     if _use_pallas() or interpret:
         from repro.kernels import last_join as k
         return k.last_join_pallas(
             values, ts, total, req_key, req_ts, col_idx=col_idx,
-            assume_latest=assume_latest, interpret=interpret)
+            assume_latest=assume_latest, with_ts=with_ts,
+            interpret=interpret)
     return ref.last_join_ref(
         values, ts, total, req_key, req_ts, col_idx=col_idx,
-        assume_latest=assume_latest)
+        assume_latest=assume_latest, with_ts=with_ts)
 
 
 def preagg_window(values: jax.Array, ts: jax.Array, total: jax.Array,

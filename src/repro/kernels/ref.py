@@ -173,8 +173,9 @@ def window_agg_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
 def last_join_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
                   req_key: jax.Array, req_ts: jax.Array, *,
                   col_idx: Tuple[int, ...],
-                  assume_latest: bool = False
-                  ) -> Tuple[jax.Array, jax.Array]:
+                  assume_latest: bool = False,
+                  with_ts: bool = False
+                  ) -> Tuple[jax.Array, ...]:
     """Point-in-time LAST JOIN row lookup (the relational tier's kernel).
 
     For each request ``i`` over the RIGHT table's ring buffer: select the
@@ -192,6 +193,9 @@ def last_join_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
     values (K, C, V), ts (K, C), total (K,), req_key (B,), req_ts (B,).
     Returns ``(row (B, len(col_idx)) f32, matched (B,) bool)``; unmatched
     requests (empty ring, or every row newer than req_ts) get zero rows.
+    ``with_ts`` appends the selected row's timestamp ``(B,) f32`` (zero
+    when unmatched) — the staleness-metrics input (right-row age is
+    ``req_ts − sel_ts``).
     """
     if not col_idx:
         raise ValueError("last_join needs at least one value column")
@@ -207,7 +211,10 @@ def last_join_ref(values: jax.Array, ts: jax.Array, total: jax.Array,
     # unique positions -> exact one-hot select (matches the LAST aggregate)
     sel = ((p == p_last[:, None]) & win).astype(jnp.float32)
     row = jnp.einsum("bc,bcv->bv", sel, v)
-    return row, matched
+    if not with_ts:
+        return row, matched
+    sel_ts = jnp.sum(sel * t.astype(jnp.float32), axis=1)
+    return row, matched, sel_ts
 
 
 def check_fused_specs(spec_rows, spec_ranges, spec_fields) -> None:

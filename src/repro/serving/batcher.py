@@ -34,7 +34,13 @@ import numpy as np
 
 from repro.core.results import DeadlineExceeded, RequestContext
 
-__all__ = ["BatcherConfig", "DynamicBatcher", "Request"]
+__all__ = ["BatcherConfig", "DynamicBatcher", "Request", "BatcherClosed"]
+
+
+class BatcherClosed(RuntimeError):
+    """The batcher was shut down with this request still queued or in
+    flight — the caller gets a definite error instead of a hung
+    ``Request.wait()``."""
 
 
 @dataclass(frozen=True)
@@ -88,6 +94,9 @@ class DynamicBatcher:
         except (TypeError, ValueError):
             self._wants_ctx = False
         self._q: Deque[Request] = collections.deque()
+        # taken from the queue, not yet completed (close() must fail
+        # these too); id-keyed because Request is an eq-dataclass
+        self._inflight: Dict[int, Request] = {}
         self._lock = threading.Lock()
         self._new = threading.Condition(self._lock)
         self._stop = False
@@ -108,6 +117,8 @@ class DynamicBatcher:
             raise DeadlineExceeded("deadline expired before enqueue")
         r = Request(key=key, ts=ts, payload=payload, ctx=ctx)
         with self._lock:
+            if self._stop:
+                raise BatcherClosed("batcher is closed")
             if len(self._q) >= self.cfg.max_queue:
                 self.stats["rejected"] += 1
                 raise RuntimeError("admission control: queue full")
@@ -127,7 +138,10 @@ class DynamicBatcher:
         with self._new:
             while not self._q and not self._stop:
                 self._new.wait(0.1)
-            if self._stop and not self._q:
+            if self._stop:
+                # close() fails whatever is still queued — dispatching it
+                # here would race the shutdown (and a stuck serve_batch is
+                # exactly what close() must not wait on)
                 return []
             # deadline policy: wait for more work until the oldest
             # request's deadline, then take up to max_batch
@@ -159,6 +173,10 @@ class DynamicBatcher:
                     kept.append(r)
             for r in reversed(kept):
                 self._q.appendleft(r)
+            # register as in-flight BEFORE releasing the lock: a close()
+            # racing the dequeue must see every request in either the
+            # queue or the in-flight set, or its wait() could hang
+            self._inflight.update({id(r): r for r in out})
             return out
 
     def _dispatch_loop(self) -> None:
@@ -200,6 +218,10 @@ class DynamicBatcher:
                 for r in batch:
                     r.error = e
                     r.done.set()
+            finally:
+                with self._lock:
+                    for r in batch:
+                        self._inflight.pop(id(r), None)
             self.stats["batches"] += 1
             self.stats["requests"] += len(batch)
             self.stats["sum_batch"] += len(batch)
@@ -207,11 +229,29 @@ class DynamicBatcher:
                                                len(batch))
 
     def close(self) -> None:
+        """Shut down the dispatchers and FAIL whatever is still pending.
+
+        Every queued request — and any request inside a dispatch that did
+        not finish within the join grace period (e.g. a blocked
+        ``serve_batch``) — has its ``wait()`` raised with
+        :class:`BatcherClosed` instead of hanging until timeout. A
+        concurrently-completing dispatch may still deliver its result
+        first; completion and close-failure race benignly (first write to
+        ``done`` wins from the caller's perspective)."""
         with self._lock:
             self._stop = True
             self._new.notify_all()
         for t in self._threads:
             t.join(timeout=1.0)
+        with self._lock:
+            leftovers = list(self._q) + list(self._inflight.values())
+            self._q.clear()
+            self._inflight.clear()
+        for r in leftovers:
+            if not r.done.is_set():
+                r.error = BatcherClosed(
+                    "batcher closed before this request was served")
+                r.done.set()
 
     @property
     def mean_batch(self) -> float:

@@ -56,7 +56,13 @@ class FeatureServer:
     ``Engine.attach_stream``), the server also exposes the **write path**:
     ``ingest`` stages an event into the watermark buffer and returns
     immediately — it never blocks a concurrent ``request``, whose reads
-    come from atomically-published table snapshots (DESIGN.md §4)."""
+    come from atomically-published table snapshots (DESIGN.md §4).
+
+    **Shard-aware**: ``engine`` may be a ``repro.shard.ShardedEngine`` —
+    handle resolution, version pinning, batching and the write path all
+    go through the same surface; requests are then admission-controlled
+    and scattered across shard engines by the sharded handle (DESIGN.md
+    §9), and ``ingest`` routes events to the owning shard's pipeline."""
 
     def __init__(self, engine: Engine, deployment: str,
                  cfg: ServerConfig = ServerConfig()):

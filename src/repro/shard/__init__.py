@@ -1,0 +1,16 @@
+"""Sharded serving runtime: hash-partitioned shard engines behind the
+single-engine API (DESIGN.md §9).
+
+``ShardedEngine`` wraps N key-hash-partitioned shard engines; a
+``ShardRouter`` scatters request batches to per-shard coalescing workers
+and gathers rows back in request order; a ``ResourceManager`` bounds
+per-deployment concurrency and sheds past-deadline work whole-batch.
+"""
+from repro.shard.engine import (ShardConfig, ShardedDeploymentHandle,
+                                ShardedEngine, ShardedPipeline)
+from repro.shard.resource import AdmissionConfig, ResourceManager
+from repro.shard.router import ShardRouter, shard_ids, shard_of
+
+__all__ = ["ShardConfig", "ShardedEngine", "ShardedDeploymentHandle",
+           "ShardedPipeline", "AdmissionConfig", "ResourceManager",
+           "ShardRouter", "shard_ids", "shard_of"]

@@ -1,0 +1,710 @@
+"""ShardedEngine: horizontal scale-out behind the single-engine API.
+
+DESIGN.md §9. N key-hash-partitioned **shard engines** — each a full
+:class:`repro.core.engine.Engine` with its own tables, device-resident
+key directory, plan cache, and (when streams are attached) ingest
+pipeline with its own watermarks — behind the familiar ``create_table /
+insert / attach_stream / deploy / request / query_offline`` surface.
+When the jax runtime exposes several devices (a TPU slice, or CPU with
+``--xla_force_host_platform_device_count=N``), shard ``s`` is pinned to
+device ``s % D`` so shard executions ride separate device streams; on a
+single device everything still works, just serialized.
+
+* **Routing** (``shard/router.py``): ingest goes to the key's owning
+  shard; a request batch is scattered by key hash, executed per shard by
+  coalescing workers, and gathered back in request order. The paper's
+  key-partitioned tablets, in-process.
+* **Deployments**: ``deploy`` compiles one executable set per shard
+  (``Engine.build_version``) and then publishes the whole set under ONE
+  :class:`ShardedDeploymentHandle` — hot swap, counter-based canary and
+  rollback operate on the set atomically; a batch is always served by a
+  single (version, shard-set).
+* **Tables**: partitioned by default; ``replicate=True`` broadcasts a
+  table to every shard (dimension tables — LAST JOIN probes then resolve
+  through the owning shard's local replica, no cross-shard hop).
+* **Offline parity**: ``query_offline`` runs per shard against pinned
+  snapshots and stamps the result with the cross-shard **version
+  vector**; outputs are bit-identical to the unsharded engine because
+  per-key event order (and therefore every ring) is preserved by
+  routing.
+* **Admission control** (``shard/resource.py``): per-deployment
+  in-flight and queue-depth bounds plus deadline shedding, so
+  saturating one deployment or shard degrades with explicit
+  backpressure/shed statuses instead of unbounded queueing.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import dsl
+from repro.core.engine import DeploymentHandle, Engine
+from repro.core.logical import Query
+from repro.core.optimizer import OptFlags
+from repro.core.results import (STATUS_SHED, FeatureFrame, RequestContext)
+from repro.featurestore.table import TableSchema
+from repro.shard.resource import AdmissionConfig, ResourceManager
+from repro.shard.router import ShardRouter, shard_ids, shard_of
+
+__all__ = ["ShardConfig", "ShardedEngine", "ShardedDeploymentHandle",
+           "ShardedPipeline"]
+
+
+@dataclass(frozen=True)
+class ShardConfig:
+    n_shards: int = 2
+    dispatch_rows: int = 256          # coalesced rows per shard dispatch
+    # max wait for a worker to fill one dispatch chunk (batcher-style
+    # deadline policy; 0 disables waiting)
+    coalesce_delay_s: float = 0.002
+    # execution lanes (worker threads). None = one per distinct device in
+    # use: running more execution streams than devices just thrashes;
+    # shards beyond that share lanes round-robin, like tablets sharing a
+    # tablet-server's executor pool
+    n_lanes: Optional[int] = None
+    admission: AdmissionConfig = AdmissionConfig()
+    # pin shard s to jax device s % D when more than one device exists;
+    # set False to keep default placement (all shards on device 0)
+    pin_devices: bool = True
+
+
+@dataclass
+class ShardedHandleMetrics:
+    requests: int = 0
+    batches: int = 0
+    shed_requests: int = 0
+    shed_batches: int = 0
+    serve_s: float = 0.0
+    canary_batches: int = 0
+    canary_max_abs_diff: float = 0.0
+
+
+@dataclass
+class _TableSpec:
+    schema: TableSchema
+    replicated: bool
+
+
+class ShardedDeploymentHandle:
+    """One version of a deployment across every shard — the sharded
+    serving endpoint. Owns the per-shard :class:`DeploymentHandle`s; the
+    router dispatches against THESE handles directly, so a mid-redeploy
+    inner-engine state is invisible to in-flight batches (same
+    handle-owned-executable argument as the single-engine swap)."""
+
+    def __init__(self, engine: "ShardedEngine", name: str, version: int,
+                 handles: Sequence[DeploymentHandle]):
+        self.engine = engine
+        self.name = name
+        self.version = version
+        self.handles: Tuple[DeploymentHandle, ...] = tuple(handles)
+        self.state = DeploymentHandle.WARMING
+        self.metrics = ShardedHandleMetrics()
+        self._canary: Optional[Tuple["ShardedDeploymentHandle", float]] = \
+            None
+        self._canary_counter = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ identity
+    @property
+    def tag(self) -> str:
+        return f"{self.name}@v{self.version}x{len(self.handles)}"
+
+    @property
+    def live(self) -> bool:
+        return self.state == DeploymentHandle.LIVE
+
+    @property
+    def plan(self):
+        return self.handles[0].plan
+
+    @property
+    def phys(self):
+        return self.handles[0].phys
+
+    @property
+    def table(self):
+        """Shard 0's table — schema/introspection only; mutation must go
+        through the sharded engine (routing)."""
+        return self.handles[0].table
+
+    def __repr__(self) -> str:
+        return (f"ShardedDeploymentHandle({self.name!r} v{self.version} "
+                f"[{self.state}] x{len(self.handles)} shards)")
+
+    # ------------------------------------------------------------ warm etc
+    def warm(self, buckets: Sequence[int]) -> int:
+        return sum(h.warm(buckets) for h in self.handles)
+
+    def version_vector(self) -> Tuple[int, ...]:
+        """Per-shard table versions (shard order) right now."""
+        return tuple(h.table.version for h in self.handles)
+
+    def join_staleness(self) -> Dict[str, Dict[str, float]]:
+        """Cross-shard rollup of the per-shard staleness metrics."""
+        out: Dict[str, Dict[str, float]] = {}
+        for h in self.handles:
+            for t, st in h.join_staleness().items():
+                agg = out.setdefault(t, {"probes": 0, "matches": 0,
+                                         "age_p99": float("nan"),
+                                         "age_samples": 0})
+                agg["probes"] += st["probes"]
+                agg["matches"] += st["matches"]
+                agg["age_samples"] += st["age_samples"]
+                if st["age_samples"]:
+                    p99 = st["age_p99"]
+                    agg["age_p99"] = (p99 if np.isnan(agg["age_p99"])
+                                      else max(agg["age_p99"], p99))
+        for agg in out.values():
+            agg["match_rate"] = (agg["matches"] / agg["probes"]
+                                 if agg["probes"] else 0.0)
+        return out
+
+    # --------------------------------------------------------------- serve
+    def request(self, keys: Sequence, ts: Sequence[float],
+                rows: Optional[np.ndarray] = None,
+                ctx: Optional[RequestContext] = None) -> FeatureFrame:
+        """Serve one batch: admit -> (canary pick) -> scatter -> gather.
+
+        Shedding is all-or-nothing: an expired deadline (at admission or
+        while queued on any shard) returns a frame whose EVERY row is
+        ``STATUS_SHED`` — never a mix of shed and computed rows."""
+        eng = self.engine
+        B = len(keys)
+        trace = ctx.trace_id if ctx is not None else None
+        if B == 0:
+            return FeatureFrame(
+                {n: np.zeros((0,), np.float32)
+                 for n in self.phys.feature_names},
+                status=np.zeros((0,), np.int8), deployment=self.name,
+                version=self.version, trace_id=trace,
+                version_vector=self.version_vector())
+        if rows is None and self.plan.joins:
+            raise ValueError(
+                f"deployment {self.name!r} has {len(self.plan.joins)} "
+                f"LAST JOIN(s); online requests must pass rows= — the "
+                f"join probes read the request row's join-key column(s)")
+        adm = eng.resources.admit(self.name, ctx,
+                                  queue_depths=eng.router.queue_depths)
+        if adm.shed:
+            return self._shed_frame(B, trace)
+        try:
+            cand = None
+            pinned = ctx is not None and ctx.version_pin is not None
+            canary = None if pinned else self._canary
+            if canary is not None:
+                cand_handle, frac = canary
+                with self._lock:
+                    self._canary_counter += 1
+                    n = self._canary_counter
+                if int(n * frac) > int((n - 1) * frac):
+                    cand = cand_handle
+            if cand is None:
+                return self._scatter_gather(keys, ts, rows, ctx, trace)
+            # canary slice: candidate serves; incumbent recomputes as the
+            # reference and the divergence lands on the candidate
+            base = self._scatter_gather(keys, ts, rows, ctx, trace)
+            new = cand._scatter_gather(keys, ts, rows, ctx, trace)
+            diff = 0.0
+            for nme, v in new.columns.items():
+                ref = base.columns.get(nme)
+                if ref is not None and np.size(v):
+                    diff = max(diff, float(np.max(np.abs(
+                        np.asarray(v, np.float64)
+                        - np.asarray(ref, np.float64)))))
+            with cand._lock:
+                cand.metrics.canary_batches += 1
+                cand.metrics.canary_max_abs_diff = max(
+                    cand.metrics.canary_max_abs_diff, diff)
+            return new
+        finally:
+            adm.release()
+
+    def _scatter_gather(self, keys, ts, rows, ctx, trace) -> FeatureFrame:
+        eng = self.engine
+        t0 = time.perf_counter()
+        karr = np.asarray(keys)
+        ts_arr = np.asarray(ts, np.float32)
+        row_arr = (np.asarray(rows, np.float32) if rows is not None
+                   else None)
+        B = len(karr)
+        parts = eng.router.scatter(self.handles, karr, ts_arr, row_arr,
+                                   ctx=ctx)
+        columns, status, _tvers, any_shed = eng.router.gather(parts, B)
+        if any_shed:
+            eng.resources.record_shed()
+            return self._shed_frame(B, trace)
+        wall = time.perf_counter() - t0
+        with self._lock:
+            m = self.metrics
+            m.requests += B
+            m.batches += 1
+            m.serve_s += wall
+        return FeatureFrame(
+            columns, status=status, deployment=self.name,
+            version=self.version, trace_id=trace,
+            table_version=max((h.table.version for h in self.handles),
+                              default=-1),
+            latency={"serve_s": wall},
+            version_vector=self.version_vector())
+
+    def _shed_frame(self, B: int, trace) -> FeatureFrame:
+        with self._lock:
+            self.metrics.shed_requests += B
+            self.metrics.shed_batches += 1
+        return FeatureFrame(
+            {n: np.zeros((B,), np.float32)
+             for n in self.phys.feature_names},
+            status=np.full(B, STATUS_SHED, np.int8),
+            deployment=self.name, version=self.version, trace_id=trace,
+            version_vector=self.version_vector())
+
+    def rollback(self) -> "ShardedDeploymentHandle":
+        return self.engine.rollback(self.name)
+
+
+class ShardedPipeline:
+    """Streaming facade: one IngestPipeline per shard, each with its own
+    watermarks/frontiers — routing by the same key hash as serving, so an
+    event's reorder repair happens on the shard that stores it."""
+
+    def __init__(self, engine: "ShardedEngine", table: str,
+                 pipes: Sequence, replicated: bool):
+        self.engine = engine
+        self.table = table
+        self.pipes = tuple(pipes)
+        self.replicated = replicated
+
+    def push(self, key, ts: float, row: np.ndarray) -> bool:
+        if self.replicated:
+            ok = True
+            for p in self.pipes:
+                ok = p.push(key, ts, row) and ok
+            return ok
+        s = shard_of(key, len(self.pipes))
+        return self.pipes[s].push(key, ts, row)
+
+    def push_batch(self, keys: Sequence, ts: Sequence[float],
+                   rows: np.ndarray, *, all_or_nothing: bool = False
+                   ) -> int:
+        keys = np.asarray(keys)
+        ts = np.asarray(ts, np.float32)
+        rows = np.asarray(rows, np.float32)
+        if self.replicated:
+            return min(p.push_batch(keys, ts, rows,
+                                    all_or_nothing=all_or_nothing)
+                       for p in self.pipes)
+        sid = shard_ids(keys, len(self.pipes))
+        n = 0
+        for s, p in enumerate(self.pipes):
+            idx = np.flatnonzero(sid == s)
+            if idx.size:
+                n += p.push_batch(keys[idx], ts[idx], rows[idx],
+                                  all_or_nothing=all_or_nothing)
+        return n
+
+    def flush(self, *, flush_all: bool = True) -> None:
+        for p in self.pipes:
+            p.flush(flush_all=flush_all)
+
+    def wait_idle(self, timeout: float = 30.0) -> bool:
+        return all(p.wait_idle(timeout) for p in self.pipes)
+
+    def warm(self) -> int:
+        return sum(p.warm() for p in self.pipes)
+
+    def version_vector(self) -> Tuple[int, ...]:
+        return tuple(p.table.version for p in self.pipes)
+
+    def metrics(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for p in self.pipes:
+            for k, v in p.metrics().items():
+                out[k] = out.get(k, 0) + v
+        out["n_shards"] = len(self.pipes)
+        return out
+
+    def close(self, *, drain: bool = True) -> None:
+        for p in self.pipes:
+            p.close(drain=drain)
+
+
+class ShardedEngine:
+    """N hash-partitioned shard engines behind the Engine API."""
+
+    def __init__(self, cfg: ShardConfig = ShardConfig(), *,
+                 flags: OptFlags = OptFlags(), **engine_kw):
+        import jax
+        self.cfg = cfg
+        self.flags = flags
+        S = cfg.n_shards
+        devices = jax.devices()
+        self.devices: Tuple = tuple(
+            devices[s % len(devices)] if (cfg.pin_devices
+                                          and len(devices) > 1) else None
+            for s in range(S))
+        self.shards: List[Engine] = [Engine(flags, **engine_kw)
+                                     for _ in range(S)]
+        n_lanes = cfg.n_lanes
+        if n_lanes is None:
+            n_lanes = len({d for d in self.devices if d is not None}) or 1
+        self.router = ShardRouter(S, dispatch_rows=cfg.dispatch_rows,
+                                  coalesce_delay_s=cfg.coalesce_delay_s,
+                                  n_lanes=n_lanes)
+        self.resources = ResourceManager(cfg.admission)
+        self.specs: Dict[str, _TableSpec] = {}
+        self.streams: Dict[str, ShardedPipeline] = {}
+        self.deployments: Dict[str, ShardedDeploymentHandle] = {}
+        self._versions: Dict[str, Dict[int, ShardedDeploymentHandle]] = {}
+        self._history: Dict[str, List[ShardedDeploymentHandle]] = {}
+        self._deploy_lock = threading.RLock()
+        self._closed = False
+
+    # ------------------------------------------------------------ identity
+    @property
+    def n_shards(self) -> int:
+        return self.cfg.n_shards
+
+    @property
+    def cache(self):
+        """Shard 0's plan cache (FeatureServer warm-gating compat)."""
+        return self.shards[0].cache
+
+    def shard_of(self, key) -> int:
+        return shard_of(key, self.n_shards)
+
+    # ------------------------------------------------------------------ DDL
+    def create_table(self, schema: TableSchema, *, max_keys: int = 1024,
+                     capacity: int = 1024, bucket_size: int = 64,
+                     join_keys: Sequence[str] = (),
+                     replicate: bool = False,
+                     per_shard_max_keys: Optional[int] = None) -> None:
+        """Create the table on every shard.
+
+        Partitioned (default): each shard holds the keys that hash to it;
+        ``max_keys`` is the TOTAL key budget and each shard provisions
+        ``max_keys/S`` plus 30% hash-skew headroom (override with
+        ``per_shard_max_keys``). Replicated: every shard holds a full
+        copy — required for LAST JOIN right tables, whose probes must
+        resolve on the probing shard.
+        """
+        S = self.n_shards
+        if replicate or per_shard_max_keys is None:
+            per_shard = max_keys if replicate else max(
+                16, int(1.3 * max_keys / S) + 8)
+        else:
+            per_shard = per_shard_max_keys
+        for s, eng in enumerate(self.shards):
+            eng.create_table(schema, max_keys=per_shard, capacity=capacity,
+                             bucket_size=bucket_size, join_keys=join_keys,
+                             device=self.devices[s])
+        self.specs[schema.name] = _TableSpec(schema=schema,
+                                             replicated=replicate)
+
+    def tables_of(self, name: str) -> Tuple:
+        """The per-shard Table objects for ``name`` (shard order)."""
+        return tuple(e.tables[name] for e in self.shards)
+
+    def insert(self, table: str, keys: Sequence, ts: Sequence[float],
+               rows: np.ndarray) -> None:
+        """Bulk insert, routed to owning shards (replicated tables fan
+        out to all). Per-shard semantics match ``Engine.insert``
+        (including the stream barrier when a pipeline is attached);
+        atomic validation is per shard — a cross-shard transactional
+        reject is future work (DESIGN.md §9)."""
+        spec = self._spec(table)
+        keys = np.asarray(keys)
+        ts = np.asarray(ts, np.float32)
+        rows = np.asarray(rows, np.float32)
+        if spec.replicated:
+            for eng in self.shards:
+                eng.insert(table, keys.tolist(), ts.tolist(), rows)
+            return
+        sid = shard_ids(keys, self.n_shards)
+        for s, eng in enumerate(self.shards):
+            idx = np.flatnonzero(sid == s)
+            if idx.size:
+                eng.insert(table, keys[idx].tolist(), ts[idx].tolist(),
+                           rows[idx])
+
+    def _spec(self, table: str) -> _TableSpec:
+        spec = self.specs.get(table)
+        if spec is None:
+            raise KeyError(f"unknown table {table!r}; create_table first; "
+                           f"known: {sorted(self.specs)}")
+        return spec
+
+    # ------------------------------------------------------------ streaming
+    def attach_stream(self, table: str, cfg=None, **cfg_kw
+                      ) -> ShardedPipeline:
+        """One ingest pipeline per shard (per-shard watermarks); events
+        route to the owning shard's pipeline."""
+        spec = self._spec(table)
+        if table in self.streams:
+            raise ValueError(f"table {table!r} already has a stream")
+        pipes = [eng.attach_stream(table, cfg, **cfg_kw)
+                 for eng in self.shards]
+        facade = ShardedPipeline(self, table, pipes, spec.replicated)
+        self.streams[table] = facade
+        return facade
+
+    def create_stream(self, schema: TableSchema, *, max_keys: int = 1024,
+                      capacity: int = 1024, bucket_size: int = 64,
+                      replicate: bool = False, **cfg_kw):
+        self.create_table(schema, max_keys=max_keys, capacity=capacity,
+                          bucket_size=bucket_size, replicate=replicate)
+        return (self.tables_of(schema.name),
+                self.attach_stream(schema.name, **cfg_kw))
+
+    def register_model(self, name: str, fn: Callable,
+                       params: object = None) -> None:
+        for eng in self.shards:
+            eng.register_model(name, fn, params)
+
+    # --------------------------------------------------------------- deploy
+    def deploy(self, name: str,
+               query: Union[str, Query, dsl.QueryBuilder], *,
+               warm_buckets: Optional[Sequence[int]] = None,
+               canary: float = 0.0) -> ShardedDeploymentHandle:
+        """Compile one executable set per shard, then publish the whole
+        set atomically under one handle. Joined right tables must be
+        replicated (probes resolve through the probing shard's local
+        replica)."""
+        if canary and not (0.0 < canary <= 1.0):
+            raise ValueError(
+                f"canary fraction must be in (0, 1], got {canary}")
+        if isinstance(query, str):
+            query = dsl.parse_sql(query)
+        elif isinstance(query, dsl.QueryBuilder):
+            query = query.build()
+        with self._deploy_lock:
+            prev = self.deployments.get(name)
+            if canary > 0.0 and prev is None:
+                raise ValueError(
+                    f"canary deploy of {name!r} requires an existing live "
+                    f"deployment; deploy without canary= first")
+            # build EVERY shard's version before any publish: a failed
+            # shard build must leave the live set untouched AND not leak
+            # the versions already built on earlier shards
+            handles: List[DeploymentHandle] = []
+            try:
+                for eng in self.shards:
+                    handles.append(eng.build_version(
+                        name, query, warm_buckets=warm_buckets))
+            except BaseException:
+                for eng, h in zip(self.shards, handles):
+                    eng.discard_version(h)
+                raise
+            for j in handles[0].plan.joins:
+                if not self._spec(j.table).replicated:
+                    for eng, h in zip(self.shards, handles):
+                        eng.discard_version(h)
+                    raise ValueError(
+                        f"LAST JOIN right table {j.table!r} is hash-"
+                        f"partitioned; a probing shard could not resolve "
+                        f"keys owned by other shards — create it with "
+                        f"replicate=True (broadcast dimension table)")
+            version = handles[0].version
+            sh = ShardedDeploymentHandle(self, name, version, handles)
+            self._versions.setdefault(name, {})[version] = sh
+            if canary > 0.0:
+                displaced = prev._canary[0] if prev._canary else None
+                sh.state = DeploymentHandle.CANARY
+                prev._canary = (sh, float(canary))
+                if displaced is not None:
+                    self._discard(displaced)
+            else:
+                self._swap(name, sh, prev)
+            return sh
+
+    def _swap(self, name: str,
+              new: ShardedDeploymentHandle,
+              prev: Optional[ShardedDeploymentHandle]) -> None:
+        for eng, h in zip(self.shards, new.handles):
+            eng.publish_version(h)
+        new._canary = None
+        new.state = DeploymentHandle.LIVE
+        self.deployments[name] = new       # the atomic publish
+        if prev is not None:
+            if prev._canary is not None and prev._canary[0] is not new:
+                self._discard(prev._canary[0])
+            prev._canary = None
+            prev.state = DeploymentHandle.RETIRED
+            hist = self._history.setdefault(name, [])
+            hist.append(prev)
+            # mirror the inner engines' retention bound: beyond it the
+            # inner handles released their executables anyway, so the
+            # sharded wrapper is unpinnable too
+            while len(hist) > self.shards[0].max_retained_versions:
+                dropped = hist.pop(0)
+                self._versions.get(name, {}).pop(dropped.version, None)
+
+    def _discard(self, cand: ShardedDeploymentHandle) -> None:
+        cand.state = DeploymentHandle.RETIRED
+        for eng, h in zip(self.shards, cand.handles):
+            eng.discard_version(h)
+        self._versions.get(cand.name, {}).pop(cand.version, None)
+
+    def handle(self, name: str, version: Optional[int] = None
+               ) -> ShardedDeploymentHandle:
+        if version is None:
+            dep = self.deployments.get(name)
+            if dep is None:
+                raise KeyError(f"unknown deployment {name!r}; deployed: "
+                               f"{sorted(self.deployments)}")
+            return dep
+        try:
+            return self._versions[name][version]
+        except KeyError:
+            raise KeyError(
+                f"deployment {name!r} has no version {version}; known: "
+                f"{sorted(self._versions.get(name, {}))}") from None
+
+    def promote(self, name: str) -> ShardedDeploymentHandle:
+        with self._deploy_lock:
+            live = self.handle(name)
+            if live._canary is None:
+                raise ValueError(
+                    f"deployment {name!r} has no active canary")
+            cand, _ = live._canary
+            live._canary = None
+            self._swap(name, cand, live)
+            return cand
+
+    def rollback(self, name: str) -> ShardedDeploymentHandle:
+        with self._deploy_lock:
+            live = self.deployments.get(name)
+            if live is not None and live._canary is not None:
+                self._discard(live._canary[0])
+                live._canary = None
+                return live
+            hist = self._history.get(name)
+            if not hist:
+                raise ValueError(
+                    f"no prior version of {name!r} to roll back to")
+            prev = hist.pop()
+            self._swap(name, prev, live)
+            return prev
+
+    # --------------------------------------------------------------- online
+    def request(self, name: str, keys: Sequence, ts: Sequence[float],
+                rows: Optional[np.ndarray] = None,
+                ctx: Optional[RequestContext] = None) -> FeatureFrame:
+        pin = ctx.version_pin if ctx is not None else None
+        return self.handle(name, pin).request(keys, ts, rows, ctx=ctx)
+
+    # -------------------------------------------------------------- offline
+    def query_offline(self, name: str, *, batch_size: int = 1024,
+                      point_in_time: bool = True) -> Dict[str, np.ndarray]:
+        """Per-shard offline materialisation under pinned snapshots,
+        concatenated. ``__key`` holds the ACTUAL key values (not dense
+        indices — those are shard-local), plus a ``__shard`` column and
+        the ``version_vector`` the run was pinned to."""
+        dep = self.handle(name)
+        outs: List[Dict[str, np.ndarray]] = []
+        vvec = []
+        for s, eng in enumerate(self.shards):
+            res = eng.query_offline(name, batch_size=batch_size,
+                                    point_in_time=point_in_time)
+            table = dep.handles[s].table
+            vvec.append(table.version)
+            if "__key" not in res or len(res["__key"]) == 0:
+                # hash skew (or n_shards > distinct keys) can leave a
+                # shard with no retained events; skip it rather than
+                # concatenating dtype-less empties into the key column
+                continue
+            inv = {i: k for k, i in table.key_to_idx.items()}
+            res["__key"] = np.asarray(
+                [inv[int(i)] for i in res["__key"]])
+            res["__shard"] = np.full(len(res["__key"]), s, np.int32)
+            outs.append(res)
+        if not outs:
+            merged = {n: np.zeros((0,), np.float32)
+                      for n in dep.phys.feature_names}
+            merged["__key"] = np.zeros((0,), np.int64)
+            merged["__ts"] = np.zeros((0,), np.float32)
+            merged["__shard"] = np.zeros((0,), np.int32)
+        else:
+            merged = {k: np.concatenate([o[k] for o in outs])
+                      for k in outs[0]}
+        merged["__version_vector"] = np.asarray(vvec, np.int64)
+        return merged
+
+    # ---------------------------------------------------------------- intro
+    def explain(self, name: str) -> str:
+        dep = self.handle(name)
+        rs = self.router.stats()
+        lines = [
+            f"sharded deployment {name!r} v{dep.version} [{dep.state}] "
+            f"across {self.n_shards} shard(s)",
+            f"  router: hash-partitioned (Knuth multiplicative), "
+            f"dispatch_rows={self.cfg.dispatch_rows}, "
+            f"rows/dispatch={rs['rows_per_dispatch']:.1f}",
+            f"  admission: max_inflight="
+            f"{self.cfg.admission.max_inflight}, max_queue_depth="
+            f"{self.cfg.admission.max_queue_depth} "
+            f"({self.resources.metrics()})",
+            f"  devices: " + ", ".join(
+                str(d) if d is not None else "default"
+                for d in self.devices),
+            f"  version vector: {dep.version_vector()}",
+        ]
+        lines.append("  per-shard plan (shard 0 of "
+                     f"{self.n_shards}; all shards compile the same "
+                     f"plan):")
+        lines += ["  " + l for l in
+                  self.shards[0].explain(name).splitlines()]
+        return "\n".join(lines)
+
+    def latency_decomposition(self) -> Dict[str, float]:
+        # counters sum across shards; rates are recomputed from the
+        # summed counters and percentiles take the worst shard — summing
+        # a ratio or a p99 across shards would be nonsense
+        agg: Dict[str, float] = {}
+        join_matches = 0.0
+        join_p99: List[float] = []
+        for eng in self.shards:
+            d = eng.latency_decomposition()
+            for k, v in d.items():
+                if k in ("cache_hit_rate", "join_match_rate",
+                         "join_age_p99"):
+                    continue
+                agg[k] = agg.get(k, 0.0) + v
+            if d.get("join_probes"):
+                join_matches += d["join_match_rate"] * d["join_probes"]
+                p99 = d.get("join_age_p99", float("nan"))
+                if not np.isnan(p99):
+                    join_p99.append(p99)
+        if agg.get("join_probes"):
+            agg["join_match_rate"] = join_matches / agg["join_probes"]
+            agg["join_age_p99"] = (max(join_p99) if join_p99
+                                   else float("nan"))
+        hit = [eng.cache.stats.hit_rate for eng in self.shards]
+        agg["cache_hit_rate"] = float(np.mean(hit)) if hit else 0.0
+        agg["n_shards"] = self.n_shards
+        agg.update({f"router_{k}": v
+                    for k, v in self.router.stats().items()})
+        agg.update({f"admission_{k}": v
+                    for k, v in self.resources.metrics().items()})
+        return agg
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.router.close()
+        self.streams.clear()   # inner engines own + close the pipelines
+        for eng in self.shards:
+            eng.close()
+
+    def __enter__(self) -> "ShardedEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False

@@ -412,6 +412,43 @@ def test_last_join_pallas_vs_ref_vs_brute(assume_latest, col_idx):
                 assert float(row_r[i, oi]) == 0.0, (i, ci)
 
 
+@pytest.mark.parametrize("assume_latest", [False, True])
+def test_last_join_with_ts_parity_and_age_semantics(assume_latest):
+    """``with_ts=True`` (staleness-metrics input): pallas and ref agree
+    on the selected row's timestamp, which equals the brute-force latest
+    qualifying ts (zero when unmatched)."""
+    from repro.kernels.last_join import last_join_pallas
+    t, (keys, ts, rows) = _join_table()
+    st = t.state
+    rng = np.random.default_rng(13)
+    req_key = jnp.asarray(list(rng.integers(0, 6, 10)) + [6], jnp.int32)
+    req_ts = jnp.asarray(
+        list(np.sort(rng.uniform(100, 900, 10))) + [500.0], jnp.float32)
+    kw = dict(col_idx=(0, 1), assume_latest=assume_latest, with_ts=True)
+    row_p, m_p, ts_p = last_join_pallas(st.values, st.ts, st.total,
+                                        req_key, req_ts, interpret=True,
+                                        **kw)
+    row_r, m_r, ts_r = ref.last_join_ref(st.values, st.ts, st.total,
+                                         req_key, req_ts, **kw)
+    np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_r))
+    np.testing.assert_allclose(np.asarray(ts_p), np.asarray(ts_r),
+                               rtol=1e-6, atol=1e-6)
+    cap = t.capacity
+    for i in range(len(req_key)):
+        k, rt_i = int(req_key[i]), float(req_ts[i])
+        idx = np.where(keys == k)[0][-cap:]
+        sel = idx if assume_latest else idx[ts[idx] <= rt_i]
+        if len(sel):
+            assert bool(m_r[i])
+            assert float(ts_r[i]) == pytest.approx(float(ts[sel[-1]]),
+                                                   abs=1e-5)
+            # the engine's derived age is non-negative for real requests
+            if not assume_latest:
+                assert rt_i - float(ts_r[i]) >= -1e-5
+        else:
+            assert not bool(m_r[i]) and float(ts_r[i]) == 0.0
+
+
 def test_last_join_empty_table_and_single_row():
     """Degenerate rings: an entirely empty right table never matches; a
     single-row table matches exactly when its one ts qualifies."""

@@ -87,6 +87,51 @@ def test_last_join_enriches_online_requests():
     eng.close()
 
 
+def test_join_staleness_metrics_match_rate_and_age_percentiles():
+    """Right-table ring staleness observability (ROADMAP item): per-
+    deployment join match-rate + right-row age percentiles, surfaced in
+    EXPLAIN and latency_decomposition; offline runs don't pollute it."""
+    eng, (keys, ts, rows), mdata = make_join_engine()
+    eng.deploy("f", JOIN_SQL)
+    dep = eng.handle("f")
+    rk = keys[:8].tolist()
+    rt = np.full(8, 2000.0, np.float32).tolist()
+    rr = rows[:8].copy()
+    out = eng.request("f", rk, rt, rows=rr)
+    assert "__join_match_merchants" not in out.columns   # hidden, stripped
+    st = dep.join_staleness()["merchants"]
+    assert st["probes"] == 8 and st["matches"] == 8
+    assert st["match_rate"] == 1.0
+    # newest merchant re-publish is at ~800, requests at 2000 -> ages in
+    # [2000-800.06, 2000-800] give or take the per-merchant 0.01 stagger
+    assert 1150.0 < st["age_p50"] < 1250.0
+    assert st["age_p50"] <= st["age_p99"] < 1250.0
+    assert st["age_samples"] == 8
+
+    # unknown probe keys count as unmatched probes (match rate drops)
+    rr_bad = rr.copy()
+    rr_bad[:, 1] = 99.0
+    eng.request("f", rk, rt, rows=rr_bad)
+    st2 = dep.join_staleness()["merchants"]
+    assert st2["probes"] == 16 and st2["matches"] == 8
+    assert st2["match_rate"] == 0.5
+    assert st2["age_samples"] == 8               # no ages for misses
+
+    # surfaced in EXPLAIN + engine-level latency decomposition
+    txt = eng.explain("f")
+    assert "staleness" in txt and "match_rate=0.500" in txt
+    dec = eng.latency_decomposition()
+    assert dec["join_probes"] == 16
+    assert abs(dec["join_match_rate"] - 0.5) < 1e-9
+    assert 1150.0 < dec["join_age_p99"] < 1250.0
+
+    # offline materialisation must not skew serving staleness
+    eng.query_offline("f")
+    st3 = dep.join_staleness()["merchants"]
+    assert st3["probes"] == 16
+    eng.close()
+
+
 def test_builder_tcol_equivalent_to_sql():
     eng, (keys, ts, rows), _ = make_join_engine()
     eng.deploy("sql", JOIN_SQL)

@@ -90,6 +90,35 @@ def test_batcher_mixed_payload_batch():
         assert float(o["p"]) == (7.0 if i % 2 == 0 else 0.0)
 
 
+def test_batcher_close_fails_queued_and_inflight_requests():
+    """close() must FAIL pending requests (BatcherClosed) instead of
+    leaving Request.wait() callers hanging behind a blocked dispatch."""
+    from repro.serving.batcher import BatcherClosed
+    release = threading.Event()
+    entered = threading.Event()
+
+    def blocked(keys, ts, payloads):
+        entered.set()
+        release.wait(30.0)              # a dispatch loop stuck in serve
+        return echo_serve(keys, ts, payloads)
+
+    b = DynamicBatcher(blocked, BatcherConfig(max_batch=1,
+                                              max_delay_s=0.001))
+    r1 = b.submit(1, 1.0)               # becomes the blocked in-flight batch
+    assert entered.wait(5.0)
+    r2 = b.submit(2, 2.0)               # stays queued behind it
+    t0 = time.perf_counter()
+    b.close()
+    assert time.perf_counter() - t0 < 5.0   # close didn't wait for serve
+    with pytest.raises(BatcherClosed):
+        r2.wait(1.0)                    # queued -> failed, not hanging
+    with pytest.raises(BatcherClosed):
+        r1.wait(1.0)                    # in-flight -> failed too
+    with pytest.raises(BatcherClosed):
+        b.submit(3, 3.0)                # submit-after-close is an error
+    release.set()
+
+
 def test_batcher_propagates_errors():
     def boom(keys, ts, payloads):
         raise ValueError("boom")
