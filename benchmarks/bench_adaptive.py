@@ -1,0 +1,211 @@
+"""Adaptive knob control vs static serving config (DESIGN.md §10).
+
+Workload: alternating **burst / lull** arrival phases against a
+``FeatureServer``. Bursts (many concurrent requests) coalesce into full
+batches regardless of the batching deadline; lulls (lone requests with
+inter-arrival gaps longer than ``max_delay_s``) pin each request's
+latency to the *full* deadline — the batcher waits out ``max_delay_s``
+hoping for company that never arrives. A static config tuned for burst
+throughput therefore pays its whole delay budget as pure lull latency.
+
+Two drift-bracketed runs over identical seeded arrivals:
+
+* ``static``   — fixed ``max_delay_s`` for the whole run (measured
+  before AND after the adaptive run, so machine drift can't fake a win);
+* ``adaptive`` — a :class:`repro.control.KnobController` observes each
+  round's client-side p99 and AIMD-backs the batching deadline off
+  through the live ``DynamicBatcher.reconfigure`` knob, exactly as the
+  ControlPlane applies it.
+
+Headline: steady-state (final-half) p99 — the controller must beat the
+better of the two static brackets, or shed strictly fewer requests at
+equal p99. The controller's decision log is replayed
+(``KnobController.replay``) and checked bit-for-bit: the adaptation is
+reproducible from its seeded log, not an artifact of run-time noise.
+
+Emits ``experiments/BENCH_adaptive.json`` (quick mode writes an ignored
+``bench_adaptive_quick.json`` so CI smoke never clobbers the committed
+trajectory file).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import QUICK, Reporter, build_engine
+from repro.control import KnobConfig, KnobController, LoadObservation
+from repro.serving.batcher import BatcherConfig
+from repro.serving.server import FeatureServer, ServerConfig
+
+OUT_PATH = os.path.join(
+    "experiments",
+    "bench_adaptive_quick.json" if QUICK else "BENCH_adaptive.json")
+
+STATIC_DELAY_S = 0.004            # burst-tuned deadline the lulls pay for
+N_ROUNDS = 6 if QUICK else 14     # one round = burst phase + lull phase
+BURST_N = 16 if QUICK else 48     # concurrent requests per burst
+LULL_N = 6 if QUICK else 12       # lone requests per lull
+LULL_GAP_S = 0.006                # > STATIC_DELAY_S: no coalescing ever
+SEED = 17
+
+KNOB_CFG = KnobConfig(
+    target_p99_s=0.002,           # the SLO the lulls violate at 4ms delay
+    hysteresis_ticks=2,           # one noisy round never moves the knob
+    backoff=0.5,
+    min_delay_s=0.0002,
+    max_delay_s=STATIC_DELAY_S,
+)
+
+
+def _pcts(lats_ms: List[float]) -> Dict[str, float]:
+    a = np.asarray(lats_ms)
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean()), "n": int(a.size)}
+
+
+def _run_mode(eng, keys, base_ts, controller=None) -> Dict[str, object]:
+    """One full burst/lull run. ``controller=None`` = static knobs;
+    otherwise the controller observes each round's client p99 and its
+    decisions are applied to the live batcher (the ControlPlane's
+    ``delay_s`` mapping)."""
+    rng = np.random.default_rng(SEED)
+    server = FeatureServer(eng, "bench", ServerConfig(
+        batcher=BatcherConfig(max_batch=64, max_delay_s=STATIC_DELAY_S),
+        warm_buckets=(1, 2, 4, 8, 16, 32, 64)))
+    rounds: List[Dict[str, object]] = []
+    shed = 0
+    try:
+        with ThreadPoolExecutor(max_workers=8) as pool:
+            for r in range(N_ROUNDS):
+                lats: List[float] = []
+
+                def one(key, ts):
+                    t0 = time.perf_counter()
+                    server.request(key, ts)
+                    return (time.perf_counter() - t0) * 1e3
+
+                # burst: concurrent arrivals coalesce into full batches
+                burst = [(int(rng.choice(keys)), base_ts + r)
+                         for _ in range(BURST_N)]
+                lats += list(pool.map(lambda a: one(*a), burst))
+                # lull: lone arrivals, gap > max_delay -> no coalescing
+                for _ in range(LULL_N):
+                    time.sleep(LULL_GAP_S)
+                    lats.append(one(int(rng.choice(keys)), base_ts + r))
+
+                p = _pcts(lats)
+                entry = {"round": r, **p,
+                         "delay_s": server.batcher.cfg.max_delay_s}
+                if controller is not None:
+                    obs = LoadObservation(
+                        p99_s=p["p99_ms"] / 1e3,
+                        queue_depth=server.batcher.queue_depth(),
+                        shed=0, rejected=0, requests=len(lats))
+                    for d in controller.step(obs):
+                        if d.knob == "delay_s":       # the managed knob
+                            server.batcher.reconfigure(
+                                max_delay_s=float(d.new))
+                    entry["decisions"] = len(controller.log[-1]["decisions"])
+                rounds.append(entry)
+        shed = server.batcher.stats["expired"] + server.batcher.stats[
+            "rejected"]
+    finally:
+        server.close()
+    # steady state = final half, after the controller had time to converge
+    steady = rounds[len(rounds) // 2:]
+    lat_all = {"p50_ms": float(np.median([e["p50_ms"] for e in steady])),
+               "p99_ms": float(np.median([e["p99_ms"] for e in steady]))}
+    n_total = sum(e["n"] for e in rounds)
+    return {"rounds": rounds, "steady": lat_all, "shed": shed,
+            "n_requests": n_total,
+            "final_delay_s": rounds[-1]["delay_s"]}
+
+
+def run(rep: Reporter) -> dict:
+    eng, data = build_engine()
+    keys, ts, _ = data
+    base_ts = float(ts.max()) + 1.0
+
+    # drift bracket: static, adaptive, static again
+    static_a = _run_mode(eng, keys, base_ts)
+    controller = KnobController(KNOB_CFG, seed=SEED,
+                                delay_s=STATIC_DELAY_S)
+    adaptive = _run_mode(eng, keys, base_ts, controller=controller)
+    static_b = _run_mode(eng, keys, base_ts)
+
+    # the controller must actually have acted, and its decision sequence
+    # must replay bit-for-bit from the seeded log (ISSUE §10 determinism)
+    n_decisions = sum(len(e["decisions"]) for e in controller.log)
+    if n_decisions == 0:
+        raise RuntimeError("adaptive run made zero knob decisions — the "
+                           "controller is not wired to the load signal")
+    replayed = KnobController.replay(KNOB_CFG, SEED,
+                                     {"delay_s": STATIC_DELAY_S},
+                                     controller.log)
+    if replayed.log != controller.log:
+        raise RuntimeError("knob decision log did not replay identically")
+
+    best_static_p99 = min(static_a["steady"]["p99_ms"],
+                          static_b["steady"]["p99_ms"])
+    margin = best_static_p99 / adaptive["steady"]["p99_ms"]
+    wins = (adaptive["steady"]["p99_ms"] < best_static_p99
+            or (adaptive["shed"] < min(static_a["shed"], static_b["shed"])))
+    if not wins:
+        raise RuntimeError(
+            f"adaptive tripwire: steady p99 {adaptive['steady']['p99_ms']:.2f}"
+            f"ms vs best static {best_static_p99:.2f}ms and no shed win — "
+            f"the controller failed to beat the static config")
+
+    res = {
+        "quick": QUICK,
+        "adaptive": {"qps": 0.0, **adaptive["steady"],
+                     "shed": adaptive["shed"],
+                     "final_delay_s": adaptive["final_delay_s"],
+                     "rounds": adaptive["rounds"]},
+        "static": {"bracket_a": static_a["steady"],
+                   "bracket_b": static_b["steady"],
+                   "shed": static_a["shed"] + static_b["shed"],
+                   "delay_s": STATIC_DELAY_S},
+        "margin_p99": round(margin, 3),
+        "n_decisions": n_decisions,
+        "replay_identical": True,
+        "decision_log": controller.log,
+        "knob_cfg": {"target_p99_s": KNOB_CFG.target_p99_s,
+                     "backoff": KNOB_CFG.backoff,
+                     "hysteresis_ticks": KNOB_CFG.hysteresis_ticks,
+                     "min_delay_s": KNOB_CFG.min_delay_s},
+        "seed": SEED,
+    }
+    # qps headline (for BENCH_summary): steady-state request rate of the
+    # adaptive run, lull sleep time included (it is part of the arrivals)
+    wall = sum(LULL_N * LULL_GAP_S for _ in range(N_ROUNDS))
+    res["adaptive"]["qps"] = round(
+        adaptive["n_requests"] / max(wall, 1e-9), 1)
+
+    rep.add("adaptive/static_p99", best_static_p99 * 1e3,
+            **{"p99_ms": best_static_p99})
+    rep.add("adaptive/controller_p99",
+            adaptive["steady"]["p99_ms"] * 1e3,
+            **adaptive["steady"], margin=res["margin_p99"],
+            decisions=n_decisions)
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    eng.close()
+    return {k: v for k, v in res.items() if k != "decision_log"}
+
+
+if __name__ == "__main__":
+    r = Reporter()
+    out = run(r)
+    print(r.emit())
+    print(json.dumps({k: v for k, v in out.items() if k != "adaptive"}
+                     | {"adaptive_steady": out["adaptive"]},
+                     indent=1, default=str))

@@ -19,7 +19,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
-                         "stream,hotswap,multiwindow,lastjoin,shard")
+                         "stream,hotswap,multiwindow,lastjoin,shard,"
+                         "adaptive")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-size smoke mode (CI): same code paths, "
                          "~10x less work; numbers are tripwires only")
@@ -77,6 +78,9 @@ def main(argv=None) -> int:
         from benchmarks import bench_shard_scaling as b11
         results["shard"] = {k: v for k, v in b11.run(rep).items()
                            if k != "per_round"}
+    if want("adaptive"):
+        from benchmarks import bench_adaptive as b12
+        results["adaptive"] = b12.run(rep)
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",

@@ -1,0 +1,252 @@
+"""ControlPlane: the tick loop that closes the loop.
+
+One ``tick()`` runs the whole feedback cycle, in order:
+
+1. **Sample** — ``MetricsCollector.sample()`` turns the runtime's
+   monotonic counters into interval deltas.
+2. **Attribute + calibrate** — the tick's measured serve time is split
+   across the live plan's element profile (scan/preagg/join shares under
+   the current model) and fed to the :class:`CostCalibrator`.
+3. **Replan** — when the fitted model differs materially from the
+   installed one, hand it to the :class:`Replanner` (probe → swap →
+   monitor); every tick also runs the post-swap health check so a
+   regressed swap rolls back within ``min_health_batches``.
+4. **Tune** — build a :class:`LoadObservation` from the sample and apply
+   the :class:`KnobController`'s decisions to whichever knob surfaces
+   exist (batcher, router, admission).
+
+``tick()`` is synchronous and deterministic given the underlying
+metrics; ``start()``/``stop()`` wrap it in a daemon thread for
+deployments that want a live loop. Every tick returns (and records) a
+JSON-serializable report.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional
+
+from repro.control.calibrate import (CostCalibrator, differs_materially,
+                                     plan_element_profile)
+from repro.control.knobs import (KnobConfig, KnobController,
+                                 LoadObservation)
+from repro.control.replan import Replanner
+from repro.control.telemetry import MetricsCollector
+
+__all__ = ["ControlPlane"]
+
+
+class ControlPlane:
+    """Telemetry → calibration → re-planning → knob tuning, per tick."""
+
+    def __init__(self, engine, deployment: str, *, server=None,
+                 collector: Optional[MetricsCollector] = None,
+                 calibrator: Optional[CostCalibrator] = None,
+                 knobs: Optional[KnobController] = None,
+                 replanner: Optional[Replanner] = None,
+                 knob_cfg: KnobConfig = KnobConfig(),
+                 replan: bool = True,
+                 rel_tol: float = 0.2,
+                 seed: int = 0):
+        self.engine = engine
+        self.deployment = deployment
+        self.server = server
+        self.collector = collector or MetricsCollector(engine,
+                                                       server=server)
+        self.calibrator = calibrator or CostCalibrator()
+        self.replanner = replanner or Replanner(engine, deployment)
+        self.replan_enabled = replan
+        self.rel_tol = rel_tol
+        self.knobs = knobs if knobs is not None else self._default_knobs(
+            knob_cfg, seed)
+        self.reports: List[Dict[str, Any]] = []
+        self._tick = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def _default_knobs(self, cfg: KnobConfig, seed: int) -> KnobController:
+        """Manage whichever knobs the wired components actually expose."""
+        delay = None
+        b = getattr(self.server, "batcher", None) if self.server else None
+        if b is not None:
+            delay = b.cfg.max_delay_s
+        router = getattr(self.engine, "router", None)
+        rows = router.dispatch_rows if router is not None else None
+        if delay is None and router is not None and router.lanes:
+            delay = router.lanes[0].coalesce_delay_s
+        res = getattr(self.engine, "resources", None)
+        inflight = res.cfg.max_inflight if res is not None else None
+        return KnobController(cfg, seed=seed, delay_s=delay,
+                              dispatch_rows=rows, max_inflight=inflight)
+
+    # ------------------------------------------------------------ calibrate
+    def _feed_calibrator(self, sample: Dict[str, Any]) -> int:
+        """Split this tick's measured serve seconds across the live
+        plan's element profile and feed the calibrator. Attribution uses
+        the CURRENT model's weighted shares (EM-style: better weights →
+        better attribution next tick). Returns observations fed."""
+        dep = sample["deployments"].get(self.deployment)
+        if dep is None:
+            return 0
+        delta = dep["delta"]
+        reqs = delta.get("requests", 0)
+        serve_s = delta.get("serve_s", 0.0)
+        if reqs <= 0 or serve_s <= 0:
+            return 0
+        handle = self.engine.handle(self.deployment)
+        prof = plan_element_profile(handle)
+        model = self.engine.cost_model
+        weights = {"scan": model.scan_el, "preagg": model.preagg_el,
+                   "join": model.join_el}
+        kinds = {k: v for k, v in prof.items() if k in weights and v > 0}
+        total_w = sum(weights[k] * v for k, v in kinds.items())
+        if total_w <= 0:
+            return 0
+        sec_per_req = serve_s / reqs
+        fed = 0
+        for kind, el in kinds.items():
+            share = (weights[kind] * el) / total_w
+            self.calibrator.observe(kind, el, sec_per_req * share)
+            fed += 1
+        # per-table join split, proportional to each table's elements
+        join_el = kinds.get("join", 0.0)
+        if join_el > 0:
+            join_sec = sec_per_req * (weights["join"] * join_el) / total_w
+            for key, el in prof.items():
+                if key.startswith("join:") and el > 0:
+                    self.calibrator.observe(
+                        "join", el, join_sec * el / join_el,
+                        table=key.split(":", 1)[1])
+                    fed += 1
+        return fed
+
+    # ----------------------------------------------------------------- knob
+    def _load_observation(self, sample: Dict[str, Any]) -> LoadObservation:
+        dep = sample["deployments"].get(self.deployment, {})
+        snap = dep.get("snapshot", {})
+        delta = dep.get("delta", {})
+        shed = int(delta.get("shed_requests", 0) or 0)
+        rejected = 0
+        adm = sample.get("admission")
+        if adm is not None:
+            shed += int(adm["delta"].get("shed_deadline", 0))
+            rejected += int(adm["delta"].get("rejected_inflight", 0))
+            rejected += int(adm["delta"].get("rejected_queue_depth", 0))
+        depth, age = 0, 0.0
+        b = sample.get("batcher")
+        if b is not None:
+            depth = int(b["queue_depth"])
+            age = float(b["oldest_age_s"])
+            rejected += int(b["delta"].get("rejected", 0))
+            shed += int(b["delta"].get("expired", 0))
+        return LoadObservation(
+            p99_s=float(snap.get("latency_p99_s", float("nan"))),
+            queue_depth=depth, oldest_age_s=age, shed=shed,
+            rejected=rejected, requests=int(delta.get("requests", 0)))
+
+    def _apply(self, decisions) -> List[Dict[str, Any]]:
+        applied = []
+        b = getattr(self.server, "batcher", None) if self.server else None
+        router = getattr(self.engine, "router", None)
+        res = getattr(self.engine, "resources", None)
+        for d in decisions:
+            ok = False
+            if d.knob == "delay_s":
+                if b is not None:
+                    b.reconfigure(max_delay_s=float(d.new))
+                    ok = True
+                if router is not None:
+                    router.set_coalesce_delay(float(d.new))
+                    ok = True
+            elif d.knob == "dispatch_rows" and router is not None:
+                router.set_dispatch_rows(int(d.new))
+                ok = True
+            elif d.knob == "max_inflight" and res is not None:
+                res.reconfigure(max_inflight=int(d.new))
+                ok = True
+            applied.append({"knob": d.knob, "old": d.old, "new": d.new,
+                            "reason": d.reason, "applied": ok})
+        return applied
+
+    # ----------------------------------------------------------------- tick
+    def tick(self) -> Dict[str, Any]:
+        t = self._tick
+        self._tick += 1
+        sample = self.collector.sample()
+        fed = self._feed_calibrator(sample)
+
+        replan_report: Dict[str, Any] = {"action": "disabled"}
+        health: Dict[str, Any] = {"action": "idle"}
+        if self.replan_enabled:
+            health = self.replanner.check_health()
+            if self.replanner.state == Replanner.IDLE:
+                fitted = self.calibrator.fit(base=self.engine.cost_model)
+                if fitted is not None and differs_materially(
+                        fitted, self.engine.cost_model, self.rel_tol):
+                    replan_report = self.replanner.maybe_replan(fitted)
+                else:
+                    replan_report = {"action": "steady",
+                                     "fitted": fitted is not None}
+            else:
+                replan_report = {"action": "monitoring"}
+
+        obs = self._load_observation(sample)
+        decisions = self.knobs.step(obs)
+        applied = self._apply(decisions)
+
+        report = {
+            "tick": t,
+            "observations_fed": fed,
+            "replan": replan_report,
+            "health": health,
+            "load": {"p99_s": obs.p99_s, "queue_depth": obs.queue_depth,
+                     "shed": obs.shed, "rejected": obs.rejected,
+                     "requests": obs.requests},
+            "knob_decisions": applied,
+            "knobs": dict(self.knobs.knobs),
+        }
+        self.reports.append(report)
+        return report
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self, interval_s: float = 0.1) -> None:
+        """Run ``tick()`` on a daemon thread every ``interval_s``."""
+        if self._thread is not None:
+            raise RuntimeError("control plane already started")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(interval_s):
+                try:
+                    self.tick()
+                except Exception:      # noqa: BLE001 — the loop survives
+                    pass
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="control-plane")
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None
+
+    def __enter__(self) -> "ControlPlane":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        return False
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable plane state: telemetry, knob log, replan
+        events, last report."""
+        return {
+            "deployment": self.deployment,
+            "telemetry": self.collector.snapshot(),
+            "knobs": self.knobs.snapshot(),
+            "knob_log": self.knobs.log,
+            "replan_events": self.replanner.events,
+            "last_report": self.reports[-1] if self.reports else None,
+        }

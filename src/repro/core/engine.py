@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.core import dsl
 from repro.core.logical import LogicalPlan, Query
-from repro.core.optimizer import OptFlags, TableMeta, optimize
+from repro.core.optimizer import CostModel, OptFlags, TableMeta, optimize
 from repro.core.physical import PhysicalPlan, compile_plan
 from repro.core.plan_cache import PlanCache, bucket_batch
 from repro.core.results import (STATUS_OK, STATUS_UNKNOWN_KEY,
@@ -54,7 +54,14 @@ __all__ = ["Engine", "Deployment", "DeploymentHandle", "HandleMetrics",
 
 @dataclass
 class EngineStats:
-    """Cumulative latency decomposition (seconds) + counters."""
+    """Cumulative latency decomposition (seconds) + counters.
+
+    Every field is a monotonic counter — it only ever grows — so two
+    ``snapshot()`` dicts taken at different instants can be subtracted
+    (``delta``) to get an interval's worth of work without racing the
+    serving threads that mutate the live fields. That interval diff is
+    what the adaptive control plane's :class:`~repro.control.telemetry.
+    MetricsCollector` samples (DESIGN.md §10)."""
 
     parse_s: float = 0.0
     plan_s: float = 0.0
@@ -65,8 +72,21 @@ class EngineStats:
     # ONE per batch for their whole plain-window set)
     kernel_launches: int = 0
 
+    _FIELDS = ("parse_s", "plan_s", "exec_s", "n_requests", "n_batches",
+               "kernel_launches")
+
     def snapshot(self) -> Dict[str, float]:
-        return dataclasses.asdict(self)
+        """Cheap point-in-time copy of the monotonic counters (plain
+        field reads — no dataclass reflection, safe to call from any
+        thread at serving rates)."""
+        return {f: getattr(self, f) for f in self._FIELDS}
+
+    def delta(self, prev: Dict[str, float]) -> Dict[str, float]:
+        """Interval counters since ``prev`` (an earlier ``snapshot()``).
+        Clamped at 0 so a counter reset (fresh engine) never yields
+        negative work."""
+        now = self.snapshot()
+        return {f: max(now[f] - prev.get(f, 0), 0) for f in self._FIELDS}
 
 
 @dataclass
@@ -83,9 +103,42 @@ class HandleMetrics:
     # right row, online only — offline materialisation doesn't count
     join_probes: Dict[str, int] = dataclasses.field(default_factory=dict)
     join_matches: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # bounded reservoir of recent per-batch serve latencies (seconds) —
+    # what the control plane's replan health check computes p99 over; a
+    # plain FIFO window (newest LATENCY_RESERVOIR batches win), so
+    # post-swap observations displace pre-swap ones deterministically
+    latency_s: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(
+            maxlen=HandleMetrics.LATENCY_RESERVOIR))
+
+    LATENCY_RESERVOIR = 512
+
+    def observe_latency(self, seconds: float) -> None:
+        self.latency_s.append(float(seconds))
+
+    def latency_percentile(self, pct: float) -> float:
+        """Percentile (e.g. 99) over the recent-latency reservoir;
+        NaN with no samples (an empty reservoir has no tail)."""
+        if not self.latency_s:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latency_s, np.float64),
+                                   pct))
 
     def snapshot(self) -> Dict[str, float]:
-        return dataclasses.asdict(self)
+        """JSON-serializable copy (the reservoir is summarised, not
+        dumped — 512 floats per deployment per sample would swamp the
+        collector's ring buffers)."""
+        return {
+            "requests": self.requests, "batches": self.batches,
+            "serve_s": self.serve_s, "unknown_keys": self.unknown_keys,
+            "canary_batches": self.canary_batches,
+            "canary_max_abs_diff": self.canary_max_abs_diff,
+            "join_probes": dict(self.join_probes),
+            "join_matches": dict(self.join_matches),
+            "latency_samples": len(self.latency_s),
+            "latency_p50_s": self.latency_percentile(50),
+            "latency_p99_s": self.latency_percentile(99),
+        }
 
 
 class DeploymentHandle:
@@ -431,6 +484,7 @@ class DeploymentHandle:
             m.batches += 1
             m.serve_s += wall
             m.unknown_keys += n_unknown
+            m.observe_latency(wall)
         plan_dt = eng.cache.tag_stats(self.tag).compile_seconds - plan_before
         return FeatureFrame(
             out, status=status, deployment=self.name, version=self.version,
@@ -452,8 +506,14 @@ class Engine:
     def __init__(self, flags: OptFlags = OptFlags(), *,
                  max_cache_entries: int = 128,
                  warm_buckets: Sequence[int] = (),
-                 max_retained_versions: int = 2):
+                 max_retained_versions: int = 2,
+                 cost_model: Optional[CostModel] = None):
         self.flags = flags
+        # calibratable optimizer constants: every build_version plans
+        # against the CURRENT model, so swapping it (set_cost_model) plus
+        # a redeploy is how the control plane re-plans a deployment
+        self.cost_model = cost_model if cost_model is not None \
+            else CostModel()
         self.tables: Dict[str, Table] = {}
         self.catalog = Catalog()        # relational tier (DESIGN.md §8)
         self.models: Dict[str, Callable] = {}
@@ -581,6 +641,17 @@ class Engine:
         self.models[name] = fn
         self.model_params[name] = params
 
+    def set_cost_model(self, model: CostModel) -> CostModel:
+        """Install calibrated optimizer constants. Takes effect on the
+        NEXT ``build_version`` — live handles keep the plan they were
+        built with (re-planning them is the Replanner's job, through the
+        normal build → warm → publish hot-swap path). Returns the
+        previous model so a failed replan can restore it."""
+        with self._deploy_lock:
+            prev = self.cost_model
+            self.cost_model = model
+            return prev
+
     # --------------------------------------------------------------- deploy
     def build_version(self, name: str,
                       query: Union[str, Query, dsl.QueryBuilder], *,
@@ -611,7 +682,8 @@ class Engine:
                              n_value_cols=len(table.schema.value_cols),
                              has_preagg=table.preagg is not None)
             plan, log = optimize(q.to_logical(), meta, self.flags,
-                                 catalog=self.catalog)
+                                 catalog=self.catalog,
+                                 cost_model=self.cost_model)
             phys = compile_plan(plan, table.schema, flags=self.flags,
                                 bucket_size=table.bucket_size,
                                 model_fns=self.models,

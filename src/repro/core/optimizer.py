@@ -33,8 +33,9 @@ from repro.core import expr as E
 from repro.core.logical import (Filter, Join, LogicalPlan, Scan,
                                 WindowProject, validate)
 
-__all__ = ["OptFlags", "TableMeta", "optimize", "estimate_window_cost",
-           "estimate_join_cost", "pass_fuse_windows", "pass_resolve_joins",
+__all__ = ["OptFlags", "TableMeta", "CostModel", "optimize",
+           "estimate_window_cost", "estimate_join_cost",
+           "pass_fuse_windows", "pass_resolve_joins",
            "pass_prune_join_columns", "pass_order_joins"]
 
 
@@ -46,6 +47,48 @@ class TableMeta:
     bucket_size: int
     n_value_cols: int
     has_preagg: bool
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """Calibratable constants of the elements-touched cost model.
+
+    The defaults reproduce the original hard-coded model exactly: every
+    access class costs 1.0 per f32 element and launches are free. The
+    adaptive control plane (``repro.control``) regresses these against
+    *measured* per-launch times and re-plans deployments when the
+    calibrated constants flip a decision (DESIGN.md §10) — the
+    coefficients are relative weights, so only their ratios matter to the
+    optimizer's comparisons.
+
+    * ``scan_el``   — per-element weight of raw ring-scan reads (naive and
+      fused window execution, and timestamp scans);
+    * ``preagg_el`` — per-element weight of pre-aggregate tier reads;
+    * ``join_el``   — per-element weight of LAST JOIN right-ring reads;
+    * ``launch_overhead`` — fixed per-kernel-launch cost in scan-element
+      units (amortised across the members of a fused launch);
+    * ``table_el``  — per-right-table multiplicative overrides on top of
+      ``join_el`` (sorted name/weight pairs so the model stays hashable
+      and its repr is stable for fingerprints/logs).
+    """
+
+    scan_el: float = 1.0
+    preagg_el: float = 1.0
+    join_el: float = 1.0
+    launch_overhead: float = 0.0
+    table_el: Tuple[Tuple[str, float], ...] = ()
+
+    def table_weight(self, table: Optional[str]) -> float:
+        if table is not None:
+            for t, w in self.table_el:
+                if t == table:
+                    return self.join_el * w
+        return self.join_el
+
+    def with_table(self, table: str, weight: float) -> "CostModel":
+        kept = tuple((t, w) for t, w in self.table_el if t != table)
+        return dataclasses.replace(
+            self, table_el=tuple(sorted(kept + ((table, float(weight)),))))
 
 
 @dataclass(frozen=True)
@@ -253,7 +296,8 @@ def _tiered_arg(a: E.Agg) -> bool:
 def estimate_window_cost(spec: E.WindowSpec, meta: TableMeta, *,
                          impl: str, n_cols: int,
                          needs_ts_scan: bool,
-                         shared_scan: int = 1) -> float:
+                         shared_scan: int = 1,
+                         model: CostModel = CostModel()) -> float:
     """Rough elements-touched cost model (f32 reads per request).
 
     ``shared_scan`` is the number of windows sharing one fused launch
@@ -263,19 +307,26 @@ def estimate_window_cost(spec: E.WindowSpec, meta: TableMeta, *,
     fusing a window into an existing launch cheaper than running it alone.
     For a raw-scan impl, ``needs_ts_scan=False`` prices the *marginal*
     member of an existing launch (the ts scan is already paid for).
+
+    ``model`` scales each access class by its calibrated per-element
+    weight (defaults reproduce the uncalibrated model bit-for-bit).
     """
     C, B = meta.capacity, meta.bucket_size
     nb = C // B
+    share = max(shared_scan, 1)
     if impl in ("naive", "fused"):
-        ts_cost = C / max(shared_scan, 1) if needs_ts_scan else 0.0
-        return C * n_cols + ts_cost                   # values + shared ts
+        ts_cost = C / share if needs_ts_scan else 0.0
+        return (model.scan_el * (C * n_cols + ts_cost)   # values + shared ts
+                + model.launch_overhead / share)
     ts_cost = C if needs_ts_scan else 0
-    return nb * (n_cols + 1) + 2 * B * n_cols + ts_cost
+    return (model.preagg_el * (nb * (n_cols + 1) + 2 * B * n_cols)
+            + model.scan_el * ts_cost + model.launch_overhead)
 
 
 def pass_select_window_impl(plan: LogicalPlan, log: List[str], *,
                             meta: TableMeta,
-                            flags: OptFlags) -> LogicalPlan:
+                            flags: OptFlags,
+                            model: CostModel = CostModel()) -> LogicalPlan:
     """Cost-based naive-vs-preagg choice per window (paper O3)."""
     by_window: Dict[str, List[E.Agg]] = {}
     for _, e in plan.project.outputs:
@@ -302,9 +353,11 @@ def pass_select_window_impl(plan: LogicalPlan, log: List[str], *,
         n_cols = len({a.arg.name for a in aggs if isinstance(a.arg, E.Col)}) or 1
         needs_ts = (not spec.is_rows) or (not flags.assume_latest)
         c_naive = estimate_window_cost(spec, meta, impl="naive",
-                                       n_cols=n_cols, needs_ts_scan=True)
+                                       n_cols=n_cols, needs_ts_scan=True,
+                                       model=model)
         c_pre = estimate_window_cost(spec, meta, impl="preagg",
-                                     n_cols=n_cols, needs_ts_scan=needs_ts)
+                                     n_cols=n_cols, needs_ts_scan=needs_ts,
+                                     model=model)
         chosen = "preagg" if c_pre < c_naive else "naive"
         impl[wname] = chosen
         log.append(f"window {wname!r}: {chosen} "
@@ -331,7 +384,8 @@ def _window_colset(aggs: List[E.Agg]) -> set:
 
 def pass_fuse_windows(plan: LogicalPlan, log: List[str], *,
                       meta: TableMeta,
-                      flags: OptFlags) -> LogicalPlan:
+                      flags: OptFlags,
+                      model: CostModel = CostModel()) -> LogicalPlan:
     """Mark windows for single-scan fused execution (multi-window launch).
 
     Every window the impl-selection pass left on the raw-scan path joins
@@ -364,7 +418,7 @@ def pass_fuse_windows(plan: LogicalPlan, log: List[str], *,
     cost_sep = sum(
         estimate_window_cost(specs[w], meta, impl="naive",
                              n_cols=len(_window_colset(by_window[w])) or 1,
-                             needs_ts_scan=True)
+                             needs_ts_scan=True, model=model)
         for w in naive)
     union: set = set()
     for w in naive:
@@ -374,7 +428,8 @@ def pass_fuse_windows(plan: LogicalPlan, log: List[str], *,
     # whole-launch cost: union scan + ONE shared ts read
     cost_fused = estimate_window_cost(
         specs[naive[0]], meta, impl="fused",
-        n_cols=len(union) or 1, needs_ts_scan=True, shared_scan=1)
+        n_cols=len(union) or 1, needs_ts_scan=True, shared_scan=1,
+        model=model)
 
     # pull preagg windows into the shared scan when marginally cheaper
     for w in sorted(w for w, v in impl.items() if v == "preagg"):
@@ -383,11 +438,12 @@ def pass_fuse_windows(plan: LogicalPlan, log: List[str], *,
         # cost anything (the ts scan is already paid by the fused set)
         marginal = estimate_window_cost(
             specs[w], meta, impl="fused", n_cols=len(cols - union),
-            needs_ts_scan=False, shared_scan=len(fused_set) + 1)
+            needs_ts_scan=False, shared_scan=len(fused_set) + 1,
+            model=model)
         needs_ts = (not specs[w].is_rows) or (not flags.assume_latest)
         c_pre = estimate_window_cost(specs[w], meta, impl="preagg",
                                      n_cols=len(cols) or 1,
-                                     needs_ts_scan=needs_ts)
+                                     needs_ts_scan=needs_ts, model=model)
         if marginal < c_pre:
             impl[w] = "fused"
             union |= cols
@@ -576,17 +632,23 @@ def pass_prune_join_columns(plan: LogicalPlan, log: List[str], *,
 
 
 def estimate_join_cost(capacity: int, n_cols: int, *,
-                       assume_latest: bool) -> float:
+                       assume_latest: bool,
+                       model: CostModel = CostModel(),
+                       table: Optional[str] = None) -> float:
     """Elements-touched probe cost of one LAST JOIN (f32 reads/request):
     the right ring block (C·n_cols), the timestamp scan (skipped on the
     online fast path where the newest row wins), and the key-directory
-    probe."""
+    probe. ``model.table_weight(table)`` lets calibration price one right
+    table's probes differently from another's (e.g. a cold replica) — the
+    lever that flips the probe order in ``pass_order_joins``."""
     ts_cost = 0.0 if assume_latest else float(capacity)
-    return float(capacity) * n_cols + ts_cost + 2.0
+    return (model.table_weight(table) * float(capacity) * n_cols
+            + model.scan_el * ts_cost + 2.0 + model.launch_overhead)
 
 
 def pass_order_joins(plan: LogicalPlan, log: List[str], *,
-                     catalog, flags: OptFlags) -> LogicalPlan:
+                     catalog, flags: OptFlags,
+                     model: CostModel = CostModel()) -> LogicalPlan:
     """Order joins by estimated right-table probe cost (cheapest first).
 
     LAST JOINs here are independent probes off the request row (no join
@@ -601,7 +663,8 @@ def pass_order_joins(plan: LogicalPlan, log: List[str], *,
         entry = catalog.get(j.table)
         n_cols = len(j.columns or entry.schema.value_cols)
         cost = estimate_join_cost(entry.table.capacity, n_cols,
-                                  assume_latest=flags.assume_latest)
+                                  assume_latest=flags.assume_latest,
+                                  model=model, table=j.table)
         costed.append((cost, j.table, j))
     costed.sort(key=lambda x: (x[0], x[1]))
     ordered = tuple(j for _, _, j in costed)
@@ -617,8 +680,13 @@ def pass_order_joins(plan: LogicalPlan, log: List[str], *,
 
 def optimize(plan: LogicalPlan, meta: TableMeta,
              flags: OptFlags = OptFlags(),
-             catalog=None) -> Tuple[LogicalPlan, List[str]]:
+             catalog=None,
+             cost_model: Optional[CostModel] = None
+             ) -> Tuple[LogicalPlan, List[str]]:
     log: List[str] = []
+    model = cost_model if cost_model is not None else CostModel()
+    if model != CostModel():
+        log.append(f"cost_model: calibrated {model}")
     if plan.joins:
         if catalog is None:
             raise ValueError(
@@ -637,7 +705,8 @@ def optimize(plan: LogicalPlan, meta: TableMeta,
         plan = pass_column_pruning(plan, log)
         if plan.joins:
             plan = pass_prune_join_columns(plan, log, catalog=catalog)
-            plan = pass_order_joins(plan, log, catalog=catalog, flags=flags)
+            plan = pass_order_joins(plan, log, catalog=catalog, flags=flags,
+                                    model=model)
             if plan.filter.pred is not None and plan.joins:
                 # WHERE references main-table event columns only (resolve
                 # enforced it), so it stays pushed below every join on the
@@ -646,7 +715,8 @@ def optimize(plan: LogicalPlan, meta: TableMeta,
                            f"scan below {len(plan.joins)} join(s)")
     else:
         log.append("query_opt disabled: plan executed as written")
-    plan = pass_select_window_impl(plan, log, meta=meta, flags=flags)
-    plan = pass_fuse_windows(plan, log, meta=meta, flags=flags)
+    plan = pass_select_window_impl(plan, log, meta=meta, flags=flags,
+                                   model=model)
+    plan = pass_fuse_windows(plan, log, meta=meta, flags=flags, model=model)
     validate(plan)
     return plan, log

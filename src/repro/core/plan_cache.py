@@ -48,10 +48,20 @@ class CacheStats:
     invalidations: int = 0
     compile_seconds: float = 0.0
 
+    _FIELDS = ("hits", "misses", "evictions", "invalidations",
+               "compile_seconds")
+
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def snapshot(self) -> dict:
+        """Monotonic-counters copy (plus the derived hit_rate) — what the
+        control plane's collector diffs across sampling intervals."""
+        out = {f: getattr(self, f) for f in self._FIELDS}
+        out["hit_rate"] = self.hit_rate
+        return out
 
 
 @dataclass

@@ -24,6 +24,7 @@ slots.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import inspect
 import threading
 import time
@@ -144,11 +145,16 @@ class DynamicBatcher:
                 # exactly what close() must not wait on)
                 return []
             # deadline policy: wait for more work until the oldest
-            # request's deadline, then take up to max_batch
+            # request's deadline, then take up to max_batch. cfg is
+            # re-read each pass so a live retune (``reconfigure``) moves
+            # even the deadline of the batch currently forming
             oldest = self._q[0].enqueued_at
-            deadline = oldest + cfg.max_delay_s
-            while (len(self._q) < cfg.max_batch
-                   and time.perf_counter() < deadline and not self._stop):
+            while True:
+                cfg = self.cfg
+                deadline = oldest + cfg.max_delay_s
+                if (len(self._q) >= cfg.max_batch or self._stop
+                        or time.perf_counter() >= deadline):
+                    break
                 self._new.wait(max(deadline - time.perf_counter(), 0.0001))
             if not self._q:
                 # another dispatcher drained the queue while we waited
@@ -227,6 +233,34 @@ class DynamicBatcher:
             self.stats["sum_batch"] += len(batch)
             self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"],
                                                len(batch))
+
+    # ------------------------------------------------------------------ tune
+    def reconfigure(self, **changes) -> BatcherConfig:
+        """Replace batching policy knobs live (control-plane surface).
+        ``num_dispatchers`` cannot change (threads are fixed at
+        construction). Dispatchers re-read the config per wait pass, so a
+        shorter ``max_delay_s`` even shortens the batch currently
+        forming. Returns the previous config."""
+        if "num_dispatchers" in changes:
+            raise ValueError("num_dispatchers is fixed at construction")
+        with self._lock:
+            prev = self.cfg
+            self.cfg = dataclasses.replace(prev, **changes)
+            self._new.notify_all()     # wake waiters onto the new policy
+            return prev
+
+    # ----------------------------------------------------------------- intro
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    def oldest_age_s(self) -> float:
+        """Age of the oldest queued request (0 when the queue is empty) —
+        the batcher-side queueing-delay signal the knob controller reads."""
+        with self._lock:
+            if not self._q:
+                return 0.0
+            return time.perf_counter() - self._q[0].enqueued_at
 
     def close(self) -> None:
         """Shut down the dispatchers and FAIL whatever is still pending.

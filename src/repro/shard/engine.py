@@ -34,6 +34,8 @@ single device everything still works, just serialized.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import threading
 import time
 from dataclasses import dataclass
@@ -42,9 +44,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core import dsl
-from repro.core.engine import DeploymentHandle, Engine
+from repro.core.engine import DeploymentHandle, Engine, HandleMetrics
 from repro.core.logical import Query
-from repro.core.optimizer import OptFlags
+from repro.core.optimizer import CostModel, OptFlags
 from repro.core.results import (STATUS_SHED, FeatureFrame, RequestContext)
 from repro.featurestore.table import TableSchema
 from repro.shard.resource import AdmissionConfig, ResourceManager
@@ -81,6 +83,35 @@ class ShardedHandleMetrics:
     serve_s: float = 0.0
     canary_batches: int = 0
     canary_max_abs_diff: float = 0.0
+    # end-to-end (scatter->gather) per-batch latency reservoir — same
+    # FIFO-window semantics as HandleMetrics.latency_s, so the control
+    # plane's replan p99 health check works identically when sharded
+    latency_s: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(
+            maxlen=HandleMetrics.LATENCY_RESERVOIR))
+
+    def observe_latency(self, seconds: float) -> None:
+        self.latency_s.append(float(seconds))
+
+    def latency_percentile(self, pct: float) -> float:
+        if not self.latency_s:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latency_s, np.float64),
+                                   pct))
+
+    def snapshot(self) -> Dict[str, float]:
+        """JSON-serializable copy (reservoir summarised, not dumped)."""
+        return {
+            "requests": self.requests, "batches": self.batches,
+            "shed_requests": self.shed_requests,
+            "shed_batches": self.shed_batches,
+            "serve_s": self.serve_s,
+            "canary_batches": self.canary_batches,
+            "canary_max_abs_diff": self.canary_max_abs_diff,
+            "latency_samples": len(self.latency_s),
+            "latency_p50_s": self.latency_percentile(50),
+            "latency_p99_s": self.latency_percentile(99),
+        }
 
 
 @dataclass
@@ -244,6 +275,7 @@ class ShardedDeploymentHandle:
             m.requests += B
             m.batches += 1
             m.serve_s += wall
+            m.observe_latency(wall)
         return FeatureFrame(
             columns, status=status, deployment=self.name,
             version=self.version, trace_id=trace,
@@ -464,6 +496,21 @@ class ShardedEngine:
                        params: object = None) -> None:
         for eng in self.shards:
             eng.register_model(name, fn, params)
+
+    def set_cost_model(self, model: CostModel) -> CostModel:
+        """Install calibrated optimizer constants on EVERY shard (all
+        shards must compile the same plan — a per-shard cost model would
+        break the one-plan-per-version invariant ``deploy`` relies on).
+        Takes effect on the next ``deploy``; returns the previous model."""
+        with self._deploy_lock:
+            prev = self.shards[0].cost_model
+            for eng in self.shards:
+                eng.set_cost_model(model)
+            return prev
+
+    @property
+    def cost_model(self) -> CostModel:
+        return self.shards[0].cost_model
 
     # --------------------------------------------------------------- deploy
     def deploy(self, name: str,

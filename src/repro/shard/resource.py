@@ -6,9 +6,12 @@ enter at all.
 
 * **In-flight bound** — at most ``max_inflight`` batches of one
   deployment may be executing/queued at once; an admit blocks (up to the
-  request's own deadline, capped by ``admit_timeout_s``) for a slot and
-  then REJECTS with backpressure, so overload surfaces as an explicit
-  error at the door instead of unbounded queueing behind the shards.
+  request's own deadline, capped by ``admit_timeout_s``) for a slot.
+  A **deadlined** request that cannot get a slot in time is SHED at the
+  door (whole-batch ``STATUS_SHED``, never an exception — the deadline
+  IS its give-up bound); a deadline-less request REJECTS with
+  backpressure, so overload surfaces as an explicit error at the door
+  instead of unbounded queueing behind the shards.
 * **Queue-depth bound** — if any target shard's worker queue is deeper
   than ``max_queue_depth`` sub-batches, the batch is rejected: one
   saturated shard must not keep absorbing work it cannot serve in time.
@@ -20,6 +23,7 @@ enter at all.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from dataclasses import dataclass
@@ -33,6 +37,12 @@ class AdmissionConfig:
     max_inflight: int = 8          # concurrent batches per deployment
     max_queue_depth: int = 64      # pending sub-batches per shard worker
     admit_timeout_s: float = 1.0   # max wait for an in-flight slot
+    # shed at the door when a deadlined request's remaining budget is
+    # below this — it would only be shed later at lane dequeue anyway,
+    # after wasting a slot and scatter work. 0 disables (admit anything
+    # not yet expired); the control plane raises it when it observes
+    # post-admission sheds (work admitted, then thrown away in a queue)
+    min_service_budget_s: float = 0.0
 
 
 class Admission:
@@ -79,30 +89,41 @@ class ResourceManager:
         """Admit one batch of deployment ``name``; returns an
         :class:`Admission` whose ``shed`` flag tells the caller to return
         a whole-batch shed status. Raises ``RuntimeError`` on capacity
-        rejection (backpressure)."""
+        rejection (backpressure) — deadline-less requests only: a
+        deadlined request that cannot be admitted in time is SHED, never
+        errored, because its deadline is already the give-up bound."""
         cfg = self.cfg
+        deadlined = ctx is not None and ctx.deadline is not None
         if ctx is not None and ctx.expired:
             with self._lock:
                 self.stats["shed_deadline"] += 1
             return Admission(None, name, shed=True)
         deadline = time.monotonic() + cfg.admit_timeout_s
-        if ctx is not None and ctx.deadline is not None:
+        if deadlined:
             deadline = min(deadline, ctx.deadline)
         with self._lock:
-            while self._inflight.get(name, 0) >= cfg.max_inflight:
+            while self._inflight.get(name, 0) >= self.cfg.max_inflight:
                 wait = deadline - time.monotonic()
                 if wait <= 0:
-                    if ctx is not None and ctx.expired:
+                    if deadlined:
+                        # could not get a slot within the request's
+                        # budget (or the cap): shed NOW at the door —
+                        # before the fix this raised backpressure (cap <
+                        # deadline) or kept the caller blocked until the
+                        # work would only be shed later at lane dequeue
                         self.stats["shed_deadline"] += 1
                         return Admission(None, name, shed=True)
                     self.stats["rejected_inflight"] += 1
                     raise RuntimeError(
                         f"admission control: deployment {name!r} has "
                         f"{self._inflight.get(name, 0)} batches in flight "
-                        f"(max_inflight={cfg.max_inflight})")
+                        f"(max_inflight={self.cfg.max_inflight})")
                 self._slot_freed.wait(wait)
-            # a slot is free; one more deadline check before taking it
-            if ctx is not None and ctx.expired:
+            # a slot is free; shed rather than take it when the remaining
+            # budget is gone (or too small to plausibly finish in)
+            if ctx is not None and (ctx.expired or (
+                    deadlined and self.cfg.min_service_budget_s > 0.0
+                    and ctx.remaining() < self.cfg.min_service_budget_s)):
                 self.stats["shed_deadline"] += 1
                 return Admission(None, name, shed=True)
             if queue_depths is not None:
@@ -127,7 +148,22 @@ class ResourceManager:
         with self._lock:
             n = self._inflight.get(name, 1)
             self._inflight[name] = max(0, n - 1)
-            self._slot_freed.notify()
+            # notify_all: waiters for OTHER deployments share this
+            # condition — waking a single (possibly wrong-name) waiter
+            # could strand the freed slot until the next release
+            self._slot_freed.notify_all()
+
+    # ----------------------------------------------------------------- tune
+    def reconfigure(self, **changes) -> AdmissionConfig:
+        """Replace admission bounds live (control-plane knob surface).
+        Blocked admits re-read ``self.cfg`` each loop, so a raised
+        ``max_inflight`` takes effect on waiters immediately. Returns the
+        previous config."""
+        with self._lock:
+            prev = self.cfg
+            self.cfg = dataclasses.replace(prev, **changes)
+            self._slot_freed.notify_all()   # bounds may have loosened
+            return prev
 
     # ---------------------------------------------------------------- intro
     def inflight(self, name: str) -> int:

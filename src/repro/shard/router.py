@@ -394,6 +394,35 @@ class ShardRouter:
             tvers.append(it.table_version)
         return columns, status, tvers, False
 
+    # ----------------------------------------------------------------- tune
+    def set_dispatch_rows(self, rows: int) -> int:
+        """Retune the coalescing chunk size live (control-plane knob).
+        Lanes read it per drain/execute, so the next dispatch uses the
+        new chunking; ``max_drain_rows`` keeps its 4x relation. Returns
+        the previous value."""
+        if rows < 1:
+            raise ValueError(f"dispatch_rows must be >= 1, got {rows}")
+        prev = self.dispatch_rows
+        self.dispatch_rows = rows
+        for lane in self.lanes:
+            with lane.cv:
+                lane.dispatch_rows = rows
+                lane.max_drain_rows = 4 * rows
+                lane.cv.notify_all()
+        return prev
+
+    def set_coalesce_delay(self, seconds: float) -> float:
+        """Retune how long an otherwise-idle lane waits to fill a chunk.
+        Returns the previous value."""
+        if seconds < 0:
+            raise ValueError(f"coalesce_delay_s must be >= 0, got {seconds}")
+        prev = self.lanes[0].coalesce_delay_s if self.lanes else 0.0
+        for lane in self.lanes:
+            with lane.cv:
+                lane.coalesce_delay_s = seconds
+                lane.cv.notify_all()
+        return prev
+
     # --------------------------------------------------------------- intro
     @property
     def n_lanes(self) -> int:

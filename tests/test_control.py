@@ -1,0 +1,634 @@
+"""Adaptive control plane (DESIGN.md §10): telemetry snapshots,
+cost-model calibration, knob AIMD + replay determinism, admission
+deadline fixes, and the closed replan loop over versioned hot-swap."""
+import json
+import math
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.control import (ControlPlane, CostCalibrator, KnobConfig,
+                           KnobController, LoadObservation,
+                           MetricsCollector, Replanner, RingSeries,
+                           differs_materially, plan_element_profile)
+from repro.core.engine import Engine, EngineStats, HandleMetrics
+from repro.core.optimizer import CostModel, OptFlags
+from repro.core.plan_cache import CacheStats
+from repro.core.results import (STATUS_OK, STATUS_SHED, RequestContext)
+from repro.featurestore.table import TableSchema
+from repro.shard.resource import AdmissionConfig, ResourceManager
+
+SQL = """
+SELECT SUM(amount) OVER w AS s, COUNT(amount) OVER w AS c
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 50 PRECEDING AND CURRENT ROW)
+"""
+
+JOIN_SQL = """
+SELECT SUM(amount) OVER w AS s,
+       merchants.rating AS rating
+FROM events
+LAST JOIN merchants ORDER BY mts ON merchant
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 20 PRECEDING AND CURRENT ROW)
+"""
+
+
+def make_engine(flags=OptFlags(), n_events=400, n_keys=16, seed=0):
+    eng = Engine(flags)
+    eng.create_table(TableSchema("events", key_col="user", ts_col="ts",
+                                 value_cols=("amount", "lat", "lon")),
+                     max_keys=64, capacity=256, bucket_size=32)
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_keys, n_events)
+    ts = np.sort(rng.uniform(0, 1000, n_events)).astype(np.float32)
+    rows = rng.normal(0, 2, size=(n_events, 3)).astype(np.float32)
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    return eng
+
+
+def make_join_engine(seed=0):
+    eng = Engine(OptFlags())
+    eng.create_table(TableSchema("events", key_col="user", ts_col="ts",
+                                 value_cols=("amount", "merchant")),
+                     max_keys=32, capacity=256, bucket_size=32)
+    eng.create_table(TableSchema("merchants", key_col="merchant",
+                                 ts_col="mts",
+                                 value_cols=("rating", "risk")),
+                     max_keys=16, capacity=64, bucket_size=8)
+    rng = np.random.default_rng(seed)
+    n = 200
+    keys = rng.integers(0, 8, n)
+    ts = np.sort(rng.uniform(0, 1000, n)).astype(np.float32)
+    mids = rng.integers(0, 4, n)
+    rows = np.stack([rng.normal(0, 2, n),
+                     mids.astype(np.float64)], -1).astype(np.float32)
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    return eng
+
+
+def serve(eng, name, n_batches=8, B=8, seed=1, rows=False):
+    rng = np.random.default_rng(seed)
+    frames = []
+    for _ in range(n_batches):
+        rk = rng.integers(0, 8, B)
+        rt = np.sort(rng.uniform(1100, 1500, B)).astype(np.float32)
+        rr = None
+        if rows:
+            rr = np.stack([rng.normal(0, 2, B),
+                           rng.integers(0, 4, B).astype(np.float64)],
+                          -1).astype(np.float32)
+        frames.append(eng.request(name, rk.tolist(), rt.tolist(), rr))
+    return frames
+
+
+# ---------------------------------------------------------------- telemetry
+def test_ring_series_bounded_fifo():
+    s = RingSeries(maxlen=4)
+    for i in range(10):
+        s.append(float(i), float(i * 2))
+    assert len(s) == 4
+    assert s.values() == [12.0, 14.0, 16.0, 18.0]   # newest 4 win
+    assert s.last() == 18.0
+    assert s.to_json() == {"t": [6.0, 7.0, 8.0, 9.0],
+                           "v": [12.0, 14.0, 16.0, 18.0]}
+
+
+def test_engine_stats_snapshot_delta():
+    st = EngineStats()
+    base = st.snapshot()
+    st.n_requests += 10
+    st.exec_s += 0.5
+    st.kernel_launches += 3
+    d = st.delta(base)
+    assert d["n_requests"] == 10 and d["kernel_launches"] == 3
+    assert d["exec_s"] == pytest.approx(0.5)
+    assert d["n_batches"] == 0
+    # snapshot is a copy: mutating the source later can't change it
+    snap2 = st.snapshot()
+    st.n_requests += 5
+    assert snap2["n_requests"] == 10
+    # deltas never go negative even against a newer baseline
+    assert st.delta(st.snapshot())["n_requests"] == 0
+
+
+def test_cache_stats_snapshot():
+    cs = CacheStats(hits=3, misses=1, compile_seconds=0.25)
+    snap = cs.snapshot()
+    assert snap["hits"] == 3 and snap["hit_rate"] == pytest.approx(0.75)
+    cs.hits += 100
+    assert snap["hits"] == 3
+    json.dumps(snap)
+
+
+def test_handle_metrics_latency_reservoir():
+    m = HandleMetrics()
+    assert math.isnan(m.latency_percentile(99))      # empty = no tail
+    for i in range(600):
+        m.observe_latency(0.001 * (i + 1))
+    assert len(m.latency_s) == HandleMetrics.LATENCY_RESERVOIR
+    # FIFO window: oldest 88 displaced, so the floor is sample #89
+    assert min(m.latency_s) == pytest.approx(0.089)
+    snap = m.snapshot()
+    assert snap["latency_samples"] == 512
+    assert snap["latency_p99_s"] >= snap["latency_p50_s"]
+    json.dumps(snap)
+
+
+def test_collector_samples_and_snapshot_json():
+    eng = make_engine()
+    eng.deploy("f", SQL)
+    col = MetricsCollector(eng)
+    s0 = col.sample()
+    serve(eng, "f", n_batches=5)
+    s1 = col.sample()
+    # interval deltas, not cumulative totals
+    assert s1["deployments"]["f"]["delta"]["batches"] == 5
+    assert s1["deployments"]["f"]["delta"]["requests"] == 40
+    assert s1["engine_delta"]["n_batches"] >= 5
+    assert s0["cache"]["hits"] <= s1["cache"]["hits"]
+    assert s1["deployments"]["f"]["joins"] == {}       # join-free plan
+    snap = col.snapshot()
+    json.dumps(snap)                                   # fully serializable
+    assert snap["n_samples"] == 2
+    assert "dep.f.p99_s" in snap["series"]
+    eng.close()
+
+
+def test_collector_samples_join_staleness():
+    eng = make_join_engine()
+    eng.insert("merchants", [0, 1, 2, 3], [50.0] * 4,
+               np.asarray([[m, m * 0.1] for m in range(4)], np.float32))
+    eng.deploy("f", JOIN_SQL)
+    col = MetricsCollector(eng)
+    serve(eng, "f", n_batches=3, rows=True)
+    s = col.sample()
+    st = s["deployments"]["f"]["joins"]["merchants"]
+    assert st["probes"] == 24
+    assert 0.0 <= st["match_rate"] <= 1.0
+    assert "dep.f.join.merchants.match_rate" in col.series
+    json.dumps(s)
+    eng.close()
+
+
+# ------------------------------------------------- join staleness reservoir
+def test_join_staleness_empty_reservoir_percentiles():
+    """No probes yet: percentile queries are NaN (not 0, not a crash) and
+    the match rate with zero probes is 0, not a division error."""
+    eng = make_join_engine()
+    dep = eng.deploy("f", JOIN_SQL)
+    st = dep.join_staleness()["merchants"]
+    assert st["probes"] == 0 and st["matches"] == 0
+    assert st["match_rate"] == 0.0
+    assert math.isnan(st["age_p50"]) and math.isnan(st["age_p99"])
+    assert st["age_samples"] == 0
+    eng.close()
+
+
+def test_join_staleness_zero_probe_rows_after_serving():
+    """Serving with every probe missing keeps matches at 0 but counts
+    probes — the match rate must be a true 0.0, not NaN."""
+    eng = make_join_engine()
+    eng.insert("merchants", [0], [100.0], np.asarray([[1.0, 0.5]],
+                                                     np.float32))
+    dep = eng.deploy("f", JOIN_SQL)
+    rng = np.random.default_rng(2)
+    B = 8
+    rk = rng.integers(0, 8, B)
+    rt = np.full(B, 1200.0, np.float32)
+    # request rows probe merchant id 9 — never published
+    rr = np.stack([rng.normal(0, 2, B), np.full(B, 9.0)],
+                  -1).astype(np.float32)
+    eng.request("f", rk.tolist(), rt.tolist(), rr)
+    st = dep.join_staleness()["merchants"]
+    assert st["probes"] == B and st["matches"] == 0
+    assert st["match_rate"] == 0.0
+    assert math.isnan(st["age_p99"])                   # no matched ages
+    eng.close()
+
+
+def test_join_age_reservoir_overflow_fifo_determinism():
+    """The age reservoir is a bounded FIFO (deque maxlen): overflowing it
+    keeps exactly the newest maxlen ages, deterministically — two
+    identical fixed-seed runs agree bit for bit."""
+    def run():
+        eng = make_join_engine(seed=3)
+        eng.insert("merchants", [0, 1, 2, 3], [50.0] * 4,
+                   np.asarray([[m, m * 0.1] for m in range(4)],
+                              np.float32))
+        dep = eng.deploy("f", JOIN_SQL)
+        h = eng.handle("f")
+        maxlen = h._join_ages["merchants"].maxlen
+        # overflow via the metrics path itself (synthetic ages, ordered
+        # so the survivor set is unambiguous)
+        ages = np.arange(maxlen + 500, dtype=np.float64)
+        res = {"__join_match_merchants": np.ones(len(ages), np.float32),
+               "__join_age_merchants": ages}
+        h._record_join_stats(res, len(ages))
+        got = list(h._join_ages["merchants"])
+        st = dep.join_staleness()["merchants"]
+        eng.close()
+        return got, st
+
+    got1, st1 = run()
+    got2, st2 = run()
+    maxlen = len(got1)
+    assert got1 == got2                                 # deterministic
+    assert got1[0] == 500.0 and got1[-1] == maxlen + 499.0  # newest win
+    assert st1["age_samples"] == st2["age_samples"] == maxlen
+    assert st1["age_p99"] == st2["age_p99"]
+
+
+# --------------------------------------------------------------- calibrator
+def test_calibrator_under_sampled_returns_none():
+    cal = CostCalibrator(min_samples=8)
+    for _ in range(7):
+        cal.observe("scan", 100.0, 0.001)
+    assert cal.fit() is None
+
+
+def test_calibrator_normalizes_to_scan():
+    cal = CostCalibrator(min_samples=4)
+    for _ in range(6):
+        cal.observe("scan", 200.0, 0.0002)    # 1e-6 s/el
+        cal.observe("preagg", 100.0, 0.0005)  # 5e-6 s/el
+        cal.observe("join", 50.0, 0.0001)     # 2e-6 s/el
+    m = cal.fit()
+    assert m.scan_el == pytest.approx(1.0)
+    assert m.preagg_el == pytest.approx(5.0)
+    assert m.join_el == pytest.approx(2.0)
+    assert differs_materially(m, CostModel())
+    assert not differs_materially(m, m)
+
+
+def test_calibrator_per_table_join_weights():
+    cal = CostCalibrator(min_samples=4)
+    for _ in range(6):
+        cal.observe("scan", 100.0, 0.0001)
+        cal.observe("join", 50.0, 0.0001, table="hot")   # 2e-6 s/el
+        cal.observe("join", 50.0, 0.0004, table="cold")  # 8e-6 s/el
+    m = cal.fit()
+    w = dict(m.table_el)
+    # per-table multipliers are relative to the pooled join coefficient
+    assert w["cold"] / w["hot"] == pytest.approx(4.0)
+    # and they feed straight into the join cost the optimizer compares
+    assert (m.table_weight("cold") / m.table_weight("hot")
+            == pytest.approx(4.0))
+
+
+def test_cost_model_default_reproduces_seed_costs():
+    """The calibrated-model plumbing must be invisible at defaults: same
+    plan decisions as the seed's hard-coded constants."""
+    eng = make_engine()
+    dep = eng.deploy("f", SQL)
+    assert eng.cost_model == CostModel()
+    assert dict(dep.plan.window_impl)["w"] == "preagg"
+    eng.close()
+
+
+def test_plan_element_profile_kinds():
+    eng = make_engine()
+    dep = eng.deploy("f", SQL)
+    prof = plan_element_profile(dep)
+    assert prof.get("preagg", 0) > 0        # the deployed impl
+    assert "join" not in prof
+    eng.close()
+
+
+# ------------------------------------------------------------------- knobs
+def test_knob_hysteresis_one_bad_tick_is_ignored():
+    c = KnobController(KnobConfig(hysteresis_ticks=2), delay_s=0.004)
+    hot = LoadObservation(p99_s=0.5, shed=1)
+    calm = LoadObservation(p99_s=0.005)
+    assert c.step(hot) == []                 # 1 breach < hysteresis
+    assert c.step(calm) == []                # breach streak reset
+    assert c.step(hot) == []
+    decisions = c.step(hot)                  # 2 consecutive -> act
+    assert len(decisions) == 1
+    assert decisions[0].knob == "delay_s"
+    assert decisions[0].new == pytest.approx(0.002)     # x0.5 backoff
+
+
+def test_knob_aimd_bounds_and_directions():
+    cfg = KnobConfig(hysteresis_ticks=1, min_delay_s=0.001,
+                     max_delay_s=0.003, max_dispatch_rows=300)
+    c = KnobController(cfg, delay_s=0.003, dispatch_rows=256,
+                       max_inflight=8)
+    hot = LoadObservation(p99_s=1.0, shed=3, rejected=1)
+    for _ in range(5):
+        c.step(hot)
+    assert c.knobs["delay_s"] == pytest.approx(0.001)   # clamped at min
+    assert c.knobs["max_inflight"] > 8                  # backpressure+
+    cool = LoadObservation(p99_s=0.0001)
+    for _ in range(10):
+        c.step(cool)
+    assert c.knobs["delay_s"] == pytest.approx(0.003)   # clamped at max
+    assert c.knobs["dispatch_rows"] == 300              # clamped at max
+
+
+def test_knob_decision_log_replays_identically():
+    cfg = KnobConfig(hysteresis_ticks=2)
+    init = {"delay_s": 0.002, "dispatch_rows": 128, "max_inflight": 8}
+    c = KnobController(cfg, seed=42, **init)
+    rng = np.random.default_rng(42)
+    for _ in range(40):
+        c.step(LoadObservation(
+            p99_s=float(rng.uniform(0.001, 0.05)),
+            queue_depth=int(rng.integers(0, 4)),
+            shed=int(rng.integers(0, 2)),
+            rejected=int(rng.integers(0, 2)),
+            requests=int(rng.integers(1, 100))))
+    assert any(e["decisions"] for e in c.log)           # it did act
+    replayed = KnobController.replay(cfg, 42, init, c.log)
+    assert replayed.log == c.log                        # bit-for-bit
+    json.dumps(c.log)                                   # serializable
+
+
+# --------------------------------------------------------------- admission
+def test_admit_deadlined_request_sheds_instead_of_raising():
+    """Regression (ISSUE 6 satellite): a blocked admit with a deadline
+    must time out AT the deadline and return shed — it used to raise
+    backpressure when the deadline exceeded ``admit_timeout_s``, and the
+    caller had no shed frame to return."""
+    mgr = ResourceManager(AdmissionConfig(max_inflight=1,
+                                          admit_timeout_s=0.15))
+    hold = mgr.admit("d", None)             # occupy the only slot
+    ctx = RequestContext.with_timeout(10.0)  # deadline far beyond the cap
+    t0 = time.monotonic()
+    adm = mgr.admit("d", ctx)
+    waited = time.monotonic() - t0
+    assert adm.shed                          # shed, NOT RuntimeError
+    assert waited < 1.0                      # gave up at the cap, not 10 s
+    assert mgr.metrics()["shed_deadline"] == 1
+    hold.release()
+
+
+def test_admit_sheds_at_the_request_deadline_not_later():
+    mgr = ResourceManager(AdmissionConfig(max_inflight=1,
+                                          admit_timeout_s=5.0))
+    hold = mgr.admit("d", None)
+    ctx = RequestContext.with_timeout(0.1)
+    t0 = time.monotonic()
+    adm = mgr.admit("d", ctx)
+    waited = time.monotonic() - t0
+    assert adm.shed
+    assert 0.05 < waited < 1.0               # ~the deadline, not the cap
+    hold.release()
+
+
+def test_admit_deadline_less_still_raises_backpressure():
+    mgr = ResourceManager(AdmissionConfig(max_inflight=1,
+                                          admit_timeout_s=0.05))
+    hold = mgr.admit("d", None)
+    with pytest.raises(RuntimeError, match="admission control"):
+        mgr.admit("d", None)
+    assert mgr.metrics()["rejected_inflight"] == 1
+    hold.release()
+
+
+def test_admit_min_service_budget_sheds_doomed_work():
+    """A request admitted with less budget than it could possibly finish
+    in would only be shed later at lane dequeue — the budget floor sheds
+    it at the door instead."""
+    mgr = ResourceManager(AdmissionConfig(max_inflight=4,
+                                          min_service_budget_s=0.2))
+    adm = mgr.admit("d", RequestContext.with_timeout(0.05))   # < floor
+    assert adm.shed
+    adm2 = mgr.admit("d", RequestContext.with_timeout(5.0))   # plenty
+    assert not adm2.shed
+    adm2.release()
+
+
+def test_admit_release_wakes_waiters_across_deployments():
+    """notify_all regression: a freed slot must wake waiters of OTHER
+    deployment names sharing the condition, not a single arbitrary one."""
+    mgr = ResourceManager(AdmissionConfig(max_inflight=1,
+                                          admit_timeout_s=5.0))
+    hold_a = mgr.admit("a", None)
+    hold_b = mgr.admit("b", None)
+    results = {}
+
+    def waiter(name):
+        adm = mgr.admit(name, RequestContext.with_timeout(3.0))
+        results[name] = adm
+        adm.release()
+
+    ts = [threading.Thread(target=waiter, args=(n,)) for n in ("a", "b")]
+    for t in ts:
+        t.start()
+    time.sleep(0.05)
+    hold_b.release()
+    hold_a.release()
+    for t in ts:
+        t.join(timeout=3.0)
+    assert set(results) == {"a", "b"}
+    assert not results["a"].shed and not results["b"].shed
+
+
+def test_admission_reconfigure_unblocks_live_waiter():
+    mgr = ResourceManager(AdmissionConfig(max_inflight=1,
+                                          admit_timeout_s=5.0))
+    hold = mgr.admit("d", None)
+    got = {}
+
+    def waiter():
+        got["adm"] = mgr.admit("d", RequestContext.with_timeout(3.0))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    mgr.reconfigure(max_inflight=2)          # loosen the bound live
+    t.join(timeout=3.0)
+    assert not t.is_alive()
+    assert not got["adm"].shed               # admitted under the new bound
+    got["adm"].release()
+    hold.release()
+
+
+# ------------------------------------------------------------ batcher knobs
+def test_batcher_reconfigure_and_introspection():
+    from repro.serving.batcher import BatcherConfig, DynamicBatcher
+    done = threading.Event()
+
+    def slow_serve(keys, ts, payloads):
+        done.wait(0.2)
+        return {"x": np.zeros(len(keys), np.float32)}
+
+    b = DynamicBatcher(slow_serve, BatcherConfig(max_batch=64,
+                                                 max_delay_s=0.05))
+    try:
+        prev = b.reconfigure(max_delay_s=0.001)
+        assert prev.max_delay_s == pytest.approx(0.05)
+        assert b.cfg.max_delay_s == pytest.approx(0.001)
+        with pytest.raises(ValueError):
+            b.reconfigure(num_dispatchers=4)
+        assert b.queue_depth() == 0 and b.oldest_age_s() == 0.0
+        r = b.submit(1, 100.0)
+        done.set()
+        r.wait(5.0)
+    finally:
+        done.set()
+        b.close()
+
+
+def test_router_live_retune():
+    from repro.shard.router import ShardRouter
+    r = ShardRouter(2, dispatch_rows=256, coalesce_delay_s=0.002)
+    try:
+        assert r.set_dispatch_rows(64) == 256
+        assert r.dispatch_rows == 64
+        assert all(l.dispatch_rows == 64 and l.max_drain_rows == 256
+                   for l in r.lanes)
+        assert r.set_coalesce_delay(0.0) == pytest.approx(0.002)
+        assert all(l.coalesce_delay_s == 0.0 for l in r.lanes)
+        with pytest.raises(ValueError):
+            r.set_dispatch_rows(0)
+    finally:
+        r.close()
+
+
+# -------------------------------------------------------------- closed loop
+def test_closed_loop_flip_swap_zero_failures_and_commit():
+    """The ISSUE 6 acceptance path: skewed measurements flip the
+    naive/preagg decision; the Replanner rolls the new plan through
+    build -> warm -> publish while a serving thread hammers the
+    deployment — zero failed requests, zero non-OK statuses — and the
+    post-swap health check commits."""
+    eng = make_engine()
+    eng.deploy("f", SQL)
+    assert dict(eng.handle("f").plan.window_impl)["w"] == "preagg"
+    serve(eng, "f", n_batches=6)            # pre-swap baseline latency
+
+    # preagg measured 10x slower per element than scan -> naive wins
+    cal = CostCalibrator(min_samples=4)
+    for _ in range(8):
+        cal.observe("scan", 100.0, 0.0001)
+        cal.observe("preagg", 100.0, 0.0010)
+    model = cal.fit(base=eng.cost_model)
+    assert model.preagg_el == pytest.approx(10.0)
+
+    stop = threading.Event()
+    failures = []
+    served = [0]
+
+    def hammer():
+        rng = np.random.default_rng(9)
+        while not stop.is_set():
+            rk = rng.integers(0, 8, 4)
+            rt = np.sort(rng.uniform(1100, 1500, 4)).astype(np.float32)
+            try:
+                fr = eng.request("f", rk.tolist(), rt.tolist())
+                if not np.all(np.asarray(fr.status) == STATUS_OK):
+                    failures.append(f"bad status {fr.status}")
+                served[0] += 1
+            except Exception as e:          # noqa: BLE001
+                failures.append(repr(e))
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    try:
+        rp = Replanner(eng, "f", min_health_batches=4)
+        rep = rp.maybe_replan(model)
+        assert rep["action"] == "swapped"
+        # keep serving across the swap before stopping the hammer
+        deadline = time.monotonic() + 10.0
+        while served[0] < 20 and time.monotonic() < deadline:
+            time.sleep(0.01)
+    finally:
+        stop.set()
+        t.join(timeout=10.0)
+    assert failures == []                   # zero failed requests
+    assert served[0] >= 20
+
+    live = eng.handle("f")
+    assert dict(live.plan.window_impl)["w"] == "naive"   # decision flipped
+    assert rp.state == Replanner.MONITORING
+    serve(eng, "f", n_batches=6, seed=11)
+    health = rp.check_health()
+    assert health["action"] == "committed"
+    assert rp.state == Replanner.IDLE
+    json.dumps(rp.events)
+    eng.close()
+
+
+def test_closed_loop_auto_rollback_on_p99_regression():
+    """When the swapped version's observed p99 regresses past the
+    factor, the Replanner rolls back through Engine.rollback and
+    restores the pre-swap cost model."""
+    eng = make_engine()
+    eng.deploy("f", SQL)
+    serve(eng, "f", n_batches=6)
+    live = eng.handle("f")
+    v1 = live.version
+    # healthy baseline: overwrite the reservoir with tight latencies
+    live.metrics.latency_s.clear()
+    for _ in range(32):
+        live.metrics.observe_latency(0.002)
+
+    model = CostModel(preagg_el=10.0)
+    rp = Replanner(eng, "f", min_health_batches=8, regress_factor=1.5)
+    rep = rp.maybe_replan(model)
+    assert rep["action"] == "swapped"
+    new = eng.handle("f")
+    assert new.version != v1
+    # the new plan is measured much slower post-swap
+    for _ in range(16):
+        new.metrics.observe_latency(0.050)
+    health = rp.check_health()
+    assert health["action"] == "rolled_back"
+    assert eng.handle("f").version == v1               # old version live
+    assert eng.cost_model == CostModel()               # model restored
+    # next replan attempt with the same fitted model is allowed again
+    assert rp.state == Replanner.IDLE
+    eng.close()
+
+
+def test_replan_no_change_keeps_model_without_swap():
+    eng = make_engine()
+    eng.deploy("f", SQL)
+    v1 = eng.handle("f").version
+    # mild recalibration that flips nothing
+    model = CostModel(preagg_el=1.2)
+    rp = Replanner(eng, "f")
+    rep = rp.maybe_replan(model)
+    assert rep["action"] == "no_change"
+    assert eng.handle("f").version == v1
+    assert eng.cost_model == model          # truer costs stay installed
+    eng.close()
+
+
+def test_control_plane_tick_and_snapshot():
+    eng = make_engine()
+    eng.deploy("f", SQL)
+    plane = ControlPlane(eng, "f", rel_tol=0.2)
+    serve(eng, "f", n_batches=6)
+    r1 = plane.tick()
+    serve(eng, "f", n_batches=6, seed=5)
+    r2 = plane.tick()
+    assert r2["tick"] == 1
+    assert r2["observations_fed"] > 0        # measured time attributed
+    assert r2["load"]["requests"] == 48
+    snap = plane.snapshot()
+    json.dumps(snap)                          # end-to-end serializable
+    assert snap["deployment"] == "f"
+    assert snap["telemetry"]["n_samples"] == 2
+    eng.close()
+
+
+def test_control_plane_background_loop():
+    eng = make_engine()
+    eng.deploy("f", SQL)
+    plane = ControlPlane(eng, "f")
+    plane.start(interval_s=0.02)
+    try:
+        serve(eng, "f", n_batches=4)
+        deadline = time.monotonic() + 5.0
+        while not plane.reports and time.monotonic() < deadline:
+            time.sleep(0.01)
+    finally:
+        plane.stop()
+    assert plane.reports                      # it ticked on its own
+    eng.close()
