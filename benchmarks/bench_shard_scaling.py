@@ -14,14 +14,22 @@ control, scatter, gather, shedding — is exercised by the parity check
 here and end-to-end in tests/test_shard.py; its per-batch overhead is
 client-side and shard-count-independent.
 
-**Process model.** Shards are pinned one-per-XLA-device; on CPU hosts the
-runtime's serving process is launched with
-``--xla_force_host_platform_device_count=N`` so each shard owns a device
-execution stream (the CPU stand-in for one tablet per accelerator). jax
-reads that flag at init, so the measurement runs in a SUBPROCESS spawned
-with the right env — ``run(rep)`` from ``benchmarks.run`` does this
-automatically; the child re-enters this module with
-``REPRO_SHARD_BENCH_CHILD=1``.
+**Process model.** Two modes (``REPRO_SHARD_BENCH_MODE`` / ``run(rep,
+mode=...)``):
+
+* ``inprocess`` (default): shards are pinned one-per-XLA-device; on CPU
+  hosts the runtime's serving process is launched with
+  ``--xla_force_host_platform_device_count=N`` so each shard owns a
+  device execution stream (the CPU stand-in for one tablet per
+  accelerator). jax reads that flag at init, so the measurement runs in
+  a SUBPROCESS spawned with the right env — ``run(rep)`` from
+  ``benchmarks.run`` does this automatically; the child re-enters this
+  module with ``REPRO_SHARD_BENCH_CHILD=1``.
+* ``process`` (DESIGN.md §11): each shard is its own subprocess worker
+  with a private jax runtime — true multi-core scale-out with no shared
+  GIL or XLA threadpool. Acceptance (ISSUE 7): 4-shard >= 2.0x 1-shard
+  median QPS **on a >= 4-core host** (the summary records ``cores``; on
+  fewer cores the workers time-slice and the ratio is noise).
 
 **Drift discipline** (the 2-core CI host swings ±2x run-to-run): every
 round measures all shard counts back-to-back (interleaved A/B), the
@@ -47,6 +55,10 @@ import time
 from typing import Dict, List
 
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+# "inprocess" (default: shards share this process, one per XLA device) or
+# "process" (DESIGN.md §11: one subprocess per shard — true multi-core
+# scaling without the GIL/XLA-threadpool sharing of the in-process mode)
+MODE = os.environ.get("REPRO_SHARD_BENCH_MODE", "inprocess")
 
 SHARD_COUNTS = (1, 2, 4)
 N_KEYS = 512 if QUICK else 4096
@@ -57,9 +69,15 @@ ROUNDS = 2 if QUICK else 9
 ROUND_SECONDS = 1.5 if QUICK else 3.0
 WARM_SECONDS = 1.0 if QUICK else 2.0
 
-OUT_PATH = os.path.join(
-    "experiments",
-    "bench_shard_quick.json" if QUICK else "BENCH_shard.json")
+
+def _out_path(mode: str, quick: bool) -> str:
+    tag = "shard_proc" if mode == "process" else "shard"
+    return os.path.join(
+        "experiments",
+        f"bench_{tag}_quick.json" if quick else f"BENCH_{tag}.json")
+
+
+OUT_PATH = _out_path(MODE, QUICK)
 
 SQL = """
 SELECT
@@ -91,7 +109,8 @@ def _build(n_shards: int, data):
     se = ShardedEngine(
         ShardConfig(n_shards=n_shards, dispatch_rows=DISPATCH_ROWS,
                     admission=AdmissionConfig(max_inflight=64,
-                                              max_queue_depth=512)),
+                                              max_queue_depth=512),
+                    backend=("process" if MODE == "process" else None)),
         flags=OptFlags(),
         warm_buckets=(8, 16, 32, 64, 128, 256))
     se.create_table(
@@ -122,10 +141,12 @@ def _make_streams(se, ts_max: float, seed: int = 1):
     much as the server). Sub-batch sizes are fixed at the dispatch chunk
     so every shard count serves identically-shaped dispatches."""
     import numpy as np
-    from repro.shard.router import shard_ids
     S = se.n_shards
     rng = np.random.default_rng(seed)
-    sid = shard_ids(np.arange(N_KEYS), S)
+    # route with the engine's OWN partitioner (consistent-hash ring by
+    # default) — a modulo pre-scatter would feed shards keys they don't
+    # own and measure unknown-key lookups instead of feature serves
+    sid = se.owners_of(np.arange(N_KEYS))
     pools = [np.flatnonzero(sid == s) for s in range(S)]
     streams = []
     for s in range(S):
@@ -243,7 +264,9 @@ def child_main() -> int:
     ratios2 = [rd[2]["qps"] / rd[1]["qps"] for rd in rounds]
     summary = {
         "quick": QUICK,
+        "mode": MODE,
         "devices": len(jax.devices()),
+        "cores": os.cpu_count() or 1,
         "shard_counts": list(SHARD_COUNTS),
         "load": "open-loop primed queues, depth 3 per shard",
         "dispatch_rows": DISPATCH_ROWS,
@@ -262,8 +285,11 @@ def child_main() -> int:
         "four_shard_speedup_median": float(np.median(ratios4)),
         "two_shard_speedup_median": float(np.median(ratios2)),
         "parity_spot_check": parity_ok,
-        # acceptance views (ISSUE 5)
+        # acceptance views (ISSUE 5: in-process >= 1.3x; ISSUE 7:
+        # process backend >= 2.0x — the 2x claim presumes >= 4 physical
+        # cores, so `cores` is recorded alongside it)
         "meets_1_3x": bool(np.median(ratios4) >= 1.3) and parity_ok,
+        "meets_2x": bool(np.median(ratios4) >= 2.0) and parity_ok,
         "router": engines[4].router.stats(),
         "admission": engines[4].resources.metrics(),
     }
@@ -285,17 +311,24 @@ def child_main() -> int:
 # parent: spawn the child with the device-count flag, read its JSON
 # ---------------------------------------------------------------------------
 
-def _spawn_child() -> dict:
+def _spawn_child(mode: str = MODE) -> dict:
     env = dict(os.environ)
-    flags = env.get("XLA_FLAGS", "")
-    # one device per shard, CAPPED at the physical core count: execution
-    # streams beyond real cores just thrash (4 streams on 2 cores
-    # measured ~35% slower than 2); shards fold onto devices via s % D,
-    # exactly like tablets sharing a server
-    n_dev = min(max(SHARD_COUNTS), os.cpu_count() or 2)
-    want = f"--xla_force_host_platform_device_count={n_dev}"
-    if "xla_force_host_platform_device_count" not in flags:
-        env["XLA_FLAGS"] = (flags + " " + want).strip()
+    if mode == "process":
+        # shard workers are their own subprocesses, each pinning ONE XLA
+        # device in its own env (worker_env) — the bench child itself
+        # stays single-device and only scatters/collects
+        env["REPRO_SHARD_BENCH_MODE"] = "process"
+    else:
+        env.pop("REPRO_SHARD_BENCH_MODE", None)
+        flags = env.get("XLA_FLAGS", "")
+        # one device per shard, CAPPED at the physical core count:
+        # execution streams beyond real cores just thrash (4 streams on
+        # 2 cores measured ~35% slower than 2); shards fold onto devices
+        # via s % D, exactly like tablets sharing a server
+        n_dev = min(max(SHARD_COUNTS), os.cpu_count() or 2)
+        want = f"--xla_force_host_platform_device_count={n_dev}"
+        if "xla_force_host_platform_device_count" not in flags:
+            env["XLA_FLAGS"] = (flags + " " + want).strip()
     env["REPRO_SHARD_BENCH_CHILD"] = "1"
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
@@ -308,21 +341,23 @@ def _spawn_child() -> dict:
     if proc.returncode != 0:
         raise RuntimeError(
             f"bench_shard_scaling child exited {proc.returncode}")
-    with open(OUT_PATH) as f:
+    with open(_out_path(mode, QUICK)) as f:
         return json.load(f)
 
 
-def run(rep) -> dict:
+def run(rep, mode: str = "inprocess") -> dict:
     """benchmarks.run entry point (parent side)."""
-    summary = _spawn_child()
+    summary = _spawn_child(mode)
+    tag = "shard_proc" if mode == "process" else "shard"
     for n in summary["shard_counts"]:
         row = summary["by_shards"][str(n)]
-        rep.add(f"shard/shards={n}", 1e6 / row["qps"],
+        rep.add(f"{tag}/shards={n}", 1e6 / row["qps"],
                 qps=round(row["qps"], 1), p50_ms=round(row["p50_ms"], 3),
                 p99_ms=round(row["p99_ms"], 3))
-    rep.add("shard/4v1_speedup", 0.0,
+    rep.add(f"{tag}/4v1_speedup", 0.0,
             median=round(summary["four_shard_speedup_median"], 3),
             meets_1_3x=summary["meets_1_3x"],
+            meets_2x=summary["meets_2x"],
             parity=summary["parity_spot_check"])
     return summary
 
@@ -332,7 +367,7 @@ if __name__ == "__main__":
         sys.exit(child_main())
     from benchmarks.common import Reporter
     r = Reporter()
-    out = run(r)
+    out = run(r, mode=MODE)
     print(r.emit())
     print(json.dumps({k: v for k, v in out.items() if k != "per_round"},
                      indent=1))

@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
                          "stream,hotswap,multiwindow,lastjoin,shard,"
-                         "adaptive")
+                         "shard_proc,adaptive")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-size smoke mode (CI): same code paths, "
                          "~10x less work; numbers are tripwires only")
@@ -78,6 +78,13 @@ def main(argv=None) -> int:
         from benchmarks import bench_shard_scaling as b11
         results["shard"] = {k: v for k, v in b11.run(rep).items()
                            if k != "per_round"}
+    if want("shard_proc"):
+        # same bench, process-backed shard runtime (one subprocess per
+        # shard, DESIGN.md §11)
+        from benchmarks import bench_shard_scaling as b11p
+        results["shard_proc"] = {
+            k: v for k, v in b11p.run(rep, mode="process").items()
+            if k != "per_round"}
     if want("adaptive"):
         from benchmarks import bench_adaptive as b12
         results["adaptive"] = b12.run(rep)
@@ -112,13 +119,13 @@ def _headline(name: str, doc: dict):
         return {"qps": top["qps"], "p50_ms": top["p50_ms"],
                 "p99_ms": top["p99_ms"],
                 "detail": f"{top['extra_launches']} joined table(s)"}
-    if name == "shard" and "by_shards" in doc:
+    if name in ("shard", "shard_proc") and "by_shards" in doc:
         top = doc["by_shards"][max(doc["by_shards"], key=int)]
         return {"qps": top["qps"], "p50_ms": top["p50_ms"],
                 "p99_ms": top["p99_ms"],
                 "detail": (f"{max(doc['by_shards'], key=int)} shards, "
                            f"{doc.get('four_shard_speedup_median', 0):.2f}x "
-                           f"vs 1")}
+                           f"vs 1, {doc.get('mode', 'inprocess')}")}
 
     def find(d):
         if isinstance(d, dict):

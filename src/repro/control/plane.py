@@ -22,6 +22,7 @@ JSON-serializable report.
 """
 from __future__ import annotations
 
+import math
 import threading
 from typing import Any, Dict, List, Optional
 
@@ -132,14 +133,22 @@ class ControlPlane:
             rejected += int(adm["delta"].get("rejected_inflight", 0))
             rejected += int(adm["delta"].get("rejected_queue_depth", 0))
         depth, age = 0, 0.0
+        p99 = float(snap.get("latency_p99_s", float("nan")))
         b = sample.get("batcher")
         if b is not None:
             depth = int(b["queue_depth"])
             age = float(b["oldest_age_s"])
             rejected += int(b["delta"].get("rejected", 0))
             shed += int(b["delta"].get("expired", 0))
+            # prefer the CLIENT-observed (queueing-inclusive) p99 when a
+            # batcher fronts the engine: the serve-side p99 stays flat
+            # while a queue builds in front of it, so a controller fed
+            # only serve latency would sleep through the buildup
+            client_p99 = float(b.get("client_p99_s", float("nan")))
+            if math.isfinite(client_p99):
+                p99 = client_p99
         return LoadObservation(
-            p99_s=float(snap.get("latency_p99_s", float("nan"))),
+            p99_s=p99,
             queue_depth=depth, oldest_age_s=age, shed=shed,
             rejected=rejected, requests=int(delta.get("requests", 0)))
 

@@ -173,9 +173,16 @@ class MetricsCollector:
         b = getattr(self.server, "batcher", None) if self.server else None
         if b is not None:
             stats = dict(b.stats)
+            client_p99 = float("nan")
+            if hasattr(b, "client_latency_percentile"):
+                client_p99 = b.client_latency_percentile(99)
             batcher = {
                 "queue_depth": b.queue_depth(),
                 "oldest_age_s": b.oldest_age_s(),
+                # queueing-INCLUSIVE latency the caller actually saw —
+                # the serve-side p99 goes blind exactly when a queue
+                # builds in front of the engine; this signal doesn't
+                "client_p99_s": client_p99,
                 "max_delay_s": b.cfg.max_delay_s,
                 "max_batch": b.cfg.max_batch,
                 "stats": stats,
@@ -184,6 +191,7 @@ class MetricsCollector:
             self._prev_batcher = stats
             self._push(t, "batcher.queue_depth", batcher["queue_depth"])
             self._push(t, "batcher.oldest_age_s", batcher["oldest_age_s"])
+            self._push(t, "batcher.client_p99_s", client_p99)
 
         admission: Optional[Dict[str, Any]] = None
         res = getattr(eng, "resources", None)

@@ -565,11 +565,16 @@ class Engine:
         return t
 
     def insert(self, table: str, keys: Sequence, ts: Sequence[float],
-               rows: np.ndarray) -> None:
+               rows: np.ndarray, *, donate: bool = True) -> None:
         """Synchronous bulk insert (offline/backfill path). Routes through
         an attached stream when one exists — a table with a live pipeline
         has a single writer, so direct donation-mode insert would race the
         flusher.
+
+        ``donate=False`` takes the copy-on-write ingest (old device
+        buffers stay live) — required whenever another thread may hold a
+        snapshot of this table mid-serve, e.g. sharded-engine writes and
+        key migration landing on an engine whose lane is executing.
 
         Atomic: if any event is unrepairably late (beyond the stream's
         released frontier), nothing is staged and ValueError is raised —
@@ -601,7 +606,7 @@ class Engine:
                     and stream.buffer.n_staged > 0):
                 raise stream.last_error
             return
-        self.tables[table].insert(keys, ts, rows)
+        self.tables[table].insert(keys, ts, rows, donate=donate)
 
     # ------------------------------------------------------------ streaming
     def attach_stream(self, table: str, cfg=None, **cfg_kw):

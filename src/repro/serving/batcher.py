@@ -103,6 +103,10 @@ class DynamicBatcher:
         self._stop = False
         self.stats = {"batches": 0, "requests": 0, "rejected": 0,
                       "expired": 0, "sum_batch": 0, "max_batch_seen": 0}
+        # CLIENT-observed per-request latency (submit -> result), i.e.
+        # queueing INCLUDED — the engine-side serve timer cannot see a
+        # queue building up in front of it, this reservoir can
+        self._client_lat: Deque[float] = collections.deque(maxlen=512)
         self._threads = [
             threading.Thread(target=self._dispatch_loop, daemon=True)
             for _ in range(cfg.num_dispatchers)]
@@ -225,9 +229,11 @@ class DynamicBatcher:
                     r.error = e
                     r.done.set()
             finally:
+                now = time.perf_counter()
                 with self._lock:
                     for r in batch:
                         self._inflight.pop(id(r), None)
+                        self._client_lat.append(now - r.enqueued_at)
             self.stats["batches"] += 1
             self.stats["requests"] += len(batch)
             self.stats["sum_batch"] += len(batch)
@@ -253,6 +259,18 @@ class DynamicBatcher:
     def queue_depth(self) -> int:
         with self._lock:
             return len(self._q)
+
+    def client_latency_percentile(self, pct: float) -> float:
+        """Percentile of client-observed request latency (enqueue ->
+        completion; queueing delay included). NaN until a request has
+        completed. This is the load signal the control plane prefers:
+        under saturation the serve-side p99 stays flat while THIS one
+        grows by the queueing delay."""
+        with self._lock:
+            if not self._client_lat:
+                return float("nan")
+            arr = np.asarray(self._client_lat, np.float64)
+        return float(np.percentile(arr, pct))
 
     def oldest_age_s(self) -> float:
         """Age of the oldest queued request (0 when the queue is empty) —

@@ -1,16 +1,25 @@
 """Sharded serving runtime: hash-partitioned shard engines behind the
-single-engine API (DESIGN.md §9).
+single-engine API (DESIGN.md §9, §11).
 
-``ShardedEngine`` wraps N key-hash-partitioned shard engines; a
-``ShardRouter`` scatters request batches to per-shard coalescing workers
-and gathers rows back in request order; a ``ResourceManager`` bounds
-per-deployment concurrency and sheds past-deadline work whole-batch.
+``ShardedEngine`` wraps N key-hash-partitioned shard engines — in this
+process (default) or one subprocess per shard (``backend="process"`` /
+``REPRO_SHARD_BACKEND=process``, see ``shard/proc/``); a ``ShardRouter``
+scatters request batches to per-shard coalescing workers and gathers
+rows back in request order; a consistent-hash ring (``shard/ring.py``)
+owns key -> shard placement so the shard count can grow/shrink under
+live traffic; a ``ResourceManager`` bounds per-deployment concurrency
+and sheds past-deadline (or dead-worker) work whole-batch.
 """
 from repro.shard.engine import (ShardConfig, ShardedDeploymentHandle,
                                 ShardedEngine, ShardedPipeline)
 from repro.shard.resource import AdmissionConfig, ResourceManager
-from repro.shard.router import ShardRouter, shard_ids, shard_of
+from repro.shard.ring import HashRing, ModuloRouting, RouteTable, \
+    key_hash, key_hashes
+from repro.shard.router import ShardDownError, ShardRouter, shard_ids, \
+    shard_of
 
 __all__ = ["ShardConfig", "ShardedEngine", "ShardedDeploymentHandle",
            "ShardedPipeline", "AdmissionConfig", "ResourceManager",
-           "ShardRouter", "shard_ids", "shard_of"]
+           "ShardRouter", "ShardDownError", "shard_ids", "shard_of",
+           "HashRing", "RouteTable", "ModuloRouting", "key_hash",
+           "key_hashes"]

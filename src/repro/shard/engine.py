@@ -1,45 +1,72 @@
 """ShardedEngine: horizontal scale-out behind the single-engine API.
 
-DESIGN.md §9. N key-hash-partitioned **shard engines** — each a full
+DESIGN.md §9/§11. N key-hash-partitioned **shard engines** — each a full
 :class:`repro.core.engine.Engine` with its own tables, device-resident
 key directory, plan cache, and (when streams are attached) ingest
 pipeline with its own watermarks — behind the familiar ``create_table /
 insert / attach_stream / deploy / request / query_offline`` surface.
-When the jax runtime exposes several devices (a TPU slice, or CPU with
-``--xla_force_host_platform_device_count=N``), shard ``s`` is pinned to
-device ``s % D`` so shard executions ride separate device streams; on a
-single device everything still works, just serialized.
 
-* **Routing** (``shard/router.py``): ingest goes to the key's owning
-  shard; a request batch is scattered by key hash, executed per shard by
-  coalescing workers, and gathered back in request order. The paper's
-  key-partitioned tablets, in-process.
+Two backends host the shard set (``ShardedEngine(backend=...)``, the
+``REPRO_SHARD_BACKEND`` env var, or ``ShardConfig.backend``):
+
+* ``"inprocess"`` (default) — shard engines are objects in this
+  process, optionally pinned to distinct jax devices. Zero transport
+  cost, but every shard shares one GIL and one jax runtime.
+* ``"process"`` — each shard engine lives in its OWN subprocess
+  (``shard/proc/``) with its own Python interpreter and jax runtime,
+  pinned via per-process env (``--xla_force_host_platform_device_count``
+  etc. — jax reads them once at import, which is exactly why threads
+  cannot do this). Scatter/gather sub-batches, control RPCs and
+  telemetry snapshots cross a length-prefixed pickle channel; worker
+  death is supervised (shed → respawn → catalog replay → re-warm).
+
+* **Routing** (``shard/ring.py``): a consistent-hash ring (virtual
+  nodes) replaces the bare ``hash % N`` partitioner, so the shard count
+  can grow/shrink under live traffic — ``add_shard``/``remove_shard``
+  migrate only the key ranges adjacent to the moved virtual nodes,
+  interval by interval, while reads keep routing consistently (the old
+  owner retains a stale copy until its range flips; readers are never
+  sent to a shard that does not yet hold the data).
+  ``ShardConfig(partitioner="modulo")`` keeps the pure modulo routing
+  as an escape hatch (it cannot reshard).
 * **Deployments**: ``deploy`` compiles one executable set per shard
   (``Engine.build_version``) and then publishes the whole set under ONE
   :class:`ShardedDeploymentHandle` — hot swap, counter-based canary and
   rollback operate on the set atomically; a batch is always served by a
-  single (version, shard-set).
+  single (version, shard-set). The serialized control RPCs of the
+  process backend keep ``build -> publish`` atomic across workers via
+  the same version vector.
 * **Tables**: partitioned by default; ``replicate=True`` broadcasts a
-  table to every shard (dimension tables — LAST JOIN probes then resolve
-  through the owning shard's local replica, no cross-shard hop).
+  table to every shard (dimension tables — LAST JOIN probes then
+  resolve through the owning shard's local replica, no cross-shard
+  hop). Replicated ingest through the process backend serializes the
+  payload ONCE and fans the same bytes to every worker.
+* **Transactional ingest**: a multi-shard ``insert`` into a
+  stream-attached table is all-or-nothing — phase 1 ``prepare``s the
+  per-shard slices against every involved stream buffer (validating
+  frontiers), phase 2 ``commit``s them (the buffers hold their
+  watermarks so a prepared slice can never become late in between);
+  any reject aborts every prepared slice with nothing staged.
 * **Offline parity**: ``query_offline`` runs per shard against pinned
   snapshots and stamps the result with the cross-shard **version
-  vector**; outputs are bit-identical to the unsharded engine because
-  per-key event order (and therefore every ring) is preserved by
-  routing.
+  vector**; rows are filtered by CURRENT ring ownership so stale
+  migration copies never surface, keeping outputs bit-identical to the
+  unsharded engine before/during/after a reshard.
 * **Admission control** (``shard/resource.py``): per-deployment
-  in-flight and queue-depth bounds plus deadline shedding, so
-  saturating one deployment or shard degrades with explicit
-  backpressure/shed statuses instead of unbounded queueing.
+  in-flight and queue-depth bounds plus deadline shedding; a dead
+  worker sheds with an explicit ``worker_down`` reason instead of
+  hanging gathers.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple, \
+    Union
 
 import numpy as np
 
@@ -50,6 +77,8 @@ from repro.core.optimizer import CostModel, OptFlags
 from repro.core.results import (STATUS_SHED, FeatureFrame, RequestContext)
 from repro.featurestore.table import TableSchema
 from repro.shard.resource import AdmissionConfig, ResourceManager
+from repro.shard.ring import HashRing, ModuloRouting, RouteTable, \
+    key_hashes
 from repro.shard.router import ShardRouter, shard_ids, shard_of
 
 __all__ = ["ShardConfig", "ShardedEngine", "ShardedDeploymentHandle",
@@ -63,15 +92,24 @@ class ShardConfig:
     # max wait for a worker to fill one dispatch chunk (batcher-style
     # deadline policy; 0 disables waiting)
     coalesce_delay_s: float = 0.002
-    # execution lanes (worker threads). None = one per distinct device in
-    # use: running more execution streams than devices just thrashes;
-    # shards beyond that share lanes round-robin, like tablets sharing a
-    # tablet-server's executor pool
+    # execution lanes (worker threads). None = one per distinct device
+    # in use for the in-process backend (more execution streams than
+    # devices just thrashes) and one per shard for the process backend
+    # (lanes block on channel I/O with the GIL released, so a lane per
+    # worker keeps every subprocess busy)
     n_lanes: Optional[int] = None
     admission: AdmissionConfig = AdmissionConfig()
     # pin shard s to jax device s % D when more than one device exists;
     # set False to keep default placement (all shards on device 0)
     pin_devices: bool = True
+    # "inprocess" | "process"; None resolves REPRO_SHARD_BACKEND, then
+    # "inprocess"
+    backend: Optional[str] = None
+    # "ring" (consistent hash, elastic) | "modulo" (pure hash % N,
+    # cannot reshard)
+    partitioner: str = "ring"
+    vnodes: int = 64                  # ring points per shard
+    migrate_batch_arcs: int = 8       # arcs copied per migration step
 
 
 @dataclass
@@ -118,6 +156,9 @@ class ShardedHandleMetrics:
 class _TableSpec:
     schema: TableSchema
     replicated: bool
+    # resolved per-shard creation kwargs, replayed when a shard is added
+    # (elastic reshard) or a dead worker is respawned
+    create_kw: Dict[str, object] = dataclasses.field(default_factory=dict)
 
 
 class ShardedDeploymentHandle:
@@ -125,16 +166,24 @@ class ShardedDeploymentHandle:
     serving endpoint. Owns the per-shard :class:`DeploymentHandle`s; the
     router dispatches against THESE handles directly, so a mid-redeploy
     inner-engine state is invisible to in-flight batches (same
-    handle-owned-executable argument as the single-engine swap)."""
+    handle-owned-executable argument as the single-engine swap).
+
+    ``handles[s]`` may be ``None`` for shard slots retired before this
+    version was deployed — routing never selects a retired slot."""
 
     def __init__(self, engine: "ShardedEngine", name: str, version: int,
-                 handles: Sequence[DeploymentHandle]):
+                 handles: Sequence[Optional[DeploymentHandle]]):
         self.engine = engine
         self.name = name
         self.version = version
-        self.handles: Tuple[DeploymentHandle, ...] = tuple(handles)
+        self.handles: Tuple[Optional[DeploymentHandle], ...] = \
+            tuple(handles)
         self.state = DeploymentHandle.WARMING
         self.metrics = ShardedHandleMetrics()
+        # the deploy-time inputs, kept so a respawned worker (or a newly
+        # added shard) can rebuild this exact version
+        self.query: Optional[Query] = None
+        self.warm_buckets: Optional[Tuple[int, ...]] = None
         self._canary: Optional[Tuple["ShardedDeploymentHandle", float]] = \
             None
         self._canary_counter = 0
@@ -149,19 +198,22 @@ class ShardedDeploymentHandle:
     def live(self) -> bool:
         return self.state == DeploymentHandle.LIVE
 
+    def _first(self) -> DeploymentHandle:
+        return next(h for h in self.handles if h is not None)
+
     @property
     def plan(self):
-        return self.handles[0].plan
+        return self._first().plan
 
     @property
     def phys(self):
-        return self.handles[0].phys
+        return self._first().phys
 
     @property
     def table(self):
-        """Shard 0's table — schema/introspection only; mutation must go
-        through the sharded engine (routing)."""
-        return self.handles[0].table
+        """A live shard's table — schema/introspection only; mutation
+        must go through the sharded engine (routing)."""
+        return self._first().table
 
     def __repr__(self) -> str:
         return (f"ShardedDeploymentHandle({self.name!r} v{self.version} "
@@ -169,16 +221,20 @@ class ShardedDeploymentHandle:
 
     # ------------------------------------------------------------ warm etc
     def warm(self, buckets: Sequence[int]) -> int:
-        return sum(h.warm(buckets) for h in self.handles)
+        return sum(h.warm(buckets) for h in self.handles
+                   if h is not None)
 
     def version_vector(self) -> Tuple[int, ...]:
-        """Per-shard table versions (shard order) right now."""
-        return tuple(h.table.version for h in self.handles)
+        """Per-shard table versions (shard order, active slots) now."""
+        return tuple(h.table.version for h in self.handles
+                     if h is not None)
 
     def join_staleness(self) -> Dict[str, Dict[str, float]]:
         """Cross-shard rollup of the per-shard staleness metrics."""
         out: Dict[str, Dict[str, float]] = {}
         for h in self.handles:
+            if h is None:
+                continue
             for t, st in h.join_staleness().items():
                 agg = out.setdefault(t, {"probes": 0, "matches": 0,
                                          "age_p99": float("nan"),
@@ -264,10 +320,14 @@ class ShardedDeploymentHandle:
                    else None)
         B = len(karr)
         parts = eng.router.scatter(self.handles, karr, ts_arr, row_arr,
-                                   ctx=ctx)
+                                   ctx=ctx, owners=eng.owners_of(karr))
         columns, status, _tvers, any_shed = eng.router.gather(parts, B)
         if any_shed:
-            eng.resources.record_shed()
+            reason = next((it.shed_reason for _, it in parts if it.shed),
+                          None)
+            eng.resources.record_shed(
+                kind="worker_down" if reason == "worker_down"
+                else "deadline")
             return self._shed_frame(B, trace)
         wall = time.perf_counter() - t0
         with self._lock:
@@ -279,8 +339,8 @@ class ShardedDeploymentHandle:
         return FeatureFrame(
             columns, status=status, deployment=self.name,
             version=self.version, trace_id=trace,
-            table_version=max((h.table.version for h in self.handles),
-                              default=-1),
+            table_version=max((h.table.version for h in self.handles
+                               if h is not None), default=-1),
             latency={"serve_s": wall},
             version_vector=self.version_vector())
 
@@ -301,24 +361,34 @@ class ShardedDeploymentHandle:
 
 class ShardedPipeline:
     """Streaming facade: one IngestPipeline per shard, each with its own
-    watermarks/frontiers — routing by the same key hash as serving, so an
-    event's reorder repair happens on the shard that stores it."""
+    watermarks/frontiers — routing by the engine's ring, so an event's
+    reorder repair happens on the shard that stores it. Ownership is
+    read UNDER the engine's route lock: an event must not land in a
+    source shard's buffer after that shard's key range was extracted by
+    an in-flight migration step."""
 
     def __init__(self, engine: "ShardedEngine", table: str,
                  pipes: Sequence, replicated: bool):
         self.engine = engine
         self.table = table
-        self.pipes = tuple(pipes)
+        self.pipes: List = list(pipes)   # grows under add_shard
         self.replicated = replicated
 
+    def _active(self) -> List[Tuple[int, object]]:
+        retired = self.engine._retired
+        return [(s, p) for s, p in enumerate(self.pipes)
+                if s not in retired]
+
     def push(self, key, ts: float, row: np.ndarray) -> bool:
+        eng = self.engine
         if self.replicated:
             ok = True
-            for p in self.pipes:
+            for _s, p in self._active():
                 ok = p.push(key, ts, row) and ok
             return ok
-        s = shard_of(key, len(self.pipes))
-        return self.pipes[s].push(key, ts, row)
+        with eng._route_lock:
+            s = eng._routing.owner(key)
+            return self.pipes[s].push(key, ts, row)
 
     def push_batch(self, keys: Sequence, ts: Sequence[float],
                    rows: np.ndarray, *, all_or_nothing: bool = False
@@ -326,42 +396,44 @@ class ShardedPipeline:
         keys = np.asarray(keys)
         ts = np.asarray(ts, np.float32)
         rows = np.asarray(rows, np.float32)
+        eng = self.engine
         if self.replicated:
             return min(p.push_batch(keys, ts, rows,
                                     all_or_nothing=all_or_nothing)
-                       for p in self.pipes)
-        sid = shard_ids(keys, len(self.pipes))
-        n = 0
-        for s, p in enumerate(self.pipes):
-            idx = np.flatnonzero(sid == s)
-            if idx.size:
-                n += p.push_batch(keys[idx], ts[idx], rows[idx],
-                                  all_or_nothing=all_or_nothing)
-        return n
+                       for _s, p in self._active())
+        with eng._route_lock:
+            sid = eng._routing.owners_of(keys)
+            n = 0
+            for s in np.unique(sid):
+                idx = np.flatnonzero(sid == s)
+                n += self.pipes[s].push_batch(
+                    keys[idx], ts[idx], rows[idx],
+                    all_or_nothing=all_or_nothing)
+            return n
 
     def flush(self, *, flush_all: bool = True) -> None:
-        for p in self.pipes:
+        for _s, p in self._active():
             p.flush(flush_all=flush_all)
 
     def wait_idle(self, timeout: float = 30.0) -> bool:
-        return all(p.wait_idle(timeout) for p in self.pipes)
+        return all(p.wait_idle(timeout) for _s, p in self._active())
 
     def warm(self) -> int:
-        return sum(p.warm() for p in self.pipes)
+        return sum(p.warm() for _s, p in self._active())
 
     def version_vector(self) -> Tuple[int, ...]:
-        return tuple(p.table.version for p in self.pipes)
+        return tuple(p.table.version for _s, p in self._active())
 
     def metrics(self) -> Dict[str, float]:
         out: Dict[str, float] = {}
-        for p in self.pipes:
+        for _s, p in self._active():
             for k, v in p.metrics().items():
                 out[k] = out.get(k, 0) + v
-        out["n_shards"] = len(self.pipes)
+        out["n_shards"] = len(self._active())
         return out
 
     def close(self, *, drain: bool = True) -> None:
-        for p in self.pipes:
+        for _s, p in self._active():
             p.close(drain=drain)
 
 
@@ -369,27 +441,63 @@ class ShardedEngine:
     """N hash-partitioned shard engines behind the Engine API."""
 
     def __init__(self, cfg: ShardConfig = ShardConfig(), *,
+                 backend: Optional[str] = None,
                  flags: OptFlags = OptFlags(), **engine_kw):
-        import jax
         self.cfg = cfg
         self.flags = flags
+        self._engine_kw = dict(engine_kw)
         S = cfg.n_shards
-        devices = jax.devices()
-        self.devices: Tuple = tuple(
-            devices[s % len(devices)] if (cfg.pin_devices
-                                          and len(devices) > 1) else None
-            for s in range(S))
-        self.shards: List[Engine] = [Engine(flags, **engine_kw)
-                                     for _ in range(S)]
-        n_lanes = cfg.n_lanes
-        if n_lanes is None:
-            n_lanes = len({d for d in self.devices if d is not None}) or 1
+        kind = (backend or cfg.backend
+                or os.environ.get("REPRO_SHARD_BACKEND") or "inprocess")
+        if kind not in ("inprocess", "process"):
+            raise ValueError(f"unknown shard backend {kind!r}; expected "
+                             f"'inprocess' or 'process'")
+        self.backend_kind = kind
+        if kind == "process":
+            from repro.shard.proc.backend import ProcShardBackend
+            self.backend = ProcShardBackend(S, flags=flags,
+                                            engine_kw=engine_kw)
+            self.backend.reseed_hook = self._reseed_replicas
+            self.backend.respawn_hook = self._replay_shard
+            self.shards: List = list(self.backend.clients)
+            self.devices: Tuple = tuple(None for _ in range(S))
+            default_lanes = S
+        else:
+            import jax
+            self.backend = None
+            devices = jax.devices()
+            self.devices = tuple(
+                devices[s % len(devices)] if (cfg.pin_devices
+                                              and len(devices) > 1)
+                else None for s in range(S))
+            self.shards = [Engine(flags, **engine_kw) for _ in range(S)]
+            default_lanes = len({d for d in self.devices
+                                 if d is not None}) or 1
+        n_lanes = cfg.n_lanes if cfg.n_lanes is not None else default_lanes
         self.router = ShardRouter(S, dispatch_rows=cfg.dispatch_rows,
                                   coalesce_delay_s=cfg.coalesce_delay_s,
                                   n_lanes=n_lanes)
         self.resources = ResourceManager(cfg.admission)
+        # ring routing state: readers (scatter, query_offline) read the
+        # route table lock-free — a reader racing a range flip sees either
+        # the old owner (which retains a stale copy: correct) or the new
+        # owner (which already finished copying: correct). WRITERS must
+        # hold _route_lock across owner-compute + staging so no event
+        # lands in a source buffer after its range was extracted.
+        self._route_lock = threading.RLock()
+        if cfg.partitioner == "modulo":
+            self._ring: Optional[HashRing] = None
+            self._routing = ModuloRouting(S)
+        elif cfg.partitioner == "ring":
+            self._ring = HashRing(range(S), vnodes=cfg.vnodes)
+            self._routing = RouteTable(self._ring)
+        else:
+            raise ValueError(f"unknown partitioner {cfg.partitioner!r}")
+        self._retired: Set[int] = set()
         self.specs: Dict[str, _TableSpec] = {}
         self.streams: Dict[str, ShardedPipeline] = {}
+        self._stream_cfgs: Dict[str, object] = {}
+        self._models: Dict[str, Tuple[Callable, object]] = {}
         self.deployments: Dict[str, ShardedDeploymentHandle] = {}
         self._versions: Dict[str, Dict[int, ShardedDeploymentHandle]] = {}
         self._history: Dict[str, List[ShardedDeploymentHandle]] = {}
@@ -399,15 +507,34 @@ class ShardedEngine:
     # ------------------------------------------------------------ identity
     @property
     def n_shards(self) -> int:
-        return self.cfg.n_shards
+        """ACTIVE shard count (grows/shrinks with add/remove_shard)."""
+        return len(self.shards) - len(self._retired)
+
+    def _active_ids(self) -> List[int]:
+        return [s for s in range(len(self.shards))
+                if s not in self._retired]
+
+    def _primary(self):
+        return self.shards[self._active_ids()[0]]
 
     @property
     def cache(self):
-        """Shard 0's plan cache (FeatureServer warm-gating compat)."""
-        return self.shards[0].cache
+        """A live shard's plan cache (FeatureServer warm-gating compat)."""
+        return self._primary().cache
 
     def shard_of(self, key) -> int:
-        return shard_of(key, self.n_shards)
+        """Current owning shard of ``key`` under the ring (or modulo)."""
+        return self._routing.owner(key)
+
+    def owners_of(self, keys: np.ndarray) -> np.ndarray:
+        return self._routing.owners_of(np.asarray(keys))
+
+    @property
+    def worker_restarts(self) -> int:
+        """Total worker respawns (process backend; 0 in-process)."""
+        if self.backend is None:
+            return 0
+        return sum(c.restarts for c in self.backend.clients)
 
     # ------------------------------------------------------------------ DDL
     def create_table(self, schema: TableSchema, *, max_keys: int = 1024,
@@ -430,38 +557,119 @@ class ShardedEngine:
                 16, int(1.3 * max_keys / S) + 8)
         else:
             per_shard = per_shard_max_keys
-        for s, eng in enumerate(self.shards):
-            eng.create_table(schema, max_keys=per_shard, capacity=capacity,
-                             bucket_size=bucket_size, join_keys=join_keys,
-                             device=self.devices[s])
+        create_kw = dict(max_keys=per_shard, capacity=capacity,
+                         bucket_size=bucket_size,
+                         join_keys=tuple(join_keys))
+        for s in self._active_ids():
+            self.shards[s].create_table(schema, device=self.devices[s],
+                                        **create_kw)
         self.specs[schema.name] = _TableSpec(schema=schema,
-                                             replicated=replicate)
+                                             replicated=replicate,
+                                             create_kw=create_kw)
+        if self.backend is not None:
+            self.backend.log_ddl("create_table", schema=schema,
+                                 **create_kw)
 
     def tables_of(self, name: str) -> Tuple:
-        """The per-shard Table objects for ``name`` (shard order)."""
-        return tuple(e.tables[name] for e in self.shards)
+        """The per-shard Table objects for ``name`` (shard order;
+        in-process backend only — a subprocess's tables are not
+        reachable as objects, which is rather the point)."""
+        if self.backend is not None:
+            raise NotImplementedError(
+                "tables_of() reaches into shard-engine objects; the "
+                "process backend keeps those in worker subprocesses — "
+                "use query_offline / telemetry snapshots instead")
+        return tuple(self.shards[s].tables[name]
+                     for s in self._active_ids())
 
     def insert(self, table: str, keys: Sequence, ts: Sequence[float],
                rows: np.ndarray) -> None:
         """Bulk insert, routed to owning shards (replicated tables fan
-        out to all). Per-shard semantics match ``Engine.insert``
-        (including the stream barrier when a pipeline is attached);
-        atomic validation is per shard — a cross-shard transactional
-        reject is future work (DESIGN.md §9)."""
+        out to all — one serialized payload broadcast under the process
+        backend). For stream-attached partitioned tables the multi-shard
+        write is TRANSACTIONAL: every involved shard prepares its slice,
+        then all commit — or any reject aborts them all with nothing
+        staged (matching ``Engine.insert``'s atomic contract, but across
+        shards)."""
         spec = self._spec(table)
         keys = np.asarray(keys)
         ts = np.asarray(ts, np.float32)
         rows = np.asarray(rows, np.float32)
         if spec.replicated:
-            for eng in self.shards:
-                eng.insert(table, keys.tolist(), ts.tolist(), rows)
+            if self.backend is not None:
+                self.backend.broadcast("insert", only=self._active_ids(),
+                                       table=table, keys=keys.tolist(),
+                                       ts=ts.tolist(), rows=rows)
+            else:
+                # donate=False: the shard engines are live — their lane
+                # threads serve off table snapshots concurrently with
+                # this write, so donating ingest would delete buffers
+                # under an in-flight request
+                for s in self._active_ids():
+                    self.shards[s].insert(table, keys.tolist(),
+                                          ts.tolist(), rows, donate=False)
             return
-        sid = shard_ids(keys, self.n_shards)
-        for s, eng in enumerate(self.shards):
-            idx = np.flatnonzero(sid == s)
-            if idx.size:
-                eng.insert(table, keys[idx].tolist(), ts[idx].tolist(),
-                           rows[idx])
+        facade = self.streams.get(table)
+        if facade is not None:
+            self._insert_txn(table, facade, keys, ts, rows)
+            return
+        with self._route_lock:
+            sid = self._routing.owners_of(keys)
+            for s in np.unique(sid):
+                idx = np.flatnonzero(sid == s)
+                self.shards[s].insert(table, keys[idx].tolist(),
+                                      ts[idx].tolist(), rows[idx],
+                                      donate=False)
+
+    def _insert_txn(self, table: str, facade: ShardedPipeline,
+                    keys: np.ndarray, ts: np.ndarray, rows: np.ndarray
+                    ) -> None:
+        """Cross-shard 2-phase ingest over the per-shard stream buffers.
+        ``prepare`` validates each slice against its shard's released
+        frontier and parks it; the buffers then HOLD their watermarks at
+        the prepared timestamps, so phase 2 ``commit`` cannot fail. Any
+        reject (or a dead worker mid-prepare) aborts every parked slice
+        — the pre-2PC behavior of shard 0 applying while shard 1
+        rejected can no longer happen."""
+        with self._route_lock:
+            sid = self._routing.owners_of(keys)
+            txns: List[Tuple[int, int]] = []
+            try:
+                for s in np.unique(sid):
+                    idx = np.flatnonzero(sid == s)
+                    txn = facade.pipes[s].prepare(
+                        keys[idx].tolist(), ts[idx].tolist(), rows[idx])
+                    if txn is None:
+                        raise ValueError(
+                            f"insert on table {table!r} rejected "
+                            f"atomically: the batch contains event(s) "
+                            f"beyond a shard's released frontier "
+                            f"(unrepairably late) or with non-finite "
+                            f"timestamps; nothing was staged on any "
+                            f"shard")
+                    txns.append((int(s), txn))
+            except BaseException:
+                for s, txn in txns:
+                    try:
+                        facade.pipes[s].abort_txn(txn)
+                    except Exception:
+                        pass          # abort is advisory on a dead shard
+                raise
+            for s, txn in txns:
+                facade.pipes[s].commit_txn(txn)
+        # barrier (outside the route lock — flushing does device work):
+        # everything committed becomes queryable, surfacing flush errors
+        # exactly like Engine.insert's single-shard barrier
+        for s, _txn in txns:
+            pipe = facade.pipes[s]
+            if hasattr(pipe, "client"):          # process backend proxy
+                pipe.flush(flush_all=True, check=True)
+            else:
+                errs_before = pipe.stats["errors"]
+                pipe.flush(flush_all=True)
+                if (pipe.stats["errors"] > errs_before
+                        and pipe.buffer.n_staged > 0):
+                    raise pipe.last_error
 
     def _spec(self, table: str) -> _TableSpec:
         spec = self.specs.get(table)
@@ -475,13 +683,21 @@ class ShardedEngine:
                       ) -> ShardedPipeline:
         """One ingest pipeline per shard (per-shard watermarks); events
         route to the owning shard's pipeline."""
+        from repro.streaming.pipeline import PipelineConfig
         spec = self._spec(table)
         if table in self.streams:
             raise ValueError(f"table {table!r} already has a stream")
-        pipes = [eng.attach_stream(table, cfg, **cfg_kw)
-                 for eng in self.shards]
+        if cfg is None and cfg_kw:
+            cfg = PipelineConfig(**cfg_kw)
+        elif cfg is not None and cfg_kw:
+            raise ValueError("pass cfg or keywords, not both")
+        pipes = [self.shards[s].attach_stream(table, cfg)
+                 for s in self._active_ids()]
         facade = ShardedPipeline(self, table, pipes, spec.replicated)
         self.streams[table] = facade
+        self._stream_cfgs[table] = cfg
+        if self.backend is not None:
+            self.backend.log_ddl("attach_stream", table=table, cfg=cfg)
         return facade
 
     def create_stream(self, schema: TableSchema, *, max_keys: int = 1024,
@@ -489,13 +705,21 @@ class ShardedEngine:
                       replicate: bool = False, **cfg_kw):
         self.create_table(schema, max_keys=max_keys, capacity=capacity,
                           bucket_size=bucket_size, replicate=replicate)
-        return (self.tables_of(schema.name),
-                self.attach_stream(schema.name, **cfg_kw))
+        facade = self.attach_stream(schema.name, **cfg_kw)
+        tables = (None if self.backend is not None
+                  else self.tables_of(schema.name))
+        return tables, facade
 
     def register_model(self, name: str, fn: Callable,
                        params: object = None) -> None:
-        for eng in self.shards:
-            eng.register_model(name, fn, params)
+        """NOTE: under the process backend ``fn``/``params`` cross a
+        pickle boundary — module-level functions work, closures don't."""
+        for s in self._active_ids():
+            self.shards[s].register_model(name, fn, params)
+        self._models[name] = (fn, params)
+        if self.backend is not None:
+            self.backend.log_ddl("register_model", name=name, fn=fn,
+                                 params=params)
 
     def set_cost_model(self, model: CostModel) -> CostModel:
         """Install calibrated optimizer constants on EVERY shard (all
@@ -503,14 +727,16 @@ class ShardedEngine:
         break the one-plan-per-version invariant ``deploy`` relies on).
         Takes effect on the next ``deploy``; returns the previous model."""
         with self._deploy_lock:
-            prev = self.shards[0].cost_model
-            for eng in self.shards:
-                eng.set_cost_model(model)
+            prev = self._primary().cost_model
+            for s in self._active_ids():
+                self.shards[s].set_cost_model(model)
+            if self.backend is not None:
+                self.backend.log_ddl("set_cost_model", model=model)
             return prev
 
     @property
     def cost_model(self) -> CostModel:
-        return self.shards[0].cost_model
+        return self._primary().cost_model
 
     # --------------------------------------------------------------- deploy
     def deploy(self, name: str,
@@ -537,26 +763,32 @@ class ShardedEngine:
             # build EVERY shard's version before any publish: a failed
             # shard build must leave the live set untouched AND not leak
             # the versions already built on earlier shards
-            handles: List[DeploymentHandle] = []
+            handles: List[Optional[DeploymentHandle]] = \
+                [None] * len(self.shards)
+            built: List[Tuple[int, DeploymentHandle]] = []
             try:
-                for eng in self.shards:
-                    handles.append(eng.build_version(
-                        name, query, warm_buckets=warm_buckets))
+                for s in self._active_ids():
+                    h = self.shards[s].build_version(
+                        name, query, warm_buckets=warm_buckets)
+                    handles[s] = h
+                    built.append((s, h))
             except BaseException:
-                for eng, h in zip(self.shards, handles):
-                    eng.discard_version(h)
+                self._discard_built(built)
                 raise
-            for j in handles[0].plan.joins:
+            first = next(h for h in handles if h is not None)
+            for j in first.plan.joins:
                 if not self._spec(j.table).replicated:
-                    for eng, h in zip(self.shards, handles):
-                        eng.discard_version(h)
+                    self._discard_built(built)
                     raise ValueError(
                         f"LAST JOIN right table {j.table!r} is hash-"
                         f"partitioned; a probing shard could not resolve "
                         f"keys owned by other shards — create it with "
                         f"replicate=True (broadcast dimension table)")
-            version = handles[0].version
+            version = first.version
             sh = ShardedDeploymentHandle(self, name, version, handles)
+            sh.query = query
+            sh.warm_buckets = (tuple(warm_buckets) if warm_buckets
+                               else None)
             self._versions.setdefault(name, {})[version] = sh
             if canary > 0.0:
                 displaced = prev._canary[0] if prev._canary else None
@@ -568,11 +800,20 @@ class ShardedEngine:
                 self._swap(name, sh, prev)
             return sh
 
+    def _discard_built(self, built: List[Tuple[int, DeploymentHandle]]
+                       ) -> None:
+        for s, h in built:
+            try:
+                self.shards[s].discard_version(h)
+            except Exception:
+                pass       # a shard dying mid-rollback is already down
+
     def _swap(self, name: str,
               new: ShardedDeploymentHandle,
               prev: Optional[ShardedDeploymentHandle]) -> None:
-        for eng, h in zip(self.shards, new.handles):
-            eng.publish_version(h)
+        for s in self._active_ids():
+            if new.handles[s] is not None:
+                self.shards[s].publish_version(new.handles[s])
         new._canary = None
         new.state = DeploymentHandle.LIVE
         self.deployments[name] = new       # the atomic publish
@@ -586,14 +827,15 @@ class ShardedEngine:
             # mirror the inner engines' retention bound: beyond it the
             # inner handles released their executables anyway, so the
             # sharded wrapper is unpinnable too
-            while len(hist) > self.shards[0].max_retained_versions:
+            while len(hist) > self._primary().max_retained_versions:
                 dropped = hist.pop(0)
                 self._versions.get(name, {}).pop(dropped.version, None)
 
     def _discard(self, cand: ShardedDeploymentHandle) -> None:
         cand.state = DeploymentHandle.RETIRED
-        for eng, h in zip(self.shards, cand.handles):
-            eng.discard_version(h)
+        self._discard_built([(s, cand.handles[s])
+                             for s in self._active_ids()
+                             if cand.handles[s] is not None])
         self._versions.get(cand.name, {}).pop(cand.version, None)
 
     def handle(self, name: str, version: Optional[int] = None
@@ -637,6 +879,231 @@ class ShardedEngine:
             self._swap(name, prev, live)
             return prev
 
+    # -------------------------------------------------------------- elastic
+    def add_shard(self) -> int:
+        """Grow the shard set by one under live traffic: bring up the
+        runtime (a fresh subprocess under the process backend), replay
+        the catalog (tables, streams, models, cost model), seed
+        replicated tables, build + publish every retained deployment
+        version, add a router queue — and only THEN flip ring ownership,
+        interval by interval, migrating each key range before its flip.
+        Requests keep flowing the whole time (routing always answers
+        with a shard that holds the data). Returns the new shard id."""
+        if self._ring is None:
+            raise RuntimeError(
+                "partitioner='modulo' cannot reshard; use the default "
+                "consistent-hash ring")
+        with self._deploy_lock:
+            s = len(self.shards)
+            # 1) runtime + catalog
+            if self.backend is not None:
+                client = self.backend.add_client()   # replays DDL itself
+                self.shards.append(client)
+                self.devices = self.devices + (None,)
+            else:
+                eng = Engine(self.flags, **self._engine_kw)
+                dev = None
+                if self.cfg.pin_devices:
+                    import jax
+                    devs = jax.devices()
+                    if len(devs) > 1:
+                        dev = devs[s % len(devs)]
+                for tname, spec in self.specs.items():
+                    eng.create_table(spec.schema, device=dev,
+                                     **spec.create_kw)
+                for name, (fn, params) in self._models.items():
+                    eng.register_model(name, fn, params)
+                eng.set_cost_model(self.cost_model)
+                for tname in self._stream_cfgs:
+                    eng.attach_stream(tname, self._stream_cfgs[tname])
+                self.shards.append(eng)
+                self.devices = self.devices + (dev,)
+            # 2) streaming facades gain the new shard's pipe
+            for tname, facade in self.streams.items():
+                if self.backend is not None:
+                    facade.pipes.append(client._streams[tname])
+                else:
+                    facade.pipes.append(eng.streams[tname])
+            # 3) replicated dimension tables: full copy from a donor
+            self._seed_replicas(s)
+            # 4) every retained deployment version exists on the new
+            #    shard BEFORE any traffic can route there
+            for name, versions in self._versions.items():
+                live = self.deployments.get(name)
+                for v in sorted(versions):
+                    sh = versions[v]
+                    h = self.shards[s].build_version(
+                        name, sh.query, warm_buckets=sh.warm_buckets)
+                    sh.handles = sh.handles + (h,)
+                    if live is sh:
+                        self.shards[s].publish_version(h)
+            # 5) routing: new queue, then background range migration
+            self.router.add_queue()
+            self._reshard(self._ring.with_shard(s))
+            return s
+
+    def remove_shard(self, s: int) -> int:
+        """Shrink the shard set: migrate every key range owned by ``s``
+        to the surviving shards (interval by interval, under live
+        traffic), then retire and close the runtime. The slot id is
+        never reused. Returns the number of events migrated."""
+        if self._ring is None:
+            raise RuntimeError(
+                "partitioner='modulo' cannot reshard; use the default "
+                "consistent-hash ring")
+        with self._deploy_lock:
+            if s in self._retired or not 0 <= s < len(self.shards):
+                raise ValueError(f"shard {s} is not active")
+            if self.n_shards <= 1:
+                raise ValueError("cannot remove the last active shard")
+            moved = self._reshard(self._ring.without_shard(s))
+            self._retired.add(s)
+            # no NEW traffic routes to s now (ring + _retired), but a
+            # scatter that read the pre-reshard route table can still
+            # target it: retire the queue (late submits shed), then wait
+            # out everything already queued/executing — closing the
+            # runtime under a live sub-batch deletes its jax buffers
+            # mid-execution
+            self.router.retire_queue(s)
+            self.router.drain_shard(s)
+            if self.backend is not None:
+                client = self.shards[s]
+                client.retired = True      # supervisor must not respawn
+                client.close()
+            else:
+                self.shards[s].close()
+            return moved
+
+    def _seed_replicas(self, s: int) -> None:
+        """Copy every replicated table's full contents onto shard ``s``
+        from the first healthy donor (new shard / respawned worker)."""
+        donor = next((d for d in self._active_ids() if d != s), None)
+        if donor is None:
+            return
+        for tname, spec in self.specs.items():
+            if not spec.replicated:
+                continue
+            facade = self.streams.get(tname)
+            if facade is not None and donor < len(facade.pipes):
+                facade.pipes[donor].flush(flush_all=True)
+            lk, ex, _mi = self._mig_ops(donor)
+            keys = lk(tname)
+            if not keys:
+                continue
+            ks, tsv, rws = ex(tname, keys)
+            if len(ks):
+                _lk, _ex, mi = self._mig_ops(s)
+                mi(tname, ks, tsv, rws)
+
+    def _mig_ops(self, s: int):
+        """(list_keys, extract_events, migrate_in) for shard ``s`` —
+        local calls in-process, worker RPCs under the process backend."""
+        eng = self.shards[s]
+        if self.backend is not None:
+            return eng.list_keys, eng.extract_events, eng.migrate_in
+        from repro.shard import migrate as _m
+        return ((lambda t: _m.list_keys(eng, t)),
+                (lambda t, ks: _m.extract_events(eng, t, ks)),
+                (lambda t, ks, tsv, rws: _m.migrate_in(eng, t, ks, tsv,
+                                                       rws)))
+
+    def _reshard(self, new_ring: HashRing, *,
+                 batch_arcs: Optional[int] = None) -> int:
+        """Migrate routing from the current ring to ``new_ring``: serve
+        from a merged route table, copy each differing key range
+        (source flush -> enumerate keys in range -> extract -> insert
+        into target, skipping any already-present prefix) and flip its
+        owner — one batch of ranges at a time under the route lock, so
+        ingest interleaves with migration at batch granularity. The
+        source keeps its (now stale) copy: readers are never routed
+        there for the moved keys, ``query_offline`` filters by current
+        ownership, and the skip logic makes a later move-back safe."""
+        step = batch_arcs or self.cfg.migrate_batch_arcs
+        with self._route_lock:
+            rt = RouteTable.merged(self._ring, new_ring)
+            self._routing = rt
+        plan = rt.plan_against(new_ring)
+        tgt = {a: new_ring.owner_of_hash(int(rt.points[a]))
+               for a in plan}
+        partitioned = [t for t, sp in self.specs.items()
+                       if not sp.replicated]
+        moved = 0
+        for i in range(0, len(plan), step):
+            batch = plan[i:i + step]
+            with self._route_lock:
+                groups: Dict[Tuple[int, int], List[int]] = {}
+                for a in batch:
+                    groups.setdefault((rt.arc_owner(a), tgt[a]),
+                                      []).append(a)
+                for (src, dst), arcs in groups.items():
+                    if src == dst:
+                        rt.set_owner(arcs, dst)
+                        continue
+                    arcset = np.asarray(arcs)
+                    for tname in partitioned:
+                        facade = self.streams.get(tname)
+                        if facade is not None:
+                            # staged events must be IN the table before
+                            # extract reads its snapshot
+                            facade.pipes[src].flush(flush_all=True)
+                        lk, ex, _mi = self._mig_ops(src)
+                        all_keys = lk(tname)
+                        if not all_keys:
+                            continue
+                        in_arc = rt.arc_of_hashes(
+                            key_hashes(np.asarray(all_keys)))
+                        sel = [all_keys[int(j)] for j in
+                               np.flatnonzero(np.isin(in_arc, arcset))]
+                        if not sel:
+                            continue
+                        ks, tsv, rws = ex(tname, sel)
+                        if len(ks):
+                            _lk, _ex, mi = self._mig_ops(dst)
+                            moved += mi(tname, ks, tsv, rws)
+                    rt.set_owner(arcs, dst)
+        self._ring = new_ring
+        with self._route_lock:
+            self._routing = RouteTable(new_ring)
+        return moved
+
+    # ----------------------------------------------- worker respawn hooks
+    def _reseed_replicas(self, s: int, client) -> None:
+        """(process backend) After a worker respawn + catalog replay,
+        re-seed its replicated dimension tables from a healthy donor —
+        joins on the respawned shard must not silently miss every
+        dimension row. Partitioned table data re-enters through the
+        stream like any other restart."""
+        del client
+        with self._deploy_lock:
+            self._seed_replicas(s)
+
+    def _replay_shard(self, s: int, client) -> None:
+        """(process backend) Rebuild every retained deployment version
+        on a respawned worker, in version order, aliasing the parent's
+        stable version ids to the fresh worker's numbering; publish the
+        live one. Runs under the deploy lock so a concurrent deploy
+        cannot interleave with the rebuild."""
+        with self._deploy_lock:
+            for name, versions in self._versions.items():
+                live = self.deployments.get(name)
+                for v in sorted(versions):
+                    sh = versions[v]
+                    ph = sh.handles[s] if s < len(sh.handles) else None
+                    if ph is None:
+                        continue
+                    summary = client.proc.call(
+                        "build_version", name=name, query=sh.query,
+                        warm_buckets=sh.warm_buckets)
+                    client._alias[(name, ph.version)] = \
+                        summary["version"]
+                    ph.table.version = summary["table_version"]
+                    ph.phys.feature_names = \
+                        list(summary["feature_names"])
+                    if live is not None and live.handles[s] is ph:
+                        ph.table.version = client.proc.call(
+                            "publish_version", name=name,
+                            version=summary["version"])
+
     # --------------------------------------------------------------- online
     def request(self, name: str, keys: Sequence, ts: Sequence[float],
                 rows: Optional[np.ndarray] = None,
@@ -650,23 +1117,43 @@ class ShardedEngine:
         """Per-shard offline materialisation under pinned snapshots,
         concatenated. ``__key`` holds the ACTUAL key values (not dense
         indices — those are shard-local), plus a ``__shard`` column and
-        the ``version_vector`` the run was pinned to."""
+        the ``version_vector`` the run was pinned to. Rows whose key is
+        no longer owned by the shard that produced them (stale copies
+        left by a range migration) are filtered out, so the output
+        matches the unsharded engine before/during/after a reshard."""
         dep = self.handle(name)
+        base_spec = self.specs.get(dep.table.schema.name)
+        replicated = base_spec is not None and base_spec.replicated
         outs: List[Dict[str, np.ndarray]] = []
         vvec = []
-        for s, eng in enumerate(self.shards):
+        shard_ids_ = ([self._active_ids()[0]] if replicated
+                      else self._active_ids())
+        for s in shard_ids_:
+            eng = self.shards[s]
             res = eng.query_offline(name, batch_size=batch_size,
                                     point_in_time=point_in_time)
-            table = dep.handles[s].table
-            vvec.append(table.version)
+            h = dep.handles[s]
+            vvec.append(h.table.version if h is not None else -1)
             if "__key" not in res or len(res["__key"]) == 0:
                 # hash skew (or n_shards > distinct keys) can leave a
                 # shard with no retained events; skip it rather than
                 # concatenating dtype-less empties into the key column
                 continue
-            inv = {i: k for k, i in table.key_to_idx.items()}
-            res["__key"] = np.asarray(
-                [inv[int(i)] for i in res["__key"]])
+            res = {k: np.asarray(v) for k, v in res.items()}
+            if self.backend is None:
+                # in-process: map dense indices -> real keys here (the
+                # process backend's workers already did, where the
+                # key_to_idx map lives)
+                table = h.table
+                inv = {i: k for k, i in table.key_to_idx.items()}
+                res["__key"] = np.asarray(
+                    [inv[int(i)] for i in res["__key"]])
+            if not replicated:
+                own = self._routing.owners_of(res["__key"]) == s
+                if not own.all():
+                    res = {k: v[own] for k, v in res.items()}
+                if len(res["__key"]) == 0:
+                    continue
             res["__shard"] = np.full(len(res["__key"]), s, np.int32)
             outs.append(res)
         if not outs:
@@ -685,10 +1172,14 @@ class ShardedEngine:
     def explain(self, name: str) -> str:
         dep = self.handle(name)
         rs = self.router.stats()
+        part = ("modulo" if self._ring is None else
+                f"consistent-hash ring ({self._ring.vnodes} vnodes/"
+                f"shard)")
         lines = [
             f"sharded deployment {name!r} v{dep.version} [{dep.state}] "
-            f"across {self.n_shards} shard(s)",
-            f"  router: hash-partitioned (Knuth multiplicative), "
+            f"across {self.n_shards} shard(s) "
+            f"[{self.backend_kind} backend]",
+            f"  router: {part}, "
             f"dispatch_rows={self.cfg.dispatch_rows}, "
             f"rows/dispatch={rs['rows_per_dispatch']:.1f}",
             f"  admission: max_inflight="
@@ -696,15 +1187,17 @@ class ShardedEngine:
             f"{self.cfg.admission.max_queue_depth} "
             f"({self.resources.metrics()})",
             f"  devices: " + ", ".join(
-                str(d) if d is not None else "default"
-                for d in self.devices),
+                str(self.devices[s]) if self.devices[s] is not None
+                else ("worker-subprocess" if self.backend is not None
+                      else "default")
+                for s in self._active_ids()),
             f"  version vector: {dep.version_vector()}",
         ]
-        lines.append("  per-shard plan (shard 0 of "
-                     f"{self.n_shards}; all shards compile the same "
+        lines.append(f"  per-shard plan (shard {self._active_ids()[0]} "
+                     f"of {self.n_shards}; all shards compile the same "
                      f"plan):")
         lines += ["  " + l for l in
-                  self.shards[0].explain(name).splitlines()]
+                  self._primary().explain(name).splitlines()]
         return "\n".join(lines)
 
     def latency_decomposition(self) -> Dict[str, float]:
@@ -714,7 +1207,9 @@ class ShardedEngine:
         agg: Dict[str, float] = {}
         join_matches = 0.0
         join_p99: List[float] = []
-        for eng in self.shards:
+        hit: List[float] = []
+        for s in self._active_ids():
+            eng = self.shards[s]
             d = eng.latency_decomposition()
             for k, v in d.items():
                 if k in ("cache_hit_rate", "join_match_rate",
@@ -726,13 +1221,14 @@ class ShardedEngine:
                 p99 = d.get("join_age_p99", float("nan"))
                 if not np.isnan(p99):
                     join_p99.append(p99)
+            hit.append(eng.cache.stats.hit_rate)
         if agg.get("join_probes"):
             agg["join_match_rate"] = join_matches / agg["join_probes"]
             agg["join_age_p99"] = (max(join_p99) if join_p99
                                    else float("nan"))
-        hit = [eng.cache.stats.hit_rate for eng in self.shards]
         agg["cache_hit_rate"] = float(np.mean(hit)) if hit else 0.0
         agg["n_shards"] = self.n_shards
+        agg["worker_restarts"] = self.worker_restarts
         agg.update({f"router_{k}": v
                     for k, v in self.router.stats().items()})
         agg.update({f"admission_{k}": v
@@ -744,10 +1240,16 @@ class ShardedEngine:
         if self._closed:
             return
         self._closed = True
-        self.router.close()
-        self.streams.clear()   # inner engines own + close the pipelines
-        for eng in self.shards:
-            eng.close()
+        # drain first: in-flight gathers complete before any lane stops
+        # (a fail-fast close here could error a request that was already
+        # queued — the DynamicBatcher.close() lesson, applied)
+        self.router.shutdown(drain=True)
+        self.streams.clear()   # shard engines own + close the pipelines
+        if self.backend is not None:
+            self.backend.close()
+        else:
+            for s in self._active_ids():
+                self.shards[s].close()
 
     def __enter__(self) -> "ShardedEngine":
         return self

@@ -1,0 +1,120 @@
+"""Key-range migration primitives for consistent-hash resharding.
+
+Two operations over a plain :class:`repro.core.engine.Engine` (the
+process backend exposes the same pair as worker RPCs):
+
+* :func:`extract_events` — read a set of keys' **retained** events out
+  of a table's published snapshot, globally ts-sorted with per-key
+  arrival order preserved (stable sort), ready to re-insert elsewhere.
+* :func:`migrate_in` — insert extracted events into a target engine,
+  skipping any prefix the target already holds. The skip matters because
+  migration never physically deletes the source copy (stale rows are
+  harmless — routing never sends readers there, and ``query_offline``
+  filters by current ownership): a key that moves A→B and later back
+  B→A finds its pre-move history still on A, and re-inserting it would
+  both duplicate rows and violate the table's per-key non-decreasing-ts
+  invariant. Events strictly newer than the target's last ts are always
+  inserted; at an equal-ts boundary the target's tail count at that ts
+  decides how many of the source's equal-ts events are new (exact unless
+  capacity trimming split an equal-ts run — a documented edge; see
+  DESIGN.md §11).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["extract_events", "migrate_in", "list_keys"]
+
+
+def list_keys(eng, table: str) -> List:
+    """All keys materialised in ``table`` on this engine."""
+    return list(eng.tables[table].key_to_idx.keys())
+
+
+def _retained(tab, idx: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(ts (n,), rows (n, V)) retained for key slot ``idx``, oldest
+    first — the same ring enumeration ``query_offline`` uses."""
+    snap = tab.snapshot()
+    totals = np.asarray(snap.state.total)
+    ts_all = np.asarray(snap.state.ts)
+    val_all = np.asarray(snap.state.values)
+    C = ts_all.shape[1]
+    tot = int(totals[idx])
+    n = min(tot, C)
+    slots = [p % C for p in range(tot - n, tot)]
+    return (ts_all[idx, slots].astype(np.float32),
+            val_all[idx, slots].astype(np.float32))
+
+
+def extract_events(eng, table: str, keys: Sequence
+                   ) -> Tuple[List, np.ndarray, np.ndarray]:
+    """Pull the retained events of ``keys`` from ``table``'s published
+    snapshot. Returns ``(keys, ts, rows)`` globally ts-sorted (stable,
+    so per-key order survives the merge); empty arrays when none of the
+    keys have rows."""
+    tab = eng.tables[table]
+    V = len(tab.schema.value_cols)
+    out_k: List = []
+    out_t: List[np.ndarray] = []
+    out_r: List[np.ndarray] = []
+    for k in keys:
+        idx = tab.key_to_idx.get(k)
+        if idx is None:
+            continue
+        ts, rows = _retained(tab, int(idx))
+        if not len(ts):
+            continue
+        out_k.extend([k] * len(ts))
+        out_t.append(ts)
+        out_r.append(rows)
+    if not out_k:
+        return [], np.zeros((0,), np.float32), np.zeros((0, V), np.float32)
+    ts = np.concatenate(out_t)
+    rows = np.concatenate(out_r)
+    order = np.argsort(ts, kind="stable")
+    return ([out_k[int(i)] for i in order], ts[order].astype(np.float32),
+            rows[order].astype(np.float32))
+
+
+def migrate_in(eng, table: str, keys: Sequence, ts: np.ndarray,
+               rows: np.ndarray) -> int:
+    """Insert extracted events into this engine's ``table``, skipping
+    whatever prefix the target already holds (stale copy from an earlier
+    migration-out). Returns the number of events inserted."""
+    if not len(keys):
+        return 0
+    tab = eng.tables[table]
+    ts = np.asarray(ts, np.float32)
+    rows = np.asarray(rows, np.float32)
+    last = tab.last_ts_by_key()
+    # equal-ts boundary: how many events at exactly last_ts the target
+    # retains per key — that many of the source's equal-ts events are the
+    # shared prefix, the rest are genuinely new
+    eq_seen: Dict[object, int] = {}
+    keep = np.zeros(len(keys), bool)
+    for i, k in enumerate(keys):
+        lt = last.get(k)
+        t = float(ts[i])
+        if lt is None or t > lt:
+            keep[i] = True
+        elif t == lt:
+            if k not in eq_seen:
+                idx = tab.key_to_idx.get(k)
+                kts, _ = _retained(tab, int(idx)) if idx is not None else \
+                    (np.zeros(0, np.float32), None)
+                eq_seen[k] = int(np.sum(kts == np.float32(lt)))
+            if eq_seen[k] > 0:
+                eq_seen[k] -= 1          # shared-prefix event: skip it
+            else:
+                keep[i] = True           # new event at the boundary ts
+    idxs = np.flatnonzero(keep)
+    if not idxs.size:
+        return 0
+    # donate=False: the target engine is LIVE — a lane thread may be
+    # serving off a snapshot of this table right now, and a donating
+    # ingest would delete the buffers out from under it
+    eng.insert(table, [keys[int(i)] for i in idxs],
+               ts[idxs].tolist(), rows[idxs], donate=False)
+    return int(idxs.size)

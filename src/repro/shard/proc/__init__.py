@@ -1,0 +1,15 @@
+"""Process-backed shard runtime: one subprocess per shard engine.
+
+See DESIGN.md §11. Public surface: :class:`ProcShardBackend` (selected
+via ``ShardedEngine(backend="process")`` or ``REPRO_SHARD_BACKEND=
+process``); ``worker.py`` is the subprocess entry point
+(``python -m repro.shard.proc.worker``)."""
+from repro.shard.proc.backend import (ProcDeploymentHandle,
+                                      ProcEngineClient,
+                                      ProcPipelineClient,
+                                      ProcShardBackend, worker_env)
+from repro.shard.proc.transport import Channel, decode_args, encode_args
+
+__all__ = ["ProcShardBackend", "ProcEngineClient", "ProcDeploymentHandle",
+           "ProcPipelineClient", "worker_env", "Channel", "encode_args",
+           "decode_args"]

@@ -1,0 +1,625 @@
+"""Parent-side process backend: worker supervision + Engine-shaped proxies.
+
+``ProcShardBackend`` owns N :class:`_WorkerProc` subprocesses (one per
+shard, spawned with the olmax-style per-process jax env pins) and wraps
+each in a :class:`ProcEngineClient` that duck-types the slice of the
+``Engine`` API the sharded runtime uses — so ``ShardedEngine`` and the
+``ShardRouter`` lanes run UNCHANGED against subprocess shards: a lane
+calls ``handle.request(keys, ts, rows)`` exactly as before; here that
+is one ``serve`` RPC over the worker's channel instead of a local call.
+
+Liveness: a monitor thread polls worker processes. Death fails every
+pending RPC with :class:`ShardDownError` (lanes translate it into a
+whole-batch ``STATUS_SHED`` — no hung futures, no raw exceptions on the
+serving path), then the worker is respawned, its catalog (DDL, streams,
+models, cost model) replayed, replicated dimension tables re-seeded
+from a healthy shard, and the engine's ``_replay_shard`` hook rebuilds
+and republishes every retained deployment version. Partitioned table
+data is NOT recovered — it re-enters through the stream like any other
+restart (documented in DESIGN.md §11).
+
+Version alias map: a respawned worker restarts version numbering at 1,
+while the parent's handles keep their original version ids; per-client
+``(name, parent_version) -> worker_version`` aliases keep every parent
+handle addressable across respawns without rewriting the router/engine
+bookkeeping.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+from types import SimpleNamespace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.shard.proc.transport import Channel, encode_args
+from repro.shard.router import ShardDownError
+
+__all__ = ["ProcShardBackend", "ProcEngineClient", "ProcDeploymentHandle",
+           "ProcPipelineClient", "worker_env"]
+
+_SPAWN_TIMEOUT_S = 120.0
+_RPC_TIMEOUT_S = 120.0
+_TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+
+def worker_env(shard_id: int) -> Dict[str, str]:
+    """Per-worker env pins (the SNIPPETS.md olmax ``run.sh`` recipe):
+    exactly one XLA host device per worker, CPU platform + dtype pins,
+    quiet logs, tcmalloc preload when available. These must be in the
+    environment BEFORE the worker imports jax — the whole reason shards
+    are subprocesses."""
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    flags.append("--xla_force_host_platform_device_count=1")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.setdefault("JAX_ENABLE_X64", "0")
+    env.setdefault("JAX_DEFAULT_DTYPE_BITS", "32")
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    if "LD_PRELOAD" not in env:
+        for p in _TCMALLOC_PATHS:
+            if os.path.exists(p):
+                env["LD_PRELOAD"] = p
+                break
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH", "")) if p)
+    env["REPRO_SHARD_WORKER_ID"] = str(shard_id)
+    # the worker must not itself default to the process backend
+    env.pop("REPRO_SHARD_BACKEND", None)
+    return env
+
+
+class _WorkerProc:
+    """One worker subprocess + its channel + pending-RPC bookkeeping."""
+
+    def __init__(self, shard_id: int, flags, engine_kw: dict):
+        self.shard_id = shard_id
+        self.alive = False
+        self._lock = threading.Lock()
+        self._pending: Dict[int, "threading.Event"] = {}
+        self._results: Dict[int, Tuple[bool, object]] = {}
+        self._req_seq = 0
+        parent_sock, child_sock = socket.socketpair()
+        env = worker_env(shard_id)
+        env["REPRO_SHARD_WORKER_FD"] = str(child_sock.fileno())
+        self.proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.shard.proc.worker"],
+            env=env, pass_fds=[child_sock.fileno()])
+        child_sock.close()
+        self.ch = Channel(parent_sock)
+        # handshake: engine construction args out, ready frame back
+        parent_sock.settimeout(_SPAWN_TIMEOUT_S)
+        self.ch.send(("hello", {"shard_id": shard_id, "flags": flags,
+                                "engine_kw": engine_kw}))
+        tag, info = self.ch.recv()
+        assert tag == "ready", f"worker {shard_id} bad handshake: {tag!r}"
+        parent_sock.settimeout(None)
+        self.pid = info["pid"]
+        self.alive = True
+        self._reader = threading.Thread(
+            target=self._read_loop, daemon=True,
+            name=f"shard{shard_id}-reader")
+        self._reader.start()
+
+    # ---------------------------------------------------------------- rpc
+    def _read_loop(self) -> None:
+        try:
+            while True:
+                req_id, ok, payload = self.ch.recv()
+                with self._lock:
+                    ev = self._pending.pop(req_id, None)
+                    if ev is not None:
+                        self._results[req_id] = (ok, payload)
+                        ev.set()
+        except (EOFError, OSError):
+            self.mark_down()
+
+    def mark_down(self) -> None:
+        """Worker is gone: fail every pending RPC immediately."""
+        with self._lock:
+            self.alive = False
+            pending = list(self._pending.items())
+            self._pending.clear()
+            for req_id, ev in pending:
+                self._results[req_id] = (False, ShardDownError(
+                    f"shard {self.shard_id} worker (pid {self.pid}) died"))
+                ev.set()
+
+    def submit_blob(self, method: str, blob: bytes) -> int:
+        with self._lock:
+            if not self.alive:
+                raise ShardDownError(
+                    f"shard {self.shard_id} worker is down")
+            self._req_seq += 1
+            req_id = self._req_seq
+            self._pending[req_id] = threading.Event()
+        try:
+            self.ch.send((req_id, method, blob))
+        except OSError:
+            self.mark_down()
+        return req_id
+
+    def wait(self, req_id: int, timeout: float = _RPC_TIMEOUT_S):
+        with self._lock:
+            ev = self._pending.get(req_id)
+            done = req_id in self._results
+        if not done and ev is not None and not ev.wait(timeout):
+            with self._lock:
+                self._pending.pop(req_id, None)
+            raise TimeoutError(
+                f"shard {self.shard_id} RPC timed out after {timeout}s")
+        with self._lock:
+            ok, payload = self._results.pop(req_id)
+        if not ok:
+            raise payload
+        return payload
+
+    def call(self, method: str, _timeout: float = _RPC_TIMEOUT_S,
+             **args):
+        return self.wait(self.submit_blob(method, encode_args(args)),
+                         _timeout)
+
+    # --------------------------------------------------------- lifecycle
+    def dead(self) -> bool:
+        return self.proc.poll() is not None
+
+    def close(self, timeout: float = 5.0) -> None:
+        if self.alive:
+            try:
+                self.submit_blob("shutdown", encode_args({}))
+            except (ShardDownError, OSError):
+                pass
+        self.ch.close()           # EOF unblocks the worker's serve loop
+        try:
+            self.proc.wait(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            self.proc.kill()
+            self.proc.wait(timeout=5.0)
+        self.mark_down()
+
+
+class _ProxyMetrics:
+    """Parent-side per-shard-handle counters (tests and introspection
+    read ``handle.metrics.requests``; the authoritative worker-side
+    HandleMetrics stays available via the ``handle_metrics`` RPC)."""
+
+    def __init__(self):
+        self.requests = 0
+        self.batches = 0
+        self.serve_s = 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"requests": self.requests, "batches": self.batches,
+                "serve_s": self.serve_s}
+
+
+class _TableMirror:
+    """Schema + last-seen version of one worker-side table. ``version``
+    refreshes on every publish/flush/serve response, so version vectors
+    are cheap reads, not RPCs."""
+
+    def __init__(self, schema, version: int = 0):
+        self.schema = schema
+        self.version = version
+
+    def __repr__(self) -> str:
+        return (f"_TableMirror({self.schema.name!r} "
+                f"v{self.version})")
+
+
+class ProcDeploymentHandle:
+    """Per-shard deployment proxy satisfying the lane/handle contract:
+    ``request(keys, ts, rows)``, ``.table.schema``, ``.plan.joins``,
+    ``.phys.feature_names``, ``.metrics``, ``.warm``, ``.live``."""
+
+    def __init__(self, client: "ProcEngineClient", name: str,
+                 version: int, summary: dict):
+        from repro.core.engine import DeploymentHandle
+        self.client = client
+        self.name = name
+        self.version = version           # parent version id (stable)
+        self.table = client._table_mirror(summary["table"],
+                                          summary["schema"])
+        self.table.version = summary["table_version"]
+        self.plan = SimpleNamespace(joins=tuple(summary["joins"]))
+        self.phys = SimpleNamespace(
+            feature_names=list(summary["feature_names"]))
+        self.state = DeploymentHandle.WARMING
+        self.metrics = _ProxyMetrics()
+
+    @property
+    def live(self) -> bool:
+        from repro.core.engine import DeploymentHandle
+        return self.state == DeploymentHandle.LIVE
+
+    def _wv(self) -> int:
+        return self.client._alias.get((self.name, self.version),
+                                      self.version)
+
+    def request(self, keys, ts, rows=None):
+        from repro.core.results import FeatureFrame
+        if not self.client.ready:
+            raise ShardDownError(
+                f"shard {self.client.shard_id} is respawning")
+        t0 = time.perf_counter()
+        columns, status, tver = self.client.proc.call(
+            "serve", name=self.name, version=self._wv(),
+            keys=np.asarray(keys), ts=np.asarray(ts, np.float32),
+            rows=None if rows is None else np.asarray(rows, np.float32))
+        self.table.version = max(self.table.version, tver)
+        self.metrics.requests += len(keys)
+        self.metrics.batches += 1
+        self.metrics.serve_s += time.perf_counter() - t0
+        return FeatureFrame(columns, status=status, deployment=self.name,
+                            version=self.version, table_version=tver)
+
+    def warm(self, buckets: Sequence[int]) -> int:
+        return self.client.proc.call("warm", name=self.name,
+                                     version=self._wv(),
+                                     buckets=tuple(buckets))
+
+    def join_staleness(self) -> Dict[str, Dict[str, float]]:
+        return self.client.proc.call("join_staleness", name=self.name,
+                                     version=self._wv())
+
+    def __repr__(self) -> str:
+        return (f"ProcDeploymentHandle({self.name!r} v{self.version} "
+                f"[{self.state}] shard {self.client.shard_id})")
+
+
+class ProcPipelineClient:
+    """IngestPipeline proxy for one shard's stream (RPC per call; the
+    worker-side flusher thread does the actual table mutation)."""
+
+    def __init__(self, client: "ProcEngineClient", table: str):
+        self.client = client
+        self.table_name = table
+
+    @property
+    def table(self) -> _TableMirror:
+        return self.client._tables[self.table_name]
+
+    def push(self, key, ts: float, row) -> bool:
+        return self.client.proc.call("pipe_push", table=self.table_name,
+                                     key=key, ts=float(ts),
+                                     row=np.asarray(row, np.float32))
+
+    def push_batch(self, keys, ts, rows, *, all_or_nothing: bool = False
+                   ) -> int:
+        return self.client.proc.call(
+            "pipe_push_batch", table=self.table_name,
+            keys=np.asarray(keys), ts=np.asarray(ts, np.float32),
+            rows=np.asarray(rows, np.float32),
+            all_or_nothing=all_or_nothing)
+
+    def prepare(self, keys, ts, rows) -> Optional[int]:
+        return self.client.proc.call(
+            "pipe_prepare", table=self.table_name,
+            keys=np.asarray(keys), ts=np.asarray(ts, np.float32),
+            rows=np.asarray(rows, np.float32))
+
+    def commit_txn(self, txn: int) -> int:
+        return self.client.proc.call("pipe_commit",
+                                     table=self.table_name, txn=txn)
+
+    def abort_txn(self, txn: int) -> None:
+        self.client.proc.call("pipe_abort", table=self.table_name,
+                              txn=txn)
+
+    def flush(self, *, flush_all: bool = True, check: bool = False
+              ) -> None:
+        ver = self.client.proc.call("pipe_flush", table=self.table_name,
+                                    flush_all=flush_all, check=check)
+        self.table.version = max(self.table.version, ver)
+
+    def wait_idle(self, timeout: float = 30.0) -> bool:
+        return self.client.proc.call("pipe_wait_idle",
+                                     table=self.table_name,
+                                     timeout=timeout)
+
+    def warm(self) -> int:
+        return self.client.proc.call("pipe_warm", table=self.table_name)
+
+    def metrics(self) -> Dict[str, float]:
+        return self.client.proc.call("pipe_metrics",
+                                     table=self.table_name)
+
+    def close(self, *, drain: bool = True) -> None:
+        # the worker owns its pipelines and closes them with its engine;
+        # a parent-side close is just a best-effort final drain
+        if drain and self.client.proc.alive:
+            try:
+                self.flush(flush_all=True)
+            except (ShardDownError, TimeoutError):
+                pass
+
+
+class _StatsProxy:
+    """``engine.stats`` stand-in — the control plane reads worker-side
+    counter snapshots over the transport (ISSUE 7 requirement)."""
+
+    def __init__(self, client: "ProcEngineClient", method: str):
+        self._client = client
+        self._method = method
+
+    def snapshot(self) -> Dict[str, float]:
+        return self._client.proc.call(self._method)
+
+
+class _CacheStatsProxy(_StatsProxy):
+    @property
+    def hit_rate(self) -> float:
+        return self._client.proc.call("cache_hit_rate")
+
+
+class _CacheProxy:
+    def __init__(self, client: "ProcEngineClient", enabled: bool):
+        self.stats = _CacheStatsProxy(client, "cache_stats")
+        self.enabled = enabled
+
+
+class ProcEngineClient:
+    """Engine-shaped facade over one worker subprocess. Implements the
+    subset of the Engine surface ``ShardedEngine`` + telemetry touch;
+    anything else raises ``AttributeError`` naturally (in-process-only
+    introspection like ``.tables`` is deliberately absent — reaching
+    into another process's objects is the bug this backend removes)."""
+
+    def __init__(self, backend: "ProcShardBackend", shard_id: int):
+        from repro.core.optimizer import CostModel
+        self.backend = backend
+        self.shard_id = shard_id
+        self.proc = _WorkerProc(shard_id, backend.flags,
+                                backend.engine_kw)
+        self._tables: Dict[str, _TableMirror] = {}
+        self._streams: Dict[str, ProcPipelineClient] = {}
+        self._alias: Dict[Tuple[str, int], int] = {}
+        self._live: Dict[str, ProcDeploymentHandle] = {}
+        self.stats = _StatsProxy(self, "engine_stats")
+        self.cache = _CacheProxy(
+            self, enabled=backend.engine_kw.get("max_cache_entries",
+                                                128) > 0)
+        self.max_retained_versions = backend.engine_kw.get(
+            "max_retained_versions", 2)
+        self.cost_model = backend.engine_kw.get("cost_model") \
+            or CostModel()
+        self.restarts = 0
+        # set by ShardedEngine.remove_shard: an intentionally-closed
+        # worker must not be respawned by the supervisor
+        self.retired = False
+        # False while a respawn is replaying the catalog/deployments on
+        # a fresh worker: the process is alive but cannot serve yet, so
+        # the serving path sheds (worker_down) instead of surfacing the
+        # worker's raw missing-handle errors
+        self.ready = True
+
+    # ----------------------------------------------------------- mirrors
+    def _table_mirror(self, name: str, schema) -> _TableMirror:
+        m = self._tables.get(name)
+        if m is None:
+            m = self._tables[name] = _TableMirror(schema)
+        return m
+
+    # --------------------------------------------------------------- DDL
+    def create_table(self, schema, *, max_keys: int = 1024,
+                     capacity: int = 1024, bucket_size: int = 64,
+                     join_keys: Sequence[str] = (), device=None) -> None:
+        del device  # each worker owns its whole (single-device) runtime
+        self.proc.call("create_table", schema=schema, max_keys=max_keys,
+                       capacity=capacity, bucket_size=bucket_size,
+                       join_keys=tuple(join_keys))
+        self._table_mirror(schema.name, schema)
+
+    def insert(self, table: str, keys, ts, rows, *,
+               donate: bool = True) -> None:
+        # donate is accepted for call-site parity with Engine.insert but
+        # not forwarded: the worker handles RPCs serially, so no reader
+        # can hold a snapshot across its own insert
+        self.proc.call("insert", table=table, keys=keys, ts=ts,
+                       rows=np.asarray(rows, np.float32))
+
+    def attach_stream(self, table: str, cfg=None, **cfg_kw
+                      ) -> ProcPipelineClient:
+        from repro.streaming.pipeline import PipelineConfig
+        if cfg is None and cfg_kw:
+            cfg = PipelineConfig(**cfg_kw)
+        self.proc.call("attach_stream", table=table, cfg=cfg)
+        pipe = ProcPipelineClient(self, table)
+        self._streams[table] = pipe
+        return pipe
+
+    def register_model(self, name: str, fn, params=None) -> None:
+        self.proc.call("register_model", name=name, fn=fn, params=params)
+
+    def set_cost_model(self, model):
+        prev = self.cost_model
+        self.proc.call("set_cost_model", model=model)
+        self.cost_model = model
+        return prev
+
+    # ------------------------------------------------------------ deploy
+    def build_version(self, name: str, query, *,
+                      warm_buckets=None) -> ProcDeploymentHandle:
+        summary = self.proc.call("build_version", name=name, query=query,
+                                 warm_buckets=warm_buckets)
+        return ProcDeploymentHandle(self, name, summary["version"],
+                                    summary)
+
+    def publish_version(self, handle: ProcDeploymentHandle) -> None:
+        from repro.core.engine import DeploymentHandle
+        tver = self.proc.call("publish_version", name=handle.name,
+                              version=handle._wv())
+        handle.table.version = max(handle.table.version, tver)
+        old = self._live.get(handle.name)
+        if old is not None and old is not handle:
+            old.state = DeploymentHandle.RETIRED
+        handle.state = DeploymentHandle.LIVE
+        self._live[handle.name] = handle
+
+    def discard_version(self, handle: ProcDeploymentHandle) -> None:
+        from repro.core.engine import DeploymentHandle
+        self.proc.call("discard_version", name=handle.name,
+                       version=handle._wv())
+        handle.state = DeploymentHandle.RETIRED
+        self._alias.pop((handle.name, handle.version), None)
+
+    # ----------------------------------------------------------- offline
+    def query_offline(self, name: str, *, batch_size: int = 1024,
+                      point_in_time: bool = True) -> Dict[str, np.ndarray]:
+        """Worker-side materialisation; ``__key`` already holds REAL key
+        values (mapped where ``key_to_idx`` lives, inside the worker)."""
+        return self.proc.call("query_offline", name=name,
+                              batch_size=batch_size,
+                              point_in_time=point_in_time)
+
+    # --------------------------------------------------------- migration
+    def list_keys(self, table: str) -> List:
+        return self.proc.call("list_keys", table=table)
+
+    def extract_events(self, table: str, keys: Sequence):
+        return self.proc.call("extract_events", table=table,
+                              keys=list(keys))
+
+    def migrate_in(self, table: str, keys: Sequence, ts, rows) -> int:
+        return self.proc.call("migrate_in", table=table, keys=list(keys),
+                              ts=np.asarray(ts, np.float32),
+                              rows=np.asarray(rows, np.float32))
+
+    # ------------------------------------------------------------- intro
+    def latency_decomposition(self) -> Dict[str, float]:
+        return self.proc.call("latency_decomposition")
+
+    def explain(self, name: str) -> str:
+        return self.proc.call("explain", name=name)
+
+    def table_version(self, table: str) -> int:
+        v = self.proc.call("table_version", table=table)
+        m = self._tables.get(table)
+        if m is not None:
+            m.version = max(m.version, v)
+        return v
+
+    # --------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        self.proc.close()
+
+
+class ProcShardBackend:
+    """Spawns, supervises, and (on death) respawns the worker fleet."""
+
+    MONITOR_INTERVAL_S = 0.2
+
+    def __init__(self, n_shards: int, *, flags, engine_kw: dict):
+        self.flags = flags
+        self.engine_kw = dict(engine_kw)
+        self.clients: List[ProcEngineClient] = []
+        # (method, kwargs) log replayed onto respawned workers, in order
+        self._ddl_log: List[Tuple[str, dict]] = []
+        # set by ShardedEngine: called with (shard_id, client) after the
+        # catalog replay, to rebuild + republish deployment versions
+        self.respawn_hook: Optional[Callable[[int, "ProcEngineClient"],
+                                             None]] = None
+        # set by ShardedEngine: shard_id -> replicated table names, for
+        # replica re-seeding from a healthy shard
+        self.reseed_hook: Optional[Callable[[int, "ProcEngineClient"],
+                                            None]] = None
+        self._closing = False
+        for s in range(n_shards):
+            self.clients.append(ProcEngineClient(self, s))
+        self._monitor = threading.Thread(target=self._monitor_loop,
+                                         daemon=True,
+                                         name="shard-proc-monitor")
+        self._monitor.start()
+
+    # ------------------------------------------------------------ catalog
+    def log_ddl(self, method: str, **kwargs) -> None:
+        self._ddl_log.append((method, kwargs))
+
+    def add_client(self) -> ProcEngineClient:
+        """Spawn one more worker (elastic add_shard) and bring it up to
+        the current catalog."""
+        client = ProcEngineClient(self, len(self.clients))
+        self._replay_catalog(client)
+        self.clients.append(client)
+        return client
+
+    def _replay_catalog(self, client: ProcEngineClient) -> None:
+        for method, kwargs in self._ddl_log:
+            getattr(client, method)(**kwargs)
+
+    # ---------------------------------------------------------- broadcast
+    def broadcast(self, method: str, only: Optional[Sequence[int]] = None,
+                  **args) -> List:
+        """One serialized payload fanned to every (or ``only``) worker —
+        the replicated-dimension-table ingest path: the args blob is
+        pickled ONCE, each worker gets the same bytes."""
+        blob = encode_args(args)
+        targets = [self.clients[i] for i in only] if only is not None \
+            else list(self.clients)
+        reqs = [(c, c.proc.submit_blob(method, blob)) for c in targets]
+        return [c.proc.wait(r) for c, r in reqs]
+
+    # ---------------------------------------------------------- liveness
+    def _monitor_loop(self) -> None:
+        while not self._closing:
+            time.sleep(self.MONITOR_INTERVAL_S)
+            for client in list(self.clients):
+                if self._closing or client.retired:
+                    continue
+                proc = client.proc
+                if not proc.dead():
+                    continue
+                proc.mark_down()       # idempotent; poll may beat EOF
+                try:
+                    self._respawn(client)
+                except BaseException as e:     # keep supervising
+                    sys.stderr.write(
+                        f"# shard {client.shard_id} respawn failed: "
+                        f"{e!r}\n")
+
+    def _respawn(self, client: ProcEngineClient) -> None:
+        client.ready = False
+        client.proc.mark_down()
+        try:
+            client.proc.close(timeout=1.0)
+        except Exception:
+            pass
+        client.proc = _WorkerProc(client.shard_id, self.flags,
+                                  self.engine_kw)
+        client.restarts += 1
+        client._alias.clear()
+        client._live.clear()
+        # mirrors refresh by max(); the fresh worker restarts version
+        # numbering near 0, so stale high values must be dropped first
+        for m in client._tables.values():
+            m.version = 0
+        try:
+            self._replay_catalog(client)
+            if self.reseed_hook is not None:
+                self.reseed_hook(client.shard_id, client)
+            if self.respawn_hook is not None:
+                self.respawn_hook(client.shard_id, client)
+        except BaseException:
+            # a failed replay leaves the client not-ready; kill the
+            # worker so the monitor's next pass retries the respawn
+            client.proc.close(timeout=1.0)
+            raise
+        client.ready = True
+
+    # --------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        self._closing = True
+        for client in self.clients:
+            client.close()

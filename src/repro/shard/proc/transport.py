@@ -1,0 +1,87 @@
+"""Length-prefixed pickle framing over a socketpair (DESIGN.md §11).
+
+One AF_UNIX ``socketpair`` per worker, created by the parent and passed
+to the subprocess by fd inheritance (``REPRO_SHARD_WORKER_FD``). Frames
+are ``8-byte big-endian length || pickle payload``; a frame is a
+3-tuple:
+
+    request:  (req_id, method, args_blob)     args_blob = pickle(dict)
+    response: (req_id, ok, payload)           payload = result | exc
+
+``args_blob`` is pre-pickled *bytes inside the frame* so a broadcast
+(replicated dimension-table ingest) serializes the — potentially large —
+array payload ONCE and fans the same blob to every worker; the outer
+frame per worker differs only by its req_id.
+
+Sends are locked (many lanes share one worker channel); receives are
+single-reader (the parent's per-worker reader thread / the worker's
+serve loop). Numpy arrays ride pickle protocol 5 buffer support where
+available — on one host this is a memcpy, not an encode.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+import threading
+from typing import Any, Optional, Tuple
+
+__all__ = ["Channel", "encode_args", "decode_args"]
+
+_LEN = struct.Struct(">Q")
+_PROTO = pickle.HIGHEST_PROTOCOL
+
+
+def encode_args(args: dict) -> bytes:
+    """Pickle an RPC's kwargs once — shareable across a broadcast."""
+    return pickle.dumps(args, protocol=_PROTO)
+
+
+def decode_args(blob: bytes) -> dict:
+    return pickle.loads(blob)
+
+
+class Channel:
+    """One framed, thread-safe-send / single-reader pickle channel."""
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self._closed = False
+
+    # -------------------------------------------------------------- send
+    def send(self, obj: Tuple) -> None:
+        payload = pickle.dumps(obj, protocol=_PROTO)
+        with self._send_lock:
+            self._sock.sendall(_LEN.pack(len(payload)) + payload)
+
+    # -------------------------------------------------------------- recv
+    def _recv_exact(self, n: int) -> bytes:
+        buf = bytearray()
+        while len(buf) < n:
+            chunk = self._sock.recv(n - len(buf))
+            if not chunk:
+                raise EOFError("channel peer closed")
+            buf.extend(chunk)
+        return bytes(buf)
+
+    def recv(self) -> Any:
+        """Blocking read of one frame. Raises ``EOFError`` when the peer
+        is gone (worker death / parent exit)."""
+        (length,) = _LEN.unpack(self._recv_exact(_LEN.size))
+        return pickle.loads(self._recv_exact(length))
+
+    # --------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed

@@ -1,0 +1,260 @@
+"""Shard worker subprocess: one full Engine behind an RPC loop.
+
+Spawned by :class:`repro.shard.proc.backend.ProcShardBackend` with the
+channel fd in ``REPRO_SHARD_WORKER_FD`` and the jax env pins
+(``--xla_force_host_platform_device_count=1``, ``JAX_PLATFORMS``, dtype
+pins) already in the environment — they must land BEFORE jax import,
+which is exactly why shard engines live in subprocesses at all: jax
+reads them once at init, and one process cannot host N independent
+runtimes.
+
+The first frame the parent sends is ``hello`` carrying the engine
+constructor arguments; after that every frame is ``(req_id, method,
+args_blob)`` dispatched on a small thread pool (Engine internals are
+thread-safe; serving dispatches must not queue behind a multi-second
+``build_version``). Responses are ``(req_id, True, result)`` or
+``(req_id, False, exception)``.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import sys
+import traceback
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.shard.proc.transport import Channel, decode_args
+
+
+def _np_columns(columns) -> dict:
+    """Materialise device arrays to host numpy before pickling."""
+    return {k: np.asarray(v) for k, v in columns.items()}
+
+
+class WorkerServer:
+    """RPC dispatch around one Engine (one shard's whole runtime)."""
+
+    def __init__(self, ch: Channel, shard_id: int, flags, engine_kw):
+        from repro.core.engine import Engine
+        self.ch = ch
+        self.shard_id = shard_id
+        self.engine = Engine(flags, **engine_kw)
+        # (name, version) -> DeploymentHandle; the parent addresses serve
+        # and control RPCs by this pair, never by object reference
+        self.handles = {}
+        self.pool = ThreadPoolExecutor(
+            max_workers=4, thread_name_prefix=f"shard{shard_id}-rpc")
+        self._stopping = False
+
+    # --------------------------------------------------------------- loop
+    def serve_forever(self) -> None:
+        while not self._stopping:
+            try:
+                req_id, method, blob = self.ch.recv()
+            except EOFError:
+                break            # parent gone: exit quietly
+            self.pool.submit(self._handle, req_id, method, blob)
+        self.pool.shutdown(wait=True)
+        self.engine.close()
+
+    def _handle(self, req_id, method, blob) -> None:
+        try:
+            args = decode_args(blob) if blob else {}
+            result = getattr(self, "rpc_" + method)(**args)
+            self.ch.send((req_id, True, result))
+        except BaseException as e:
+            # exceptions cross the boundary as values; strip unpicklable
+            # baggage rather than killing the worker
+            try:
+                self.ch.send((req_id, False, e))
+            except Exception:
+                self.ch.send((req_id, False, RuntimeError(
+                    f"{type(e).__name__}: {e}\n"
+                    + traceback.format_exc(limit=8))))
+
+    def _pipe(self, table: str):
+        pipe = self.engine.streams.get(table)
+        if pipe is None:
+            raise KeyError(f"table {table!r} has no attached stream on "
+                           f"shard {self.shard_id}")
+        return pipe
+
+    def _handle_of(self, name: str, version: int):
+        h = self.handles.get((name, version))
+        if h is None:
+            raise KeyError(f"shard {self.shard_id} has no handle "
+                           f"{name!r} v{version}")
+        return h
+
+    # ---------------------------------------------------------------- DDL
+    def rpc_create_table(self, schema=None, max_keys=1024, capacity=1024,
+                         bucket_size=64, join_keys=()):
+        self.engine.create_table(schema, max_keys=max_keys,
+                                 capacity=capacity,
+                                 bucket_size=bucket_size,
+                                 join_keys=join_keys)
+
+    def rpc_insert(self, table=None, keys=None, ts=None, rows=None):
+        self.engine.insert(table, keys, ts, rows)
+
+    def rpc_register_model(self, name=None, fn=None, params=None):
+        self.engine.register_model(name, fn, params)
+
+    def rpc_set_cost_model(self, model=None):
+        self.engine.set_cost_model(model)
+
+    # ---------------------------------------------------------- streaming
+    def rpc_attach_stream(self, table=None, cfg=None):
+        self.engine.attach_stream(table, cfg)
+
+    def rpc_pipe_push(self, table=None, key=None, ts=None, row=None):
+        return self._pipe(table).push(key, ts, row)
+
+    def rpc_pipe_push_batch(self, table=None, keys=None, ts=None,
+                            rows=None, all_or_nothing=False):
+        return self._pipe(table).push_batch(
+            keys, ts, rows, all_or_nothing=all_or_nothing)
+
+    def rpc_pipe_prepare(self, table=None, keys=None, ts=None, rows=None):
+        return self._pipe(table).prepare(keys, ts, rows)
+
+    def rpc_pipe_commit(self, table=None, txn=None):
+        return self._pipe(table).commit_txn(txn)
+
+    def rpc_pipe_abort(self, table=None, txn=None):
+        self._pipe(table).abort_txn(txn)
+
+    def rpc_pipe_flush(self, table=None, flush_all=True, check=False):
+        pipe = self._pipe(table)
+        pipe.flush(flush_all=flush_all)
+        if check and pipe.last_error is not None \
+                and pipe.buffer.n_staged > 0:
+            # mirror Engine.insert's barrier semantics: staged remainder
+            # plus an error means the write did not fully land
+            raise RuntimeError(
+                f"ingest into {table!r} failed on shard "
+                f"{self.shard_id}: {pipe.last_error}") from pipe.last_error
+        return pipe.table.version
+
+    def rpc_pipe_wait_idle(self, table=None, timeout=30.0):
+        return self._pipe(table).wait_idle(timeout)
+
+    def rpc_pipe_warm(self, table=None):
+        return self._pipe(table).warm()
+
+    def rpc_pipe_metrics(self, table=None):
+        return dict(self._pipe(table).metrics())
+
+    # ------------------------------------------------------------- deploy
+    def rpc_build_version(self, name=None, query=None, warm_buckets=None):
+        h = self.engine.build_version(name, query,
+                                      warm_buckets=warm_buckets)
+        self.handles[(name, h.version)] = h
+        return {"version": h.version,
+                "feature_names": list(h.phys.feature_names),
+                "joins": tuple(h.plan.joins),
+                "table": h.table.schema.name,
+                "schema": h.table.schema,
+                "table_version": h.table.version}
+
+    def rpc_publish_version(self, name=None, version=None):
+        h = self._handle_of(name, version)
+        self.engine.publish_version(h)
+        return h.table.version
+
+    def rpc_discard_version(self, name=None, version=None):
+        h = self.handles.pop((name, version), None)
+        if h is not None:
+            self.engine.discard_version(h)
+
+    def rpc_warm(self, name=None, version=None, buckets=()):
+        return self._handle_of(name, version).warm(buckets)
+
+    # -------------------------------------------------------------- serve
+    def rpc_serve(self, name=None, version=None, keys=None, ts=None,
+                  rows=None):
+        frame = self._handle_of(name, version).request(keys, ts, rows)
+        return (_np_columns(frame.columns), np.asarray(frame.status),
+                int(frame.table_version))
+
+    def rpc_handle_metrics(self, name=None, version=None):
+        return self._handle_of(name, version).metrics.snapshot()
+
+    def rpc_join_staleness(self, name=None, version=None):
+        return self._handle_of(name, version).join_staleness()
+
+    # ------------------------------------------------------------ offline
+    def rpc_query_offline(self, name=None, batch_size=1024,
+                          point_in_time=True):
+        res = self.engine.query_offline(name, batch_size=batch_size,
+                                        point_in_time=point_in_time)
+        out = {k: np.asarray(v) for k, v in res.items()}
+        if "__key" in out and len(out["__key"]):
+            # map shard-local dense indices back to real key values here,
+            # where key_to_idx lives — the parent never sees local indices
+            live = self.engine.deployments.get(name)
+            h = live if live is not None else next(
+                (h for (n, _v), h in self.handles.items() if n == name),
+                None)
+            inv = {i: k for k, i in h.table.key_to_idx.items()}
+            out["__key"] = np.asarray([inv[int(i)] for i in out["__key"]])
+        return out
+
+    # ---------------------------------------------------------- migration
+    def rpc_list_keys(self, table=None):
+        from repro.shard.migrate import list_keys
+        return list_keys(self.engine, table)
+
+    def rpc_extract_events(self, table=None, keys=None):
+        from repro.shard.migrate import extract_events
+        return extract_events(self.engine, table, keys)
+
+    def rpc_migrate_in(self, table=None, keys=None, ts=None, rows=None):
+        from repro.shard.migrate import migrate_in
+        return migrate_in(self.engine, table, keys, ts, rows)
+
+    # -------------------------------------------------------------- intro
+    def rpc_engine_stats(self):
+        return self.engine.stats.snapshot()
+
+    def rpc_cache_stats(self):
+        return self.engine.cache.stats.snapshot()
+
+    def rpc_cache_hit_rate(self):
+        return float(self.engine.cache.stats.hit_rate)
+
+    def rpc_latency_decomposition(self):
+        return self.engine.latency_decomposition()
+
+    def rpc_explain(self, name=None):
+        return self.engine.explain(name)
+
+    def rpc_table_version(self, table=None):
+        return self.engine.tables[table].version
+
+    def rpc_ping(self):
+        return {"shard": self.shard_id, "pid": os.getpid()}
+
+    def rpc_shutdown(self):
+        self._stopping = True
+
+
+def main() -> int:
+    fd = int(os.environ["REPRO_SHARD_WORKER_FD"])
+    sock = socket.socket(fileno=fd)
+    ch = Channel(sock)
+    # hello carries the engine construction args (sent before any RPC)
+    tag, hello = ch.recv()
+    assert tag == "hello", f"expected hello frame, got {tag!r}"
+    server = WorkerServer(ch, shard_id=hello["shard_id"],
+                          flags=hello["flags"],
+                          engine_kw=hello.get("engine_kw", {}))
+    ch.send(("ready", {"pid": os.getpid()}))
+    server.serve_forever()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -80,6 +80,7 @@ class ResourceManager:
         self._slot_freed = threading.Condition(self._lock)
         self._inflight: Dict[str, int] = {}
         self.stats = {"admitted": 0, "shed_deadline": 0,
+                      "shed_worker_down": 0,
                       "rejected_inflight": 0, "rejected_queue_depth": 0}
 
     # ---------------------------------------------------------------- admit
@@ -138,11 +139,13 @@ class ResourceManager:
             self.stats["admitted"] += 1
             return Admission(self, name, shed=False)
 
-    def record_shed(self, n: int = 1) -> None:
-        """Count a post-admission shed (deadline passed inside a shard
-        queue — the gather saw at least one shed sub-batch)."""
+    def record_shed(self, n: int = 1, kind: str = "deadline") -> None:
+        """Count a post-admission shed: ``deadline`` (expired inside a
+        shard queue) or ``worker_down`` (a subprocess shard died with the
+        sub-batch queued/executing — shed, respawn in progress)."""
         with self._lock:
-            self.stats["shed_deadline"] += n
+            self.stats["shed_worker_down" if kind == "worker_down"
+                       else "shed_deadline"] += n
 
     def _release(self, name: str) -> None:
         with self._lock:

@@ -42,7 +42,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["shard_of", "shard_ids", "SubBatch", "ShardRouter"]
+__all__ = ["shard_of", "shard_ids", "SubBatch", "ShardRouter",
+           "ShardDownError"]
+
+
+class ShardDownError(RuntimeError):
+    """A shard's backing worker is dead (process backend): the request
+    cannot be served there right now. Lanes translate this into a
+    whole-batch SHED (the caller sees ``STATUS_SHED``, never a hang or a
+    raw exception) while the supervisor respawns the worker."""
 
 # Knuth multiplicative constant — the same one featurestore.keydir hashes
 # with, so routing and key-directory slot math share one hash family
@@ -89,7 +97,8 @@ class SubBatch:
     """One shard's slice of a client batch, in flight through a lane."""
 
     __slots__ = ("handle", "keys", "ts", "rows", "ctx", "done",
-                 "columns", "status", "table_version", "error", "shed")
+                 "columns", "status", "table_version", "error", "shed",
+                 "shed_reason")
 
     def __init__(self, handle, keys: np.ndarray, ts: np.ndarray,
                  rows: Optional[np.ndarray], ctx=None):
@@ -104,6 +113,7 @@ class SubBatch:
         self.table_version: int = -1
         self.error: Optional[BaseException] = None
         self.shed = False
+        self.shed_reason: Optional[str] = None
 
     def __len__(self) -> int:
         return len(self.keys)
@@ -116,14 +126,24 @@ class _ShardQueue:
         self.shard_id = shard_id
         self.lane = lane
         self.q: deque = deque()
+        # a retired shard's runtime is (about to be) closed: late submits
+        # — scatters that read the pre-reshard route table — must shed,
+        # not execute against deleted buffers
+        self.retired = False
         self.stats = {"sub_batches": 0, "shed_sub_batches": 0,
                       "max_queue_depth": 0}
 
     def submit(self, item: SubBatch) -> SubBatch:
         lane = self.lane
         with lane.cv:
-            if lane.stop:
+            if lane.stop or not lane.accepting:
                 raise RuntimeError("shard router is closed")
+            if self.retired:
+                item.shed = True
+                item.shed_reason = "worker_down"
+                self.stats["shed_sub_batches"] += 1
+                item.done.set()
+                return item
             self.q.append(item)
             self.stats["max_queue_depth"] = max(
                 self.stats["max_queue_depth"], len(self.q))
@@ -150,6 +170,13 @@ class _Lane:
         self.queues: List[_ShardQueue] = []
         self.cv = threading.Condition()
         self.stop = False
+        # shutdown(drain=True) flips this first so new submits fail fast
+        # while already-queued work still completes
+        self.accepting = True
+        # True while the lane thread holds drained-but-unfinished items
+        # (between _drain and the end of _execute) — the drain wait in
+        # shutdown() needs it: empty queues alone don't mean idle
+        self.busy = False
         self._rr = 0
         self.stats = {"dispatches": 0, "rows": 0}
         self.thread: Optional[threading.Thread] = None
@@ -201,6 +228,10 @@ class _Lane:
             items: List[SubBatch] = []
             n = 0
             handle = sq.q[0].handle
+            # flagged BEFORE the coalesce wait can release the cv: a
+            # drain-waiter that sees empty queues must also see busy=True
+            # for the items this drain is about to pop
+            self.busy = True
             deadline: Optional[float] = None
             while True:
                 while sq.q and sq.q[0].handle is handle:
@@ -235,6 +266,10 @@ class _Lane:
                     if not it.done.is_set():
                         it.error = e
                         it.done.set()
+            finally:
+                with self.cv:
+                    self.busy = False
+                    self.cv.notify_all()
 
     def _execute(self, sq: _ShardQueue, items: List[SubBatch]) -> None:
         # shed expired work at dequeue — BEFORE concat/compute; the whole
@@ -244,6 +279,7 @@ class _Lane:
         for it in items:
             if it.ctx is not None and it.ctx.expired:
                 it.shed = True
+                it.shed_reason = "deadline"
                 sq.stats["shed_sub_batches"] += 1
                 it.done.set()
             else:
@@ -288,6 +324,15 @@ class _Lane:
                 tver = max(tver, frame.table_version)
                 self.stats["dispatches"] += 1
                 self.stats["rows"] += nb
+        except ShardDownError:
+            # dead worker: shed, don't error — the caller gets a clean
+            # whole-batch STATUS_SHED while the supervisor respawns
+            for it in live:
+                it.shed = True
+                it.shed_reason = "worker_down"
+                sq.stats["shed_sub_batches"] += 1
+                it.done.set()
+            return
         except BaseException as e:
             for it in live:
                 it.error = e
@@ -347,17 +392,20 @@ class ShardRouter:
         return self.queues[shard].submit(item)
 
     def scatter(self, handles: Sequence, keys: np.ndarray, ts: np.ndarray,
-                rows: Optional[np.ndarray], ctx=None
+                rows: Optional[np.ndarray], ctx=None,
+                owners: Optional[np.ndarray] = None
                 ) -> List[Tuple[np.ndarray, SubBatch]]:
         """Split a batch by key hash and enqueue one SubBatch per owning
         shard (``handles[s]`` serves shard ``s``). Returns
-        ``[(original_row_indices, sub_batch), ...]``."""
-        sid = shard_ids(keys, self.n_shards)
+        ``[(original_row_indices, sub_batch), ...]``. ``owners`` lets the
+        caller supply a precomputed (B,) shard-id array — the sharded
+        engine passes its consistent-hash route table's answer; the
+        default stays the pure modulo partitioner."""
+        sid = owners if owners is not None \
+            else shard_ids(keys, self.n_shards)
         out: List[Tuple[np.ndarray, SubBatch]] = []
-        for s in range(self.n_shards):
+        for s in np.unique(sid):
             idx = np.flatnonzero(sid == s)
-            if idx.size == 0:
-                continue
             item = SubBatch(handles[s], keys[idx], ts[idx],
                             rows[idx] if rows is not None else None,
                             ctx=ctx)
@@ -423,6 +471,22 @@ class ShardRouter:
                 lane.cv.notify_all()
         return prev
 
+    # -------------------------------------------------------------- elastic
+    def add_queue(self) -> int:
+        """Grow by one shard queue (consistent-hash resharding): the new
+        queue rides an existing lane round-robin (``s % n_lanes``), so no
+        new execution thread is needed. Returns the new shard id."""
+        s = len(self.queues)
+        lane = self.lanes[s % len(self.lanes)]
+        sq = _ShardQueue(s, lane)
+        with lane.cv:
+            if lane.stop or not lane.accepting:
+                raise RuntimeError("shard router is closed")
+            lane.queues.append(sq)
+            self.queues.append(sq)
+        self.n_shards = len(self.queues)
+        return s
+
     # --------------------------------------------------------------- intro
     @property
     def n_lanes(self) -> int:
@@ -447,9 +511,72 @@ class ShardRouter:
                                     if agg["dispatches"] else 0.0)
         return agg
 
-    def close(self) -> None:
+    def retire_queue(self, s: int) -> None:
+        """Flip shard ``s`` to shed-on-submit. Items already queued were
+        submitted before retirement and still execute (the runtime stays
+        open through the following ``drain_shard``); anything arriving
+        later — a scatter that routed on the pre-reshard table — sheds
+        as ``worker_down`` instead of racing the runtime close."""
+        sq = self.queues[s]
+        with sq.lane.cv:
+            sq.retired = True
+
+    def drain_shard(self, s: int, timeout: float = 30.0) -> bool:
+        """Wait until shard ``s``'s queue is empty and its lane idle — a
+        shard runtime about to be retired must not be closed with
+        sub-batches still queued/executing against it. The lane's busy
+        flag covers a *popped* item; requiring two consecutive idle
+        observations closes the narrow window between an owners_of()
+        read and the submit it feeds."""
+        sq = self.queues[s]
+        lane = sq.lane
+        deadline = time.monotonic() + timeout
+        idle_seen = 0
+        while time.monotonic() < deadline:
+            with lane.cv:
+                idle = not sq.q and not lane.busy
+            idle_seen = idle_seen + 1 if idle else 0
+            if idle_seen >= 2:
+                return True
+            time.sleep(0.005)
+        return False
+
+    def shutdown(self, *, drain: bool = True, timeout: float = 30.0
+                 ) -> None:
+        """Stop the router. With ``drain=True`` (the graceful path —
+        mirrors ``DynamicBatcher.close()``): new submits fail fast
+        immediately, but every already-queued sub-batch COMPLETES before
+        any lane thread stops — an in-flight gather can never race a
+        closing queue. ``drain=False`` is the old fail-fast close: queued
+        items error out with "shard router closed"."""
         if self._closed:
             return
         self._closed = True
+        # 1) stop accepting new work everywhere, atomically per lane
         for lane in self.lanes:
-            lane.close()
+            with lane.cv:
+                lane.accepting = False
+                lane.cv.notify_all()
+        # 2) drain: wait until every queue is empty AND every lane has
+        #    finished the items it already popped
+        if drain:
+            deadline = time.monotonic() + timeout
+            for lane in self.lanes:
+                with lane.cv:
+                    while ((lane.busy or any(sq.q for sq in lane.queues))
+                           and time.monotonic() < deadline):
+                        lane.cv.wait(0.05)
+        # 3) only now stop the lane threads (fail-fasting any remainder —
+        #    none on the drain path unless the timeout was hit)
+        for lane in self.lanes:
+            with lane.cv:
+                lane.stop = True
+                lane.cv.notify_all()
+        for lane in self.lanes:
+            if lane.thread is not None:
+                lane.thread.join(timeout=5.0)
+
+    def close(self) -> None:
+        """Fail-fast close (legacy semantics): queued-but-unstarted work
+        errors out instead of completing. Prefer ``shutdown()``."""
+        self.shutdown(drain=False)

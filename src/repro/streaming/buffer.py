@@ -73,6 +73,13 @@ class StreamBuffer:
         self._frontier: Dict[object, float] = {}  # max ts released per key
         self._n_staged = 0
         self._seq = 0
+        # prepared-but-uncommitted cross-shard transactions: txn id ->
+        # [(key, ts, row), ...]. While a txn is pending, ready() holds
+        # each involved key's frontier at/below the txn's min ts for that
+        # key, so a prepared txn can ALWAYS commit (frontier can never
+        # advance past it) — the invariant 2PC ingest rests on.
+        self._pending: Dict[int, List[Tuple[object, float, np.ndarray]]] = {}
+        self._txn_seq = 0
 
     # ------------------------------------------------------------------ push
     def push(self, key, ts: float, row: np.ndarray) -> bool:
@@ -99,6 +106,60 @@ class StreamBuffer:
             for i, k in enumerate(keys):
                 n_ok += bool(self._push_locked(k, float(ts[i]), rows[i]))
         return n_ok
+
+    # ------------------------------------------------------ 2PC (prepare)
+    def prepare(self, keys: Sequence, ts: Sequence[float],
+                rows: np.ndarray) -> Optional[int]:
+        """Phase 1 of a cross-shard transactional ingest: validate every
+        event against the frontier and park the batch WITHOUT staging it.
+        Returns a txn id, or ``None`` if any event would be dropped (the
+        whole batch is then rejected and nothing is held).
+
+        Between ``prepare`` and ``commit``/``abort``, ``ready()`` caps
+        each involved key's release at the txn's minimum pending ts, so
+        the frontier cannot move past the parked events — ``commit`` is
+        guaranteed to stage every event successfully."""
+        rows = np.asarray(rows, np.float32)
+        with self._lock:
+            for i, k in enumerate(keys):
+                t = float(ts[i])
+                if (not np.isfinite(t)
+                        or t < self._frontier.get(k, float("-inf"))):
+                    return None
+            self._txn_seq += 1
+            txn = self._txn_seq
+            self._pending[txn] = [
+                (k, float(ts[i]), np.asarray(rows[i], np.float32))
+                for i, k in enumerate(keys)]
+            return txn
+
+    def commit(self, txn: int) -> int:
+        """Phase 2: stage the parked batch. Cannot reject (see
+        ``prepare``); returns the number of events staged."""
+        with self._lock:
+            events = self._pending.pop(txn)
+            for k, t, row in events:
+                if not self._push_locked(k, t, row):
+                    # unreachable by construction (frontier held); guard
+                    # so a future invariant break is loud, not silent
+                    raise AssertionError(
+                        f"prepared event (key={k!r}, ts={t}) rejected at "
+                        f"commit — frontier hold violated")
+            return len(events)
+
+    def abort(self, txn: int) -> None:
+        """Drop a prepared batch and release its frontier holds."""
+        with self._lock:
+            self._pending.pop(txn, None)
+
+    def _txn_holds(self) -> Dict[object, float]:
+        """Per-key minimum pending-txn ts (callers hold the lock)."""
+        holds: Dict[object, float] = {}
+        for events in self._pending.values():
+            for k, t, _row in events:
+                if t < holds.get(k, float("inf")):
+                    holds[k] = t
+        return holds
 
     def _push_locked(self, key, ts: float, row: np.ndarray) -> bool:
         if not np.isfinite(ts):
@@ -190,17 +251,28 @@ class StreamBuffer:
         with self._lock:
             over = (self._n_staged - self.max_staged
                     if self.max_staged else 0)
+            holds = self._txn_holds() if self._pending else {}
             for key, staged in self._staged.items():
                 if not staged:
                     continue
+                hold = holds.get(key)
                 if flush_all:
                     n = len(staged)
+                    if hold is not None:
+                        # even a full drain must not advance the frontier
+                        # past a prepared txn's events (ts == hold may
+                        # release: commit pushes ts >= frontier)
+                        n = bisect.bisect_right(staged,
+                                                (hold, self._seq, None))
                 else:
                     wm = self._hwm[key] - self.lateness
+                    if hold is not None:
+                        wm = min(wm, hold)
                     n = bisect.bisect_right(staged,
                                             (wm, self._seq, None))
-                    if over > 0 and n < len(staged):
-                        # bounded state: force the oldest through
+                    if over > 0 and n < len(staged) and hold is None:
+                        # bounded state: force the oldest through (held
+                        # keys exempt — 2PC windows are short)
                         extra = min(len(staged) - n, over)
                         n += extra
                         over -= extra

@@ -91,6 +91,25 @@ class IngestPipeline:
             self._work.notify()
         return n
 
+    # ------------------------------------------------------------------- 2PC
+    def prepare(self, keys: Sequence, ts: Sequence[float],
+                rows: np.ndarray) -> Optional[int]:
+        """Phase 1 of a cross-shard transactional ingest: validate and
+        park the batch (see ``StreamBuffer.prepare``). No flusher wakeup —
+        nothing is staged yet."""
+        return self.buffer.prepare(keys, ts, rows)
+
+    def commit_txn(self, txn: int) -> int:
+        """Phase 2: stage the parked batch (guaranteed to succeed) and
+        wake the flusher."""
+        n = self.buffer.commit(txn)
+        with self._work:
+            self._work.notify()
+        return n
+
+    def abort_txn(self, txn: int) -> None:
+        self.buffer.abort(txn)
+
     # ----------------------------------------------------------------- flush
     def _flush_once(self, *, flush_all: bool = False) -> int:
         with self._flush_mu:

@@ -632,3 +632,72 @@ def test_control_plane_background_loop():
         plane.stop()
     assert plane.reports                      # it ticked on its own
     eng.close()
+
+
+# ---------------------------------------------------- client latency signal
+def test_batcher_client_latency_includes_queueing():
+    """client_latency_percentile measures enqueue->completion, so a
+    queue building in front of a fast serve shows up in it even though
+    the serve-side latency stays flat."""
+    from repro.serving.batcher import BatcherConfig, DynamicBatcher
+    gate = threading.Event()
+
+    def gated_serve(keys, ts, payloads):
+        gate.wait(5.0)
+        return {"x": np.zeros(len(keys), np.float32)}
+
+    b = DynamicBatcher(gated_serve, BatcherConfig(max_batch=64,
+                                                  max_delay_s=0.0))
+    try:
+        assert math.isnan(b.client_latency_percentile(99))
+        rs = [b.submit(i, 100.0) for i in range(8)]
+        time.sleep(0.05)                 # queueing time, serve blocked
+        gate.set()
+        for r in rs:
+            r.wait(5.0)
+        p99 = b.client_latency_percentile(99)
+        assert math.isfinite(p99) and p99 >= 0.05
+    finally:
+        gate.set()
+        b.close()
+
+
+def test_plane_prefers_client_observed_p99():
+    """With a batcher fronting the engine the knob controller must see
+    the queueing-INCLUSIVE p99 — the serve-side p99 goes blind exactly
+    when the queue builds."""
+    from repro.serving.batcher import BatcherConfig, DynamicBatcher
+
+    class _Srv:                          # duck-typed FeatureServer
+        def __init__(self, batcher):
+            self.batcher = batcher
+
+    eng = make_engine()
+    eng.deploy("f", SQL)
+
+    def fserve(keys, ts, payloads):
+        fr = eng.request("f", list(keys), list(ts))
+        return dict(fr.columns)
+
+    b = DynamicBatcher(fserve, BatcherConfig(max_batch=8,
+                                             max_delay_s=0.001))
+    plane = ControlPlane(eng, "f", server=_Srv(b))
+    try:
+        rs = [b.submit(k, 2000.0) for k in range(16)]
+        for r in rs:
+            r.wait(5.0)
+        sample = plane.collector.sample()
+        client_p99 = sample["batcher"]["client_p99_s"]
+        assert math.isfinite(client_p99)
+        # the series is exported for dashboards too
+        assert "batcher.client_p99_s" in plane.collector.series
+        obs = plane._load_observation(sample)
+        assert obs.p99_s == pytest.approx(client_p99)
+        # client p99 can only sit ABOVE the serve-side p99 it wraps
+        serve_p99 = sample["deployments"]["f"]["snapshot"].get(
+            "latency_p99_s", float("nan"))
+        if math.isfinite(serve_p99):
+            assert client_p99 >= serve_p99 * 0.5
+    finally:
+        b.close()
+        eng.close()

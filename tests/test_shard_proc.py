@@ -1,0 +1,231 @@
+"""Process-backed shard runtime (DESIGN.md §11): subprocess workers
+behind the unchanged ShardedEngine API — parity vs in-process, broadcast
+dimension ingest, cross-shard transactional insert, killed-worker shed
+-> respawn -> recover (no hung futures), and elastic add_shard with a
+fresh subprocess.
+
+Worker spawn imports jax (~seconds); tests keep shard counts small and
+reuse one engine across many asserts.
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import dsl
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.core.results import STATUS_OK, STATUS_SHED, STATUS_UNKNOWN_KEY
+from repro.featurestore.table import TableSchema
+from repro.shard import ShardConfig, ShardedEngine
+
+SQL = """SELECT SUM(amount) OVER w AS s, COUNT(amount) OVER w AS c,
+AVG(amount) OVER w AS a
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 10 PRECEDING AND CURRENT ROW)"""
+
+SCHEMA = TableSchema("events", key_col="user", ts_col="ts",
+                     value_cols=("amount", "mkey"))
+DIM = TableSchema("dim", key_col="mkey", ts_col="dts",
+                  value_cols=("risk", "tier"))
+
+
+def _events(n=400, n_keys=16, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_keys, n)
+    ts = np.sort(rng.uniform(0, 1000.0, n)).astype(np.float32)
+    rows = np.stack(
+        [rng.normal(size=n),
+         rng.integers(0, 4, n).astype(np.float64)], -1).astype(np.float32)
+    return keys, ts, rows
+
+
+def _join_query():
+    return (dsl.QueryBuilder("events")
+            .window("w", partition_by="user", order_by="ts", rows=10)
+            .select(s=dsl.sum_(dsl.col("amount")).over("w"),
+                    risk=dsl.tbl("dim").risk)
+            .last_join("dim", on="mkey", order_by="dts"))
+
+
+def test_proc_parity_lifecycle_and_offline():
+    """One subprocess per shard, same API, bit-identical to the
+    unsharded engine — online and offline — plus redeploy/rollback and
+    telemetry-over-transport."""
+    keys, ts, rows = _events()
+    ref = Engine(OptFlags())
+    ref.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    ref.insert("events", keys.tolist(), ts.tolist(), rows)
+    ref.deploy("q", SQL)
+
+    se = ShardedEngine(ShardConfig(n_shards=2), backend="process")
+    assert se.backend_kind == "process"
+    se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    se.insert("events", keys.tolist(), ts.tolist(), rows)
+    se.deploy("q", SQL)
+
+    rk = list(range(16))
+    rt = [2000.0] * 16
+    a = ref.request("q", rk, rt)
+    b = se.request("q", rk, rt)
+    assert np.array_equal(a.status, b.status)
+    for n in a:
+        assert np.array_equal(np.asarray(a[n]), np.asarray(b[n])), n
+    assert len(b.version_vector) == 2
+
+    # offline parity: workers map dense indices -> real keys themselves
+    oa = ref.query_offline("q")
+    ob = se.query_offline("q")
+    inv = {i: k for k, i in ref.tables["events"].key_to_idx.items()}
+    ka = np.asarray([inv[int(i)] for i in oa["__key"]])
+    ia = np.lexsort((oa["__ts"], ka))
+    ib = np.lexsort((ob["__ts"], ob["__key"]))
+    assert np.array_equal(ka[ia], ob["__key"][ib])
+    for n in ("s", "c", "a"):
+        assert np.array_equal(oa[n][ia], ob[n][ib]), n
+
+    # redeploy + rollback run the serialized control RPCs on every worker
+    se.deploy("q", SQL.replace("10 PRECEDING", "5 PRECEDING"))
+    assert se.handle("q").version == 2
+    se.rollback("q")
+    b2 = se.request("q", rk, rt)
+    for n in a:
+        assert np.array_equal(np.asarray(a[n]), np.asarray(b2[n])), n
+
+    # control-plane reads cross the transport (worker-side snapshots)
+    dec = se.latency_decomposition()
+    assert dec["n_shards"] == 2
+    assert dec["n_requests"] >= 32
+    for sub in se.shards:
+        assert isinstance(sub.stats.snapshot(), dict)
+    assert "process backend" in se.explain("q")
+    ref.close()
+    se.close()
+
+
+def test_proc_broadcast_dimension_join():
+    """Replicated dimension ingest is ONE serialized payload fanned to
+    every worker; LAST JOIN probes resolve on the probing shard."""
+    keys, ts, rows = _events()
+    se = ShardedEngine(ShardConfig(n_shards=2), backend="process")
+    se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    se.create_table(DIM, max_keys=16, capacity=16, bucket_size=8,
+                    replicate=True)
+    drow = np.stack([np.arange(4) * 0.1, np.arange(4) * 1.0],
+                    -1).astype(np.float32)
+    se.insert("dim", list(range(4)), [1.0] * 4, drow)
+    se.insert("events", keys.tolist(), ts.tolist(), rows)
+    se.deploy("jq", _join_query())
+    fr = se.request("jq", list(range(8)), [2000.0] * 8, rows=rows[:8])
+    assert (fr.status == STATUS_OK).all()
+    for i in range(8):
+        assert abs(fr.columns["risk"][i] - rows[i, 1] * 0.1) < 1e-6
+    st = se.handle("jq").join_staleness()["dim"]
+    assert st["match_rate"] == 1.0
+    se.close()
+
+
+def test_proc_transactional_insert_all_or_nothing():
+    """Cross-shard insert into a stream-attached table: one shard's
+    unrepairably-late slice must reject the WHOLE batch — the other
+    shard's slice is aborted, not applied (the pre-2PC partial-apply)."""
+    se = ShardedEngine(ShardConfig(n_shards=2), backend="process")
+    se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    pipe = se.attach_stream("events", lateness=1.0)
+    ka = next(k for k in range(100) if se.shard_of(k) == 0)
+    kb = next(k for k in range(100) if se.shard_of(k) == 1)
+    se.insert("events", [ka], [100.0], np.ones((1, 2), np.float32))
+    pipe.flush()
+    se.deploy("q", SQL)
+    with pytest.raises(ValueError, match="rejected atomically"):
+        se.insert("events", [ka, kb], [10.0, 200.0],
+                  np.ones((2, 2), np.float32))
+    pipe.flush()
+    fr = se.request("q", [kb], [500.0])
+    assert fr.status.tolist() == [STATUS_UNKNOWN_KEY]  # nothing staged
+    # a fully-valid batch commits on every involved shard
+    se.insert("events", [ka, kb], [300.0, 300.0],
+              np.ones((2, 2), np.float32))
+    pipe.flush()
+    fr = se.request("q", [ka, kb], [500.0, 500.0])
+    assert fr.status.tolist() == [STATUS_OK, STATUS_OK]
+    assert fr.columns["c"].tolist() == [2.0, 1.0]
+    se.close()
+
+
+def test_proc_killed_worker_shed_respawn_recover():
+    """SIGKILL one worker mid-service: in-flight and subsequent batches
+    for its keys shed whole-batch (worker_down, no hung futures, no raw
+    exceptions), the supervisor respawns it, replays the catalog and
+    deployments, and serving resumes; lost partitioned data re-enters
+    through the stream."""
+    keys, ts, rows = _events(n=200, n_keys=8)
+    se = ShardedEngine(ShardConfig(n_shards=2), backend="process")
+    se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    pipe = se.attach_stream("events", flush_interval_s=0.05)
+    pipe.push_batch(keys, ts, rows)
+    pipe.flush()
+    se.deploy("q", SQL)
+    rk, rt = list(range(8)), [2000.0] * 8
+    assert (se.request("q", rk, rt).status == STATUS_OK).all()
+
+    os.kill(se.shards[1].proc.pid, signal.SIGKILL)
+    time.sleep(0.05)
+    t0 = time.perf_counter()
+    fr = se.request("q", rk, rt)
+    # whole-batch shed, immediately — a hung gather would eat the 120 s
+    # RPC timeout here
+    assert time.perf_counter() - t0 < 30.0
+    assert (fr.status == STATUS_SHED).all()
+
+    deadline = time.time() + 90
+    while time.time() < deadline:
+        fr = se.request("q", rk, rt)
+        if not (fr.status == STATUS_SHED).any():
+            break
+        time.sleep(0.1)
+    assert se.worker_restarts == 1
+    # respawned shard serves; its keys are UNKNOWN until re-ingest
+    assert set(fr.status.tolist()) <= {STATUS_OK, STATUS_UNKNOWN_KEY}
+    assert se.resources.metrics()["shed_worker_down"] >= 1
+    pipe.push_batch(keys, ts + 3000.0, rows)
+    pipe.flush()
+    fr = se.request("q", rk, [9000.0] * 8)
+    assert (fr.status == STATUS_OK).all()
+    se.close()
+
+
+def test_proc_elastic_add_shard():
+    """add_shard spawns a NEW subprocess, replays the catalog into it,
+    seeds replicas, rebuilds deployments, and migrates key ranges —
+    outputs identical before/after."""
+    keys, ts, rows = _events()
+    se = ShardedEngine(ShardConfig(n_shards=2), backend="process")
+    se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    se.create_table(DIM, max_keys=16, capacity=16, bucket_size=8,
+                    replicate=True)
+    drow = np.stack([np.arange(4) * 0.1, np.arange(4) * 1.0],
+                    -1).astype(np.float32)
+    se.insert("dim", list(range(4)), [1.0] * 4, drow)
+    se.insert("events", keys.tolist(), ts.tolist(), rows)
+    se.deploy("jq", _join_query())
+    rk, rt = list(range(16)), [2000.0] * 16
+    before = se.request("jq", rk, rt, rows=rows[:16])
+    assert (before.status == STATUS_OK).all()
+
+    s_new = se.add_shard()
+    assert se.n_shards == 3
+    after = se.request("jq", rk, rt, rows=rows[:16])
+    assert np.array_equal(before.status, after.status)
+    for n in before.columns:
+        assert np.array_equal(np.asarray(before[n]),
+                              np.asarray(after[n])), n
+    # the new worker actually owns traffic (ring moved ~1/3 of the space)
+    counts = se._routing.shard_counts()
+    assert counts.get(s_new, 0) > 0
+    res = se.query_offline("jq")
+    assert len(res["__version_vector"]) == 3
+    se.close()
