@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
                          "stream,hotswap,multiwindow,lastjoin,shard,"
-                         "shard_proc,adaptive")
+                         "shard_proc,adaptive,recovery")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-size smoke mode (CI): same code paths, "
                          "~10x less work; numbers are tripwires only")
@@ -88,6 +88,12 @@ def main(argv=None) -> int:
     if want("adaptive"):
         from benchmarks import bench_adaptive as b12
         results["adaptive"] = b12.run(rep)
+    if want("recovery"):
+        # durability tier: kill-to-parity MTTR, WAL+standby vs cold
+        # respawn (process-backed workers set their own jax env)
+        from benchmarks import bench_recovery as b13
+        results["recovery"] = {k: v for k, v in b13.run(rep).items()
+                               if k != "per_round"}
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",
@@ -119,6 +125,14 @@ def _headline(name: str, doc: dict):
         return {"qps": top["qps"], "p50_ms": top["p50_ms"],
                 "p99_ms": top["p99_ms"],
                 "detail": f"{top['extra_launches']} joined table(s)"}
+    if name == "recovery" and "mttr_speedup" in doc:
+        # MTTR bench: no qps — headline is the kill-to-parity time
+        return {"qps": None,
+                "p50_ms": doc["durable_parity_s_median"] * 1e3,
+                "p99_ms": doc["baseline_parity_s_median"] * 1e3,
+                "detail": (f"durable vs baseline parity MTTR, "
+                           f"{doc['mttr_speedup']:.2f}x, "
+                           f"meets_2x={doc['meets_2x']}")}
     if name in ("shard", "shard_proc") and "by_shards" in doc:
         top = doc["by_shards"][max(doc["by_shards"], key=int)]
         return {"qps": top["qps"], "p50_ms": top["p50_ms"],

@@ -61,6 +61,7 @@ class ControlPlane:
             knob_cfg, seed)
         self.reports: List[Dict[str, Any]] = []
         self._tick = 0
+        self._prev_restarts = 0.0
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -176,11 +177,46 @@ class ControlPlane:
                             "reason": d.reason, "applied": ok})
         return applied
 
+    # ------------------------------------------------------------- recovery
+    def _recovering(self, sample: Dict[str, Any]) -> bool:
+        """True while the runtime is absorbing a worker death: a restart
+        happened since the last tick, or a shard client is still not
+        ready (catalog/WAL replay in flight). A recovery tick's latency
+        and shed counters describe the FAILURE, not the workload — fitting
+        the cost model or moving knobs on them would tune the steady
+        state to a transient."""
+        decomp = sample.get("latency_decomposition", {})
+        restarts = float(decomp.get("worker_restarts", 0) or 0)
+        prev, self._prev_restarts = self._prev_restarts, restarts
+        if restarts > prev:
+            return True
+        backend = getattr(self.engine, "backend", None)
+        clients = getattr(backend, "clients", None) if backend else None
+        if clients:
+            return any(not c.ready and not getattr(c, "retired", False)
+                       for c in clients)
+        return False
+
     # ----------------------------------------------------------------- tick
     def tick(self) -> Dict[str, Any]:
         t = self._tick
         self._tick += 1
         sample = self.collector.sample()
+
+        if self._recovering(sample):
+            # sample was still taken (baselines advance: the recovery
+            # interval's deltas are consumed here, not leaked into the
+            # next steady tick) but nothing is fitted, replanned or tuned
+            report = {
+                "tick": t, "recovering": True, "observations_fed": 0,
+                "replan": {"action": "recovering"},
+                "health": {"action": "recovering"},
+                "load": None, "knob_decisions": [],
+                "knobs": dict(self.knobs.knobs),
+            }
+            self.reports.append(report)
+            return report
+
         fed = self._feed_calibrator(sample)
 
         replan_report: Dict[str, Any] = {"action": "disabled"}
@@ -204,6 +240,7 @@ class ControlPlane:
 
         report = {
             "tick": t,
+            "recovering": False,
             "observations_fed": fed,
             "replan": replan_report,
             "health": health,

@@ -101,6 +101,7 @@ class MetricsCollector:
         self._prev_handles: Dict[str, Dict[str, float]] = {}
         self._prev_admission: Dict[str, float] = {}
         self._prev_batcher: Dict[str, float] = {}
+        self._prev_decomp: Dict[str, float] = {}
 
     # ------------------------------------------------------------- sources
     def _engine_stats(self) -> Dict[str, float]:
@@ -202,6 +203,10 @@ class MetricsCollector:
             self._prev_admission = stats
             self._push(t, "admission.shed",
                        admission["delta"].get("shed_deadline", 0))
+            self._push(t, "admission.shed_worker_down",
+                       admission["delta"].get("shed_worker_down", 0))
+            self._push(t, "admission.served_degraded",
+                       admission["delta"].get("served_degraded", 0))
 
         router = getattr(eng, "router", None)
         if router is not None:
@@ -212,6 +217,29 @@ class MetricsCollector:
         self._push(t, "engine.kernel_launches",
                    eng_delta.get("kernel_launches", 0))
         self._push(t, "cache.hit_rate", cache_snap.get("hit_rate", 0.0))
+
+        # durability / chaos tier (ShardedEngine only; keys absent on a
+        # single Engine's decomposition). Counters are diffed into
+        # per-tick deltas; replay lag is a gauge (last recovery's value)
+        if "worker_restarts" in decomp:
+            dd = self._delta(decomp, self._prev_decomp,
+                             ("worker_restarts", "transport_retries",
+                              "transport_frame_corrupt",
+                              "transport_rpc_timeouts",
+                              "recovery_wal_replayed_events"))
+            self._prev_decomp = {
+                k: decomp.get(k, 0) for k in
+                ("worker_restarts", "transport_retries",
+                 "transport_frame_corrupt", "transport_rpc_timeouts",
+                 "recovery_wal_replayed_events")}
+            self._push(t, "engine.worker_restarts",
+                       dd.get("worker_restarts", 0))
+            self._push(t, "transport.retries",
+                       dd.get("transport_retries", 0))
+            self._push(t, "transport.frame_corrupt",
+                       dd.get("transport_frame_corrupt", 0))
+            self._push(t, "recovery.wal_replay_lag_s",
+                       decomp.get("recovery_wal_replay_lag_s", 0.0))
 
         sample = _jsonable({
             "t": t,

@@ -23,7 +23,8 @@ from typing import Dict, Iterator, Optional
 import numpy as np
 
 __all__ = ["FeatureFrame", "RequestContext", "DeadlineExceeded",
-           "STATUS_OK", "STATUS_UNKNOWN_KEY", "STATUS_SHED"]
+           "STATUS_OK", "STATUS_UNKNOWN_KEY", "STATUS_SHED",
+           "STATUS_DEGRADED"]
 
 STATUS_OK = 0
 STATUS_UNKNOWN_KEY = 1
@@ -31,6 +32,13 @@ STATUS_UNKNOWN_KEY = 1
 # it) BEFORE any feature computation — the whole batch carries this status,
 # never a mix of shed and computed rows (repro.shard.resource)
 STATUS_SHED = 2
+# the owning shard is down/recovering and this row was answered from the
+# stale-tier cache (last feature row the shard published for this key)
+# instead of being shed — possibly-stale values, still usable for models
+# that prefer a slightly-old feature to none (DESIGN.md §12 degradation
+# ladder OK→DEGRADED→SHED); unlike SHED this CAN mix with OK rows in one
+# batch (only the dead shard's keys degrade)
+STATUS_DEGRADED = 3
 
 
 class DeadlineExceeded(TimeoutError):
@@ -121,6 +129,10 @@ class FeatureFrame(Mapping):
     @property
     def n_shed(self) -> int:
         return int((self.status == STATUS_SHED).sum())
+
+    @property
+    def n_degraded(self) -> int:
+        return int((self.status == STATUS_DEGRADED).sum())
 
     def row(self, i: int) -> "FeatureFrame":
         """Single-request view (scalar columns), keeping the metadata —

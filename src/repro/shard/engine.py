@@ -62,6 +62,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import os
+import shutil
 import threading
 import time
 from dataclasses import dataclass
@@ -74,12 +75,19 @@ from repro.core import dsl
 from repro.core.engine import DeploymentHandle, Engine, HandleMetrics
 from repro.core.logical import Query
 from repro.core.optimizer import CostModel, OptFlags
-from repro.core.results import (STATUS_SHED, FeatureFrame, RequestContext)
+from repro.core.results import (STATUS_DEGRADED, STATUS_OK, STATUS_SHED,
+                                FeatureFrame, RequestContext)
 from repro.featurestore.table import TableSchema
+# stdlib-only module: importing the plan type does not pull the proc
+# backend (or jax) into in-process users
+from repro.shard.proc.faults import FaultPlan
 from repro.shard.resource import AdmissionConfig, ResourceManager
 from repro.shard.ring import HashRing, ModuloRouting, RouteTable, \
     key_hashes
-from repro.shard.router import ShardRouter, shard_ids, shard_of
+from repro.shard.router import ShardDownError, ShardRouter, shard_ids, \
+    shard_of
+from repro.streaming.wal import WalConfig, read_dir as wal_read_dir, \
+    resolve_shard as wal_resolve_shard
 
 __all__ = ["ShardConfig", "ShardedEngine", "ShardedDeploymentHandle",
            "ShardedPipeline"]
@@ -110,6 +118,31 @@ class ShardConfig:
     partitioner: str = "ring"
     vnodes: int = 64                  # ring points per shard
     migrate_batch_arcs: int = 8       # arcs copied per migration step
+    # max time _reshard keeps retrying one arc batch across worker
+    # deaths before giving up (a respawn + WAL replay fits many times)
+    reshard_retry_s: float = 60.0
+    # --- durability / chaos tier (DESIGN.md §12) -------------------------
+    # base directory for per-shard write-ahead ingest logs; None disables.
+    # Partitioned stream-attached tables get a WAL at
+    # ``<wal_dir>/shard-<s>/<table>/`` injected into their PipelineConfig;
+    # on worker death (process backend) the dead shard's log is archived,
+    # then replayed through the live route table after respawn
+    wal_dir: Optional[str] = None
+    # pre-forked workers kept past jax import for sub-second adoption on
+    # respawn (process backend; 0 disables the pool)
+    standby_workers: int = 0
+    # persistent jax compilation cache shared by worker incarnations, so
+    # a respawned worker loads serialized executables instead of
+    # recompiling (compile dominates recovery MTTR once the standby pool
+    # has amortized interpreter startup). None defaults to
+    # ``<wal_dir>/.jax-cache`` when a WAL dir is configured
+    compile_cache_dir: Optional[str] = None
+    # stale-tier cache: last served feature row per key, used to answer
+    # STATUS_DEGRADED while a shard is down/replaying (0 disables)
+    degraded_cache_keys: int = 4096
+    # chaos: fault plan for the worker transport (process backend); None
+    # falls back to the REPRO_FAULT_PLAN env var, then no faults
+    fault_plan: Optional[FaultPlan] = None
 
 
 @dataclass
@@ -118,6 +151,8 @@ class ShardedHandleMetrics:
     batches: int = 0
     shed_requests: int = 0
     shed_batches: int = 0
+    degraded_requests: int = 0     # rows answered from the stale tier
+    degraded_batches: int = 0      # batches with >= 1 DEGRADED row
     serve_s: float = 0.0
     canary_batches: int = 0
     canary_max_abs_diff: float = 0.0
@@ -143,6 +178,8 @@ class ShardedHandleMetrics:
             "requests": self.requests, "batches": self.batches,
             "shed_requests": self.shed_requests,
             "shed_batches": self.shed_batches,
+            "degraded_requests": self.degraded_requests,
+            "degraded_batches": self.degraded_batches,
             "serve_s": self.serve_s,
             "canary_batches": self.canary_batches,
             "canary_max_abs_diff": self.canary_max_abs_diff,
@@ -188,6 +225,12 @@ class ShardedDeploymentHandle:
             None
         self._canary_counter = 0
         self._lock = threading.Lock()
+        # stale tier (degradation ladder OK→DEGRADED→SHED): the last
+        # feature row served per key, LRU-bounded. While a shard is down
+        # its keys answer from here with STATUS_DEGRADED instead of
+        # shedding the whole batch — possibly stale, never wrong-key
+        self._stale: "collections.OrderedDict" = collections.OrderedDict()
+        self._stale_cap = int(engine.cfg.degraded_cache_keys)
 
     # ------------------------------------------------------------ identity
     @property
@@ -323,12 +366,20 @@ class ShardedDeploymentHandle:
                                    ctx=ctx, owners=eng.owners_of(karr))
         columns, status, _tvers, any_shed = eng.router.gather(parts, B)
         if any_shed:
-            reason = next((it.shed_reason for _, it in parts if it.shed),
-                          None)
+            reasons = {it.shed_reason for _, it in parts if it.shed}
+            if reasons == {"worker_down"} and self._stale_cap > 0:
+                # degradation ladder: ONLY the dead shard's rows went
+                # missing — try the stale tier before giving up on the
+                # whole batch
+                deg = self._degraded_frame(parts, B, trace)
+                if deg is not None:
+                    eng.resources.record_degraded(int(deg.n_degraded))
+                    return deg
             eng.resources.record_shed(
-                kind="worker_down" if reason == "worker_down"
+                kind="worker_down" if "worker_down" in reasons
                 else "deadline")
             return self._shed_frame(B, trace)
+        self._remember(karr, columns, status)
         wall = time.perf_counter() - t0
         with self._lock:
             m = self.metrics
@@ -342,6 +393,66 @@ class ShardedDeploymentHandle:
             table_version=max((h.table.version for h in self.handles
                                if h is not None), default=-1),
             latency={"serve_s": wall},
+            version_vector=self.version_vector())
+
+    # ------------------------------------------------------ stale tier
+    @staticmethod
+    def _ckey(key):
+        return key.item() if isinstance(key, np.generic) else key
+
+    def _remember(self, karr, columns, status) -> None:
+        """Refresh the stale tier from a fully-computed batch: every
+        STATUS_OK row's features, keyed by request key, LRU-evicted."""
+        if self._stale_cap <= 0:
+            return
+        names = self.phys.feature_names
+        mat = np.stack([np.asarray(columns[n], np.float32)
+                        for n in names], axis=1)
+        st = np.asarray(status)
+        with self._lock:
+            cache = self._stale
+            for i in np.flatnonzero(st == STATUS_OK):
+                k = self._ckey(karr[int(i)])
+                cache[k] = mat[int(i)]
+                cache.move_to_end(k)
+            while len(cache) > self._stale_cap:
+                cache.popitem(last=False)
+
+    def _degraded_frame(self, parts, B: int, trace
+                        ) -> Optional[FeatureFrame]:
+        """Assemble a mixed frame: completed sub-batches keep their
+        fresh rows/statuses; worker_down sub-batches answer from the
+        stale tier with STATUS_DEGRADED. Returns ``None`` — meaning
+        fall back to a whole-batch shed — if ANY dead-shard key has no
+        cached row (a partially-degradable batch would otherwise need
+        per-row shed statuses, which the shed contract forbids)."""
+        names = self.phys.feature_names
+        columns = {n: np.zeros((B,), np.float32) for n in names}
+        status = np.zeros(B, np.int8)
+        n_deg = 0
+        with self._lock:
+            for idx, it in parts:
+                if not it.shed:
+                    for kname, v in it.columns.items():
+                        if kname in columns:
+                            columns[kname][idx] = np.asarray(v, np.float32)
+                    status[idx] = it.status
+                    continue
+                for j, key in zip(idx, it.keys):
+                    row = self._stale.get(self._ckey(key))
+                    if row is None:
+                        return None
+                    for fi, n in enumerate(names):
+                        columns[n][int(j)] = row[fi]
+                    status[int(j)] = STATUS_DEGRADED
+                    n_deg += 1
+            self.metrics.degraded_requests += n_deg
+            self.metrics.degraded_batches += 1
+        return FeatureFrame(
+            columns, status=status, deployment=self.name,
+            version=self.version, trace_id=trace,
+            table_version=max((h.table.version for h in self.handles
+                               if h is not None), default=-1),
             version_vector=self.version_vector())
 
     def _shed_frame(self, B: int, trace) -> FeatureFrame:
@@ -379,6 +490,17 @@ class ShardedPipeline:
         return [(s, p) for s, p in enumerate(self.pipes)
                 if s not in retired]
 
+    def _gate(self, s: int) -> None:
+        """Refuse ingest into a shard whose worker is respawning/replaying
+        its WAL. A fresh write landing in the rebuilt buffer BEFORE replay
+        finishes would make ``migrate_in``'s prefix-skip drop the older
+        replayed events — recovery would no longer be bit-identical. The
+        producer sees :class:`ShardDownError` and retries after recovery."""
+        client = getattr(self.pipes[s], "client", None)
+        if client is not None and not getattr(client, "ready", True):
+            raise ShardDownError(
+                f"shard {s} is recovering (WAL replay in progress)")
+
     def push(self, key, ts: float, row: np.ndarray) -> bool:
         eng = self.engine
         if self.replicated:
@@ -388,6 +510,7 @@ class ShardedPipeline:
             return ok
         with eng._route_lock:
             s = eng._routing.owner(key)
+            self._gate(s)
             return self.pipes[s].push(key, ts, row)
 
     def push_batch(self, keys: Sequence, ts: Sequence[float],
@@ -405,6 +528,7 @@ class ShardedPipeline:
             sid = eng._routing.owners_of(keys)
             n = 0
             for s in np.unique(sid):
+                self._gate(int(s))
                 idx = np.flatnonzero(sid == s)
                 n += self.pipes[s].push_batch(
                     keys[idx], ts[idx], rows[idx],
@@ -455,10 +579,19 @@ class ShardedEngine:
         self.backend_kind = kind
         if kind == "process":
             from repro.shard.proc.backend import ProcShardBackend
-            self.backend = ProcShardBackend(S, flags=flags,
-                                            engine_kw=engine_kw)
+            plan = cfg.fault_plan if cfg.fault_plan is not None \
+                else FaultPlan.from_env()
+            cache = cfg.compile_cache_dir or (
+                os.path.join(cfg.wal_dir, ".jax-cache")
+                if cfg.wal_dir else None)
+            self.backend = ProcShardBackend(
+                S, flags=flags, engine_kw=engine_kw,
+                standby_workers=cfg.standby_workers, fault_plan=plan,
+                compile_cache=cache)
             self.backend.reseed_hook = self._reseed_replicas
             self.backend.respawn_hook = self._replay_shard
+            self.backend.prespawn_hook = self._archive_wal
+            self.backend.replay_hook = self._replay_wal
             self.shards: List = list(self.backend.clients)
             self.devices: Tuple = tuple(None for _ in range(S))
             default_lanes = S
@@ -502,6 +635,14 @@ class ShardedEngine:
         self._versions: Dict[str, Dict[int, ShardedDeploymentHandle]] = {}
         self._history: Dict[str, List[ShardedDeploymentHandle]] = {}
         self._deploy_lock = threading.RLock()
+        # serializes reshard operations; taken OUTSIDE _deploy_lock so a
+        # migration can wait out a worker respawn (whose hooks need the
+        # deploy lock) without deadlocking
+        self._reshard_lock = threading.Lock()
+        # WAL recovery counters (latency_decomposition / telemetry)
+        self.recovery_stats: Dict[str, float] = {
+            "wal_replays": 0, "wal_replayed_events": 0,
+            "wal_replay_lag_s": 0.0}
         self._closed = False
 
     # ------------------------------------------------------------ identity
@@ -636,6 +777,7 @@ class ShardedEngine:
             txns: List[Tuple[int, int]] = []
             try:
                 for s in np.unique(sid):
+                    facade._gate(int(s))
                     idx = np.flatnonzero(sid == s)
                     txn = facade.pipes[s].prepare(
                         keys[idx].tolist(), ts[idx].tolist(), rows[idx])
@@ -691,8 +833,24 @@ class ShardedEngine:
             cfg = PipelineConfig(**cfg_kw)
         elif cfg is not None and cfg_kw:
             raise ValueError("pass cfg or keywords, not both")
-        pipes = [self.shards[s].attach_stream(table, cfg)
-                 for s in self._active_ids()]
+        if (self.cfg.wal_dir is not None and not spec.replicated
+                and getattr(cfg, "wal", None) is None):
+            # durability: every partitioned stream shard gets its own WAL
+            # under <wal_dir>/shard-{shard}/<table>; the template keeps the
+            # `{shard}` placeholder — each side (in-process loop below,
+            # worker clients in attach) resolves its own shard id, and DDL
+            # replay after a respawn resolves to the NEW incarnation's dir
+            cfg = dataclasses.replace(
+                cfg if cfg is not None else PipelineConfig(),
+                wal=WalConfig(dir=os.path.join(
+                    self.cfg.wal_dir, "shard-{shard}", table)))
+        if self.backend is not None:
+            pipes = [self.shards[s].attach_stream(table, cfg)
+                     for s in self._active_ids()]
+        else:
+            pipes = [self.shards[s].attach_stream(
+                         table, wal_resolve_shard(cfg, s))
+                     for s in self._active_ids()]
         facade = ShardedPipeline(self, table, pipes, spec.replicated)
         self.streams[table] = facade
         self._stream_cfgs[table] = cfg
@@ -915,7 +1073,9 @@ class ShardedEngine:
                     eng.register_model(name, fn, params)
                 eng.set_cost_model(self.cost_model)
                 for tname in self._stream_cfgs:
-                    eng.attach_stream(tname, self._stream_cfgs[tname])
+                    eng.attach_stream(
+                        tname, wal_resolve_shard(self._stream_cfgs[tname],
+                                                 s))
                 self.shards.append(eng)
                 self.devices = self.devices + (dev,)
             # 2) streaming facades gain the new shard's pipe
@@ -937,10 +1097,14 @@ class ShardedEngine:
                     sh.handles = sh.handles + (h,)
                     if live is sh:
                         self.shards[s].publish_version(h)
-            # 5) routing: new queue, then background range migration
+            # 5) routing: new queue now; the range migration itself runs
+            #    OUTSIDE the deploy lock — a worker respawn mid-migration
+            #    needs that lock for its catalog/deployment/WAL replay
+            #    hooks, and _reshard waits out exactly such respawns
             self.router.add_queue()
+        with self._reshard_lock:
             self._reshard(self._ring.with_shard(s))
-            return s
+        return s
 
     def remove_shard(self, s: int) -> int:
         """Shrink the shard set: migrate every key range owned by ``s``
@@ -956,7 +1120,12 @@ class ShardedEngine:
                 raise ValueError(f"shard {s} is not active")
             if self.n_shards <= 1:
                 raise ValueError("cannot remove the last active shard")
+        # migrate outside the deploy lock (see add_shard): a respawn of
+        # some OTHER worker mid-migration must be able to run its replay
+        # hooks while _reshard retries the interrupted batch
+        with self._reshard_lock:
             moved = self._reshard(self._ring.without_shard(s))
+        with self._deploy_lock:
             self._retired.add(s)
             # no NEW traffic routes to s now (ring + _retired), but a
             # scatter that read the pre-reshard route table can still
@@ -1030,37 +1199,56 @@ class ShardedEngine:
         moved = 0
         for i in range(0, len(plan), step):
             batch = plan[i:i + step]
-            with self._route_lock:
-                groups: Dict[Tuple[int, int], List[int]] = {}
-                for a in batch:
-                    groups.setdefault((rt.arc_owner(a), tgt[a]),
-                                      []).append(a)
-                for (src, dst), arcs in groups.items():
-                    if src == dst:
-                        rt.set_owner(arcs, dst)
-                        continue
-                    arcset = np.asarray(arcs)
-                    for tname in partitioned:
-                        facade = self.streams.get(tname)
-                        if facade is not None:
-                            # staged events must be IN the table before
-                            # extract reads its snapshot
-                            facade.pipes[src].flush(flush_all=True)
-                        lk, ex, _mi = self._mig_ops(src)
-                        all_keys = lk(tname)
-                        if not all_keys:
-                            continue
-                        in_arc = rt.arc_of_hashes(
-                            key_hashes(np.asarray(all_keys)))
-                        sel = [all_keys[int(j)] for j in
-                               np.flatnonzero(np.isin(in_arc, arcset))]
-                        if not sel:
-                            continue
-                        ks, tsv, rws = ex(tname, sel)
-                        if len(ks):
-                            _lk, _ex, mi = self._mig_ops(dst)
-                            moved += mi(tname, ks, tsv, rws)
-                    rt.set_owner(arcs, dst)
+            # one batch is retried as a unit when a worker dies (or an
+            # RPC times out) mid-migration: migrate_in's prefix-skip
+            # makes a re-run idempotent, arcs already flipped regroup as
+            # src == dst no-ops, and the respawned worker's WAL replay
+            # (which needs the route lock we release between attempts)
+            # restores the source data the retry re-extracts
+            deadline = time.monotonic() + self.cfg.reshard_retry_s
+            while True:
+                try:
+                    with self._route_lock:
+                        groups: Dict[Tuple[int, int], List[int]] = {}
+                        for a in batch:
+                            groups.setdefault((rt.arc_owner(a), tgt[a]),
+                                              []).append(a)
+                        for (src, dst), arcs in groups.items():
+                            if src == dst:
+                                rt.set_owner(arcs, dst)
+                                continue
+                            arcset = np.asarray(arcs)
+                            for tname in partitioned:
+                                facade = self.streams.get(tname)
+                                if facade is not None:
+                                    # staged events must be IN the table
+                                    # before extract reads its snapshot
+                                    facade.pipes[src].flush(
+                                        flush_all=True)
+                                lk, ex, _mi = self._mig_ops(src)
+                                all_keys = lk(tname)
+                                if not all_keys:
+                                    continue
+                                in_arc = rt.arc_of_hashes(
+                                    key_hashes(np.asarray(all_keys)))
+                                sel = [all_keys[int(j)] for j in
+                                       np.flatnonzero(
+                                           np.isin(in_arc, arcset))]
+                                if not sel:
+                                    continue
+                                ks, tsv, rws = ex(tname, sel)
+                                if len(ks):
+                                    _lk, _ex, mi = self._mig_ops(dst)
+                                    moved += mi(tname, ks, tsv, rws)
+                            rt.set_owner(arcs, dst)
+                    break
+                except (ShardDownError, TimeoutError):
+                    if time.monotonic() >= deadline:
+                        raise
+                    # route lock released: the supervisor's respawn +
+                    # replay hooks can run; wait for every worker to
+                    # come back before re-running the batch
+                    self._await_ready()
         self._ring = new_ring
         with self._route_lock:
             self._routing = RouteTable(new_ring)
@@ -1103,6 +1291,88 @@ class ShardedEngine:
                         ph.table.version = client.proc.call(
                             "publish_version", name=name,
                             version=summary["version"])
+
+    def _await_ready(self, timeout: float = 30.0) -> bool:
+        """Block until every non-retired process worker is serving again
+        (in-process backend: trivially true). MUST be called without
+        ``_route_lock`` held — the supervisor's WAL replay needs it."""
+        if self.backend is None:
+            return True
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if all(c.ready or getattr(c, "retired", False)
+                   for c in self.backend.clients):
+                return True
+            time.sleep(0.05)
+        return False
+
+    # ------------------------------------------------- WAL recovery hooks
+    def _archive_wal(self, s: int) -> None:
+        """(process backend, pre-spawn) Move the dead shard's WAL tree
+        aside so the respawned incarnation starts a FRESH log — replay
+        re-ingests through the pipeline and re-logs into the new one.
+        Archives stack (``.recover-0``, ``.recover-1`` ...) if a worker
+        dies again before the previous replay finished; prefix-skip
+        makes replaying both idempotent."""
+        if self.cfg.wal_dir is None:
+            return
+        src = os.path.join(self.cfg.wal_dir, f"shard-{s}")
+        if not os.path.isdir(src):
+            return
+        k = 0
+        while os.path.exists(f"{src}.recover-{k}"):
+            k += 1
+        os.rename(src, f"{src}.recover-{k}")
+
+    def _replay_wal(self, s: int, client) -> None:
+        """(process backend, post-respawn) Replay the archived WAL of
+        shard ``s`` through the LIVE route table: events are re-scattered
+        to their current owners (usually ``s`` itself, but a reshard may
+        have moved keys while the worker was down) via ``migrate_in``,
+        whose prefix-skip keeps duplicates out. Runs after the catalog +
+        deployment replay, while the client is still ``ready=False`` so
+        no fresh ingest can race ahead of the replayed history."""
+        del client
+        if self.cfg.wal_dir is None:
+            return
+        t0 = time.monotonic()
+        dirs = sorted(d for d in os.listdir(self.cfg.wal_dir)
+                      if d.startswith(f"shard-{s}.recover-")) \
+            if os.path.isdir(self.cfg.wal_dir) else []
+        total = 0
+        for d in dirs:
+            rdir = os.path.join(self.cfg.wal_dir, d)
+            for tname in sorted(os.listdir(rdir)):
+                spec = self.specs.get(tname)
+                if (spec is None or spec.replicated
+                        or tname not in self.streams):
+                    continue
+                events: List[Tuple[object, float, np.ndarray]] = []
+                for keys, tsv, rows in wal_read_dir(
+                        os.path.join(rdir, tname)):
+                    for j in range(len(keys)):
+                        events.append((keys[j], float(tsv[j]), rows[j]))
+                if not events:
+                    continue
+                # global (ts, append-seq) order: stable sort reproduces
+                # exactly the order the buffer accepted them in
+                events.sort(key=lambda e: e[1])
+                ks = np.asarray([e[0] for e in events])
+                tsv = np.asarray([e[1] for e in events], np.float32)
+                rws = np.asarray([e[2] for e in events], np.float32)
+                with self._route_lock:
+                    owners = self._routing.owners_of(ks)
+                for o in np.unique(owners):
+                    idx = np.flatnonzero(owners == o)
+                    _lk, _ex, mi = self._mig_ops(int(o))
+                    for c in range(0, len(idx), 2048):
+                        sl = idx[c:c + 2048]
+                        total += mi(tname, ks[sl], tsv[sl], rws[sl])
+            shutil.rmtree(rdir)          # replayed in full: drop archive
+        self.recovery_stats["wal_replays"] += 1
+        self.recovery_stats["wal_replayed_events"] += total
+        self.recovery_stats["wal_replay_lag_s"] = \
+            time.monotonic() - t0
 
     # --------------------------------------------------------------- online
     def request(self, name: str, keys: Sequence, ts: Sequence[float],
@@ -1233,6 +1503,16 @@ class ShardedEngine:
                     for k, v in self.router.stats().items()})
         agg.update({f"admission_{k}": v
                     for k, v in self.resources.metrics().items()})
+        agg.update({f"recovery_{k}": v
+                    for k, v in self.recovery_stats.items()})
+        if self.backend is not None:
+            agg.update({f"recovery_{k}": v
+                        for k, v in self.backend.recovery_stats.items()})
+            tstats: Dict[str, float] = {}
+            for c in self.backend.clients:
+                for k, v in c.transport_stats.items():
+                    tstats[k] = tstats.get(k, 0) + v
+            agg.update({f"transport_{k}": v for k, v in tstats.items()})
         return agg
 
     # ------------------------------------------------------------ lifecycle

@@ -27,6 +27,7 @@ bookkeeping.
 from __future__ import annotations
 
 import os
+import signal
 import socket
 import subprocess
 import sys
@@ -37,7 +38,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.shard.proc.transport import Channel, encode_args
+from repro.shard.proc.faults import FaultInjector, FaultPlan
+from repro.shard.proc.transport import Channel, FrameCorrupt, encode_args
 from repro.shard.router import ShardDownError
 
 __all__ = ["ProcShardBackend", "ProcEngineClient", "ProcDeploymentHandle",
@@ -45,13 +47,19 @@ __all__ = ["ProcShardBackend", "ProcEngineClient", "ProcDeploymentHandle",
 
 _SPAWN_TIMEOUT_S = 120.0
 _RPC_TIMEOUT_S = 120.0
+# retry/backoff for unanswered RPC attempts: the frame (same req_id —
+# worker-side dedup keeps execution exactly-once) is re-sent after
+# base·2^attempt seconds, capped; the OVERALL call deadline still rules
+_RETRY_BASE_S = 0.25
+_RETRY_CAP_S = 5.0
 _TCMALLOC_PATHS = (
     "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
     "/usr/lib/libtcmalloc.so.4",
 )
 
 
-def worker_env(shard_id: int) -> Dict[str, str]:
+def worker_env(shard_id: int,
+               compile_cache: Optional[str] = None) -> Dict[str, str]:
     """Per-worker env pins (the SNIPPETS.md olmax ``run.sh`` recipe):
     exactly one XLA host device per worker, CPU platform + dtype pins,
     quiet logs, tcmalloc preload when available. These must be in the
@@ -76,38 +84,75 @@ def worker_env(shard_id: int) -> Dict[str, str]:
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (src, env.get("PYTHONPATH", "")) if p)
     env["REPRO_SHARD_WORKER_ID"] = str(shard_id)
+    # persistent jax compilation cache (REPRO_SHARD_COMPILE_CACHE or the
+    # engine's compile_cache_dir config): a RESPAWNED worker replays its
+    # WAL and rebuilds deployments against already-serialized XLA
+    # executables instead of recompiling them — compile time dominates
+    # cold-recovery MTTR once the interpreter import is amortized by the
+    # standby pool
+    cache = compile_cache or env.get("REPRO_SHARD_COMPILE_CACHE")
+    if cache:
+        env.setdefault("JAX_COMPILATION_CACHE_DIR", cache)
+        env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+        env.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
     # the worker must not itself default to the process backend
     env.pop("REPRO_SHARD_BACKEND", None)
     return env
 
 
 class _WorkerProc:
-    """One worker subprocess + its channel + pending-RPC bookkeeping."""
+    """One worker subprocess + its channel + pending-RPC bookkeeping.
 
-    def __init__(self, shard_id: int, flags, engine_kw: dict):
+    May *adopt* a pre-warmed standby process instead of cold-spawning
+    (``standby``), carries a shared ``stats`` dict so transport counters
+    survive respawns, and arms a parent-side fault injector (with a
+    SIGKILL trigger on this worker) when a ``fault_plan`` is given."""
+
+    def __init__(self, shard_id: int, flags, engine_kw: dict, *,
+                 fault_plan: Optional[FaultPlan] = None,
+                 standby=None, stats: Optional[Dict[str, int]] = None,
+                 compile_cache: Optional[str] = None):
         self.shard_id = shard_id
         self.alive = False
+        self.adopted = False
         self._lock = threading.Lock()
         self._pending: Dict[int, "threading.Event"] = {}
         self._results: Dict[int, Tuple[bool, object]] = {}
         self._req_seq = 0
-        parent_sock, child_sock = socket.socketpair()
-        env = worker_env(shard_id)
-        env["REPRO_SHARD_WORKER_FD"] = str(child_sock.fileno())
-        self.proc = subprocess.Popen(
-            [sys.executable, "-m", "repro.shard.proc.worker"],
-            env=env, pass_fds=[child_sock.fileno()])
-        child_sock.close()
-        self.ch = Channel(parent_sock)
+        self.stats = stats if stats is not None else {}
+        entry = standby.take() if standby is not None else None
+        if entry is not None:
+            # warm adoption: the standby already paid jax import and is
+            # parked on recv — our hello turns it into this shard
+            self.proc, parent_sock, self.ch = entry
+            self.adopted = True
+        else:
+            parent_sock, child_sock = socket.socketpair()
+            env = worker_env(shard_id, compile_cache=compile_cache)
+            env["REPRO_SHARD_WORKER_FD"] = str(child_sock.fileno())
+            self.proc = subprocess.Popen(
+                [sys.executable, "-m", "repro.shard.proc.worker"],
+                env=env, pass_fds=[child_sock.fileno()])
+            child_sock.close()
+            self.ch = Channel(parent_sock)
         # handshake: engine construction args out, ready frame back
         parent_sock.settimeout(_SPAWN_TIMEOUT_S)
         self.ch.send(("hello", {"shard_id": shard_id, "flags": flags,
-                                "engine_kw": engine_kw}))
+                                "engine_kw": engine_kw,
+                                "fault_plan": fault_plan}))
         tag, info = self.ch.recv()
         assert tag == "ready", f"worker {shard_id} bad handshake: {tag!r}"
         parent_sock.settimeout(None)
         self.pid = info["pid"]
         self.alive = True
+        # chaos: only after the handshake — bootstrap frames are sacred.
+        # The kill trigger lives HERE (not in the worker): SIGKILL on
+        # the Nth outbound frame models a worker dying mid-RPC.
+        if fault_plan is not None and fault_plan.active:
+            pid = self.pid
+            self.ch.fault_injector = FaultInjector(
+                fault_plan, role=f"client-{shard_id}",
+                kill_cb=lambda: os.kill(pid, signal.SIGKILL))
         self._reader = threading.Thread(
             target=self._read_loop, daemon=True,
             name=f"shard{shard_id}-reader")
@@ -117,7 +162,14 @@ class _WorkerProc:
     def _read_loop(self) -> None:
         try:
             while True:
-                req_id, ok, payload = self.ch.recv()
+                try:
+                    req_id, ok, payload = self.ch.recv()
+                except FrameCorrupt:
+                    # frame consumed, stream aligned: the retry layer
+                    # re-sends the request, so just count and read on
+                    self.stats["frame_corrupt"] = \
+                        self.stats.get("frame_corrupt", 0) + 1
+                    continue
                 with self._lock:
                     ev = self._pending.pop(req_id, None)
                     if ev is not None:
@@ -168,8 +220,47 @@ class _WorkerProc:
 
     def call(self, method: str, _timeout: float = _RPC_TIMEOUT_S,
              **args):
-        return self.wait(self.submit_blob(method, encode_args(args)),
-                         _timeout)
+        """RPC with bounded-exponential-backoff retry. An unanswered
+        attempt re-sends the SAME req_id/frame (drop/corrupt faults eat
+        frames; the worker's dedup keeps a merely-slow original from
+        double-executing), until the overall ``_timeout`` deadline.
+        ``ShardDownError`` is never retried — the supervisor owns
+        respawn, and the lane sheds/degrades meanwhile."""
+        blob = encode_args(args)
+        deadline = time.monotonic() + _timeout
+        with self._lock:
+            if not self.alive:
+                raise ShardDownError(
+                    f"shard {self.shard_id} worker is down")
+            self._req_seq += 1
+            req_id = self._req_seq
+            ev = self._pending[req_id] = threading.Event()
+        attempt = 0
+        while True:
+            try:
+                self.ch.send((req_id, method, blob))
+            except OSError:
+                self.mark_down()     # sets ev with ShardDownError below
+            attempt_s = min(_RETRY_BASE_S * (2.0 ** attempt),
+                            _RETRY_CAP_S)
+            remaining = deadline - time.monotonic()
+            if ev.wait(min(attempt_s, max(remaining, 0.001))):
+                with self._lock:
+                    ok, payload = self._results.pop(req_id)
+                if not ok:
+                    raise payload
+                return payload
+            if time.monotonic() >= deadline:
+                with self._lock:
+                    self._pending.pop(req_id, None)
+                    self._results.pop(req_id, None)
+                self.stats["rpc_timeouts"] = \
+                    self.stats.get("rpc_timeouts", 0) + 1
+                raise TimeoutError(
+                    f"shard {self.shard_id} RPC {method!r} timed out "
+                    f"after {_timeout}s ({attempt + 1} attempts)")
+            attempt += 1
+            self.stats["retries"] = self.stats.get("retries", 0) + 1
 
     # --------------------------------------------------------- lifecycle
     def dead(self) -> bool:
@@ -224,6 +315,10 @@ class ProcDeploymentHandle:
     ``request(keys, ts, rows)``, ``.table.schema``, ``.plan.joins``,
     ``.phys.feature_names``, ``.metrics``, ``.warm``, ``.live``."""
 
+    # lanes may pass ``timeout_s`` (derived from the RequestContext
+    # deadline) so a serve RPC cannot outlive its request's budget
+    supports_rpc_deadline = True
+
     def __init__(self, client: "ProcEngineClient", name: str,
                  version: int, summary: dict):
         from repro.core.engine import DeploymentHandle
@@ -248,14 +343,17 @@ class ProcDeploymentHandle:
         return self.client._alias.get((self.name, self.version),
                                       self.version)
 
-    def request(self, keys, ts, rows=None):
+    def request(self, keys, ts, rows=None, *,
+                timeout_s: Optional[float] = None):
         from repro.core.results import FeatureFrame
         if not self.client.ready:
             raise ShardDownError(
                 f"shard {self.client.shard_id} is respawning")
         t0 = time.perf_counter()
         columns, status, tver = self.client.proc.call(
-            "serve", name=self.name, version=self._wv(),
+            "serve",
+            _timeout=_RPC_TIMEOUT_S if timeout_s is None else timeout_s,
+            name=self.name, version=self._wv(),
             keys=np.asarray(keys), ts=np.asarray(ts, np.float32),
             rows=None if rows is None else np.asarray(rows, np.float32))
         self.table.version = max(self.table.version, tver)
@@ -381,8 +479,16 @@ class ProcEngineClient:
         from repro.core.optimizer import CostModel
         self.backend = backend
         self.shard_id = shard_id
+        # client-level so counters survive worker respawns (each
+        # _WorkerProc writes into this same dict)
+        self.transport_stats: Dict[str, int] = {
+            "retries": 0, "frame_corrupt": 0, "rpc_timeouts": 0}
         self.proc = _WorkerProc(shard_id, backend.flags,
-                                backend.engine_kw)
+                                backend.engine_kw,
+                                fault_plan=backend.fault_plan,
+                                standby=backend.standby,
+                                stats=self.transport_stats,
+                                compile_cache=backend.compile_cache)
         self._tables: Dict[str, _TableMirror] = {}
         self._streams: Dict[str, ProcPipelineClient] = {}
         self._alias: Dict[Tuple[str, int], int] = {}
@@ -433,8 +539,14 @@ class ProcEngineClient:
     def attach_stream(self, table: str, cfg=None, **cfg_kw
                       ) -> ProcPipelineClient:
         from repro.streaming.pipeline import PipelineConfig
+        from repro.streaming.wal import resolve_shard
         if cfg is None and cfg_kw:
             cfg = PipelineConfig(**cfg_kw)
+        # WAL dirs are per shard: substitute a ``{shard}`` placeholder
+        # HERE — this path also runs during catalog replay onto a
+        # respawned worker and on elastic add_client, so the new log
+        # lands in this shard's own directory
+        cfg = resolve_shard(cfg, self.shard_id)
         self.proc.call("attach_stream", table=table, cfg=cfg)
         pipe = ProcPipelineClient(self, table)
         self._streams[table] = pipe
@@ -521,9 +633,14 @@ class ProcShardBackend:
 
     MONITOR_INTERVAL_S = 0.2
 
-    def __init__(self, n_shards: int, *, flags, engine_kw: dict):
+    def __init__(self, n_shards: int, *, flags, engine_kw: dict,
+                 standby_workers: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 compile_cache: Optional[str] = None):
         self.flags = flags
         self.engine_kw = dict(engine_kw)
+        self.fault_plan = fault_plan
+        self.compile_cache = compile_cache
         self.clients: List[ProcEngineClient] = []
         # (method, kwargs) log replayed onto respawned workers, in order
         self._ddl_log: List[Tuple[str, dict]] = []
@@ -535,7 +652,23 @@ class ProcShardBackend:
         # replica re-seeding from a healthy shard
         self.reseed_hook: Optional[Callable[[int, "ProcEngineClient"],
                                             None]] = None
+        # WAL hooks (ShardedEngine): prespawn archives the dead shard's
+        # log dir BEFORE the replacement opens a fresh one; replay —
+        # after the catalog + deployments are back — re-scatters the
+        # archived events through the live RouteTable
+        self.prespawn_hook: Optional[Callable[[int], None]] = None
+        self.replay_hook: Optional[Callable[[int, "ProcEngineClient"],
+                                            None]] = None
+        # last-recovery timing, read by telemetry/bench_recovery
+        self.recovery_stats: Dict[str, float] = {}
         self._closing = False
+        # pool first: standbys warm in the background while the initial
+        # fleet cold-spawns (nothing is warm yet for the first spawns)
+        self.standby = None
+        if standby_workers > 0:
+            from repro.shard.proc.standby import StandbyPool
+            self.standby = StandbyPool(standby_workers,
+                                       compile_cache=compile_cache)
         for s in range(n_shards):
             self.clients.append(ProcEngineClient(self, s))
         self._monitor = threading.Thread(target=self._monitor_loop,
@@ -590,14 +723,30 @@ class ProcShardBackend:
                         f"{e!r}\n")
 
     def _respawn(self, client: ProcEngineClient) -> None:
+        t0 = time.perf_counter()
         client.ready = False
         client.proc.mark_down()
         try:
             client.proc.close(timeout=1.0)
         except Exception:
             pass
-        client.proc = _WorkerProc(client.shard_id, self.flags,
-                                  self.engine_kw)
+        if self.prespawn_hook is not None:
+            # archive the dead shard's WAL dir before the replacement
+            # worker opens a fresh log at the same path
+            try:
+                self.prespawn_hook(client.shard_id)
+            except Exception as e:
+                sys.stderr.write(f"# shard {client.shard_id} WAL "
+                                 f"archive failed: {e!r}\n")
+        client.proc = _WorkerProc(
+            client.shard_id, self.flags, self.engine_kw,
+            # a respawned worker must not inherit a live kill trigger —
+            # that would be a crash loop, not a chaos experiment
+            fault_plan=(self.fault_plan.disarmed()
+                        if self.fault_plan is not None else None),
+            standby=self.standby, stats=client.transport_stats,
+            compile_cache=self.compile_cache)
+        t_spawn = time.perf_counter()
         client.restarts += 1
         client._alias.clear()
         client._live.clear()
@@ -611,15 +760,26 @@ class ProcShardBackend:
                 self.reseed_hook(client.shard_id, client)
             if self.respawn_hook is not None:
                 self.respawn_hook(client.shard_id, client)
+            if self.replay_hook is not None:
+                self.replay_hook(client.shard_id, client)
         except BaseException:
             # a failed replay leaves the client not-ready; kill the
             # worker so the monitor's next pass retries the respawn
             client.proc.close(timeout=1.0)
             raise
         client.ready = True
+        now = time.perf_counter()
+        self.recovery_stats = {
+            "last_mttr_s": now - t0,
+            "last_spawn_s": t_spawn - t0,
+            "last_replay_s": now - t_spawn,
+            "last_adopted": float(client.proc.adopted),
+            "recoveries": self.recovery_stats.get("recoveries", 0) + 1}
 
     # --------------------------------------------------------- lifecycle
     def close(self) -> None:
         self._closing = True
         for client in self.clients:
             client.close()
+        if self.standby is not None:
+            self.standby.close()

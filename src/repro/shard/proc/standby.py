@@ -1,0 +1,149 @@
+"""Warm-standby worker pool: pre-forked, jax-imported, ready to adopt.
+
+A shard worker's spawn cost is dominated by jax import + backend init
+(~5 s on CPU) — dead weight on the recovery critical path, since the
+replacement process runs the exact same bootstrap every time. The pool
+keeps ``n`` workers parked PAST that bootstrap: each is spawned with
+``REPRO_SHARD_PREWARM=1``, eagerly imports the Engine stack, sends a
+``("warm", {pid})`` frame, and then blocks on ``recv`` waiting for a
+hello that may come much later.
+
+Adoption (DESIGN.md §12): when a shard dies, ``_WorkerProc`` asks the
+pool for a warmed entry and — instead of spawning — sends its normal
+``hello`` (shard identity, flags, engine kwargs) down the standby's
+existing channel. The standby wakes, constructs the Engine (cheap: jax
+is already resident), replies ``ready``, and IS the replacement worker;
+kill→serving MTTR drops from seconds to the catalog replay alone. Every
+``take`` triggers a background refill, so the pool self-heals back to
+``n`` after absorbing a failure burst.
+
+Standbys are shard-agnostic on purpose: the jax env pins
+(`worker_env`) are identical for every shard, and everything
+shard-specific arrives in the hello — one pool serves the whole fleet.
+"""
+from __future__ import annotations
+
+import socket
+import subprocess
+import sys
+import threading
+from types import SimpleNamespace
+from typing import List, Optional, Tuple
+
+from repro.shard.proc.transport import Channel
+
+__all__ = ["StandbyPool"]
+
+_WARM_TIMEOUT_S = 180.0
+
+
+class StandbyPool:
+    """``n`` pre-warmed shard workers awaiting adoption."""
+
+    def __init__(self, n: int, compile_cache: Optional[str] = None):
+        self.n = int(n)
+        self.compile_cache = compile_cache
+        self._lock = threading.Lock()
+        self._entries: List[SimpleNamespace] = []
+        self._closing = False
+        self.stats = {"spawned": 0, "adopted": 0, "misses": 0}
+        for _ in range(self.n):
+            self._spawn_one()
+
+    # ------------------------------------------------------------- spawn
+    def _spawn_one(self) -> None:
+        # lazy import: backend.py owns worker_env and imports this module
+        from repro.shard.proc.backend import worker_env
+        with self._lock:
+            if self._closing:
+                return
+        parent_sock, child_sock = socket.socketpair()
+        env = worker_env(-1, compile_cache=self.compile_cache)
+        # shard identity comes in hello
+        env["REPRO_SHARD_WORKER_FD"] = str(child_sock.fileno())
+        env["REPRO_SHARD_PREWARM"] = "1"
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.shard.proc.worker"],
+            env=env, pass_fds=[child_sock.fileno()])
+        child_sock.close()
+        entry = SimpleNamespace(proc=proc, sock=parent_sock,
+                                ch=Channel(parent_sock),
+                                warmed=threading.Event(), dead=False)
+        with self._lock:
+            if self._closing:
+                self._kill(entry)
+                return
+            self._entries.append(entry)
+            self.stats["spawned"] += 1
+        threading.Thread(target=self._watch, args=(entry,), daemon=True,
+                         name="standby-watch").start()
+
+    def _watch(self, entry) -> None:
+        """Consume the standby's single ``warm`` frame, then get out of
+        the way — after ``warmed`` is set nothing reads this channel
+        until an adopter runs its handshake on it."""
+        try:
+            entry.sock.settimeout(_WARM_TIMEOUT_S)
+            tag, info = entry.ch.recv()
+            entry.sock.settimeout(None)
+            if tag == "warm":
+                entry.pid = info["pid"]
+                entry.warmed.set()
+                return
+        except Exception:
+            pass
+        entry.dead = True
+        try:
+            entry.ch.close()
+        except OSError:
+            pass
+
+    # -------------------------------------------------------------- take
+    def take(self) -> Optional[Tuple[subprocess.Popen, socket.socket,
+                                     Channel]]:
+        """Pop one warmed standby as ``(proc, sock, channel)`` — or
+        ``None`` when nothing is warm yet (the caller cold-spawns).
+        Always kicks off a background refill on a hit."""
+        with self._lock:
+            if self._closing:
+                return None
+            hit = None
+            for i, e in enumerate(self._entries):
+                if e.warmed.is_set() and not e.dead \
+                        and e.proc.poll() is None:
+                    hit = self._entries.pop(i)
+                    break
+            if hit is None:
+                self.stats["misses"] += 1
+                return None
+            self.stats["adopted"] += 1
+        threading.Thread(target=self._spawn_one, daemon=True,
+                         name="standby-refill").start()
+        return hit.proc, hit.sock, hit.ch
+
+    @property
+    def n_warm(self) -> int:
+        with self._lock:
+            return sum(1 for e in self._entries
+                       if e.warmed.is_set() and not e.dead)
+
+    # --------------------------------------------------------- lifecycle
+    @staticmethod
+    def _kill(entry) -> None:
+        try:
+            entry.ch.close()               # EOF wakes the parked worker
+        except OSError:
+            pass
+        try:
+            entry.proc.wait(timeout=2.0)
+        except subprocess.TimeoutExpired:
+            entry.proc.kill()
+            entry.proc.wait(timeout=5.0)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closing = True
+            entries = list(self._entries)
+            self._entries.clear()
+        for e in entries:
+            self._kill(e)

@@ -1,9 +1,10 @@
-"""Length-prefixed pickle framing over a socketpair (DESIGN.md §11).
+"""Length-prefixed, CRC-framed pickle transport over a socketpair
+(DESIGN.md §11, §12).
 
 One AF_UNIX ``socketpair`` per worker, created by the parent and passed
 to the subprocess by fd inheritance (``REPRO_SHARD_WORKER_FD``). Frames
-are ``8-byte big-endian length || pickle payload``; a frame is a
-3-tuple:
+are ``8-byte big-endian length || 4-byte crc32 || pickle payload``; a
+frame is a 3-tuple:
 
     request:  (req_id, method, args_blob)     args_blob = pickle(dict)
     response: (req_id, ok, payload)           payload = result | exc
@@ -12,6 +13,18 @@ are ``8-byte big-endian length || pickle payload``; a frame is a
 (replicated dimension-table ingest) serializes the — potentially large —
 array payload ONCE and fans the same blob to every worker; the outer
 frame per worker differs only by its req_id.
+
+Integrity: the CRC covers the pickle payload. On mismatch ``recv``
+raises :class:`FrameCorrupt` — crucially AFTER consuming the full
+declared length, so the stream stays frame-aligned and the reader can
+skip the bad frame and keep going (the sender's retry/backoff layer
+re-sends; see ``proc/backend.py``). Without the CRC a flipped bit
+becomes a pickle crash or, worse, silently wrong data.
+
+Fault injection: a :class:`~repro.shard.proc.faults.FaultInjector`
+assigned to ``Channel.fault_injector`` intercepts every outbound frame
+(drop / delay / duplicate / corrupt / kill-on-nth) — the chaos suite's
+only hook into the wire, so production paths carry zero fault branches.
 
 Sends are locked (many lanes share one worker channel); receives are
 single-reader (the parent's per-worker reader thread / the worker's
@@ -24,12 +37,19 @@ import pickle
 import socket
 import struct
 import threading
+import zlib
 from typing import Any, Optional, Tuple
 
-__all__ = ["Channel", "encode_args", "decode_args"]
+__all__ = ["Channel", "FrameCorrupt", "encode_args", "decode_args"]
 
-_LEN = struct.Struct(">Q")
+_HDR = struct.Struct(">QI")          # payload length, crc32(payload)
 _PROTO = pickle.HIGHEST_PROTOCOL
+
+
+class FrameCorrupt(RuntimeError):
+    """A received frame failed its CRC (or would not unpickle). The
+    stream is still aligned — the full frame was consumed — so this is
+    RETRYABLE: drop the frame, count it, read the next one."""
 
 
 def encode_args(args: dict) -> bytes:
@@ -48,12 +68,25 @@ class Channel:
         self._sock = sock
         self._send_lock = threading.Lock()
         self._closed = False
+        # chaos hook — installed only AFTER the hello/ready handshake so
+        # bootstrap frames are never dropped (proc/faults.py)
+        self.fault_injector = None  # type: Optional[Any]
 
     # -------------------------------------------------------------- send
     def send(self, obj: Tuple) -> None:
         payload = pickle.dumps(obj, protocol=_PROTO)
+        inj = self.fault_injector
+        if inj is None:
+            frames = [(payload, zlib.crc32(payload))]
+        else:
+            # the injector decides what actually hits the wire: [] drops
+            # the frame, two entries duplicate it, a mutated payload
+            # under the ORIGINAL crc models on-wire corruption (length
+            # unchanged, so the receiver stays frame-aligned)
+            frames = inj.frames(payload)
         with self._send_lock:
-            self._sock.sendall(_LEN.pack(len(payload)) + payload)
+            for p, crc in frames:
+                self._sock.sendall(_HDR.pack(len(p), crc) + p)
 
     # -------------------------------------------------------------- recv
     def _recv_exact(self, n: int) -> bytes:
@@ -67,9 +100,18 @@ class Channel:
 
     def recv(self) -> Any:
         """Blocking read of one frame. Raises ``EOFError`` when the peer
-        is gone (worker death / parent exit)."""
-        (length,) = _LEN.unpack(self._recv_exact(_LEN.size))
-        return pickle.loads(self._recv_exact(length))
+        is gone (worker death / parent exit) and ``FrameCorrupt`` on a
+        CRC/unpickle failure — after consuming the whole frame, so the
+        caller may simply read the next one."""
+        length, crc = _HDR.unpack(self._recv_exact(_HDR.size))
+        payload = self._recv_exact(length)      # always consume: stay aligned
+        if zlib.crc32(payload) != crc:
+            raise FrameCorrupt(
+                f"frame of {length} bytes failed crc32 check")
+        try:
+            return pickle.loads(payload)
+        except Exception as e:                  # garbage that passed CRC
+            raise FrameCorrupt(f"frame would not unpickle: {e!r}") from e
 
     # --------------------------------------------------------- lifecycle
     def close(self) -> None:

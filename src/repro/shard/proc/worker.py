@@ -17,15 +17,21 @@ thread-safe; serving dispatches must not queue behind a multi-second
 """
 from __future__ import annotations
 
+import collections
 import os
 import socket
 import sys
+import threading
 import traceback
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from repro.shard.proc.transport import Channel, decode_args
+from repro.shard.proc.transport import Channel, FrameCorrupt, decode_args
+
+# completed responses kept for duplicate-request resend (retry/backoff
+# makes delivery at-least-once; this cache keeps execution exactly-once)
+_DONE_CACHE = 256
 
 
 def _np_columns(columns) -> dict:
@@ -47,32 +53,72 @@ class WorkerServer:
         self.pool = ThreadPoolExecutor(
             max_workers=4, thread_name_prefix=f"shard{shard_id}-rpc")
         self._stopping = False
+        # at-least-once delivery (client retries resend the SAME req_id)
+        # must stay exactly-once execution: duplicates of an in-flight
+        # request are dropped (the original will answer), duplicates of
+        # a finished one get its cached response re-sent
+        self._dedup_lock = threading.Lock()
+        self._inflight: set = set()
+        self._done: "collections.OrderedDict" = collections.OrderedDict()
+        self.frames_corrupt = 0
+        self.dups_dropped = 0
 
     # --------------------------------------------------------------- loop
     def serve_forever(self) -> None:
         while not self._stopping:
             try:
                 req_id, method, blob = self.ch.recv()
+            except FrameCorrupt:
+                # frame consumed, stream still aligned: the client's
+                # retry layer re-sends — just keep reading
+                self.frames_corrupt += 1
+                continue
             except EOFError:
                 break            # parent gone: exit quietly
+            with self._dedup_lock:
+                if req_id in self._inflight:
+                    self.dups_dropped += 1
+                    continue
+                cached = self._done.get(req_id)
+                if cached is None:
+                    self._inflight.add(req_id)
+            if cached is not None:
+                self.dups_dropped += 1
+                self.pool.submit(self.ch.send, cached)
+                continue
             self.pool.submit(self._handle, req_id, method, blob)
         self.pool.shutdown(wait=True)
         self.engine.close()
 
+    def _finish(self, req_id, resp) -> None:
+        with self._dedup_lock:
+            self._inflight.discard(req_id)
+            if resp is not None:
+                self._done[req_id] = resp
+                while len(self._done) > _DONE_CACHE:
+                    self._done.popitem(last=False)
+
     def _handle(self, req_id, method, blob) -> None:
+        resp = None
         try:
-            args = decode_args(blob) if blob else {}
-            result = getattr(self, "rpc_" + method)(**args)
-            self.ch.send((req_id, True, result))
-        except BaseException as e:
-            # exceptions cross the boundary as values; strip unpicklable
-            # baggage rather than killing the worker
             try:
-                self.ch.send((req_id, False, e))
-            except Exception:
-                self.ch.send((req_id, False, RuntimeError(
-                    f"{type(e).__name__}: {e}\n"
-                    + traceback.format_exc(limit=8))))
+                args = decode_args(blob) if blob else {}
+                result = getattr(self, "rpc_" + method)(**args)
+                resp = (req_id, True, result)
+                self.ch.send(resp)
+            except BaseException as e:
+                # exceptions cross the boundary as values; strip
+                # unpicklable baggage rather than killing the worker
+                try:
+                    resp = (req_id, False, e)
+                    self.ch.send(resp)
+                except Exception:
+                    resp = (req_id, False, RuntimeError(
+                        f"{type(e).__name__}: {e}\n"
+                        + traceback.format_exc(limit=8)))
+                    self.ch.send(resp)
+        finally:
+            self._finish(req_id, resp)
 
     def _pipe(self, table: str):
         pipe = self.engine.streams.get(table)
@@ -235,7 +281,9 @@ class WorkerServer:
         return self.engine.tables[table].version
 
     def rpc_ping(self):
-        return {"shard": self.shard_id, "pid": os.getpid()}
+        return {"shard": self.shard_id, "pid": os.getpid(),
+                "frames_corrupt": self.frames_corrupt,
+                "dups_dropped": self.dups_dropped}
 
     def rpc_shutdown(self):
         self._stopping = True
@@ -245,13 +293,32 @@ def main() -> int:
     fd = int(os.environ["REPRO_SHARD_WORKER_FD"])
     sock = socket.socket(fileno=fd)
     ch = Channel(sock)
+    if os.environ.get("REPRO_SHARD_PREWARM") == "1":
+        # standby pool (proc/standby.py): pay the multi-second jax +
+        # Engine import NOW, while parked, then tell the parent we're
+        # warm. The hello — carrying the actual shard identity — may
+        # arrive much later, at adoption time.
+        from repro.core.engine import Engine  # noqa: F401  (import cost)
+        ch.send(("warm", {"pid": os.getpid()}))
     # hello carries the engine construction args (sent before any RPC)
-    tag, hello = ch.recv()
+    try:
+        tag, hello = ch.recv()
+    except EOFError:
+        return 0       # never adopted: the standby pool closed quietly
     assert tag == "hello", f"expected hello frame, got {tag!r}"
     server = WorkerServer(ch, shard_id=hello["shard_id"],
                           flags=hello["flags"],
                           engine_kw=hello.get("engine_kw", {}))
     ch.send(("ready", {"pid": os.getpid()}))
+    # chaos: install the fault injector only AFTER the handshake, so
+    # bootstrap frames are never faulted; the worker side runs the plan
+    # disarmed (frame faults only) — the kill trigger belongs to the
+    # parent, which can SIGKILL this process mid-RPC
+    plan = hello.get("fault_plan")
+    if plan is not None and plan.disarmed().active:
+        from repro.shard.proc.faults import FaultInjector
+        ch.fault_injector = FaultInjector(
+            plan.disarmed(), role=f"worker-{hello['shard_id']}")
     server.serve_forever()
     return 0
 

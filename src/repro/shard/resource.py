@@ -80,7 +80,7 @@ class ResourceManager:
         self._slot_freed = threading.Condition(self._lock)
         self._inflight: Dict[str, int] = {}
         self.stats = {"admitted": 0, "shed_deadline": 0,
-                      "shed_worker_down": 0,
+                      "shed_worker_down": 0, "served_degraded": 0,
                       "rejected_inflight": 0, "rejected_queue_depth": 0}
 
     # ---------------------------------------------------------------- admit
@@ -146,6 +146,12 @@ class ResourceManager:
         with self._lock:
             self.stats["shed_worker_down" if kind == "worker_down"
                        else "shed_deadline"] += n
+
+    def record_degraded(self, n: int = 1) -> None:
+        """Count rows answered from the stale tier (STATUS_DEGRADED) —
+        the step of the degradation ladder between OK and SHED."""
+        with self._lock:
+            self.stats["served_degraded"] += n
 
     def _release(self, name: str) -> None:
         with self._lock:

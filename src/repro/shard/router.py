@@ -287,6 +287,20 @@ class _Lane:
         if not live:
             return
         handle = live[0].handle
+        # per-RPC deadline (process backend): the serve RPC gets the
+        # tightest remaining request budget among the coalesced items,
+        # so a wedged worker turns into a bounded TimeoutError → shed
+        # instead of pinning the lane for the transport's default 120 s
+        timeout_s: Optional[float] = None
+        if getattr(handle, "supports_rpc_deadline", False):
+            for it in live:
+                if it.ctx is not None and it.ctx.deadline is not None:
+                    rem = it.ctx.remaining()
+                    if rem is not None:
+                        timeout_s = rem if timeout_s is None \
+                            else min(timeout_s, rem)
+            if timeout_s is not None:
+                timeout_s = max(timeout_s, 0.05)
         keys = np.concatenate([it.keys for it in live])
         ts = np.concatenate([it.ts for it in live])
         rows = None
@@ -317,19 +331,26 @@ class _Lane:
                     if re is not None:
                         re = np.concatenate(
                             [re, np.repeat(re[-1:], pad, axis=0)])
-                frame = handle.request(ke, te, re)
+                if timeout_s is not None:
+                    frame = handle.request(ke, te, re,
+                                           timeout_s=timeout_s)
+                else:
+                    frame = handle.request(ke, te, re)
                 col_parts.append(
                     {k: np.asarray(v)[:nb] for k, v in frame.columns.items()})
                 st_parts.append(np.asarray(frame.status)[:nb])
                 tver = max(tver, frame.table_version)
                 self.stats["dispatches"] += 1
                 self.stats["rows"] += nb
-        except ShardDownError:
-            # dead worker: shed, don't error — the caller gets a clean
-            # whole-batch STATUS_SHED while the supervisor respawns
+        except (ShardDownError, TimeoutError) as e:
+            # dead worker — or one that blew the per-RPC deadline: shed,
+            # don't error — the caller gets a clean whole-batch
+            # STATUS_SHED while the supervisor respawns / retries
+            reason = "worker_down" if isinstance(e, ShardDownError) \
+                else "deadline"
             for it in live:
                 it.shed = True
-                it.shed_reason = "worker_down"
+                it.shed_reason = reason
                 sq.stats["shed_sub_batches"] += 1
                 it.done.set()
             return

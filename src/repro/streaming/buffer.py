@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import bisect
 import threading
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -41,11 +42,13 @@ class StreamBufferStats:
     dropped_late: int = 0      # beyond-watermark, unrepairable
     reordered: int = 0         # arrived out of order but repaired
     max_staged: int = 0        # high-water mark of staged events
+    txn_auto_aborted: int = 0  # prepares dropped by the prepare TTL
 
     def snapshot(self) -> Dict[str, int]:
         return dict(accepted=self.accepted, released=self.released,
                     dropped_late=self.dropped_late,
-                    reordered=self.reordered, max_staged=self.max_staged)
+                    reordered=self.reordered, max_staged=self.max_staged,
+                    txn_auto_aborted=self.txn_auto_aborted)
 
 
 class StreamBuffer:
@@ -59,7 +62,8 @@ class StreamBuffer:
     """
 
     def __init__(self, *, lateness: float = 1.0,
-                 max_staged: int = 65536):
+                 max_staged: int = 65536,
+                 prepare_ttl_s: float = 0.0, wal=None):
         if lateness < 0:
             raise ValueError("lateness must be >= 0")
         self.lateness = float(lateness)
@@ -80,12 +84,28 @@ class StreamBuffer:
         # advance past it) — the invariant 2PC ingest rests on.
         self._pending: Dict[int, List[Tuple[object, float, np.ndarray]]] = {}
         self._txn_seq = 0
+        # prepare TTL: a coordinator that dies between prepare and commit
+        # would otherwise hold the involved keys' watermarks FOREVER.
+        # prepare_ttl_s > 0 stamps each txn with a wall deadline; expired
+        # prepares are auto-aborted (frontier holds released) before any
+        # release/prepare/commit decision.
+        self.prepare_ttl_s = float(prepare_ttl_s)
+        self._txn_deadline: Dict[int, float] = {}
+        self._expired_txns: set = set()
+        # write-ahead log (streaming.wal.WriteAheadLog or None): accepted
+        # events are appended UNDER this lock, before ready() could ever
+        # release them — nothing reaches the table without being logged
+        self.wal = wal
 
     # ------------------------------------------------------------------ push
     def push(self, key, ts: float, row: np.ndarray) -> bool:
         """Stage one event. Returns False iff dropped (beyond watermark)."""
         with self._lock:
-            return self._push_locked(key, float(ts), row)
+            ok = self._push_locked(key, float(ts), row)
+            if ok and self.wal is not None:
+                self.wal.append([key], np.asarray([ts], np.float32),
+                                np.asarray(row, np.float32)[None])
+            return ok
 
     def push_batch(self, keys: Sequence, ts: Sequence[float],
                    rows: np.ndarray, *, all_or_nothing: bool = False) -> int:
@@ -103,8 +123,20 @@ class StreamBuffer:
                     if (not np.isfinite(t)
                             or t < self._frontier.get(k, float("-inf"))):
                         return 0
-            for i, k in enumerate(keys):
-                n_ok += bool(self._push_locked(k, float(ts[i]), rows[i]))
+            acc: List[int] = []
+            try:
+                for i, k in enumerate(keys):
+                    if self._push_locked(k, float(ts[i]), rows[i]):
+                        acc.append(i)
+                        n_ok += 1
+            finally:
+                # one WAL record for the whole accepted slice — logged
+                # even if a later event raised (those staged are real)
+                if acc and self.wal is not None:
+                    self.wal.append([keys[i] for i in acc],
+                                    np.asarray([float(ts[i]) for i in acc],
+                                               np.float32),
+                                    rows[np.asarray(acc)])
         return n_ok
 
     # ------------------------------------------------------ 2PC (prepare)
@@ -121,6 +153,7 @@ class StreamBuffer:
         guaranteed to stage every event successfully."""
         rows = np.asarray(rows, np.float32)
         with self._lock:
+            self._expire_txns_locked()
             for i, k in enumerate(keys):
                 t = float(ts[i])
                 if (not np.isfinite(t)
@@ -131,13 +164,26 @@ class StreamBuffer:
             self._pending[txn] = [
                 (k, float(ts[i]), np.asarray(rows[i], np.float32))
                 for i, k in enumerate(keys)]
+            if self.prepare_ttl_s > 0:
+                self._txn_deadline[txn] = (time.monotonic()
+                                           + self.prepare_ttl_s)
             return txn
 
-    def commit(self, txn: int) -> int:
+    def commit(self, txn: int) -> List[Tuple[object, float, np.ndarray]]:
         """Phase 2: stage the parked batch. Cannot reject (see
-        ``prepare``); returns the number of events staged."""
+        ``prepare``) unless the prepare TTL already auto-aborted it;
+        returns the staged events (the pipeline logs them to the WAL as
+        ONE atomic record — a crash between prepare and commit replays
+        as an abort)."""
         with self._lock:
+            self._expire_txns_locked()
+            if txn in self._expired_txns:
+                raise ValueError(
+                    f"txn {txn} was auto-aborted: its prepare exceeded "
+                    f"the {self.prepare_ttl_s}s prepare TTL (coordinator "
+                    f"presumed dead); nothing was staged")
             events = self._pending.pop(txn)
+            self._txn_deadline.pop(txn, None)
             for k, t, row in events:
                 if not self._push_locked(k, t, row):
                     # unreachable by construction (frontier held); guard
@@ -145,15 +191,37 @@ class StreamBuffer:
                     raise AssertionError(
                         f"prepared event (key={k!r}, ts={t}) rejected at "
                         f"commit — frontier hold violated")
-            return len(events)
+            if events and self.wal is not None:
+                self.wal.append(
+                    [k for k, _t, _r in events],
+                    np.asarray([t for _k, t, _r in events], np.float32),
+                    np.stack([r for _k, _t, r in events]))
+            return events
 
     def abort(self, txn: int) -> None:
         """Drop a prepared batch and release its frontier holds."""
         with self._lock:
             self._pending.pop(txn, None)
+            self._txn_deadline.pop(txn, None)
+
+    def _expire_txns_locked(self) -> None:
+        """Auto-abort prepares older than the TTL — a dead coordinator
+        must not hold key watermarks forever (callers hold the lock)."""
+        if not self._txn_deadline:
+            return
+        now = time.monotonic()
+        for txn in [t for t, dl in self._txn_deadline.items()
+                    if now > dl]:
+            self._pending.pop(txn, None)
+            self._txn_deadline.pop(txn, None)
+            self._expired_txns.add(txn)
+            self.stats.txn_auto_aborted += 1
+        if len(self._expired_txns) > 4096:   # bounded tombstone set
+            self._expired_txns.clear()
 
     def _txn_holds(self) -> Dict[object, float]:
         """Per-key minimum pending-txn ts (callers hold the lock)."""
+        self._expire_txns_locked()
         holds: Dict[object, float] = {}
         for events in self._pending.values():
             for k, t, _row in events:

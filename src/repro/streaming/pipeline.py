@@ -29,6 +29,7 @@ import numpy as np
 from repro.featurestore.table import Table
 from repro.streaming.buffer import StreamBuffer
 from repro.streaming.retention import RetentionPolicy, apply_retention
+from repro.streaming.wal import WalConfig, WriteAheadLog
 
 __all__ = ["IngestPipeline", "PipelineConfig"]
 
@@ -40,6 +41,13 @@ class PipelineConfig:
     max_flush_batch: int = 1024      # amortization cap per ingest call
     max_staged: int = 65536          # buffer bound (backpressure)
     retention: RetentionPolicy = RetentionPolicy(ttl=0.0)
+    # auto-abort prepared-but-uncommitted 2PC transactions after this
+    # long (0 disables): a dead coordinator must not pin watermarks
+    prepare_ttl_s: float = 0.0
+    # write-ahead log config (None disables): accepted events are logged
+    # before they become flushable; replaying the log reproduces the
+    # table bit-identically (streaming.wal, DESIGN.md §12)
+    wal: Optional[WalConfig] = None
 
 
 class IngestPipeline:
@@ -53,8 +61,11 @@ class IngestPipeline:
     def __init__(self, table: Table, cfg: PipelineConfig = PipelineConfig()):
         self.table = table
         self.cfg = cfg
+        self.wal = WriteAheadLog(cfg.wal) if cfg.wal is not None else None
         self.buffer = StreamBuffer(lateness=cfg.lateness,
-                                   max_staged=cfg.max_staged)
+                                   max_staged=cfg.max_staged,
+                                   prepare_ttl_s=cfg.prepare_ttl_s,
+                                   wal=self.wal)
         # attaching to a non-empty table: events older than the already-
         # written history are unrepairable and must be rejected at push
         self.buffer.seed_frontier(table.last_ts_by_key())
@@ -100,12 +111,14 @@ class IngestPipeline:
         return self.buffer.prepare(keys, ts, rows)
 
     def commit_txn(self, txn: int) -> int:
-        """Phase 2: stage the parked batch (guaranteed to succeed) and
-        wake the flusher."""
-        n = self.buffer.commit(txn)
+        """Phase 2: stage the parked batch (guaranteed to succeed unless
+        the prepare TTL auto-aborted it) and wake the flusher. The WAL —
+        when attached — gets the whole batch as ONE record at commit
+        time, so replay-after-crash has 2PC atomicity for free."""
+        events = self.buffer.commit(txn)
         with self._work:
             self._work.notify()
-        return n
+        return len(events)
 
     def abort_txn(self, txn: int) -> None:
         self.buffer.abort(txn)
@@ -169,6 +182,10 @@ class IngestPipeline:
         if dropped:
             self.stats["ttl_compactions"] += 1
             self.stats["ttl_dropped"] += dropped
+        if self.wal is not None and self.cfg.retention.enabled:
+            # segments whose newest event fell behind the TTL horizon
+            # hold only rows a replay would immediately compact away
+            self.wal.truncate(self._event_clock - self.cfg.retention.ttl)
 
     def _flush_loop(self) -> None:
         while True:
@@ -236,6 +253,9 @@ class IngestPipeline:
         out.update(self.buffer.stats.snapshot())
         out["staged"] = self.buffer.n_staged
         out["table_version"] = self.table.version
+        if self.wal is not None:
+            out.update({f"wal_{k}": v
+                        for k, v in self.wal.metrics().items()})
         return out
 
     def close(self, *, drain: bool = True) -> None:
@@ -249,6 +269,8 @@ class IngestPipeline:
         self._thread.join(timeout=5.0)
         if drain and not already:
             self._flush_once(flush_all=True)
+        if self.wal is not None and not already:
+            self.wal.close()
 
     def __enter__(self) -> "IngestPipeline":
         return self

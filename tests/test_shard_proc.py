@@ -17,7 +17,8 @@ import pytest
 from repro.core import dsl
 from repro.core.engine import Engine
 from repro.core.optimizer import OptFlags
-from repro.core.results import STATUS_OK, STATUS_SHED, STATUS_UNKNOWN_KEY
+from repro.core.results import (STATUS_DEGRADED, STATUS_OK, STATUS_SHED,
+                                STATUS_UNKNOWN_KEY)
 from repro.featurestore.table import TableSchema
 from repro.shard import ShardConfig, ShardedEngine
 
@@ -158,10 +159,10 @@ def test_proc_transactional_insert_all_or_nothing():
 
 def test_proc_killed_worker_shed_respawn_recover():
     """SIGKILL one worker mid-service: in-flight and subsequent batches
-    for its keys shed whole-batch (worker_down, no hung futures, no raw
-    exceptions), the supervisor respawns it, replays the catalog and
-    deployments, and serving resumes; lost partitioned data re-enters
-    through the stream."""
+    for its keys degrade (stale tier, DESIGN.md §12) or shed whole-batch
+    — worker_down, no hung futures, no raw exceptions — the supervisor
+    respawns it, replays the catalog and deployments, and serving
+    resumes; lost partitioned data re-enters through the stream."""
     keys, ts, rows = _events(n=200, n_keys=8)
     se = ShardedEngine(ShardConfig(n_shards=2), backend="process")
     se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
@@ -176,21 +177,25 @@ def test_proc_killed_worker_shed_respawn_recover():
     time.sleep(0.05)
     t0 = time.perf_counter()
     fr = se.request("q", rk, rt)
-    # whole-batch shed, immediately — a hung gather would eat the 120 s
-    # RPC timeout here
+    # answered immediately — a hung gather would eat the 120 s RPC
+    # timeout here. Every request served the first OK batch, so the
+    # stale tier covers the dead shard's keys: the ladder answers a
+    # DEGRADED/OK mix; an all-SHED frame is the cold-cache fallback
     assert time.perf_counter() - t0 < 30.0
-    assert (fr.status == STATUS_SHED).all()
+    st = set(fr.status.tolist())
+    assert st <= {STATUS_OK, STATUS_DEGRADED} or st == {STATUS_SHED}
 
     deadline = time.time() + 90
     while time.time() < deadline:
         fr = se.request("q", rk, rt)
-        if not (fr.status == STATUS_SHED).any():
+        if set(fr.status.tolist()) <= {STATUS_OK, STATUS_UNKNOWN_KEY}:
             break
         time.sleep(0.1)
     assert se.worker_restarts == 1
     # respawned shard serves; its keys are UNKNOWN until re-ingest
     assert set(fr.status.tolist()) <= {STATUS_OK, STATUS_UNKNOWN_KEY}
-    assert se.resources.metrics()["shed_worker_down"] >= 1
+    m = se.resources.metrics()
+    assert m["served_degraded"] >= 1 or m["shed_worker_down"] >= 1
     pipe.push_batch(keys, ts + 3000.0, rows)
     pipe.flush()
     fr = se.request("q", rk, [9000.0] * 8)
@@ -229,3 +234,74 @@ def test_proc_elastic_add_shard():
     res = se.query_offline("jq")
     assert len(res["__version_vector"]) == 3
     se.close()
+
+
+def test_proc_sigkill_during_add_shard_migration_bit_identical():
+    """SIGKILL the NEW worker while add_shard's arc-batch migration is
+    feeding it (A→B, B dies mid-copy): the interrupted batch retries —
+    the source keeps its stale copy, ``migrate_in`` prefix-skips what
+    already landed, and ``_reshard`` waits out the respawn — so
+    ``add_shard`` completes and the 3-shard output is bit-identical to
+    an in-process engine grown the same way without any failure."""
+    import shutil
+    import tempfile
+    import threading
+
+    keys, ts, rows = _events(n=300, n_keys=16)
+    wal_dir = tempfile.mkdtemp(prefix="mig-wal-")
+    se = ShardedEngine(
+        ShardConfig(n_shards=2, wal_dir=wal_dir, standby_workers=1,
+                    migrate_batch_arcs=2),
+        backend="process")
+    ref = ShardedEngine(ShardConfig(n_shards=2))       # in-process twin
+    try:
+        for eng in (se, ref):
+            eng.create_table(SCHEMA, max_keys=64, capacity=64,
+                             bucket_size=8)
+            pipe = eng.attach_stream("events", flush_interval_s=0.05)
+            pipe.push_batch(keys, ts, rows)
+            pipe.flush()
+            eng.deploy("q", SQL)
+        rk, rtimes = list(range(16)), [2000.0] * 16
+        assert (se.request("q", rk, rtimes).status == STATUS_OK).all()
+
+        grown = []
+        def grow():
+            grown.append(se.add_shard())
+        th = threading.Thread(target=grow)
+        th.start()
+        # wait until migration has flipped >= 1 arc to the new shard —
+        # we are then provably inside the arc-batch copy loop (~32
+        # batches at 2 arcs/batch over 64 vnodes) — and SIGKILL it
+        deadline = time.time() + 120
+        killed = False
+        while time.time() < deadline and not killed:
+            if se._routing.shard_counts().get(2, 0) > 0:
+                os.kill(se.shards[2].proc.pid, signal.SIGKILL)
+                killed = True
+            time.sleep(0.002)
+        assert killed, "migration never started"
+        th.join(timeout=180)
+        assert not th.is_alive(), "add_shard hung after mid-copy kill"
+        assert grown == [2] and se.n_shards == 3
+        assert se.worker_restarts >= 1
+
+        deadline = time.time() + 90
+        while time.time() < deadline:
+            fr = se.request("q", rk, rtimes)
+            if (fr.status == STATUS_OK).all():
+                break
+            time.sleep(0.1)
+        assert (fr.status == STATUS_OK).all()
+
+        ref.add_shard()
+        want = ref.request("q", rk, rtimes)
+        for n in want.columns:
+            assert np.array_equal(np.asarray(want[n]),
+                                  np.asarray(fr[n])), n
+        # the respawned new shard really owns traffic again
+        assert se._routing.shard_counts().get(2, 0) > 0
+    finally:
+        se.close()
+        ref.close()
+        shutil.rmtree(wal_dir, ignore_errors=True)

@@ -1,0 +1,287 @@
+"""Write-ahead ingest log (DESIGN.md §12): record framing, rotation,
+torn-tail tolerance, TTL truncation, pipeline integration (accepted
+events only, 2PC commit as one atomic record), prepare-TTL auto-abort,
+and bit-identical replay through a fresh engine."""
+import dataclasses
+import os
+import struct
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.featurestore.table import TableSchema
+from repro.streaming import IngestPipeline, PipelineConfig, StreamBuffer
+from repro.streaming.retention import RetentionPolicy
+from repro.streaming.wal import (WalConfig, WriteAheadLog, read_dir,
+                                 read_segment, resolve_shard)
+
+SCHEMA = TableSchema("events", key_col="user", ts_col="ts",
+                     value_cols=("amount", "aux"))
+
+SQL = """SELECT SUM(amount) OVER w AS s, COUNT(amount) OVER w AS c
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 10 PRECEDING AND CURRENT ROW)"""
+
+
+def _batch(n, t0=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = [int(k) for k in rng.integers(0, 4, n)]
+    ts = (t0 + np.sort(rng.uniform(0, 10.0, n))).astype(np.float32)
+    rows = rng.normal(size=(n, 2)).astype(np.float32)
+    return keys, ts, rows
+
+
+# ------------------------------------------------------------------- unit
+def test_wal_roundtrip_and_resume(tmp_path):
+    d = str(tmp_path / "wal")
+    wal = WriteAheadLog(WalConfig(dir=d, sync=False))
+    k1, t1, r1 = _batch(8, seed=1)
+    k2, t2, r2 = _batch(5, t0=20.0, seed=2)
+    wal.append(k1, t1, r1)
+    wal.append(k2, t2, r2)
+    wal.append([], np.zeros(0, np.float32),
+               np.zeros((0, 2), np.float32))      # no-op, not a record
+    recs = list(wal.replay())
+    assert len(recs) == 2
+    assert recs[0][0] == k1
+    np.testing.assert_array_equal(recs[0][1], t1)
+    np.testing.assert_array_equal(recs[1][2], r2)
+    assert wal.metrics()["records"] == 2
+    assert wal.metrics()["events"] == 13
+    wal.close()
+
+    # reopening the same dir resumes numbering; old records survive
+    wal2 = WriteAheadLog(WalConfig(dir=d, sync=False))
+    k3, t3, r3 = _batch(3, t0=40.0, seed=3)
+    wal2.append(k3, t3, r3)
+    assert [r[0] for r in wal2.replay()] == [k1, k2, k3]
+    wal2.close()
+
+
+def test_wal_segment_rotation_and_order(tmp_path):
+    d = str(tmp_path / "wal")
+    wal = WriteAheadLog(WalConfig(dir=d, segment_bytes=256, sync=False))
+    batches = [_batch(4, t0=i * 100.0, seed=i) for i in range(6)]
+    for k, t, r in batches:
+        wal.append(k, t, r)
+    assert wal.metrics()["rotations"] >= 1
+    assert wal.n_segments >= 2
+    recs = list(wal.replay())
+    assert len(recs) == 6                  # append order across segments
+    for (k, t, r), (rk, rt, rr) in zip(batches, recs):
+        assert k == rk
+        np.testing.assert_array_equal(t, rt)
+    wal.close()
+
+
+def test_wal_truncate_sealed_below_horizon(tmp_path):
+    d = str(tmp_path / "wal")
+    wal = WriteAheadLog(WalConfig(dir=d, segment_bytes=200, sync=False))
+    for i in range(6):
+        k, t, r = _batch(4, t0=i * 100.0, seed=i)
+        wal.append(k, t, r)
+    n_before = wal.n_segments
+    assert n_before >= 3
+    removed = wal.truncate(300.0)          # segments ending < 300 go
+    assert removed >= 1
+    assert wal.metrics()["truncated_segments"] == removed
+    # surviving records all end at/after the horizon minus one batch
+    # span; crucially the ACTIVE segment is never truncated
+    recs = list(wal.replay())
+    assert recs, "truncate must never empty the live log"
+    assert wal.n_segments == n_before - removed
+    wal.close()
+
+
+def test_wal_torn_tail_and_corrupt_record_tolerated(tmp_path):
+    d = str(tmp_path / "wal")
+    wal = WriteAheadLog(WalConfig(dir=d, sync=False))
+    k1, t1, r1 = _batch(6, seed=1)
+    k2, t2, r2 = _batch(6, t0=50.0, seed=2)
+    wal.append(k1, t1, r1)
+    wal.append(k2, t2, r2)
+    wal.close()
+    seg = os.path.join(d, sorted(os.listdir(d))[0])
+
+    # torn tail: a half-written third record (SIGKILL mid-append)
+    with open(seg, "ab") as f:
+        f.write(struct.pack(">II", 9999, 0) + b"half a record")
+    assert [r[0] for r in read_segment(seg)] == [k1, k2]
+
+    # corrupt byte INSIDE the second record: replay keeps the prefix
+    data = bytearray(open(seg, "rb").read())
+    rec1_len = 8 + struct.unpack(">II", bytes(data[:8]))[0]
+    data[rec1_len + 12] ^= 0xFF
+    with open(seg, "wb") as f:
+        f.write(bytes(data))
+    recs = read_segment(seg)
+    assert len(recs) == 1 and recs[0][0] == k1
+
+
+def test_wal_unresolved_placeholder_rejected(tmp_path):
+    with pytest.raises(ValueError, match="unresolved placeholder"):
+        WriteAheadLog(WalConfig(dir=str(tmp_path / "shard-{shard}")))
+
+
+def test_resolve_shard_substitution(tmp_path):
+    cfg = PipelineConfig(
+        wal=WalConfig(dir=str(tmp_path / "shard-{shard}" / "events")))
+    r3 = resolve_shard(cfg, 3)
+    assert "{shard}" not in r3.wal.dir and "shard-3" in r3.wal.dir
+    assert "{shard}" in cfg.wal.dir        # template untouched
+    assert resolve_shard(r3, 5) is r3      # already resolved: no-op
+    assert resolve_shard(None, 1) is None
+    plain = PipelineConfig()
+    assert resolve_shard(plain, 1) is plain
+
+
+# -------------------------------------------------------------- pipeline
+def test_pipeline_logs_accepted_events_only(tmp_path):
+    """Late-dropped events must NOT reach the log — replay through a
+    fresh buffer would otherwise resurrect them (fresh frontier accepts
+    everything)."""
+    eng = Engine(OptFlags())
+    eng.create_table(SCHEMA, max_keys=16, capacity=64, bucket_size=8)
+    wal_dir = str(tmp_path / "wal")
+    pipe = eng.attach_stream(
+        "events", PipelineConfig(lateness=1.0,
+                                 wal=WalConfig(dir=wal_dir, sync=False)))
+    pipe.push(0, 100.0, np.ones(2, np.float32))
+    pipe.push(0, 105.0, np.ones(2, np.float32))
+    pipe.flush(flush_all=True)
+    assert not pipe.push(0, 50.0, np.ones(2, np.float32))   # late: drop
+    total = sum(len(k) for k, _t, _r in read_dir(wal_dir))
+    assert total == 2
+    assert pipe.metrics()["wal_events"] == 2
+    eng.close()
+
+
+def test_pipeline_2pc_commit_is_one_atomic_record(tmp_path):
+    eng = Engine(OptFlags())
+    eng.create_table(SCHEMA, max_keys=16, capacity=64, bucket_size=8)
+    wal_dir = str(tmp_path / "wal")
+    pipe = eng.attach_stream(
+        "events", PipelineConfig(wal=WalConfig(dir=wal_dir, sync=False)))
+    txn = pipe.prepare([0, 1, 2], [10.0, 11.0, 12.0],
+                       np.ones((3, 2), np.float32))
+    assert txn is not None
+    # prepare parked, nothing logged yet: crash here replays as abort
+    assert sum(1 for _ in read_dir(wal_dir)) == 0
+    pipe.commit_txn(txn)
+    recs = list(read_dir(wal_dir))
+    assert len(recs) == 1 and len(recs[0][0]) == 3
+    # aborted txns never log
+    txn2 = pipe.prepare([3], [20.0], np.ones((1, 2), np.float32))
+    pipe.abort_txn(txn2)
+    assert sum(1 for _ in read_dir(wal_dir)) == 1
+    eng.close()
+
+
+def test_wal_replay_reproduces_features_bit_identically(tmp_path):
+    """The acceptance property: ingest -> kill -> replay the log through
+    a fresh engine == never died."""
+    keys, ts, rows = _batch(120, seed=7)
+    wal_dir = str(tmp_path / "wal")
+
+    eng1 = Engine(OptFlags())
+    eng1.create_table(SCHEMA, max_keys=16, capacity=256, bucket_size=16)
+    pipe1 = eng1.attach_stream(
+        "events", PipelineConfig(wal=WalConfig(dir=wal_dir, sync=False)))
+    pipe1.push_batch(keys, ts, rows)
+    pipe1.flush(flush_all=True)
+    eng1.deploy("q", SQL)
+    ref = eng1.request("q", list(range(4)), [1000.0] * 4)
+    # simulate SIGKILL: no close/drain — the log alone must suffice
+    del pipe1
+
+    eng2 = Engine(OptFlags())
+    eng2.create_table(SCHEMA, max_keys=16, capacity=256, bucket_size=16)
+    pipe2 = eng2.attach_stream("events", PipelineConfig())
+    for rkeys, rts, rrows in read_dir(wal_dir):
+        pipe2.push_batch(rkeys, rts, rrows)
+    pipe2.flush(flush_all=True)
+    eng2.deploy("q", SQL)
+    got = eng2.request("q", list(range(4)), [1000.0] * 4)
+    assert np.array_equal(np.asarray(ref.status), np.asarray(got.status))
+    for c in ref.columns:
+        assert np.array_equal(np.asarray(ref[c]), np.asarray(got[c])), c
+    eng1.close()
+    eng2.close()
+
+
+def test_pipeline_retention_truncates_wal(tmp_path):
+    wal_dir = str(tmp_path / "wal")
+    eng = Engine(OptFlags())
+    eng.create_table(SCHEMA, max_keys=16, capacity=64, bucket_size=8)
+    pipe = eng.attach_stream(
+        "events",
+        PipelineConfig(
+            retention=RetentionPolicy(ttl=50.0, every_n_flushes=1),
+            wal=WalConfig(dir=wal_dir, segment_bytes=256, sync=False)))
+    for i in range(10):
+        k, t, r = _batch(4, t0=i * 40.0, seed=i)
+        pipe.push_batch(k, t, r)
+        pipe.flush(flush_all=True)
+    assert pipe.metrics()["wal_truncated_segments"] >= 1
+    eng.close()
+
+
+# ------------------------------------------------------------ prepare TTL
+def test_prepare_ttl_auto_aborts_stale_txn():
+    """Regression for the stuck-watermark hole: a coordinator that dies
+    between prepare and commit must not hold key frontiers forever."""
+    b = StreamBuffer(lateness=0.0, prepare_ttl_s=0.05)
+    b.push("a", 10.0, np.zeros(1, np.float32))
+    txn = b.prepare(["a"], [11.0], np.zeros((1, 1), np.float32))
+    assert txn is not None
+    # while prepared, the frontier holds at the parked ts
+    b.push("a", 20.0, np.zeros(1, np.float32))
+    k, ts, _ = b.ready()
+    assert 11.0 not in ts.tolist() and 20.0 not in ts.tolist()
+    time.sleep(0.08)                       # TTL expires; presumed dead
+    # watermark advances again: the held release is free
+    k, ts, _ = b.ready()
+    assert 20.0 in ts.tolist() or 10.0 in ts.tolist()
+    with pytest.raises(ValueError, match="auto-aborted"):
+        b.commit(txn)
+    assert b.stats.txn_auto_aborted == 1
+    # nothing from the zombie txn was staged
+    b.push("a", 30.0, np.zeros(1, np.float32))
+    k, ts, _ = b.ready()
+    assert 11.0 not in ts.tolist()
+
+
+def test_prepare_ttl_zero_disables_expiry():
+    b = StreamBuffer(lateness=0.0, prepare_ttl_s=0.0)
+    txn = b.prepare(["a"], [5.0], np.zeros((1, 1), np.float32))
+    time.sleep(0.02)
+    events = b.commit(txn)                 # still alive: no TTL
+    assert len(events) == 1
+
+
+def test_prepare_ttl_via_sharded_insert(tmp_path):
+    """End-to-end: a sharded 2PC insert against pipelines with a prepare
+    TTL — normal inserts commit well inside the TTL; a manually parked
+    prepare expires and the key's data keeps flowing."""
+    from repro.shard import ShardConfig, ShardedEngine
+    se = ShardedEngine(ShardConfig(n_shards=2))
+    se.create_table(SCHEMA, max_keys=16, capacity=64, bucket_size=8)
+    facade = se.attach_stream("events", prepare_ttl_s=0.05)
+    se.insert("events", [0, 1], [10.0, 10.0], np.ones((2, 2), np.float32))
+    se.deploy("q", SQL)
+    # park a prepare directly on shard 0's buffer, then let it expire
+    pipe0 = facade.pipes[se.shard_of(0)]
+    txn = pipe0.prepare([0], [20.0], np.ones((1, 2), np.float32))
+    assert txn is not None
+    time.sleep(0.08)
+    with pytest.raises(ValueError, match="auto-aborted"):
+        pipe0.commit_txn(txn)
+    # the frontier is free again: later ingest lands and serves
+    se.insert("events", [0], [30.0], np.ones((1, 2), np.float32))
+    fr = se.request("q", [0], [100.0])
+    assert fr.columns["c"].tolist() == [2.0]   # ts 10 + ts 30, no ts 20
+    se.close()
