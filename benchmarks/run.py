@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
                          "stream,hotswap,multiwindow,lastjoin,shard,"
-                         "shard_proc,adaptive,recovery")
+                         "shard_proc,adaptive,recovery,obs")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-size smoke mode (CI): same code paths, "
                          "~10x less work; numbers are tripwires only")
@@ -94,6 +94,11 @@ def main(argv=None) -> int:
         from benchmarks import bench_recovery as b13
         results["recovery"] = {k: v for k, v in b13.run(rep).items()
                                if k != "per_round"}
+    if want("obs"):
+        # observability tier: tracing on/off overhead bracketed against
+        # host drift, plus exporter render costs (DESIGN.md §13)
+        from benchmarks import bench_obs_overhead as b14
+        results["obs"] = b14.run(rep)
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",
@@ -133,6 +138,15 @@ def _headline(name: str, doc: dict):
                 "detail": (f"durable vs baseline parity MTTR, "
                            f"{doc['mttr_speedup']:.2f}x, "
                            f"meets_2x={doc['meets_2x']}")}
+    if name == "obs" and "full" in doc:
+        # overhead bench: headline is the fully-traced phase, with the
+        # bracketed overhead ratio as the detail
+        return {"qps": doc["full"]["qps"],
+                "p50_ms": doc["full"]["p50_ms"],
+                "p99_ms": doc["full"]["p99_ms"],
+                "detail": (f"tracing@1.0, "
+                           f"{doc['p50_overhead_full']:.3f}x vs off, "
+                           f"within_5pct={doc['within_5pct']}")}
     if name in ("shard", "shard_proc") and "by_shards" in doc:
         top = doc["by_shards"][max(doc["by_shards"], key=int)]
         return {"qps": top["qps"], "p50_ms": top["p50_ms"],

@@ -1,0 +1,156 @@
+"""Regenerate the paper's speedup-attribution table from LIVE profiles.
+
+    PYTHONPATH=src python experiments/ablation_from_profiles.py [--quick]
+
+The paper attributes its headline result 35% to query-plan
+optimization, 25% to caching, 20% to parallelism. Figure-2's bench
+(``benchmarks.bench_fig2_ablation``) reproduces that with leave-one-out
+QPS ratios — a black-box view. This script is the white-box
+counterpart the obs tier makes possible: each leave-one-out
+configuration serves the same workload and the attribution is computed
+from the runtime operator profiler's MEASURED per-request serve
+decomposition (the same data ``EXPLAIN ANALYZE`` renders — exec split
+per operator, host residual, amortized plan/compile), not from
+throughput alone.
+
+For each ablation axis the report shows (a) how much per-request serve
+time the optimization removes (measured, not modeled), (b) which
+decomposition stage the removal comes from (exec vs host vs plan —
+e.g. disabling the plan cache shows up as plan/compile seconds, while
+disabling pre-aggregation shows up as scan-operator exec seconds), and
+(c) the normalized contribution share, the live-profile analogue of
+the paper's 35/25/20 split. Writes
+``experiments/ABLATION_profiles.json`` and prints the table.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def profile_config(flags, sql=None, *, batch, n_batches):
+    """Serve the standard workload under ``flags``; return the
+    profiler's measured per-request decomposition + the EXPLAIN ANALYZE
+    text."""
+    from benchmarks.common import build_engine, replay
+    kw = {} if sql is None else {"sql": sql}
+    eng, data = build_engine(flags, **kw)
+    replay(eng, data, batch=batch, n_batches=1)      # compiles outside
+    eng.drain_profile_observations("bench")
+    # reset the totals window: snapshot() is cumulative, so profile a
+    # fresh engine-lifetime interval by diffing against this baseline
+    base = eng.profiler.snapshot("bench") or {}
+    r = replay(eng, data, batch=batch, n_batches=n_batches, warm=False)
+    prof = eng.profiler.snapshot("bench")
+    analyze = eng.explain_analyze("bench")
+    eng.close()
+    reqs = prof["requests"] - base.get("requests", 0)
+    out = {"qps": r["qps"], "requests": reqs,
+           "explain_analyze": analyze}
+    for k in ("serve_s", "exec_s", "host_s", "plan_s"):
+        out[f"{k[:-2]}_us_per_req"] = \
+            (prof[k] - base.get(k, 0.0)) / max(reqs, 1) * 1e6
+    ops = {}
+    for op, row in prof["ops"].items():
+        sec = row["seconds"] - base.get("ops", {}).get(
+            op, {}).get("seconds", 0.0)
+        ops[op] = sec / max(reqs, 1) * 1e6
+    out["ops_us_per_req"] = ops
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-smoke sizes (tripwire numbers only)")
+    ap.add_argument("--out",
+                    default=os.path.join(_HERE, "ABLATION_profiles.json"))
+    args = ap.parse_args(argv)
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
+    from benchmarks.bench_fig2_ablation import AXES, _axis_sql
+    from benchmarks.common import QUICK
+    from repro.core.optimizer import OptFlags
+
+    batch, n_batches = (64, 4) if QUICK else (256, 12)
+    base_flags = OptFlags()
+    full = profile_config(base_flags, batch=batch, n_batches=n_batches)
+
+    rows = {}
+    for name, overrides in AXES.items():
+        if name == "parallel_vectorized" and not QUICK:
+            nb = 3                           # row-at-a-time is ~100x
+        else:
+            nb = n_batches
+        sql = _axis_sql(name)
+        ref = full if sql is None else profile_config(
+            base_flags, sql, batch=batch, n_batches=nb)
+        ablated = profile_config(
+            dataclasses.replace(base_flags, **overrides), sql,
+            batch=batch, n_batches=nb)
+        added = ablated["serve_us_per_req"] - ref["serve_us_per_req"]
+        rows[name] = {
+            "serve_us_per_req": ablated["serve_us_per_req"],
+            "baseline_us_per_req": ref["serve_us_per_req"],
+            "added_us_per_req": added,
+            # which measured stage the removed time came from
+            "added_by_stage": {
+                st: ablated[f"{st}_us_per_req"] - ref[f"{st}_us_per_req"]
+                for st in ("exec", "host", "plan")},
+            "slowdown": (ablated["serve_us_per_req"]
+                         / max(ref["serve_us_per_req"], 1e-9)),
+        }
+
+    total = sum(max(r["added_us_per_req"], 0.0) for r in rows.values()) \
+        or 1.0
+    for r in rows.values():
+        r["contribution_pct"] = \
+            100.0 * max(r["added_us_per_req"], 0.0) / total
+
+    report = {
+        "quick": QUICK,
+        "full": {k: v for k, v in full.items()
+                 if k != "explain_analyze"},
+        "explain_analyze_full": full["explain_analyze"],
+        "axes": rows,
+        "paper_bands": {"query_plan_opt": "30-35%",
+                        "caching_materialization": "15-25%",
+                        "parallel_processing": "20-25%",
+                        "resource_management": "~10%"},
+        "method": "leave-one-out serve-time deltas measured by the "
+                  "runtime operator profiler (us/request, profiled "
+                  "interval only), normalized to 100%",
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+
+    width = max(len(n) for n in rows)
+    print(f"# attribution from live profiles "
+          f"(full: {full['serve_us_per_req']:.1f} us/req serve)")
+    print(f"{'axis':<{width}}  {'share':>6}  {'added us/req':>12}  "
+          f"{'slowdown':>8}  dominant stage")
+    for n, r in sorted(rows.items(),
+                       key=lambda kv: -kv[1]["contribution_pct"]):
+        dom = max(r["added_by_stage"],
+                  key=lambda s: r["added_by_stage"][s])
+        print(f"{n:<{width}}  {r['contribution_pct']:>5.1f}%  "
+              f"{r['added_us_per_req']:>12.1f}  "
+              f"{r['slowdown']:>7.2f}x  {dom}")
+    print(f"# paper bands: plan 30-35% / caching 15-25% / "
+          f"parallel 20-25% / resource ~10%")
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -81,11 +81,26 @@ class ControlPlane:
                               dispatch_rows=rows, max_inflight=inflight)
 
     # ------------------------------------------------------------ calibrate
+    def _drain_profile(self) -> List[Dict[str, Any]]:
+        obs_fn = getattr(self.engine, "drain_profile_observations", None)
+        return obs_fn(self.deployment) if obs_fn is not None else []
+
     def _feed_calibrator(self, sample: Dict[str, Any]) -> int:
-        """Split this tick's measured serve seconds across the live
-        plan's element profile and feed the calibrator. Attribution uses
-        the CURRENT model's weighted shares (EM-style: better weights →
-        better attribution next tick). Returns observations fed."""
+        """Feed the calibrator this tick's observations. Preferred
+        source: the operator profiler's MEASURED per-operator exec times
+        (``drain_profile_observations`` — kernel-clock seconds split per
+        unit-cost element, host/plan residuals excluded). Fallback when
+        no profile is available (e.g. process-backend shards keep their
+        profilers worker-side): the original EM-style split of the
+        tick's serve seconds under the current model's weighted shares.
+        Returns observations fed."""
+        prof_obs = self._drain_profile()
+        if prof_obs:
+            for o in prof_obs:
+                self.calibrator.observe(o["kind"], o["elements"],
+                                        o["seconds"],
+                                        table=o.get("table"))
+            return len(prof_obs)
         dep = sample["deployments"].get(self.deployment)
         if dep is None:
             return 0
@@ -207,6 +222,7 @@ class ControlPlane:
             # sample was still taken (baselines advance: the recovery
             # interval's deltas are consumed here, not leaked into the
             # next steady tick) but nothing is fitted, replanned or tuned
+            self._drain_profile()    # discard: recovery-interval timings
             report = {
                 "tick": t, "recovering": True, "observations_fed": 0,
                 "replan": {"action": "recovering"},

@@ -12,12 +12,20 @@ Engine duck-typing: anything with ``latency_decomposition()`` and
 ``deployments`` works — both :class:`repro.core.engine.Engine` and
 :class:`repro.shard.engine.ShardedEngine`; sharded extras (router,
 admission) are picked up when present.
+
+The raw counter surfaces are read through the unified
+:class:`repro.obs.export.MetricsRegistry` (one collector per surface,
+shared with the Prometheus/JSONL exporters) — the collector's job here
+is the part the registry deliberately does not do: baselines, interval
+deltas and bounded ring series.
 """
 from __future__ import annotations
 
 import collections
 import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.obs.export import registry_from_engine
 
 __all__ = ["RingSeries", "MetricsCollector"]
 
@@ -94,6 +102,9 @@ class MetricsCollector:
         self.engine = engine
         self.server = server       # FeatureServer (its batcher), optional
         self.maxlen = maxlen
+        # the same registry the Prometheus/JSONL exporters walk; the
+        # collector reads its raw counter groups through it
+        self.registry = registry_from_engine(engine, server=server)
         self.series: Dict[str, RingSeries] = {}
         self.samples: Deque[Dict[str, Any]] = collections.deque(maxlen=maxlen)
         self._prev_engine: Dict[str, float] = {}
@@ -105,29 +116,19 @@ class MetricsCollector:
 
     # ------------------------------------------------------------- sources
     def _engine_stats(self) -> Dict[str, float]:
-        eng = self.engine
-        if hasattr(eng, "stats"):                       # single Engine
-            return eng.stats.snapshot()
-        agg: Dict[str, float] = {}
-        for sub in getattr(eng, "shards", ()):           # ShardedEngine
-            for k, v in sub.stats.snapshot().items():
-                agg[k] = agg.get(k, 0) + v
-        return agg
+        return self.registry.collect("engine")["engine"]
 
     def _cache_stats(self) -> Dict[str, float]:
-        eng = self.engine
-        shards = getattr(eng, "shards", None)
-        if shards is None:
-            return eng.cache.stats.snapshot()
-        agg: Dict[str, float] = {}
-        for sub in shards:
-            for k, v in sub.cache.stats.snapshot().items():
-                if k == "hit_rate":
-                    continue
-                agg[k] = agg.get(k, 0) + v
-        total = agg.get("hits", 0) + agg.get("misses", 0)
-        agg["hit_rate"] = agg.get("hits", 0) / total if total else 0.0
-        return agg
+        return self.registry.collect("cache")["cache"]
+
+    # ----------------------------------------------------------- exporters
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition over the shared registry."""
+        return self.registry.render_prometheus()
+
+    def render_jsonl(self, now: Optional[float] = None) -> str:
+        """One JSON snapshot line over the shared registry."""
+        return self.registry.render_jsonl(now)
 
     @staticmethod
     def _delta(now: Dict[str, float], prev: Dict[str, float],

@@ -32,7 +32,7 @@ from repro.core.logical import Join, Predict, Query
 
 __all__ = ["Ex", "col", "lit", "tbl", "TableRef", "sum_", "count_", "avg_",
            "min_", "max_", "std_", "var_", "first_", "last_",
-           "QueryBuilder", "parse_sql"]
+           "QueryBuilder", "parse_sql", "strip_explain_analyze"]
 
 
 # ---------------------------------------------------------------------------
@@ -582,3 +582,18 @@ def _sub_aliases(e: E.Expr, aliases: dict) -> E.Expr:
 def parse_sql(sql: str) -> Query:
     """Parse the OpenMLDB-style feature-query SQL subset into a Query."""
     return _Parser(sql).parse()
+
+
+_EXPLAIN_ANALYZE_RE = re.compile(r"^\s*explain\s+analyze\b", re.IGNORECASE)
+
+
+def strip_explain_analyze(sql: str) -> Optional[str]:
+    """``"EXPLAIN ANALYZE SELECT ..."`` -> ``"SELECT ..."``; ``None``
+    when ``sql`` does not start with the EXPLAIN ANALYZE prefix (the
+    engine then treats it as a deployment name). EXPLAIN/ANALYZE are
+    deliberately not parser keywords — they never appear inside a query
+    body, only as this statement prefix."""
+    m = _EXPLAIN_ANALYZE_RE.match(sql)
+    if m is None:
+        return None
+    return sql[m.end():].lstrip()

@@ -27,6 +27,7 @@ from __future__ import annotations
 import collections
 import concurrent.futures as cf
 import dataclasses
+import os
 import threading
 import time
 from dataclasses import dataclass
@@ -66,14 +67,26 @@ class EngineStats:
     parse_s: float = 0.0
     plan_s: float = 0.0
     exec_s: float = 0.0
+    # host-side serve residual: keydir resolve, padding, unknown-key
+    # masking — serve wall minus exec minus the batch's compile charge
+    host_s: float = 0.0
+    # total serve wall time; the decomposition identity the obs tier
+    # tests enforce is serve_s ≈ Σ STAGES over any serve-only interval
+    serve_s: float = 0.0
     n_requests: int = 0
     n_batches: int = 0
     # window-kernel invocations dispatched (fused multi-window plans count
     # ONE per batch for their whole plain-window set)
     kernel_launches: int = 0
 
-    _FIELDS = ("parse_s", "plan_s", "exec_s", "n_requests", "n_batches",
-               "kernel_launches")
+    _FIELDS = ("parse_s", "plan_s", "exec_s", "host_s", "serve_s",
+               "n_requests", "n_batches", "kernel_launches")
+    # the per-request latency STAGES (paper Eq. 3 + the host residual).
+    # Declared explicitly so the decomposition self-consistency test can
+    # fail when someone adds a new ``*_s`` stage without deciding whether
+    # it is inside serve_s: every timing field must be a stage, serve_s
+    # itself, or parse_s (deploy-time, outside the serve wall)
+    STAGES = ("plan_s", "exec_s", "host_s")
 
     def snapshot(self) -> Dict[str, float]:
         """Cheap point-in-time copy of the monotonic counters (plain
@@ -417,6 +430,10 @@ class DeploymentHandle:
                 version=self.version, table_version=table.version,
                 trace_id=trace)
         t_start = time.perf_counter()
+        span = eng.tracer.start(
+            "engine.serve", trace,
+            parent_id=ctx.parent_span if ctx is not None else None,
+            tags={"deployment": self.tag, "rows": B})
         # unknown keys are masked (index 0, empty history) instead of
         # raising: the caller gets per-request status, the rest of the
         # batch is unaffected. Integer key batches resolve through the
@@ -468,6 +485,11 @@ class DeploymentHandle:
         else:
             out = eng._request_batched(self, kidx, ts_arr, row_arr,
                                        snap=snap, join_snaps=jsnaps)
+        # hidden per-dispatch exec clock (popped before the frame is
+        # built): a dict key rather than thread-local state because the
+        # pooled path executes on pool threads, and rather than the
+        # global stats delta because concurrent serves would cross-read
+        exec_dt = float(out.pop("__exec_s", 0.0))
         if found is not None:
             status = np.where(np.asarray(found), STATUS_OK,
                               STATUS_UNKNOWN_KEY).astype(np.int8)
@@ -478,6 +500,12 @@ class DeploymentHandle:
             for v in out.values():
                 v[unknown] = 0.0
         wall = time.perf_counter() - t_start
+        plan_dt = max(eng.cache.tag_stats(self.tag).compile_seconds
+                      - plan_before, 0.0)
+        # decomposition identity (obs tier): serve = plan + exec + host,
+        # with host the measured residual — clamped so a clock glitch
+        # can never push a stage negative
+        host_dt = max(wall - exec_dt - plan_dt, 0.0)
         with self._lock:
             m = self.metrics
             m.requests += B
@@ -485,11 +513,32 @@ class DeploymentHandle:
             m.serve_s += wall
             m.unknown_keys += n_unknown
             m.observe_latency(wall)
-        plan_dt = eng.cache.tag_stats(self.tag).compile_seconds - plan_before
+        eng.stats.serve_s += wall
+        eng.stats.host_s += host_dt
+        attributed = eng.profiler.record(
+            self, B, exec_s=exec_dt, host_s=host_dt, plan_s=plan_dt,
+            serve_s=wall, model=eng.cost_model)
+        if span is not None:
+            # per-kernel-launch children are ATTRIBUTED, not clocked —
+            # the jitted dispatch is one block_until_ready, so each
+            # operator's share of the measured exec window is laid out
+            # sequentially across it (DESIGN.md §13)
+            t_op = t_start + wall - exec_dt
+            for r in attributed:
+                if r["seconds"] <= 0:
+                    continue
+                eng.tracer.record(
+                    f"kernel.{r['op']}", trace, span.span_id,
+                    t_op, t_op + r["seconds"],
+                    tags={"attributed": True,
+                          "share": round(r["share"], 4)})
+                t_op += r["seconds"]
+            eng.tracer.finish(span, tags={
+                "exec_s": exec_dt, "host_s": host_dt, "plan_s": plan_dt})
         return FeatureFrame(
             out, status=status, deployment=self.name, version=self.version,
             table_version=snap.version,
-            latency={"serve_s": wall, "plan_s": max(plan_dt, 0.0)},
+            latency={"serve_s": wall, "plan_s": plan_dt},
             trace_id=trace)
 
     # ----------------------------------------------------------- lifecycle
@@ -524,6 +573,15 @@ class Engine:
                                enabled=flags.plan_cache)
         self.streams: Dict[str, object] = {}   # table -> IngestPipeline
         self.stats = EngineStats()
+        # observability tier (DESIGN.md §13). The tracer defaults to
+        # sampling OFF — FeatureServer / ShardedEngine / tests turn it on
+        # via set_sample_rate; the profiler always accumulates (it rides
+        # timings the stats path already takes, no extra clock reads)
+        from repro.obs.profile import OperatorProfiler
+        from repro.obs.trace import Tracer
+        self.tracer = Tracer(sample_rate=float(
+            os.environ.get("REPRO_TRACE_SAMPLE", "0") or 0))
+        self.profiler = OperatorProfiler()
         # shape buckets every new deployment version pre-compiles before
         # going live (redeploys additionally warm the buckets the retired
         # version actually served)
@@ -948,6 +1006,35 @@ class Engine:
                      f"{dep.phys.n_kernel_launches}")
         return "\n".join(lines)
 
+    def explain_analyze(self, target: str) -> str:
+        """Measured-runtime EXPLAIN (DESIGN.md §13): render the operator
+        profiler's accumulated attribution for a deployment. ``target``
+        is a deployment name or a full ``EXPLAIN ANALYZE SELECT ...``
+        statement — the SQL form is matched against the deployed
+        queries (parse equality, not text equality)."""
+        from repro.obs.profile import OperatorProfiler
+        name = self._resolve_analyze_target(target)
+        dep = self.handle(name)
+        return OperatorProfiler.render(name, dep.version,
+                                       self.profiler.snapshot(name))
+
+    def _resolve_analyze_target(self, target: str) -> str:
+        sql = dsl.strip_explain_analyze(target)
+        if sql is None:
+            return target                  # plain deployment name
+        q = dsl.parse_sql(sql)
+        for nm, dep in self.deployments.items():
+            if dep.query == q:
+                return nm
+        raise KeyError(
+            f"EXPLAIN ANALYZE: no live deployment serves this query "
+            f"(deploy it first); deployed: {sorted(self.deployments)}")
+
+    def drain_profile_observations(self, name: str) -> List[Dict]:
+        """Measured-per-operator calibrator feed (control plane) — see
+        ``OperatorProfiler.drain_observations``."""
+        return self.profiler.drain_observations(name)
+
     def _predict_params(self, dep: DeploymentHandle):
         if dep.plan.predict is None:
             return None
@@ -1020,13 +1107,18 @@ class Engine:
                  put(ts_arr), put(row_arr),
                  self._predict_params(dep), jin)
         out = jax.block_until_ready(out)
-        self.stats.exec_s += time.perf_counter() - t0
+        exec_dt = time.perf_counter() - t0
+        self.stats.exec_s += exec_dt
         self.stats.n_requests += B
         self.stats.n_batches += 1
         self.stats.kernel_launches += dep.phys.n_kernel_launches
         res = {n: np.asarray(a)[:B] for n, a in out.items()}
         if dep.join_tables:
             dep._record_join_stats(res, B, record=record_joins)
+        # hidden per-dispatch exec clock for the profiler/tracer —
+        # callers that merge batches pop+sum it; _serve pops it before
+        # the FeatureFrame is built
+        res["__exec_s"] = exec_dt
         return res
 
     def _request_rowwise(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
@@ -1037,7 +1129,10 @@ class Engine:
             outs.append(self._request_batched(
                 dep, kidx[i:i + 1], ts_arr[i:i + 1], row_arr[i:i + 1],
                 snap=snap, join_snaps=join_snaps))
-        return {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
+        exec_s = sum(o.pop("__exec_s", 0.0) for o in outs)
+        res = {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
+        res["__exec_s"] = exec_s
+        return res
 
     def _request_pooled(self, dep: DeploymentHandle, kidx, ts_arr, row_arr,
                         snap=None, join_snaps=None) -> Dict[str, np.ndarray]:
@@ -1057,8 +1152,11 @@ class Engine:
                     self._request_rowwise, dep, kidx[sl], ts_arr[sl],
                     row_arr[sl], snap=snap, join_snaps=join_snaps))
         outs = [f.result() for f in futs]
-        return {nme: np.concatenate([o[nme] for o in outs])
-                for nme in outs[0]}
+        exec_s = sum(o.pop("__exec_s", 0.0) for o in outs)
+        res = {nme: np.concatenate([o[nme] for o in outs])
+               for nme in outs[0]}
+        res["__exec_s"] = exec_s
+        return res
 
     # -------------------------------------------------------------- offline
     def query_offline(self, name: str, *, batch_size: int = 1024,
@@ -1110,6 +1208,8 @@ class Engine:
                     join_snaps=offline_jsnaps, record_joins=False))
         finally:
             self.flags = saved
+        for o in outs:
+            o.pop("__exec_s", None)
         res = {n: np.concatenate([o[n] for o in outs]) for n in outs[0]}
         res["__key"] = kidx
         res["__ts"] = ts_all
@@ -1119,6 +1219,7 @@ class Engine:
     def latency_decomposition(self) -> Dict[str, float]:
         s = self.stats
         out = {"parse_s": s.parse_s, "plan_s": s.plan_s, "exec_s": s.exec_s,
+               "host_s": s.host_s, "serve_s": s.serve_s,
                "n_requests": s.n_requests,
                "kernel_launches": s.kernel_launches,
                "cache_hit_rate": self.cache.stats.hit_rate}

@@ -53,11 +53,17 @@ class RequestContext:
     requests are dropped by the batcher instead of wasting a batch slot.
     ``version_pin`` routes the request to one specific deployment version
     (e.g. replaying traffic against a retired version after a swap).
+    ``trace_id``/``parent_span`` carry the distributed-tracing context
+    (DESIGN.md §13): the id is generated ULID-style at the serving edge
+    when absent, and each tier that opens a span re-parents the context
+    it forwards (``dataclasses.replace(ctx, parent_span=span.span_id)``)
+    so the reassembled trace is a tree, not a flat list.
     """
 
     deadline: Optional[float] = None
     trace_id: Optional[str] = None
     version_pin: Optional[int] = None
+    parent_span: Optional[str] = None
 
     @classmethod
     def with_timeout(cls, timeout_s: float, **kw) -> "RequestContext":

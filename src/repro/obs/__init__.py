@@ -1,0 +1,10 @@
+"""Observability tier (DESIGN.md §13): distributed tracing, the
+EXPLAIN ANALYZE operator profiler, and the unified metrics registry."""
+from repro.obs.export import MetricsRegistry, registry_from_engine
+from repro.obs.profile import (OperatorProfiler, attribute_exec,
+                               operator_rows)
+from repro.obs.trace import Span, Tracer, new_trace_id
+
+__all__ = ["Tracer", "Span", "new_trace_id", "OperatorProfiler",
+           "operator_rows", "attribute_exec", "MetricsRegistry",
+           "registry_from_engine"]

@@ -86,9 +86,14 @@ class DynamicBatcher:
     ``FeatureFrame`` — its ``row(i)`` split keeps per-request metadata.
     """
 
-    def __init__(self, serve_batch: Callable, cfg: BatcherConfig = BatcherConfig()):
+    def __init__(self, serve_batch: Callable,
+                 cfg: BatcherConfig = BatcherConfig(), *,
+                 tracer=None):
         self.serve_batch = serve_batch
         self.cfg = cfg
+        # optional repro.obs.trace.Tracer: queue-wait spans + exemplar
+        # trace propagation into the batch context
+        self.tracer = tracer
         try:
             self._wants_ctx = "ctx" in inspect.signature(
                 serve_batch).parameters
@@ -208,17 +213,34 @@ class DynamicBatcher:
                 zero = np.zeros_like(proto)
                 payloads = np.stack([r.payload if r.payload is not None
                                      else zero for r in batch])
+            tracer = self.tracer
+            if tracer is not None:
+                # retroactive queue-wait spans: enqueue -> dispatch, per
+                # traced request (enqueued_at and the tracer share the
+                # perf_counter clock)
+                t_disp = time.perf_counter()
+                for r in batch:
+                    c = r.ctx
+                    if (c is not None and c.trace_id
+                            and tracer.sampled(c.trace_id)):
+                        tracer.record("batch.queue_wait", c.trace_id,
+                                      c.parent_span, r.enqueued_at,
+                                      t_disp, tags={"batch": len(batch)})
             try:
                 if self._wants_ctx:
-                    pin = batch[0].group
-                    bctx = (RequestContext(version_pin=pin)
-                            if pin is not None else None)
+                    bctx = self._batch_ctx(batch)
                     res = self.serve_batch(keys, ts, payloads, ctx=bctx)
                 else:
                     res = self.serve_batch(keys, ts, payloads)
                 if hasattr(res, "row"):
                     for i, r in enumerate(batch):
-                        r.result = res.row(i)
+                        row = res.row(i)
+                        if r.ctx is not None and r.ctx.trace_id:
+                            # the batch frame carries the exemplar's
+                            # trace id; each split row gets its OWN
+                            # request's id back
+                            row.trace_id = r.ctx.trace_id
+                        r.result = row
                         r.done.set()
                 else:
                     for i, r in enumerate(batch):
@@ -239,6 +261,27 @@ class DynamicBatcher:
             self.stats["sum_batch"] += len(batch)
             self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"],
                                                len(batch))
+
+    def _batch_ctx(self, batch: List[Request]
+                   ) -> Optional[RequestContext]:
+        """The batch's shared downstream context: the version pin plus —
+        when a tracer is attached — an exemplar trace (the first request
+        with a sampled trace lends its ``trace_id``/``parent_span``; the
+        engine opens ONE serve span per batch, so one request exemplifies
+        the whole dispatch)."""
+        pin = batch[0].group
+        trace_id = parent = None
+        tracer = self.tracer
+        if tracer is not None:
+            ex = next((r.ctx for r in batch
+                       if r.ctx is not None and r.ctx.trace_id
+                       and tracer.sampled(r.ctx.trace_id)), None)
+            if ex is not None:
+                trace_id, parent = ex.trace_id, ex.parent_span
+        if pin is None and trace_id is None:
+            return None
+        return RequestContext(version_pin=pin, trace_id=trace_id,
+                              parent_span=parent)
 
     # ------------------------------------------------------------------ tune
     def reconfigure(self, **changes) -> BatcherConfig:

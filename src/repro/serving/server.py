@@ -16,6 +16,7 @@ tail latency (straggler mitigation on the serving path).
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from dataclasses import dataclass
@@ -27,6 +28,7 @@ import numpy as np
 
 from repro.core.engine import DeploymentHandle, Engine
 from repro.core.results import FeatureFrame, RequestContext
+from repro.obs.trace import new_trace_id
 from repro.serving.batcher import BatcherConfig, DynamicBatcher
 
 __all__ = ["ServerConfig", "FeatureServer", "ModelServer", "hedged"]
@@ -77,7 +79,9 @@ class FeatureServer:
 
         if cfg.warm_buckets and engine.cache.enabled:
             engine.handle(deployment).warm(cfg.warm_buckets)
-        self.batcher = DynamicBatcher(serve_batch, cfg.batcher)
+        self.batcher = DynamicBatcher(
+            serve_batch, cfg.batcher,
+            tracer=getattr(engine, "tracer", None))
 
     def _resolve(self, ctx: Optional[RequestContext]) -> DeploymentHandle:
         """One handle per batch — the no-version-mixing pivot."""
@@ -104,12 +108,31 @@ class FeatureServer:
         # timeout is the client's give-up bound (generous: a cold bucket
         # compile on a loaded box can take seconds); per-request serving
         # deadlines belong in ctx, which the batcher enforces.
+        if ctx is None:
+            ctx = RequestContext()
+        if ctx.trace_id is None:
+            # every request is traceABLE: the id is generated at the
+            # serving edge when the caller didn't bring one (span
+            # recording still honors the tracer's sampling decision)
+            ctx = dataclasses.replace(ctx, trace_id=new_trace_id())
+        tracer = getattr(self.engine, "tracer", None)
+        span = None
+        if tracer is not None:
+            span = tracer.start("server.request", ctx.trace_id,
+                                tags={"deployment": self.deployment})
+            if span is not None:
+                ctx = dataclasses.replace(ctx,
+                                          parent_span=span.span_id)
         call = lambda: self.batcher(key, ts, row, timeout=timeout, ctx=ctx)
-        if self.cfg.hedge_after_s is not None:
-            res = hedged(call, self.cfg.hedge_after_s)
-        else:
-            res = call()
-        if ctx is not None and isinstance(res, FeatureFrame):
+        try:
+            if self.cfg.hedge_after_s is not None:
+                res = hedged(call, self.cfg.hedge_after_s)
+            else:
+                res = call()
+        finally:
+            if span is not None:
+                tracer.finish(span)
+        if isinstance(res, FeatureFrame):
             res.trace_id = ctx.trace_id
         return res
 

@@ -318,8 +318,14 @@ class ShardedDeploymentHandle:
                 f"deployment {self.name!r} has {len(self.plan.joins)} "
                 f"LAST JOIN(s); online requests must pass rows= — the "
                 f"join probes read the request row's join-key column(s)")
+        aspan = eng.tracer.start(
+            "admission", trace,
+            parent_id=ctx.parent_span if ctx is not None else None,
+            tags={"deployment": self.name, "rows": B})
         adm = eng.resources.admit(self.name, ctx,
                                   queue_depths=eng.router.queue_depths)
+        if aspan is not None:
+            eng.tracer.finish(aspan, tags={"shed": adm.shed})
         if adm.shed:
             return self._shed_frame(B, trace)
         try:
@@ -362,9 +368,32 @@ class ShardedDeploymentHandle:
         row_arr = (np.asarray(rows, np.float32) if rows is not None
                    else None)
         B = len(karr)
-        parts = eng.router.scatter(self.handles, karr, ts_arr, row_arr,
-                                   ctx=ctx, owners=eng.owners_of(karr))
-        columns, status, _tvers, any_shed = eng.router.gather(parts, B)
+        span = eng.tracer.start(
+            "router.scatter_gather", trace,
+            parent_id=ctx.parent_span if ctx is not None else None,
+            tags={"deployment": self.name, "rows": B})
+        if span is not None:
+            # re-parent downstream spans (lane.execute, worker serve)
+            # under this one
+            ctx = (dataclasses.replace(ctx, parent_span=span.span_id)
+                   if ctx is not None else
+                   RequestContext(trace_id=trace,
+                                  parent_span=span.span_id))
+        try:
+            parts = eng.router.scatter(self.handles, karr, ts_arr,
+                                       row_arr, ctx=ctx,
+                                       owners=eng.owners_of(karr))
+            columns, status, _tvers, any_shed = \
+                eng.router.gather(parts, B)
+        except BaseException as e:
+            if span is not None:
+                eng.tracer.finish(span,
+                                  tags={"error": type(e).__name__})
+            raise
+        if span is not None:
+            eng.tracer.finish(
+                span, tags={"n_sub_batches": len(parts),
+                            "shed": bool(any_shed)})
         if any_shed:
             reasons = {it.shed_reason for _, it in parts if it.shed}
             if reasons == {"worker_down"} and self._stale_cap > 0:
@@ -611,6 +640,24 @@ class ShardedEngine:
                                   coalesce_delay_s=cfg.coalesce_delay_s,
                                   n_lanes=n_lanes)
         self.resources = ResourceManager(cfg.admission)
+        # shared observability (DESIGN.md §13): ONE tracer/profiler for
+        # the parent tier; in-process shard engines record into the SAME
+        # tracer (their own constructor-made one is replaced), so the
+        # trace tree assembles in place. Process-backend workers keep
+        # their own tracer and export spans per-RPC; the client adopts
+        # them (re-based) into this tracer.
+        from repro.obs.profile import OperatorProfiler
+        from repro.obs.trace import Tracer
+        self.tracer = Tracer(sample_rate=float(
+            os.environ.get("REPRO_TRACE_SAMPLE", "0") or 0))
+        self.profiler = OperatorProfiler()
+        if self.backend is None:
+            for sub in self.shards:
+                sub.tracer = self.tracer
+        else:
+            for c in self.backend.clients:
+                c.tracer = self.tracer
+        self.router.tracer = self.tracer
         # ring routing state: readers (scatter, query_offline) read the
         # route table lock-free — a reader racing a range flip sees either
         # the old owner (which retains a stale copy: correct) or the new
@@ -1056,10 +1103,12 @@ class ShardedEngine:
             # 1) runtime + catalog
             if self.backend is not None:
                 client = self.backend.add_client()   # replays DDL itself
+                client.tracer = self.tracer
                 self.shards.append(client)
                 self.devices = self.devices + (None,)
             else:
                 eng = Engine(self.flags, **self._engine_kw)
+                eng.tracer = self.tracer
                 dev = None
                 if self.cfg.pin_devices:
                     import jax
@@ -1469,6 +1518,46 @@ class ShardedEngine:
         lines += ["  " + l for l in
                   self._primary().explain(name).splitlines()]
         return "\n".join(lines)
+
+    def explain_analyze(self, target: str) -> str:
+        """Measured-runtime EXPLAIN, merged across shards. ``target`` is
+        a deployment name or an ``EXPLAIN ANALYZE SELECT ...`` statement
+        (matched against deployed queries, like the single engine)."""
+        from repro.obs.profile import OperatorProfiler
+        name = target
+        sql = dsl.strip_explain_analyze(target)
+        if sql is not None:
+            q = dsl.parse_sql(sql)
+            name = next((nm for nm, dep in self.deployments.items()
+                         if dep.query == q), None)
+            if name is None:
+                raise KeyError(
+                    f"EXPLAIN ANALYZE: no live deployment serves this "
+                    f"query (deploy it first); deployed: "
+                    f"{sorted(self.deployments)}")
+        dep = self.handle(name)
+        snaps = []
+        for s in self._active_ids():
+            sub = self.shards[s]
+            if hasattr(sub, "profiler"):             # in-process Engine
+                snaps.append(sub.profiler.snapshot(name))
+            else:                                    # proc client (RPC)
+                snaps.append(sub.profile_snapshot(name))
+        return OperatorProfiler.render(
+            name, dep.version, OperatorProfiler.merge(snaps),
+            n_shards=len(snaps))
+
+    def drain_profile_observations(self, name: str) -> List[Dict]:
+        """Measured-per-operator calibrator feed (control plane): drain
+        every in-process shard profiler's interval accumulator. Process
+        workers keep their profiles worker-side (the plane falls back to
+        its EM attribution there)."""
+        obs: List[Dict] = []
+        if self.backend is None:
+            for s in self._active_ids():
+                obs.extend(
+                    self.shards[s].profiler.drain_observations(name))
+        return obs
 
     def latency_decomposition(self) -> Dict[str, float]:
         # counters sum across shards; rates are recomputed from the

@@ -344,24 +344,46 @@ class ProcDeploymentHandle:
                                       self.version)
 
     def request(self, keys, ts, rows=None, *,
-                timeout_s: Optional[float] = None):
+                timeout_s: Optional[float] = None, ctx=None):
         from repro.core.results import FeatureFrame
         if not self.client.ready:
             raise ShardDownError(
                 f"shard {self.client.shard_id} is respawning")
+        tracer = getattr(self.client, "tracer", None)
+        trace = None
+        if (ctx is not None and ctx.trace_id is not None
+                and tracer is not None and tracer.sampled(ctx.trace_id)):
+            trace = {"trace_id": ctx.trace_id, "parent": ctx.parent_span}
         t0 = time.perf_counter()
-        columns, status, tver = self.client.proc.call(
+        columns, status, tver, spans = self.client.proc.call(
             "serve",
             _timeout=_RPC_TIMEOUT_S if timeout_s is None else timeout_s,
             name=self.name, version=self._wv(),
             keys=np.asarray(keys), ts=np.asarray(ts, np.float32),
-            rows=None if rows is None else np.asarray(rows, np.float32))
+            rows=None if rows is None else np.asarray(rows, np.float32),
+            trace=trace)
+        t1 = time.perf_counter()
+        if spans and tracer is not None:
+            self._adopt_spans(tracer, spans, t0, t1)
         self.table.version = max(self.table.version, tver)
         self.metrics.requests += len(keys)
         self.metrics.batches += 1
-        self.metrics.serve_s += time.perf_counter() - t0
+        self.metrics.serve_s += t1 - t0
         return FeatureFrame(columns, status=status, deployment=self.name,
                             version=self.version, table_version=tver)
+
+    @staticmethod
+    def _adopt_spans(tracer, spans, rpc_start: float,
+                     rpc_end: float) -> None:
+        """Re-base worker-clock spans onto this process's clock: the
+        worker span window is centered inside the RPC window (transport
+        overhead split evenly before/after — the classic symmetric-
+        offset estimate), then adopted idempotently (retried/duplicated
+        RPCs re-deliver the same span ids; ``Tracer.adopt`` dedups)."""
+        w0 = min(s["start"] for s in spans)
+        w1 = max(s["end"] for s in spans)
+        slack = max((rpc_end - rpc_start) - (w1 - w0), 0.0) / 2.0
+        tracer.adopt(spans, rebase=rpc_start + slack - w0)
 
     def warm(self, buckets: Sequence[int]) -> int:
         return self.client.proc.call("warm", name=self.name,
@@ -615,6 +637,14 @@ class ProcEngineClient:
 
     def explain(self, name: str) -> str:
         return self.proc.call("explain", name=name)
+
+    def explain_analyze(self, target: str) -> str:
+        return self.proc.call("explain_analyze", target=target)
+
+    def profile_snapshot(self, name: str) -> Optional[Dict]:
+        """Worker-side OperatorProfiler totals (picklable dict) — merged
+        parent-side across shards for sharded EXPLAIN ANALYZE."""
+        return self.proc.call("profile_snapshot", name=name)
 
     def table_version(self, table: str) -> int:
         v = self.proc.call("table_version", table=table)

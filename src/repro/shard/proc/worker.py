@@ -47,6 +47,11 @@ class WorkerServer:
         self.ch = ch
         self.shard_id = shard_id
         self.engine = Engine(flags, **engine_kw)
+        # the CLIENT makes the sampling decision (it only attaches a
+        # trace dict to a serve RPC for sampled traces); worker-side the
+        # tracer accepts whatever arrives, so both samplers never have
+        # to agree on a rate across the process boundary
+        self.engine.tracer.set_sample_rate(1.0)
         # (name, version) -> DeploymentHandle; the parent addresses serve
         # and control RPCs by this pair, never by object reference
         self.handles = {}
@@ -220,10 +225,21 @@ class WorkerServer:
 
     # -------------------------------------------------------------- serve
     def rpc_serve(self, name=None, version=None, keys=None, ts=None,
-                  rows=None):
-        frame = self._handle_of(name, version).request(keys, ts, rows)
+                  rows=None, trace=None):
+        ctx = None
+        if trace is not None:
+            from repro.core.results import RequestContext
+            ctx = RequestContext(trace_id=trace["trace_id"],
+                                 parent_span=trace.get("parent"))
+        frame = self._handle_of(name, version).request(keys, ts, rows,
+                                                       ctx=ctx)
+        # worker-clock span export rides the response; the client
+        # re-bases onto its own clock and adopts (dedup by span id keeps
+        # transport retries/dups idempotent)
+        spans = (self.engine.tracer.export_trace(trace["trace_id"])
+                 if trace is not None else ())
         return (_np_columns(frame.columns), np.asarray(frame.status),
-                int(frame.table_version))
+                int(frame.table_version), spans)
 
     def rpc_handle_metrics(self, name=None, version=None):
         return self._handle_of(name, version).metrics.snapshot()
@@ -276,6 +292,12 @@ class WorkerServer:
 
     def rpc_explain(self, name=None):
         return self.engine.explain(name)
+
+    def rpc_explain_analyze(self, target=None):
+        return self.engine.explain_analyze(target)
+
+    def rpc_profile_snapshot(self, name=None):
+        return self.engine.profiler.snapshot(name)
 
     def rpc_table_version(self, table=None):
         return self.engine.tables[table].version

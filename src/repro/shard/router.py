@@ -180,6 +180,8 @@ class _Lane:
         self._rr = 0
         self.stats = {"dispatches": 0, "rows": 0}
         self.thread: Optional[threading.Thread] = None
+        # assigned by ShardRouter.tracer = ... (sharded engine wiring)
+        self.tracer = None
 
     def start(self) -> None:
         self.thread = threading.Thread(target=self._loop, daemon=True,
@@ -287,6 +289,26 @@ class _Lane:
         if not live:
             return
         handle = live[0].handle
+        # tracing: one exemplar span per coalesced dispatch — the first
+        # live item with a sampled trace lends its context; downstream
+        # (in-process serve or the serve RPC into a worker) re-parents
+        # under this span via a deadline-free forwarded context
+        span = None
+        ctx_fwd = None
+        tracer = self.tracer
+        if tracer is not None:
+            ex = next((it.ctx for it in live
+                       if it.ctx is not None and it.ctx.trace_id
+                       and tracer.sampled(it.ctx.trace_id)), None)
+            if ex is not None:
+                span = tracer.start(
+                    "lane.execute", ex.trace_id, parent_id=ex.parent_span,
+                    tags={"lane": self.lane_id, "shard": sq.shard_id,
+                          "n_coalesced": len(live)})
+            if span is not None:
+                from repro.core.results import RequestContext
+                ctx_fwd = RequestContext(trace_id=ex.trace_id,
+                                         parent_span=span.span_id)
         # per-RPC deadline (process backend): the serve RPC gets the
         # tightest remaining request budget among the coalesced items,
         # so a wedged worker turns into a bounded TimeoutError → shed
@@ -331,11 +353,12 @@ class _Lane:
                     if re is not None:
                         re = np.concatenate(
                             [re, np.repeat(re[-1:], pad, axis=0)])
+                kw = {}
                 if timeout_s is not None:
-                    frame = handle.request(ke, te, re,
-                                           timeout_s=timeout_s)
-                else:
-                    frame = handle.request(ke, te, re)
+                    kw["timeout_s"] = timeout_s
+                if ctx_fwd is not None:
+                    kw["ctx"] = ctx_fwd
+                frame = handle.request(ke, te, re, **kw)
                 col_parts.append(
                     {k: np.asarray(v)[:nb] for k, v in frame.columns.items()})
                 st_parts.append(np.asarray(frame.status)[:nb])
@@ -348,6 +371,8 @@ class _Lane:
             # STATUS_SHED while the supervisor respawns / retries
             reason = "worker_down" if isinstance(e, ShardDownError) \
                 else "deadline"
+            if span is not None:
+                tracer.finish(span, tags={"shed": reason})
             for it in live:
                 it.shed = True
                 it.shed_reason = reason
@@ -355,10 +380,14 @@ class _Lane:
                 it.done.set()
             return
         except BaseException as e:
+            if span is not None:
+                tracer.finish(span, tags={"error": type(e).__name__})
             for it in live:
                 it.error = e
                 it.done.set()
             return
+        if span is not None:
+            tracer.finish(span, tags={"rows": B})
         cols = {k: (np.concatenate([p[k] for p in col_parts])
                     if len(col_parts) > 1 else col_parts[0][k])
                 for k in col_parts[0]}
@@ -407,6 +436,20 @@ class ShardRouter:
         for lane in self.lanes:
             lane.start()
         self._closed = False
+        self._tracer = None
+
+    # ------------------------------------------------------------- tracing
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, t) -> None:
+        """Share one tracer with every lane (sharded-engine wiring);
+        lanes open one ``lane.execute`` span per coalesced dispatch."""
+        self._tracer = t
+        for lane in self.lanes:
+            lane.tracer = t
 
     # ------------------------------------------------------------- scatter
     def submit(self, shard: int, item: SubBatch) -> SubBatch:

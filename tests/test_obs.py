@@ -1,0 +1,497 @@
+"""Observability tier (DESIGN.md §13): distributed tracing across every
+tier (server -> batcher -> admission -> router lane -> worker engine ->
+kernel spans, including re-based adoption across the process-backend
+transport), EXPLAIN ANALYZE operator attribution, the decomposition
+identity tripwire, and the unified metrics registry / exporters.
+
+Process-backend tests spawn subprocess workers (jax import ~seconds);
+they keep shard counts at 2 and reuse engines across asserts. The CI
+``obs`` leg runs this file under both REPRO_SHARD_BACKEND values and
+once more with a seeded REPRO_FAULT_PLAN (ShardConfig resolves the env
+automatically), so the trace/profile paths are exercised over a lossy
+transport too.
+"""
+import json
+import math
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine, EngineStats
+from repro.core.optimizer import OptFlags
+from repro.core.results import (STATUS_OK, STATUS_UNKNOWN_KEY,
+                                RequestContext)
+from repro.featurestore.table import TableSchema
+from repro.obs.export import MetricsRegistry, registry_from_engine
+from repro.obs.trace import _B32, Tracer, new_trace_id
+from repro.serving.batcher import BatcherConfig
+from repro.serving.server import FeatureServer, ServerConfig
+from repro.shard import ShardConfig, ShardedEngine
+
+SQL = """SELECT SUM(amount) OVER w AS s, COUNT(amount) OVER w AS c
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 10 PRECEDING AND CURRENT ROW)"""
+SCHEMA = TableSchema("events", key_col="user", ts_col="ts",
+                     value_cols=("amount", "mkey"))
+
+
+def _events(n=300, n_keys=8, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_keys, n)
+    ts = np.sort(rng.uniform(0, 1000.0, n)).astype(np.float32)
+    rows = np.stack(
+        [rng.normal(size=n),
+         rng.integers(0, 4, n).astype(np.float64)], -1).astype(np.float32)
+    return keys, ts, rows
+
+
+def _engine(sample=1.0):
+    keys, ts, rows = _events()
+    eng = Engine(OptFlags())
+    eng.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    eng.deploy("q", SQL)
+    eng.tracer.set_sample_rate(sample)
+    return eng
+
+
+def _names(tracer, trace_id):
+    return {s.name for s in tracer.trace(trace_id)}
+
+
+# =============================================================== trace ids
+def test_new_trace_id_ulid_format_unique_and_sortable():
+    ids = [new_trace_id() for _ in range(2000)]
+    assert len(set(ids)) == len(ids)
+    for t in ids[:50]:
+        assert len(t) == 26 and all(c in _B32 for c in t)
+    a = new_trace_id()
+    time.sleep(0.003)        # > 1 ms: the 48-bit ms prefix must advance
+    b = new_trace_id()
+    assert a < b             # lexical order == creation order
+
+
+def test_server_autogenerates_trace_id_when_absent():
+    """Satellite bugfix: a request without a ctx (or with a trace-less
+    ctx) must still come back traceable — the id is minted at the
+    serving edge and survives the batcher hop."""
+    eng = _engine(sample=1.0)
+    with FeatureServer(eng, "q", ServerConfig(
+            batcher=BatcherConfig(max_batch=4, max_delay_s=0.001))) as srv:
+        res = srv.request(1, 2000.0)
+        assert res.trace_id is not None
+        assert len(res.trace_id) == 26
+        assert all(c in _B32 for c in res.trace_id)
+        # the minted id is the one the spans were recorded under
+        assert "server.request" in _names(eng.tracer, res.trace_id)
+        # a caller-provided id is preserved verbatim, never replaced
+        tid = new_trace_id()
+        res2 = srv.request(2, 2000.0, ctx=RequestContext(trace_id=tid))
+        assert res2.trace_id == tid
+        # a trace-less ctx (deadline only) also gets an id
+        res3 = srv.request(3, 2000.0, ctx=RequestContext())
+        assert res3.trace_id is not None and res3.trace_id != tid
+
+
+# ================================================================= tracer
+def test_tracer_sampling_deterministic_across_instances():
+    ids = [new_trace_id() for _ in range(256)]
+    a, b = Tracer(sample_rate=0.5), Tracer(sample_rate=0.5)
+    assert [a.sampled(t) for t in ids] == [b.sampled(t) for t in ids]
+    kept = sum(a.sampled(t) for t in ids)
+    assert 0 < kept < len(ids)              # rate actually partitions
+    z = Tracer(sample_rate=0.0)
+    assert z.start("x", ids[0]) is None     # zero-overhead fast path
+    assert z.record("x", ids[0], None, 0.0, 1.0) is None
+    full = Tracer(sample_rate=1.0)
+    assert all(full.sampled(t) for t in ids)
+    assert not full.sampled(None)
+
+
+def test_tracer_bounded_storage_lru_and_span_cap():
+    tr = Tracer(sample_rate=1.0, max_traces=2, max_spans_per_trace=3)
+    tids = [new_trace_id() for _ in range(3)]
+    for tid in tids:
+        s = tr.start("root", tid)
+        tr.finish(s)
+    assert tr.counters["traces_evicted"] == 1
+    assert tr.trace(tids[0]) == []          # oldest evicted
+    assert tr.trace(tids[2])
+    # per-trace span cap: 4th span of one trace is dropped, not stored
+    tid = tids[2]
+    root = tr.trace(tid)[0]
+    for _ in range(3):
+        tr.finish(tr.start("child", tid, parent_id=root.span_id))
+    assert len(tr.trace(tid)) == 3
+    assert tr.counters["spans_dropped"] >= 1
+
+
+def test_tracer_adopt_rebases_and_dedups():
+    worker = Tracer(sample_rate=1.0)
+    tid = new_trace_id()
+    s = worker.start("engine.serve", tid, parent_id="p-1")
+    time.sleep(0.001)
+    worker.finish(s)
+    export = worker.export_trace(tid)
+    client = Tracer(sample_rate=1.0)
+    assert client.adopt(export, rebase=100.0) == 1
+    got = client.trace(tid)[0]
+    assert got.start == pytest.approx(s.start + 100.0)
+    assert got.duration_s == pytest.approx(s.duration_s)
+    # re-adoption (the at-least-once transport's dup path) is a no-op
+    before = len(client.trace(tid))
+    assert client.adopt(export, rebase=100.0) == 0
+    assert client.counters["spans_deduped"] >= 1
+    assert len(client.trace(tid)) == before
+
+
+def test_tracer_tree_attaches_orphans_under_root():
+    tr = Tracer(sample_rate=1.0)
+    tid = new_trace_id()
+    root = tr.start("server.request", tid)
+    child = tr.start("engine.serve", tid, parent_id=root.span_id)
+    orphan = tr.start("lane.execute", tid, parent_id="never-recorded")
+    stray_root = tr.start("admission", tid)     # parentless sibling
+    for s in (child, orphan, stray_root, root):
+        tr.finish(s)
+    tree = tr.tree(tid)
+    assert tree["name"] == "server.request"
+    names = {n["name"] for n in Tracer.walk(tree)}
+    assert names == {"server.request", "engine.serve", "lane.execute",
+                     "admission"}       # nothing silently dropped
+
+
+def test_tracer_slow_query_log_captures_p99_outliers():
+    tr = Tracer(sample_rate=1.0, slow_min_samples=5, slow_log_size=4)
+    for i in range(20):
+        tid = new_trace_id()
+        s = tr.start("server.request", tid)
+        s.start = time.perf_counter() - 1e-4    # ~0.1 ms roots
+        tr.finish(s)
+    tid = new_trace_id()
+    s = tr.start("server.request", tid)
+    s.start = time.perf_counter() - 0.5         # one 500 ms outlier
+    tr.finish(s)
+    slow = tr.slow_queries()
+    assert slow and slow[-1]["trace_id"] == tid
+    assert slow[-1]["duration_s"] > 0.4
+    assert tr.counters["slow_queries"] >= 1
+    assert any(sp["name"] == "server.request"
+               for sp in slow[-1]["spans"])
+
+
+# ================================================ decomposition identity
+def test_engine_stats_stage_tripwire():
+    """Every ``*_s`` timing field must be a declared serve STAGE,
+    serve_s itself, or parse_s (deploy-time). Adding a new stage without
+    deciding whether it is inside the serve wall fails HERE, not in a
+    drifted dashboard."""
+    timing = {f for f in EngineStats._FIELDS if f.endswith("_s")}
+    assert timing == set(EngineStats.STAGES) | {"serve_s", "parse_s"}
+
+
+def test_latency_decomposition_stages_sum_to_serve():
+    """Satellite bugfix: over any serve-only interval the measured
+    stages sum to the serve wall (plan accrues OUTSIDE serves too — at
+    deploy/warm — so the identity is on interval deltas, not
+    lifetime totals)."""
+    eng = _engine(sample=0.0)
+    eng.request("q", [1], [2000.0])         # pay first-compile outside
+    before = eng.stats.snapshot()
+    for i in range(6):
+        fr = eng.request("q", list(range(i + 1)), [2000.0] * (i + 1))
+        assert (fr.status == STATUS_OK).all()
+    d = eng.stats.delta(before)
+    assert d["serve_s"] > 0
+    stage_sum = sum(d[f] for f in EngineStats.STAGES)
+    assert stage_sum == pytest.approx(d["serve_s"], rel=0.05, abs=1e-4)
+    # and the public decomposition exposes every stage + the total
+    decomp = eng.latency_decomposition()
+    for f in EngineStats.STAGES + ("serve_s",):
+        assert f in decomp, f
+
+
+# ======================================================== EXPLAIN ANALYZE
+def test_explain_analyze_attribution_matches_measured():
+    eng = _engine(sample=0.0)
+    before = eng.stats.snapshot()
+    for _ in range(4):
+        eng.request("q", list(range(8)), [2000.0] * 8)
+    d = eng.stats.delta(before)
+    prof = eng.profiler.snapshot("q")
+    # attributed operator seconds sum to the measured exec clock exactly
+    op_total = sum(r["seconds"] for r in prof["ops"].values())
+    assert op_total == pytest.approx(prof["exec_s"], rel=1e-6)
+    # the profiler clocks the same serves the stats counters saw
+    assert prof["exec_s"] == pytest.approx(d["exec_s"], rel=1e-6)
+    assert prof["requests"] == d["n_requests"]
+    # acceptance: attributed total within 10% of the measured serve wall
+    attributed = op_total + prof["host_s"] + prof["plan_s"]
+    assert attributed == pytest.approx(prof["serve_s"], rel=0.10)
+    txt = eng.explain_analyze("q")
+    assert "EXPLAIN ANALYZE deployment 'q'" in txt
+    assert "% of exec" in txt and "host/keydir" in txt
+    # the textual attribution footer agrees (100% by construction)
+    assert "(100.0%)" in txt
+
+
+def test_explain_analyze_resolves_sql_text():
+    eng = _engine(sample=0.0)
+    eng.request("q", [1, 2], [2000.0] * 2)
+    by_name = eng.explain_analyze("q")
+    by_sql = eng.explain_analyze("EXPLAIN ANALYZE " + SQL)
+    assert by_sql == by_name
+    with pytest.raises(KeyError, match="no live deployment"):
+        eng.explain_analyze(
+            "EXPLAIN ANALYZE " + SQL.replace("10 PRECEDING",
+                                             "7 PRECEDING"))
+
+
+def test_profiler_observations_feed_calibrator_kinds():
+    eng = _engine(sample=0.0)
+    eng.request("q", list(range(4)), [2000.0] * 4)
+    obs = eng.drain_profile_observations("q")
+    kinds = {o["kind"] for o in obs}
+    assert kinds and kinds <= {"scan", "preagg", "join"}
+    for o in obs:
+        assert o["seconds"] >= 0 and o["elements"] > 0
+    # drained: the interval accumulator popped
+    assert eng.drain_profile_observations("q") == []
+
+
+# ============================================================ trace trees
+def test_single_engine_trace_has_kernel_children():
+    eng = _engine(sample=1.0)
+    tid = new_trace_id()
+    fr = eng.request("q", list(range(4)), [2000.0] * 4,
+                     ctx=RequestContext(trace_id=tid))
+    assert (fr.status == STATUS_OK).all()
+    spans = eng.tracer.trace(tid)
+    names = {s.name for s in spans}
+    assert "engine.serve" in names
+    kernels = [s for s in spans if s.name.startswith("kernel.")]
+    assert kernels
+    serve = next(s for s in spans if s.name == "engine.serve")
+    for k in kernels:
+        assert k.parent_id == serve.span_id
+        assert k.start >= serve.start - 1e-6
+        assert k.end <= serve.end + 1e-6
+    # attributed kernel spans tile the measured exec window
+    kernel_total = sum(k.duration_s for k in kernels)
+    assert kernel_total <= serve.duration_s + 1e-6
+
+
+def test_sharded_trace_tree_end_to_end():
+    """Acceptance: one request through a FeatureServer over a 2-shard
+    engine (backend from REPRO_SHARD_BACKEND — the CI obs leg runs both)
+    yields ONE reassembled tree: client admission -> batcher -> router
+    lane -> worker serve -> kernel launches."""
+    keys, ts, rows = _events()
+    se = ShardedEngine(ShardConfig(n_shards=2))
+    se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    se.insert("events", keys.tolist(), ts.tolist(), rows)
+    se.deploy("q", SQL)
+    se.tracer.set_sample_rate(1.0)
+    try:
+        with FeatureServer(se, "q", ServerConfig(
+                batcher=BatcherConfig(max_batch=4,
+                                      max_delay_s=0.001))) as srv:
+            srv.request(0, 2000.0)          # absorb any cold compiles
+            res = srv.request(1, 2000.0)
+            assert res.trace_id is not None
+        tree = se.tracer.tree(res.trace_id)
+        assert tree is not None and tree["name"] == "server.request"
+        nodes = se.tracer.walk(tree)
+        names = {n["name"] for n in nodes}
+        for tier in ("server.request", "batch.queue_wait", "admission",
+                     "router.scatter_gather", "lane.execute",
+                     "engine.serve"):
+            assert tier in names, (tier, sorted(names))
+        assert any(n["name"].startswith("kernel.") for n in nodes)
+        # worker serve nests inside the lane's window — on the process
+        # backend this only holds because adoption re-based the worker's
+        # clock onto the client's
+        lanes = [n for n in nodes if n["name"] == "lane.execute"]
+        serves = [n for n in nodes if n["name"] == "engine.serve"]
+        for sv in serves:
+            host = [ln for ln in lanes
+                    if ln["start"] - 1e-3 <= sv["start"]
+                    and sv["start"] + sv["duration_s"]
+                    <= ln["start"] + ln["duration_s"] + 1e-3]
+            assert host, "engine.serve not nested in any lane window"
+        # every span id is unique (adoption dedup, no double-records)
+        ids = [n["span_id"] for n in nodes]
+        assert len(ids) == len(set(ids))
+        # EXPLAIN ANALYZE merges per-shard profiles over the same path
+        txt = se.explain_analyze("q")
+        assert "EXPLAIN ANALYZE deployment 'q'" in txt
+        assert "% of exec" in txt
+    finally:
+        se.close()
+
+
+def test_proc_trace_survives_worker_respawn():
+    """Satellite bugfix: trace ids survive the sharded gather and a
+    worker respawn — the respawned worker's tracer re-arms (full
+    worker-side sampling, client-side decision) and its spans adopt into
+    the same client tracer."""
+    keys, ts, rows = _events(n=200, n_keys=8)
+    se = ShardedEngine(ShardConfig(n_shards=2), backend="process")
+    se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    se.insert("events", keys.tolist(), ts.tolist(), rows)
+    se.deploy("q", SQL)
+    se.tracer.set_sample_rate(1.0)
+    try:
+        rk, rt = list(range(8)), [2000.0] * 8
+        tid = new_trace_id()
+        fr = se.request("q", rk, rt, ctx=RequestContext(trace_id=tid))
+        assert (fr.status == STATUS_OK).all()
+        assert fr.trace_id == tid           # survives the gather
+        assert "engine.serve" in _names(se.tracer, tid)
+        assert se.tracer.counters["spans_adopted"] > 0
+
+        os.kill(se.shards[1].proc.pid, signal.SIGKILL)
+        time.sleep(0.05)
+        deadline = time.time() + 90
+        while time.time() < deadline:
+            fr = se.request("q", rk, rt)
+            st = set(fr.status.tolist())
+            if st <= {STATUS_OK, STATUS_UNKNOWN_KEY}:
+                break
+            time.sleep(0.1)
+        assert se.worker_restarts == 1
+
+        tid2 = new_trace_id()
+        fr2 = se.request("q", rk, rt, ctx=RequestContext(trace_id=tid2))
+        assert fr2.trace_id == tid2
+        names = _names(se.tracer, tid2)
+        assert "engine.serve" in names      # respawned worker exports
+        spans = se.tracer.trace(tid2)
+        ids = [s.span_id for s in spans]
+        assert len(ids) == len(set(ids))
+    finally:
+        se.close()
+
+
+# ======================================================= unified export
+def test_registry_prometheus_golden():
+    reg = MetricsRegistry(prefix="repro")
+    reg.register("g", lambda: {
+        "a": 3, "b": 2.5, "fraud/requests": 7,
+        "nan_gauge": float("nan"), "label": "text", "flag": True})
+    text = reg.render_prometheus()
+    lines = text.strip().split("\n")
+    assert lines == [
+        "# TYPE repro_g_a gauge",
+        "repro_g_a 3",
+        "# TYPE repro_g_b gauge",
+        "repro_g_b 2.5",
+        '# TYPE repro_g_requests gauge',
+        'repro_g_requests{item="fraud"} 7',
+    ]
+
+
+def test_registry_jsonl_roundtrip_and_error_isolation():
+    reg = MetricsRegistry()
+    reg.register("ok", lambda: {"x": 1, "nan": float("nan")})
+
+    def boom():
+        raise RuntimeError("surface torn down")
+    reg.register("bad", boom)
+    out = reg.collect()
+    assert out["ok"] == {"x": 1} or math.isnan(out["ok"]["nan"])
+    assert out["bad"] == {}                 # exception isolated
+    line = reg.render_jsonl(now=123.0)
+    doc = json.loads(line)
+    assert doc["t"] == 123.0
+    assert doc["ok"]["x"] == 1
+    assert math.isnan(doc["ok"]["nan"])     # NaN kept in JSONL
+    assert doc["bad"] == {}
+    # prometheus render survives the raising collector too
+    assert "repro_ok_x 1" in reg.render_prometheus()
+
+
+def test_registry_from_engine_groups_and_labels():
+    eng = _engine(sample=1.0)
+    tid = new_trace_id()
+    eng.request("q", [1, 2], [2000.0] * 2,
+                ctx=RequestContext(trace_id=tid))
+    reg = registry_from_engine(eng)
+    groups = reg.groups()
+    for g in ("engine", "cache", "deployment", "tracer"):
+        assert g in groups
+    snap = reg.collect()
+    assert snap["engine"]["n_requests"] >= 2
+    assert snap["deployment"]["q/requests"] >= 2
+    assert snap["tracer"]["spans_started"] >= 1
+    text = reg.render_prometheus()
+    assert "repro_engine_n_requests" in text
+    assert 'repro_deployment_requests{item="q"}' in text
+    assert "repro_tracer_spans_started" in text
+
+
+def test_sharded_registry_includes_router_admission():
+    se = ShardedEngine(ShardConfig(n_shards=2))
+    try:
+        keys, ts, rows = _events()
+        se.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+        se.insert("events", keys.tolist(), ts.tolist(), rows)
+        se.deploy("q", SQL)
+        se.request("q", list(range(4)), [2000.0] * 4)
+        reg = registry_from_engine(se)
+        groups = set(reg.groups())
+        assert {"engine", "cache", "deployment", "admission", "router",
+                "tracer"} <= groups
+        if se.backend_kind == "process":
+            assert {"transport", "recovery"} <= groups
+        snap = reg.collect()
+        assert snap["engine"].get("n_requests", 0) >= 4
+    finally:
+        se.close()
+
+
+# ============================================================= telemetry
+def test_collector_counter_reset_clamps_deltas():
+    """A respawned worker resets its monotonic counters; interval deltas
+    must clamp at 0, never go negative."""
+    from repro.control.telemetry import MetricsCollector
+    eng = _engine(sample=0.0)
+    col = MetricsCollector(eng)
+    col.sample()                            # establish baselines
+    eng.request("q", list(range(4)), [2000.0] * 4)
+    s = col.sample()
+    assert s["engine_delta"]["n_requests"] >= 4
+    eng.stats = EngineStats()               # simulate the reset
+    s2 = col.sample()
+    for k, v in s2["engine_delta"].items():
+        assert v >= 0, (k, v)
+    assert s2["engine_delta"]["n_requests"] == 0
+
+
+def test_collector_shares_registry_with_exporters():
+    from repro.control.telemetry import MetricsCollector
+    eng = _engine(sample=0.0)
+    col = MetricsCollector(eng)
+    eng.request("q", [1], [2000.0])
+    col.sample()
+    assert "repro_engine_n_requests" in col.render_prometheus()
+    doc = json.loads(col.render_jsonl(now=5.0))
+    assert doc["t"] == 5.0 and doc["engine"]["n_requests"] >= 1
+
+
+def test_ring_series_bounded_fifo():
+    from repro.control.telemetry import RingSeries
+    rs = RingSeries(maxlen=4)
+    assert rs.last() is None and len(rs) == 0 and rs.mean() == 0.0
+    for i in range(10):
+        rs.append(float(i), float(i))
+    assert len(rs) == 4
+    assert rs.values() == [6.0, 7.0, 8.0, 9.0]   # oldest dropped
+    assert rs.last() == 9.0
+    assert rs.mean(2) == pytest.approx(8.5)
+    js = rs.to_json()
+    assert js["t"] == [6.0, 7.0, 8.0, 9.0]
