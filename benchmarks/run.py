@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,preagg,eq3,eq4,"
                          "stream,hotswap,multiwindow,lastjoin,shard,"
-                         "shard_proc,adaptive,recovery,obs")
+                         "shard_proc,adaptive,recovery,obs,freshness")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-size smoke mode (CI): same code paths, "
                          "~10x less work; numbers are tripwires only")
@@ -99,6 +99,11 @@ def main(argv=None) -> int:
         # host drift, plus exporter render costs (DESIGN.md §13)
         from benchmarks import bench_obs_overhead as b14
         results["obs"] = b14.run(rep)
+    if want("freshness"):
+        # data-plane observability: ingest-to-visible latency vs rate,
+        # drift detector TP/FP, sketch overhead bracket (DESIGN.md §14)
+        from benchmarks import bench_freshness as b15
+        results["freshness"] = b15.run(rep)
 
     print(rep.emit())
     print(f"# total bench wall time: {time.time() - t0:.1f}s",
@@ -147,6 +152,16 @@ def _headline(name: str, doc: dict):
                 "detail": (f"tracing@1.0, "
                            f"{doc['p50_overhead_full']:.3f}x vs off, "
                            f"within_5pct={doc['within_5pct']}")}
+    if name == "freshness" and "p50_overhead" in doc:
+        # headline is the freshness-on serving phase; the bracketed
+        # overhead and drift verdicts ride in the detail
+        return {"qps": doc["on"]["qps"], "p50_ms": doc["on"]["p50_ms"],
+                "p99_ms": doc["on"]["p99_ms"],
+                "detail": (f"freshness on, "
+                           f"{doc['p50_overhead']:.3f}x vs off, "
+                           f"within_2pct={doc['within_2pct']}, "
+                           f"drift tp={doc['drift']['true_positive']} "
+                           f"fp={doc['drift']['false_positive']}")}
     if name in ("shard", "shard_proc") and "by_shards" in doc:
         top = doc["by_shards"][max(doc["by_shards"], key=int)]
         return {"qps": top["qps"], "p50_ms": top["p50_ms"],

@@ -160,4 +160,65 @@ thresh = np.percentile(vals, 95)      # review the top-5% riskiest
 flagged = int((vals > thresh).sum())
 print(f"flagged {flagged}/{len(scores)} requests for review "
       f"(score > p95 = {thresh:.4f})")
+
+# ---- data-plane observability: freshness, drift, SLO burn (DESIGN §14) ----
+from repro.obs.export import registry_from_engine
+from repro.obs.slo import SLOEngine, SLOSpec
+
+fexp = engine.freshness_export()
+print(f"\nfeature freshness (events): age p50={fexp['events/age_p50']:.1f} "
+      f"p99={fexp['events/age_p99']:.1f} event-time units over "
+      f"{fexp['events/serve_rows']} served rows "
+      f"(table v{fexp['events/table_version']})")
+
+# pin the launch cohort's serving distribution as the drift reference,
+# then replay the same transactions with amounts jumped 4x — the kind of
+# upstream regime change the PSI detector exists to catch
+engine.pin_drift_reference()
+with FeatureServer(engine, "fraud_scored",
+                   ServerConfig(BatcherConfig(max_batch=64,
+                                              max_delay_s=0.002))) as srv2:
+    shifted = rows.copy()
+    shifted[:, 0] *= 4.0
+    for i in range(128):
+        srv2.request(int(keys[i]), float(ts.max()) + 300 + i,
+                     row=shifted[i], timeout=60.0)
+drift = engine.drift_report()
+drifted = sorted(c for c, r in drift.items() if r["drifted"])
+print("drift vs pinned reference: " + ", ".join(
+    f"{c} psi={r['psi']:.2f}{'*' if r['drifted'] else ''}"
+    for c, r in sorted(drift.items())) + f"  -> drifted: {drifted}")
+
+# declarative SLOs: latency and freshness may steer the knob controller
+# ("tune"); drift is observe-only — a skewed feature distribution is a
+# modeling problem, not a capacity problem
+slo = SLOEngine([
+    SLOSpec("latency", "latency_p99_s", bound=1.0, budget=0.05,
+            fast_window_s=10.0, slow_window_s=60.0),
+    SLOSpec("freshness", "feature_age_p99", bound=5_000.0, budget=0.10,
+            fast_window_s=10.0, slow_window_s=60.0),
+    SLOSpec("drift", "drift_psi_max", bound=0.25, budget=0.0001,
+            fast_window_s=10.0, slow_window_s=60.0, action="report"),
+])
+metrics = {"latency_p99_s": float(np.percentile(lat_ms, 99)) / 1e3,
+           "feature_age_p99": fexp["events/age_p99"],
+           "drift_psi_max": max(r["psi"] for r in drift.values())}
+t0 = time.monotonic()
+for k in range(12):                    # a minute of synthetic scrapes
+    slo.evaluate(metrics, now=t0 + 5.0 * k)
+for name, st in sorted(slo.snapshot(now=t0 + 60.0).items()):
+    print(f"SLO {name:9s} [{st['state']:8s}] metric={st['metric']} "
+          f"burn fast={st['fast_burn']:.2f} slow={st['slow_burn']:.2f} "
+          f"over {st['slow_samples']} samples")
+print(f"flight recorder: {engine.flight.stats()} "
+      f"(ring dumps to JSONL on SLO breach or worker crash)")
+
+# everything above is one Prometheus scrape away
+prom = registry_from_engine(engine, slo=slo).render_prometheus()
+wanted = ("repro_freshness_age_p", "repro_drift_psi{",
+          "repro_slo_alerting", "repro_slo_fast_burn")
+print("\nscrape excerpt:")
+for line in prom.splitlines():
+    if line.startswith(wanted):
+        print("  " + line)
 engine.close()

@@ -1,0 +1,107 @@
+"""Regen guard for the committed ablation artifact.
+
+    PYTHONPATH=src python experiments/check_ablation_schema.py
+
+``experiments/ABLATION_profiles.json`` is committed output of
+``experiments/ablation_from_profiles.py``. This check keeps the two
+from drifting apart without re-running the (slow) profiling itself: it
+validates that the committed artifact still has exactly the schema the
+generator produces — same top-level keys, same ablation axes as the
+live ``bench_fig2_ablation.AXES`` registry, every per-axis record
+carrying the full measured decomposition, and the normalized
+contribution shares summing to ~100. A PR that adds an ablation axis,
+renames a field, or hand-edits the JSON fails here until the artifact
+is regenerated.
+
+Exit code 0 = in sync; 1 = schema drift (each violation printed).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+ARTIFACT = os.path.join(_HERE, "ABLATION_profiles.json")
+
+TOP_KEYS = {"quick", "full", "explain_analyze_full", "axes",
+            "paper_bands", "method"}
+FULL_KEYS = {"qps", "requests", "serve_us_per_req", "exec_us_per_req",
+             "host_us_per_req", "plan_us_per_req", "ops_us_per_req"}
+AXIS_KEYS = {"serve_us_per_req", "baseline_us_per_req",
+             "added_us_per_req", "added_by_stage", "slowdown",
+             "contribution_pct"}
+STAGE_KEYS = {"exec", "host", "plan"}
+
+
+def check() -> list:
+    errs = []
+    try:
+        with open(ARTIFACT) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot load {ARTIFACT}: {e}"]
+
+    if set(doc) != TOP_KEYS:
+        errs.append(f"top-level keys {sorted(doc)} != {sorted(TOP_KEYS)}")
+    if doc.get("quick") is not False:
+        errs.append("committed artifact must come from a FULL run "
+                    f"(quick={doc.get('quick')!r})")
+
+    # the axis set must match the generator's live registry
+    from benchmarks.bench_fig2_ablation import AXES
+    committed = set(doc.get("axes", {}))
+    if committed != set(AXES):
+        errs.append(f"axes {sorted(committed)} != generator registry "
+                    f"{sorted(AXES)} — re-run ablation_from_profiles.py")
+
+    full = doc.get("full", {})
+    if set(full) != FULL_KEYS:
+        errs.append(f"full keys {sorted(full)} != {sorted(FULL_KEYS)}")
+
+    total_pct = 0.0
+    for name, ax in doc.get("axes", {}).items():
+        if set(ax) != AXIS_KEYS:
+            errs.append(f"axis {name!r} keys {sorted(ax)} "
+                        f"!= {sorted(AXIS_KEYS)}")
+            continue
+        if set(ax["added_by_stage"]) != STAGE_KEYS:
+            errs.append(f"axis {name!r} added_by_stage keys "
+                        f"{sorted(ax['added_by_stage'])} "
+                        f"!= {sorted(STAGE_KEYS)}")
+        for k in AXIS_KEYS - {"added_by_stage"}:
+            if not isinstance(ax[k], (int, float)) or not math.isfinite(ax[k]):
+                errs.append(f"axis {name!r} field {k!r} is not finite "
+                            f"({ax[k]!r})")
+        total_pct += float(ax.get("contribution_pct", 0.0))
+
+    if doc.get("axes") and abs(total_pct - 100.0) > 1.0:
+        errs.append(f"contribution_pct sums to {total_pct:.2f}, "
+                    f"expected ~100 (normalized shares)")
+    if not isinstance(doc.get("explain_analyze_full"), str) \
+            or "EXPLAIN ANALYZE" not in doc.get("explain_analyze_full", ""):
+        errs.append("explain_analyze_full is not an EXPLAIN ANALYZE "
+                    "rendering")
+    return errs
+
+
+def main() -> int:
+    errs = check()
+    if errs:
+        print(f"ABLATION_profiles.json schema drift "
+              f"({len(errs)} violation(s)):")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    print("ABLATION_profiles.json matches the generator schema")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,6 +63,7 @@ class LoadObservation:
     shed: int = 0                 # sheds this interval
     rejected: int = 0             # backpressure rejections this interval
     requests: int = 0             # requests served this interval
+    slo_burning: bool = False     # an action="tune" SLO is ALERTING
 
 
 @dataclass(frozen=True)
@@ -109,7 +110,7 @@ class KnobController:
         tick = self._tick
         self._tick += 1
         has_p99 = not math.isnan(obs.p99_s)
-        overload = (obs.shed > 0 or obs.rejected > 0
+        overload = (obs.shed > 0 or obs.rejected > 0 or obs.slo_burning
                     or (has_p99 and obs.p99_s > cfg.target_p99_s))
         underload = (not overload and obs.shed == 0 and obs.rejected == 0
                      and obs.queue_depth <= 1 and has_p99

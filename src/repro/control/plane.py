@@ -22,6 +22,7 @@ JSON-serializable report.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import threading
 from typing import Any, Dict, List, Optional
@@ -32,6 +33,8 @@ from repro.control.knobs import (KnobConfig, KnobController,
                                  LoadObservation)
 from repro.control.replan import Replanner
 from repro.control.telemetry import MetricsCollector
+from repro.obs.freshness import FreshnessTracker
+from repro.obs.slo import ALERTING, SLOEngine
 
 __all__ = ["ControlPlane"]
 
@@ -47,7 +50,9 @@ class ControlPlane:
                  knob_cfg: KnobConfig = KnobConfig(),
                  replan: bool = True,
                  rel_tol: float = 0.2,
-                 seed: int = 0):
+                 seed: int = 0,
+                 slo: Optional[SLOEngine] = None,
+                 flight=None):
         self.engine = engine
         self.deployment = deployment
         self.server = server
@@ -59,6 +64,9 @@ class ControlPlane:
         self.rel_tol = rel_tol
         self.knobs = knobs if knobs is not None else self._default_knobs(
             knob_cfg, seed)
+        self.slo = slo
+        self.flight = flight if flight is not None \
+            else getattr(engine, "flight", None)
         self.reports: List[Dict[str, Any]] = []
         self._tick = 0
         self._prev_restarts = 0.0
@@ -168,6 +176,62 @@ class ControlPlane:
             queue_depth=depth, oldest_age_s=age, shed=shed,
             rejected=rejected, requests=int(delta.get("requests", 0)))
 
+    # ------------------------------------------------------------------ slo
+    def _slo_metrics(self, obs: LoadObservation) -> Dict[str, float]:
+        """The metric names SLO specs bind to: interval latency/shed from
+        the load observation, freshness/drift pulled live from the
+        engine's exports."""
+        served = max(obs.requests + obs.shed + obs.rejected, 1)
+        metrics: Dict[str, float] = {
+            "latency_p99_s": obs.p99_s,
+            "shed_ratio": (obs.shed + obs.rejected) / served,
+        }
+        fexp = getattr(self.engine, "freshness_export", None)
+        if fexp is not None:
+            try:
+                exp = fexp()
+            except Exception:
+                exp = {}
+            metrics["feature_age_p99"] = \
+                FreshnessTracker.worst_age_p99(exp)
+            i2v = [v for k, v in exp.items()
+                   if k.endswith("/ingest_visible_p99_s")
+                   and isinstance(v, float) and math.isfinite(v)]
+            metrics["ingest_visible_p99_s"] = \
+                max(i2v) if i2v else float("nan")
+        drep = getattr(self.engine, "drift_report", None)
+        if drep is not None:
+            try:
+                psis = [c.get("psi", float("nan"))
+                        for c in drep().values()]
+            except Exception:
+                psis = []
+            finite = [p for p in psis if math.isfinite(p)]
+            metrics["drift_psi_max"] = \
+                max(finite) if finite else float("nan")
+        return metrics
+
+    def _evaluate_slo(self, obs: LoadObservation
+                      ) -> (bool, Optional[Dict[str, Any]]):
+        if self.slo is None:
+            return False, None
+        metrics = self._slo_metrics(obs)
+        events = self.slo.evaluate(metrics)
+        if self.flight is not None:
+            for ev in events:
+                self.flight.record("slo_transition", **ev)
+                if ev["state"] == ALERTING:
+                    # breach: persist the ring NOW — the offending
+                    # batches' trace ids are still in it
+                    self.flight.dump(f"slo-{ev['slo']}")
+        burning = bool(self.slo.active_alerts(action="tune"))
+        return burning, {
+            "events": events,
+            "alerting": sorted(s.name
+                               for s in self.slo.active_alerts()),
+            "metrics": metrics,
+        }
+
     def _apply(self, decisions) -> List[Dict[str, Any]]:
         applied = []
         b = getattr(self.server, "batcher", None) if self.server else None
@@ -227,7 +291,7 @@ class ControlPlane:
                 "tick": t, "recovering": True, "observations_fed": 0,
                 "replan": {"action": "recovering"},
                 "health": {"action": "recovering"},
-                "load": None, "knob_decisions": [],
+                "load": None, "slo": None, "knob_decisions": [],
                 "knobs": dict(self.knobs.knobs),
             }
             self.reports.append(report)
@@ -251,6 +315,9 @@ class ControlPlane:
                 replan_report = {"action": "monitoring"}
 
         obs = self._load_observation(sample)
+        burning, slo_report = self._evaluate_slo(obs)
+        if burning:
+            obs = dataclasses.replace(obs, slo_burning=True)
         decisions = self.knobs.step(obs)
         applied = self._apply(decisions)
 
@@ -262,7 +329,9 @@ class ControlPlane:
             "health": health,
             "load": {"p99_s": obs.p99_s, "queue_depth": obs.queue_depth,
                      "shed": obs.shed, "rejected": obs.rejected,
-                     "requests": obs.requests},
+                     "requests": obs.requests,
+                     "slo_burning": obs.slo_burning},
+            "slo": slo_report,
             "knob_decisions": applied,
             "knobs": dict(self.knobs.knobs),
         }
@@ -310,5 +379,6 @@ class ControlPlane:
             "knobs": self.knobs.snapshot(),
             "knob_log": self.knobs.log,
             "replan_events": self.replanner.events,
+            "slo": self.slo.snapshot() if self.slo is not None else None,
             "last_report": self.reports[-1] if self.reports else None,
         }

@@ -47,6 +47,9 @@ from repro.core.results import (STATUS_OK, STATUS_UNKNOWN_KEY,
                                 RequestContext)
 from repro.featurestore.registry import FeatureRegistry, FeatureSet
 from repro.featurestore.table import Table, TableSchema, TableSnapshot
+from repro.obs.flight import FlightRecorder
+from repro.obs.freshness import FreshnessTracker
+from repro.obs.sketch import DriftMonitor, QuantileSketch, RollingSketch
 from repro.relational.catalog import Catalog
 
 __all__ = ["Engine", "Deployment", "DeploymentHandle", "HandleMetrics",
@@ -116,31 +119,32 @@ class HandleMetrics:
     # right row, online only — offline materialisation doesn't count
     join_probes: Dict[str, int] = dataclasses.field(default_factory=dict)
     join_matches: Dict[str, int] = dataclasses.field(default_factory=dict)
-    # bounded reservoir of recent per-batch serve latencies (seconds) —
-    # what the control plane's replan health check computes p99 over; a
-    # plain FIFO window (newest LATENCY_RESERVOIR batches win), so
-    # post-swap observations displace pre-swap ones deterministically
-    latency_s: "collections.deque" = dataclasses.field(
-        default_factory=lambda: collections.deque(
-            maxlen=HandleMetrics.LATENCY_RESERVOIR))
+    # rolling sketch of recent per-batch serve latencies (seconds) —
+    # what the control plane's replan health check computes p99 over.
+    # Replaces the old 512-sample deque reservoir (DESIGN.md §14):
+    # bounded memory regardless of traffic, displaced by TIME instead of
+    # sample count, and cross-shard merges are exact instead of
+    # worst-shard-max. ``len(latency_s)`` stays the monotonic batch
+    # count (what the replan health gate counts).
+    latency_s: RollingSketch = dataclasses.field(
+        default_factory=lambda: RollingSketch(
+            window_s=HandleMetrics.LATENCY_WINDOW_S))
 
-    LATENCY_RESERVOIR = 512
+    LATENCY_WINDOW_S = 5.0
 
     def observe_latency(self, seconds: float) -> None:
-        self.latency_s.append(float(seconds))
+        self.latency_s.observe(float(seconds))
 
     def latency_percentile(self, pct: float) -> float:
-        """Percentile (e.g. 99) over the recent-latency reservoir;
-        NaN with no samples (an empty reservoir has no tail)."""
-        if not self.latency_s:
-            return float("nan")
-        return float(np.percentile(np.asarray(self.latency_s, np.float64),
-                                   pct))
+        """Percentile (e.g. 99) over the rolling latency window;
+        NaN with no samples (an empty window has no tail)."""
+        return self.latency_s.percentile(pct)
 
     def snapshot(self) -> Dict[str, float]:
-        """JSON-serializable copy (the reservoir is summarised, not
-        dumped — 512 floats per deployment per sample would swamp the
-        collector's ring buffers)."""
+        """JSON-serializable copy. The latency sketch rides along under
+        ``latency_sketch`` (a few dozen buckets) so the sharded rollup
+        merges percentiles EXACTLY instead of maxing per-shard p99s."""
+        sk = self.latency_s.sketch()
         return {
             "requests": self.requests, "batches": self.batches,
             "serve_s": self.serve_s, "unknown_keys": self.unknown_keys,
@@ -149,8 +153,9 @@ class HandleMetrics:
             "join_probes": dict(self.join_probes),
             "join_matches": dict(self.join_matches),
             "latency_samples": len(self.latency_s),
-            "latency_p50_s": self.latency_percentile(50),
-            "latency_p99_s": self.latency_percentile(99),
+            "latency_p50_s": sk.percentile(50),
+            "latency_p99_s": sk.percentile(99),
+            "latency_sketch": sk.to_dict(),
         }
 
 
@@ -194,10 +199,12 @@ class DeploymentHandle:
         self._canary: Optional[Tuple["DeploymentHandle", float]] = None
         self._canary_counter = 0
         self._lock = threading.Lock()
-        # bounded reservoir of right-row ages (req_ts − joined row ts, in
-        # event-time units) per joined table, for staleness percentiles
-        self._join_ages: Dict[str, "collections.deque"] = {
-            j.table: collections.deque(maxlen=4096) for j in plan.joins}
+        # right-row ages (req_ts − joined row ts, in event-time units)
+        # per joined table: a quantile sketch per right table — bounded
+        # buckets instead of the old 4096-sample deque, and the sharded
+        # rollup merges staleness percentiles exactly (DESIGN.md §14)
+        self._join_ages: Dict[str, QuantileSketch] = {
+            j.table: QuantileSketch() for j in plan.joins}
 
     # ------------------------------------------------------------ identity
     @property
@@ -303,8 +310,8 @@ class DeploymentHandle:
                 mt.join_matches[j.table] = (
                     mt.join_matches.get(j.table, 0) + n_match)
                 if age is not None and n_match:
-                    self._join_ages[j.table].extend(
-                        np.asarray(age)[matched].tolist())
+                    self._join_ages[j.table].observe_many(
+                        np.asarray(age)[matched])
 
     def join_staleness(self) -> Dict[str, Dict[str, float]]:
         """Per joined table: probe match-rate and right-row age
@@ -316,16 +323,16 @@ class DeploymentHandle:
             for j in self.plan.joins:
                 probes = self.metrics.join_probes.get(j.table, 0)
                 matches = self.metrics.join_matches.get(j.table, 0)
-                ages = np.asarray(self._join_ages[j.table], np.float64)
+                sk = self._join_ages[j.table]
                 out[j.table] = {
                     "probes": probes,
                     "matches": matches,
                     "match_rate": matches / probes if probes else 0.0,
-                    "age_p50": (float(np.percentile(ages, 50))
-                                if ages.size else float("nan")),
-                    "age_p99": (float(np.percentile(ages, 99))
-                                if ages.size else float("nan")),
-                    "age_samples": int(ages.size),
+                    "age_p50": sk.percentile(50),
+                    "age_p99": sk.percentile(99),
+                    "age_samples": sk.count,
+                    # exact cross-shard merging (repro.shard rollup)
+                    "age_sketch": sk.to_dict(),
                 }
         return out
 
@@ -371,8 +378,15 @@ class DeploymentHandle:
     # --------------------------------------------------------------- serve
     def request(self, keys: Sequence, ts: Sequence[float],
                 rows: Optional[np.ndarray] = None,
-                ctx: Optional[RequestContext] = None) -> FeatureFrame:
-        """Serve a batch of online feature requests on THIS version."""
+                ctx: Optional[RequestContext] = None,
+                n_live: Optional[int] = None) -> FeatureFrame:
+        """Serve a batch of online feature requests on THIS version.
+
+        ``n_live`` marks how many leading rows are REAL when the caller
+        edge-padded the batch to a shape bucket (the shard lane repeats
+        the last row): pad rows are served but excluded from freshness /
+        drift observation, so equal request multisets produce equal
+        sketches on every backend."""
         if ctx is not None and ctx.expired:
             raise DeadlineExceeded(
                 f"deadline expired before serving {self.tag}")
@@ -390,12 +404,12 @@ class DeploymentHandle:
             if int(n * frac) > int((n - 1) * frac):
                 cand = cand_handle
         if cand is None:
-            return self._serve(keys, ts, rows, ctx)
+            return self._serve(keys, ts, rows, ctx, n_live=n_live)
         # canary slice: the new version serves the batch; the incumbent
         # computes the same batch as reference and the divergence is
         # recorded on the candidate (promote/rollback evidence).
-        base = self._serve(keys, ts, rows, ctx)
-        new = cand._serve(keys, ts, rows, ctx)
+        base = self._serve(keys, ts, rows, ctx, n_live=n_live)
+        new = cand._serve(keys, ts, rows, ctx, n_live=n_live)
         diff = 0.0
         for nme, v in new.columns.items():
             ref = base.columns.get(nme)
@@ -417,10 +431,12 @@ class DeploymentHandle:
 
     def _serve(self, keys: Sequence, ts: Sequence[float],
                rows: Optional[np.ndarray],
-               ctx: Optional[RequestContext]) -> FeatureFrame:
+               ctx: Optional[RequestContext],
+               n_live: Optional[int] = None) -> FeatureFrame:
         eng = self.engine
         table = self.table
         B = len(keys)
+        nl = B if n_live is None else max(0, min(int(n_live), B))
         trace = ctx.trace_id if ctx is not None else None
         if B == 0:
             return FeatureFrame(
@@ -515,6 +531,25 @@ class DeploymentHandle:
             m.observe_latency(wall)
         eng.stats.serve_s += wall
         eng.stats.host_s += host_dt
+        # data-plane observability (DESIGN.md §14): per-row feature age
+        # against the served snapshot's watermark, live feature
+        # distributions for drift, and a flight-recorder breadcrumb.
+        # Only the first ``nl`` rows are real — pad rows are excluded so
+        # sketches agree bit-for-bit across backends.
+        batch_age = float("nan")
+        wm = snap.watermark
+        if nl and np.isfinite(wm):
+            ages = np.asarray(ts_arr[:nl], np.float64) - wm
+            batch_age = float(ages.max())
+            eng.freshness.observe_age(table.schema.name, ages)
+        if nl:
+            eng.drift.observe(out, n=nl)
+        eng.flight.record(
+            "serve", trace=trace, deployment=self.tag, rows=nl,
+            unknown=n_unknown, table_version=snap.version,
+            watermark=wm if np.isfinite(wm) else None,
+            feature_age=batch_age if np.isfinite(batch_age) else None,
+            serve_ms=wall * 1e3)
         attributed = eng.profiler.record(
             self, B, exec_s=exec_dt, host_s=host_dt, plan_s=plan_dt,
             serve_s=wall, model=eng.cost_model)
@@ -539,7 +574,9 @@ class DeploymentHandle:
             out, status=status, deployment=self.name, version=self.version,
             table_version=snap.version,
             latency={"serve_s": wall, "plan_s": plan_dt},
-            trace_id=trace)
+            trace_id=trace,
+            watermark=float(wm) if np.isfinite(wm) else None,
+            feature_age=batch_age if np.isfinite(batch_age) else None)
 
     # ----------------------------------------------------------- lifecycle
     def rollback(self) -> "DeploymentHandle":
@@ -582,6 +619,13 @@ class Engine:
         self.tracer = Tracer(sample_rate=float(
             os.environ.get("REPRO_TRACE_SAMPLE", "0") or 0))
         self.profiler = OperatorProfiler()
+        # data-plane observability (DESIGN.md §14): feature freshness,
+        # serving-distribution drift, and the flight recorder — all
+        # mergeable across shards (ShardedEngine folds per-worker
+        # snapshots via the freshness_snapshot RPC)
+        self.freshness = FreshnessTracker()
+        self.drift = DriftMonitor()
+        self.flight = FlightRecorder()
         # shape buckets every new deployment version pre-compiles before
         # going live (redeploys additionally warm the buckets the retired
         # version actually served)
@@ -684,7 +728,8 @@ class Engine:
             cfg = PipelineConfig(**cfg_kw)
         elif cfg_kw:
             raise ValueError("pass cfg or keywords, not both")
-        pipe = IngestPipeline(self.tables[table], cfg)
+        pipe = IngestPipeline(self.tables[table], cfg,
+                              freshness=self.freshness)
         self.streams[table] = pipe
         return pipe
 
@@ -1240,6 +1285,43 @@ class Engine:
             out["join_match_rate"] = matches / probes
             out["join_age_p99"] = max(ages) if ages else worst_p99
         return out
+
+    # ------------------------------------------------------------ freshness
+    def freshness_snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Per-table freshness snapshot: serving sketches from the
+        tracker plus LIVE stamps read straight off each table's current
+        snapshot (watermark, publish time, version) and its ingest-side
+        distribution sketches. Picklable — this is what the proc worker
+        ships over the ``freshness_snapshot`` RPC and what
+        ``FreshnessTracker.merge`` folds across shards."""
+        snap = self.freshness.snapshot()
+        for name, t in self.tables.items():
+            ent = snap.get(name)
+            if ent is None:
+                ent = snap[name] = dict(FreshnessTracker.blank_entry())
+            ts = t.snapshot()
+            ent["watermark"] = float(ts.watermark)
+            ent["published_at"] = float(ts.published_at)
+            ent["table_version"] = int(ts.version)
+            ent.update(t.ingest_stats())
+        return snap
+
+    def freshness_export(self) -> Dict[str, object]:
+        """Flat ``freshness`` metrics group for the registry."""
+        return FreshnessTracker.export(self.freshness_snapshot())
+
+    def drift_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-column live-vs-reference PSI scores."""
+        return self.drift.report()
+
+    def drift_export(self) -> Dict[str, float]:
+        """Flat ``drift`` metrics group for the registry."""
+        return self.drift.export()
+
+    def pin_drift_reference(self) -> List[str]:
+        """Adopt the current live serving distribution as the drift
+        reference (e.g. at model-deploy time); returns pinned columns."""
+        return self.drift.pin_reference()
 
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:

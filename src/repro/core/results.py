@@ -87,7 +87,8 @@ class FeatureFrame(Mapping):
     """
 
     __slots__ = ("columns", "status", "deployment", "version",
-                 "table_version", "latency", "trace_id", "version_vector")
+                 "table_version", "latency", "trace_id", "version_vector",
+                 "watermark", "feature_age")
 
     def __init__(self, columns: Dict[str, np.ndarray], *,
                  status: Optional[np.ndarray] = None,
@@ -95,7 +96,9 @@ class FeatureFrame(Mapping):
                  table_version: int = -1,
                  latency: Optional[Dict[str, float]] = None,
                  trace_id: Optional[str] = None,
-                 version_vector: Optional[tuple] = None):
+                 version_vector: Optional[tuple] = None,
+                 watermark: Optional[float] = None,
+                 feature_age: Optional[float] = None):
         self.columns = dict(columns)
         if status is None:
             status = np.zeros((0,), np.int8)
@@ -108,6 +111,12 @@ class FeatureFrame(Mapping):
         # sharded serving: per-shard table snapshot versions (shard order)
         # for the batch — the cross-shard analogue of ``table_version``
         self.version_vector = version_vector
+        # freshness stamp (DESIGN.md §14): max event-time the served
+        # snapshot covered, and this batch's worst feature age (request
+        # event-time − watermark, event-time units; sharded serving
+        # stamps the MIN watermark / MAX age across touched shards)
+        self.watermark = watermark
+        self.feature_age = feature_age
 
     # ---------------------------------------------------- Mapping protocol
     def __getitem__(self, name: str) -> np.ndarray:
@@ -148,7 +157,8 @@ class FeatureFrame(Mapping):
             status=self.status[i:i + 1] if self.status.size else None,
             deployment=self.deployment, version=self.version,
             table_version=self.table_version, latency=self.latency,
-            trace_id=self.trace_id, version_vector=self.version_vector)
+            trace_id=self.trace_id, version_vector=self.version_vector,
+            watermark=self.watermark, feature_age=self.feature_age)
 
     def __repr__(self) -> str:
         return (f"FeatureFrame({sorted(self.columns)}, "

@@ -26,14 +26,16 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.featurestore.keydir import KeyDirectory
+from repro.obs.sketch import CardinalityEstimator, QuantileSketch
 
 __all__ = ["TableSchema", "TableState", "PreAggState", "Table",
            "TableSnapshot", "empty_state", "empty_preagg", "ingest",
@@ -213,6 +215,11 @@ class TableSnapshot:
     state: TableState
     preagg: Optional[PreAggState]
     version: int
+    # freshness stamps (DESIGN.md §14): the max event-time this state
+    # covers, and the wall-clock instant it was swapped in. Default
+    # values keep hand-built snapshots (tests, recovery) valid.
+    watermark: float = float("-inf")
+    published_at: float = 0.0
 
 
 class Table:
@@ -253,6 +260,14 @@ class Table:
         self._published = TableSnapshot(state=state, preagg=preagg,
                                         version=0)
         self._last_ts: Dict[int, float] = {}
+        # freshness/drift instrumentation (DESIGN.md §14): event-time
+        # write frontier plus ingest-side distribution sketches — one
+        # quantile sketch per value column and a KMV distinct-key
+        # estimator, updated incrementally (vectorized) per insert.
+        self._watermark = float("-inf")
+        self._col_sketches: Dict[str, QuantileSketch] = {
+            c: QuantileSketch() for c in schema.value_cols}
+        self._key_card = CardinalityEstimator()
 
     def put(self, x):
         """Place a host array per this table's device policy: committed to
@@ -272,7 +287,9 @@ class Table:
     def state(self, s: TableState) -> None:
         with self._pub_lock:
             p = self._published
-            self._published = TableSnapshot(s, p.preagg, p.version + 1)
+            self._published = TableSnapshot(
+                s, p.preagg, p.version + 1,
+                watermark=self._watermark, published_at=time.time())
 
     @property
     def preagg(self) -> Optional[PreAggState]:
@@ -282,7 +299,9 @@ class Table:
     def preagg(self, pa: Optional[PreAggState]) -> None:
         with self._pub_lock:
             p = self._published
-            self._published = TableSnapshot(p.state, pa, p.version + 1)
+            self._published = TableSnapshot(
+                p.state, pa, p.version + 1,
+                watermark=self._watermark, published_at=time.time())
 
     @property
     def version(self) -> int:
@@ -294,12 +313,21 @@ class Table:
 
     def publish(self, state: TableState,
                 preagg: Optional[PreAggState]) -> TableSnapshot:
-        """Atomically swap both tiers in (one version bump)."""
+        """Atomically swap both tiers in (one version bump). The new
+        snapshot carries the current write frontier as its freshness
+        watermark plus the publish wall-time."""
         with self._pub_lock:
             snap = TableSnapshot(state, preagg,
-                                 self._published.version + 1)
+                                 self._published.version + 1,
+                                 watermark=self._watermark,
+                                 published_at=time.time())
             self._published = snap
         return snap
+
+    @property
+    def watermark(self) -> float:
+        """Max event-time ever ingested (``-inf`` while empty)."""
+        return self._watermark
 
     # -- key management ----------------------------------------------------
     def key_index(self, key, create: bool = False) -> int:
@@ -380,6 +408,9 @@ class Table:
                     f"non-decreasing timestamps)")
             pending[ki] = t
         B = rows.shape[0]
+        # capture pre-padding views: freshness/drift stats must see the
+        # REAL batch only (pad rows are shape filler)
+        raw_ts, raw_rows, raw_keys = ts_arr, rows, keys
         if pad_to_bucket:
             bucket = min(_ingest_bucket(B), self.capacity)
             if bucket > B:
@@ -395,8 +426,18 @@ class Table:
             snap.state, snap.preagg, self.put(kidx),
             self.put(ts_arr), self.put(rows),
             bucket_size=self.bucket_size)
+        # advance the frontier before publish so the new snapshot's
+        # watermark covers this batch; stats commit only on success
+        # (same contract as _last_ts)
+        if B:
+            self._watermark = max(self._watermark,
+                                  float(raw_ts[:B].max()))
         self.publish(new_state, new_preagg)
         self._last_ts.update(pending)
+        if B:
+            self._key_card.add_many(raw_keys)
+            for j, col in enumerate(self.schema.value_cols):
+                self._col_sketches[col].observe_many(raw_rows[:B, j])
 
     def warm_ingest(self, *, max_batch: Optional[int] = None) -> int:
         """Pre-compile the (non-donating) ingest for every shape bucket up
@@ -427,6 +468,17 @@ class Table:
         return len(sizes)
 
     # -- introspection -----------------------------------------------------
+    def ingest_stats(self) -> Dict[str, Any]:
+        """Picklable ingest-side distribution snapshot: per-value-column
+        quantile sketches plus the distinct-key estimate. Ships over the
+        ``freshness_snapshot`` RPC and merges exactly across shards."""
+        return {
+            "key_card": self._key_card.to_dict(),
+            "columns": {c: sk.to_dict()
+                        for c, sk in self._col_sketches.items()
+                        if sk.count},
+        }
+
     def column_indices(self, cols: Sequence[str]) -> Tuple[int, ...]:
         return tuple(self.schema.col_index(c) for c in cols)
 

@@ -1,10 +1,38 @@
-"""Observability tier (DESIGN.md §13): distributed tracing, the
-EXPLAIN ANALYZE operator profiler, and the unified metrics registry."""
-from repro.obs.export import MetricsRegistry, registry_from_engine
-from repro.obs.profile import (OperatorProfiler, attribute_exec,
-                               operator_rows)
-from repro.obs.trace import Span, Tracer, new_trace_id
+"""Observability tier (DESIGN.md §13–14): distributed tracing, the
+EXPLAIN ANALYZE operator profiler, the unified metrics registry, and
+the data-plane freshness/drift/SLO/flight-recorder modules.
 
-__all__ = ["Tracer", "Span", "new_trace_id", "OperatorProfiler",
-           "operator_rows", "attribute_exec", "MetricsRegistry",
-           "registry_from_engine"]
+Attribute access is lazy (PEP 562): the low-level sketch/freshness
+modules are imported by the featurestore/streaming layers, so eagerly
+importing ``profile``/``export`` here (which pull ``repro.core``) would
+create an import cycle.
+"""
+_EXPORTS = {
+    "MetricsRegistry": "repro.obs.export",
+    "registry_from_engine": "repro.obs.export",
+    "OperatorProfiler": "repro.obs.profile",
+    "attribute_exec": "repro.obs.profile",
+    "operator_rows": "repro.obs.profile",
+    "Span": "repro.obs.trace",
+    "Tracer": "repro.obs.trace",
+    "new_trace_id": "repro.obs.trace",
+    "QuantileSketch": "repro.obs.sketch",
+    "RollingSketch": "repro.obs.sketch",
+    "CardinalityEstimator": "repro.obs.sketch",
+    "DriftMonitor": "repro.obs.sketch",
+    "psi_distance": "repro.obs.sketch",
+    "FreshnessTracker": "repro.obs.freshness",
+    "SLOSpec": "repro.obs.slo",
+    "SLOEngine": "repro.obs.slo",
+    "FlightRecorder": "repro.obs.flight",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -32,6 +32,17 @@ def _sanitize(name: str) -> str:
     return _NAME_RE.sub("_", name)
 
 
+def _escape_label(value: str) -> str:
+    """Prometheus label-value escaping: backslash, double-quote and
+    newline are the three characters the text format requires escaped."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _fmt(v) -> str:
+    return f"{int(v)}" if isinstance(v, int) else repr(float(v))
+
+
 class MetricsRegistry:
     """Named groups of collector callables; collection is pull-based —
     nothing is cached, a collect reads the live counters."""
@@ -70,31 +81,55 @@ class MetricsRegistry:
 
     # ---------------------------------------------------------- renderers
     def render_prometheus(self) -> str:
-        """Prometheus text exposition (one gauge per numeric key)."""
+        """Prometheus text exposition: one gauge per numeric key, plus a
+        native histogram per quantile-sketch value (``*_sketch`` entries
+        in a collector dict render as cumulative ``_bucket`` series with
+        ``le`` labels, ``_sum`` and ``_count``). Label values are escaped
+        per the text-format rules; ``# HELP``/``# TYPE`` headers precede
+        the first sample of each metric family."""
+        from repro.obs.sketch import QuantileSketch
         lines: List[str] = []
         for group, metrics in self.collect().items():
-            seen_types = set()
+            seen = set()
             for key in sorted(metrics):
                 v = metrics[key]
-                if isinstance(v, bool) or not isinstance(v, (int, float)):
-                    continue
-                if isinstance(v, float) and not math.isfinite(v):
-                    continue
                 if "/" in key:
                     item, metric = key.split("/", 1)
                     mname = (f"{self.prefix}_{_sanitize(group)}_"
                              f"{_sanitize(metric)}")
-                    label = f'{{item="{item}"}}'
+                    item_label = f'item="{_escape_label(item)}"'
                 else:
+                    metric = key
                     mname = (f"{self.prefix}_{_sanitize(group)}_"
                              f"{_sanitize(key)}")
-                    label = ""
-                if mname not in seen_types:
+                    item_label = ""
+                if QuantileSketch.is_sketch_dict(v):
+                    if mname not in seen:
+                        lines.append(f"# HELP {mname} {group} {metric} "
+                                     f"(quantile sketch)")
+                        lines.append(f"# TYPE {mname} histogram")
+                        seen.add(mname)
+                    sk = QuantileSketch.from_dict(v)
+                    pre = f"{item_label}," if item_label else ""
+                    for ub, cum in sk.histogram():
+                        lines.append(f'{mname}_bucket{{{pre}le='
+                                     f'"{_fmt(float(ub))}"}} {cum}')
+                    lines.append(
+                        f'{mname}_bucket{{{pre}le="+Inf"}} {sk.count}')
+                    lab = f"{{{item_label}}}" if item_label else ""
+                    lines.append(f"{mname}_sum{lab} {_fmt(sk.sum)}")
+                    lines.append(f"{mname}_count{lab} {sk.count}")
+                    continue
+                if isinstance(v, bool) or not isinstance(v, (int, float)):
+                    continue
+                if isinstance(v, float) and not math.isfinite(v):
+                    continue
+                if mname not in seen:
+                    lines.append(f"# HELP {mname} {group} {metric}")
                     lines.append(f"# TYPE {mname} gauge")
-                    seen_types.add(mname)
-                val = f"{int(v)}" if isinstance(v, int) \
-                    else repr(float(v))
-                lines.append(f"{mname}{label} {val}")
+                    seen.add(mname)
+                lab = f"{{{item_label}}}" if item_label else ""
+                lines.append(f"{mname}{lab} {_fmt(v)}")
         return "\n".join(lines) + "\n"
 
     def render_jsonl(self, now: Optional[float] = None) -> str:
@@ -113,7 +148,7 @@ def _json_default(v):
 
 
 # --------------------------------------------------------------- wiring
-def registry_from_engine(engine, *, server=None,
+def registry_from_engine(engine, *, server=None, slo=None,
                          prefix: str = "repro") -> MetricsRegistry:
     """Wire a registry over every surface ``engine`` (an ``Engine`` or a
     ``ShardedEngine``) and the optional ``FeatureServer`` expose. Groups
@@ -189,6 +224,16 @@ def registry_from_engine(engine, *, server=None,
     tracer = getattr(engine, "tracer", None)
     if tracer is not None:
         reg.register("tracer", tracer.snapshot)
+
+    if hasattr(engine, "freshness_export"):
+        reg.register("freshness", engine.freshness_export)
+    if hasattr(engine, "drift_export"):
+        reg.register("drift", engine.drift_export)
+    flight = getattr(engine, "flight", None)
+    if flight is not None:
+        reg.register("flight", flight.stats)
+    if slo is not None:
+        reg.register("slo", slo.export)
 
     batcher = getattr(server, "batcher", None) if server else None
     if batcher is not None:

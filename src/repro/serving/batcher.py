@@ -34,6 +34,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.results import DeadlineExceeded, RequestContext
+from repro.obs.sketch import RollingSketch
 
 __all__ = ["BatcherConfig", "DynamicBatcher", "Request", "BatcherClosed"]
 
@@ -110,8 +111,10 @@ class DynamicBatcher:
                       "expired": 0, "sum_batch": 0, "max_batch_seen": 0}
         # CLIENT-observed per-request latency (submit -> result), i.e.
         # queueing INCLUDED — the engine-side serve timer cannot see a
-        # queue building up in front of it, this reservoir can
-        self._client_lat: Deque[float] = collections.deque(maxlen=512)
+        # queue building up in front of it, this sketch can. A rolling
+        # sketch (DESIGN.md §14) instead of the old 512-sample deque:
+        # bounded memory AND bounded recency at any traffic level
+        self._client_lat = RollingSketch(window_s=5.0)
         self._threads = [
             threading.Thread(target=self._dispatch_loop, daemon=True)
             for _ in range(cfg.num_dispatchers)]
@@ -255,7 +258,7 @@ class DynamicBatcher:
                 with self._lock:
                     for r in batch:
                         self._inflight.pop(id(r), None)
-                        self._client_lat.append(now - r.enqueued_at)
+                        self._client_lat.observe(now - r.enqueued_at)
             self.stats["batches"] += 1
             self.stats["requests"] += len(batch)
             self.stats["sum_batch"] += len(batch)
@@ -309,11 +312,7 @@ class DynamicBatcher:
         completed. This is the load signal the control plane prefers:
         under saturation the serve-side p99 stays flat while THIS one
         grows by the queueing delay."""
-        with self._lock:
-            if not self._client_lat:
-                return float("nan")
-            arr = np.asarray(self._client_lat, np.float64)
-        return float(np.percentile(arr, pct))
+        return self._client_lat.percentile(pct)
 
     def oldest_age_s(self) -> float:
         """Age of the oldest queued request (0 when the queue is empty) —

@@ -78,6 +78,9 @@ from repro.core.optimizer import CostModel, OptFlags
 from repro.core.results import (STATUS_DEGRADED, STATUS_OK, STATUS_SHED,
                                 FeatureFrame, RequestContext)
 from repro.featurestore.table import TableSchema
+from repro.obs.flight import FlightRecorder
+from repro.obs.freshness import FreshnessTracker
+from repro.obs.sketch import DriftMonitor, QuantileSketch, RollingSketch
 # stdlib-only module: importing the plan type does not pull the proc
 # backend (or jax) into in-process users
 from repro.shard.proc.faults import FaultPlan
@@ -156,24 +159,23 @@ class ShardedHandleMetrics:
     serve_s: float = 0.0
     canary_batches: int = 0
     canary_max_abs_diff: float = 0.0
-    # end-to-end (scatter->gather) per-batch latency reservoir — same
-    # FIFO-window semantics as HandleMetrics.latency_s, so the control
-    # plane's replan p99 health check works identically when sharded
-    latency_s: "collections.deque" = dataclasses.field(
-        default_factory=lambda: collections.deque(
-            maxlen=HandleMetrics.LATENCY_RESERVOIR))
+    # end-to-end (scatter->gather) per-batch latency, in the same
+    # rolling sketch HandleMetrics uses — the control plane's replan
+    # p99 health check works identically when sharded, and the sketch
+    # merges exactly with per-shard serve sketches (DESIGN.md §14)
+    latency_s: RollingSketch = dataclasses.field(
+        default_factory=lambda: RollingSketch(
+            window_s=HandleMetrics.LATENCY_WINDOW_S))
 
     def observe_latency(self, seconds: float) -> None:
-        self.latency_s.append(float(seconds))
+        self.latency_s.observe(float(seconds))
 
     def latency_percentile(self, pct: float) -> float:
-        if not self.latency_s:
-            return float("nan")
-        return float(np.percentile(np.asarray(self.latency_s, np.float64),
-                                   pct))
+        return self.latency_s.percentile(pct)
 
     def snapshot(self) -> Dict[str, float]:
-        """JSON-serializable copy (reservoir summarised, not dumped)."""
+        """JSON-serializable copy (sketch rides along, mergeable)."""
+        sk = self.latency_s.sketch()
         return {
             "requests": self.requests, "batches": self.batches,
             "shed_requests": self.shed_requests,
@@ -184,8 +186,9 @@ class ShardedHandleMetrics:
             "canary_batches": self.canary_batches,
             "canary_max_abs_diff": self.canary_max_abs_diff,
             "latency_samples": len(self.latency_s),
-            "latency_p50_s": self.latency_percentile(50),
-            "latency_p99_s": self.latency_percentile(99),
+            "latency_p50_s": sk.percentile(50),
+            "latency_p99_s": sk.percentile(99),
+            "latency_sketch": sk.to_dict(),
         }
 
 
@@ -273,25 +276,31 @@ class ShardedDeploymentHandle:
                      if h is not None)
 
     def join_staleness(self) -> Dict[str, Dict[str, float]]:
-        """Cross-shard rollup of the per-shard staleness metrics."""
+        """Cross-shard rollup of the per-shard staleness metrics. Age
+        percentiles come from the EXACT merge of per-shard sketches —
+        the merged p99 is what one engine observing the union would
+        report, not a worst-shard max (DESIGN.md §14)."""
         out: Dict[str, Dict[str, float]] = {}
+        sketches: Dict[str, list] = {}
         for h in self.handles:
             if h is None:
                 continue
             for t, st in h.join_staleness().items():
                 agg = out.setdefault(t, {"probes": 0, "matches": 0,
-                                         "age_p99": float("nan"),
                                          "age_samples": 0})
                 agg["probes"] += st["probes"]
                 agg["matches"] += st["matches"]
                 agg["age_samples"] += st["age_samples"]
-                if st["age_samples"]:
-                    p99 = st["age_p99"]
-                    agg["age_p99"] = (p99 if np.isnan(agg["age_p99"])
-                                      else max(agg["age_p99"], p99))
-        for agg in out.values():
+                sk = st.get("age_sketch")
+                if sk is not None:
+                    sketches.setdefault(t, []).append(sk)
+        for t, agg in out.items():
             agg["match_rate"] = (agg["matches"] / agg["probes"]
                                  if agg["probes"] else 0.0)
+            merged = QuantileSketch.merged(sketches.get(t, ()))
+            agg["age_p50"] = merged.percentile(50)
+            agg["age_p99"] = merged.percentile(99)
+            agg["age_sketch"] = merged.to_dict()
         return out
 
     # --------------------------------------------------------------- serve
@@ -327,7 +336,7 @@ class ShardedDeploymentHandle:
         if aspan is not None:
             eng.tracer.finish(aspan, tags={"shed": adm.shed})
         if adm.shed:
-            return self._shed_frame(B, trace)
+            return self._shed_frame(B, trace, kind="admission")
         try:
             cand = None
             pinned = ctx is not None and ctx.version_pin is not None
@@ -404,10 +413,10 @@ class ShardedDeploymentHandle:
                 if deg is not None:
                     eng.resources.record_degraded(int(deg.n_degraded))
                     return deg
-            eng.resources.record_shed(
-                kind="worker_down" if "worker_down" in reasons
-                else "deadline")
-            return self._shed_frame(B, trace)
+            shed_kind = ("worker_down" if "worker_down" in reasons
+                         else "deadline")
+            eng.resources.record_shed(kind=shed_kind)
+            return self._shed_frame(B, trace, kind=shed_kind)
         self._remember(karr, columns, status)
         wall = time.perf_counter() - t0
         with self._lock:
@@ -416,13 +425,28 @@ class ShardedDeploymentHandle:
             m.batches += 1
             m.serve_s += wall
             m.observe_latency(wall)
+        # freshness stamp across touched shards: MIN watermark (the
+        # slowest shard bounds the batch) / MAX feature age
+        wm = age = None
+        for _, it in parts:
+            if it.watermark is not None:
+                wm = it.watermark if wm is None \
+                    else min(wm, it.watermark)
+            if it.feature_age is not None:
+                age = it.feature_age if age is None \
+                    else max(age, it.feature_age)
+        vv = self.version_vector()
+        eng.flight.record(
+            "serve", trace=trace, deployment=self.tag, rows=B,
+            version_vector=list(vv), watermark=wm, feature_age=age,
+            serve_ms=wall * 1e3)
         return FeatureFrame(
             columns, status=status, deployment=self.name,
             version=self.version, trace_id=trace,
             table_version=max((h.table.version for h in self.handles
                                if h is not None), default=-1),
             latency={"serve_s": wall},
-            version_vector=self.version_vector())
+            version_vector=vv, watermark=wm, feature_age=age)
 
     # ------------------------------------------------------ stale tier
     @staticmethod
@@ -484,10 +508,14 @@ class ShardedDeploymentHandle:
                                if h is not None), default=-1),
             version_vector=self.version_vector())
 
-    def _shed_frame(self, B: int, trace) -> FeatureFrame:
+    def _shed_frame(self, B: int, trace,
+                    kind: str = "shed") -> FeatureFrame:
         with self._lock:
             self.metrics.shed_requests += B
             self.metrics.shed_batches += 1
+        self.engine.flight.record("shed", trace=trace,
+                                  deployment=self.tag, rows=B,
+                                  shed_kind=kind)
         return FeatureFrame(
             {n: np.zeros((B,), np.float32)
              for n in self.phys.feature_names},
@@ -651,6 +679,10 @@ class ShardedEngine:
         self.tracer = Tracer(sample_rate=float(
             os.environ.get("REPRO_TRACE_SAMPLE", "0") or 0))
         self.profiler = OperatorProfiler()
+        # parent-tier flight recorder (DESIGN.md §14): per-batch serve /
+        # shed breadcrumbs, dumped on SLO breach (control plane) or
+        # worker death (_archive_wal prespawn hook)
+        self.flight = FlightRecorder()
         if self.backend is None:
             for sub in self.shards:
                 sub.tracer = self.tracer
@@ -1363,6 +1395,10 @@ class ShardedEngine:
         Archives stack (``.recover-0``, ``.recover-1`` ...) if a worker
         dies again before the previous replay finished; prefix-skip
         makes replaying both idempotent."""
+        # postmortem evidence first: the ring holds the batches that led
+        # into the crash (rate-limited, so a crash loop can't disk-fill)
+        self.flight.record("worker_down", shard=s)
+        self.flight.dump(f"worker-down-shard-{s}")
         if self.cfg.wal_dir is None:
             return
         src = os.path.join(self.cfg.wal_dir, f"shard-{s}")
@@ -1558,6 +1594,47 @@ class ShardedEngine:
                 obs.extend(
                     self.shards[s].profiler.drain_observations(name))
         return obs
+
+    # ----------------------------------------------------------- freshness
+    def freshness_snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Cross-shard freshness: per-worker snapshots (RPC under the
+        process backend, mirroring ``profile_snapshot``) merged exactly —
+        sketches add bucket-wise, counters sum, watermarks take the MIN
+        (the slowest shard bounds global freshness)."""
+        # the proc client exposes the same method (one RPC per worker)
+        snaps = [self.shards[s].freshness_snapshot()
+                 for s in self._active_ids()]
+        return FreshnessTracker.merge(snaps)
+
+    def freshness_export(self) -> Dict[str, object]:
+        """Flat ``freshness`` metrics group (merged across shards)."""
+        return FreshnessTracker.export(self.freshness_snapshot())
+
+    def _drift_monitor(self) -> DriftMonitor:
+        snaps = []
+        for s in self._active_ids():
+            sub = self.shards[s]
+            if hasattr(sub, "drift"):                # in-process Engine
+                snaps.append(sub.drift.snapshot())
+            else:                                    # proc client (RPC)
+                snaps.append(sub.drift_snapshot())
+        return DriftMonitor.merge(snaps)
+
+    def drift_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-column live-vs-reference PSI, merged across shards."""
+        return self._drift_monitor().report()
+
+    def drift_export(self) -> Dict[str, float]:
+        return self._drift_monitor().export()
+
+    def pin_drift_reference(self) -> List[str]:
+        """Pin every shard's current live distribution as its drift
+        reference (each shard pins locally; the merged report then
+        compares merged-live vs merged-reference)."""
+        cols: Set[str] = set()
+        for s in self._active_ids():
+            cols.update(self.shards[s].pin_drift_reference())
+        return sorted(cols)
 
     def latency_decomposition(self) -> Dict[str, float]:
         # counters sum across shards; rates are recomputed from the

@@ -344,7 +344,7 @@ class ProcDeploymentHandle:
                                       self.version)
 
     def request(self, keys, ts, rows=None, *,
-                timeout_s: Optional[float] = None, ctx=None):
+                timeout_s: Optional[float] = None, ctx=None, n_live=None):
         from repro.core.results import FeatureFrame
         if not self.client.ready:
             raise ShardDownError(
@@ -355,13 +355,13 @@ class ProcDeploymentHandle:
                 and tracer is not None and tracer.sampled(ctx.trace_id)):
             trace = {"trace_id": ctx.trace_id, "parent": ctx.parent_span}
         t0 = time.perf_counter()
-        columns, status, tver, spans = self.client.proc.call(
+        columns, status, tver, spans, wm, age = self.client.proc.call(
             "serve",
             _timeout=_RPC_TIMEOUT_S if timeout_s is None else timeout_s,
             name=self.name, version=self._wv(),
             keys=np.asarray(keys), ts=np.asarray(ts, np.float32),
             rows=None if rows is None else np.asarray(rows, np.float32),
-            trace=trace)
+            trace=trace, n_live=n_live)
         t1 = time.perf_counter()
         if spans and tracer is not None:
             self._adopt_spans(tracer, spans, t0, t1)
@@ -370,7 +370,8 @@ class ProcDeploymentHandle:
         self.metrics.batches += 1
         self.metrics.serve_s += t1 - t0
         return FeatureFrame(columns, status=status, deployment=self.name,
-                            version=self.version, table_version=tver)
+                            version=self.version, table_version=tver,
+                            watermark=wm, feature_age=age)
 
     @staticmethod
     def _adopt_spans(tracer, spans, rpc_start: float,
@@ -645,6 +646,17 @@ class ProcEngineClient:
         """Worker-side OperatorProfiler totals (picklable dict) — merged
         parent-side across shards for sharded EXPLAIN ANALYZE."""
         return self.proc.call("profile_snapshot", name=name)
+
+    def freshness_snapshot(self) -> Dict:
+        """Worker-side FreshnessTracker snapshot (sketch dicts + live
+        watermarks) — merged exactly parent-side across shards."""
+        return self.proc.call("freshness_snapshot")
+
+    def drift_snapshot(self) -> Dict:
+        return self.proc.call("drift_snapshot")
+
+    def pin_drift_reference(self) -> List[str]:
+        return self.proc.call("pin_drift")
 
     def table_version(self, table: str) -> int:
         v = self.proc.call("table_version", table=table)

@@ -225,21 +225,23 @@ class WorkerServer:
 
     # -------------------------------------------------------------- serve
     def rpc_serve(self, name=None, version=None, keys=None, ts=None,
-                  rows=None, trace=None):
+                  rows=None, trace=None, n_live=None):
         ctx = None
         if trace is not None:
             from repro.core.results import RequestContext
             ctx = RequestContext(trace_id=trace["trace_id"],
                                  parent_span=trace.get("parent"))
         frame = self._handle_of(name, version).request(keys, ts, rows,
-                                                       ctx=ctx)
+                                                       ctx=ctx,
+                                                       n_live=n_live)
         # worker-clock span export rides the response; the client
         # re-bases onto its own clock and adopts (dedup by span id keeps
         # transport retries/dups idempotent)
         spans = (self.engine.tracer.export_trace(trace["trace_id"])
                  if trace is not None else ())
         return (_np_columns(frame.columns), np.asarray(frame.status),
-                int(frame.table_version), spans)
+                int(frame.table_version), spans,
+                frame.watermark, frame.feature_age)
 
     def rpc_handle_metrics(self, name=None, version=None):
         return self._handle_of(name, version).metrics.snapshot()
@@ -298,6 +300,15 @@ class WorkerServer:
 
     def rpc_profile_snapshot(self, name=None):
         return self.engine.profiler.snapshot(name)
+
+    def rpc_freshness_snapshot(self):
+        return self.engine.freshness_snapshot()
+
+    def rpc_drift_snapshot(self):
+        return self.engine.drift.snapshot()
+
+    def rpc_pin_drift(self):
+        return self.engine.pin_drift_reference()
 
     def rpc_table_version(self, table=None):
         return self.engine.tables[table].version

@@ -98,7 +98,7 @@ class SubBatch:
 
     __slots__ = ("handle", "keys", "ts", "rows", "ctx", "done",
                  "columns", "status", "table_version", "error", "shed",
-                 "shed_reason")
+                 "shed_reason", "watermark", "feature_age")
 
     def __init__(self, handle, keys: np.ndarray, ts: np.ndarray,
                  rows: Optional[np.ndarray], ctx=None):
@@ -114,6 +114,10 @@ class SubBatch:
         self.error: Optional[BaseException] = None
         self.shed = False
         self.shed_reason: Optional[str] = None
+        # freshness stamps from the serving shard (DESIGN.md §14):
+        # snapshot watermark and worst per-row feature age of the slice
+        self.watermark: Optional[float] = None
+        self.feature_age: Optional[float] = None
 
     def __len__(self) -> int:
         return len(self.keys)
@@ -336,6 +340,8 @@ class _Lane:
         col_parts: List[Dict[str, np.ndarray]] = []
         st_parts: List[np.ndarray] = []
         tver = -1
+        wm_min: Optional[float] = None
+        age_max: Optional[float] = None
         try:
             for s0 in range(0, B, step):
                 ke = keys[s0:s0 + step]
@@ -353,7 +359,9 @@ class _Lane:
                     if re is not None:
                         re = np.concatenate(
                             [re, np.repeat(re[-1:], pad, axis=0)])
-                kw = {}
+                kw = {"n_live": nb}     # pad rows are shape filler: the
+                # engine serves them but excludes them from freshness /
+                # drift sketches (bit-for-bit cross-backend contract)
                 if timeout_s is not None:
                     kw["timeout_s"] = timeout_s
                 if ctx_fwd is not None:
@@ -363,6 +371,13 @@ class _Lane:
                     {k: np.asarray(v)[:nb] for k, v in frame.columns.items()})
                 st_parts.append(np.asarray(frame.status)[:nb])
                 tver = max(tver, frame.table_version)
+                if frame.watermark is not None:
+                    wm = frame.watermark
+                    wm_min = wm if wm_min is None else min(wm_min, wm)
+                if frame.feature_age is not None:
+                    age = frame.feature_age
+                    age_max = age if age_max is None \
+                        else max(age_max, age)
                 self.stats["dispatches"] += 1
                 self.stats["rows"] += nb
         except (ShardDownError, TimeoutError) as e:
@@ -399,6 +414,8 @@ class _Lane:
             it.columns = {k: v[s:e] for k, v in cols.items()}
             it.status = status[s:e]
             it.table_version = tver
+            it.watermark = wm_min
+            it.feature_age = age_max
             sq.stats["sub_batches"] += 1
             it.done.set()
             s = e

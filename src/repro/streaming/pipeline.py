@@ -19,10 +19,11 @@ cycles the expired prefix is compacted out and the preagg tier rebuilt
 """
 from __future__ import annotations
 
+import collections
 import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence
+from typing import Deque, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -58,9 +59,18 @@ class IngestPipeline:
     would race the flusher and donate buffers out from under readers.
     """
 
-    def __init__(self, table: Table, cfg: PipelineConfig = PipelineConfig()):
+    def __init__(self, table: Table, cfg: PipelineConfig = PipelineConfig(),
+                 freshness=None):
         self.table = table
         self.cfg = cfg
+        # ingest-to-visible tracking (DESIGN.md §14): FIFO of
+        # (arrival_wall, count) cohorts, popped per flush — events leave
+        # the buffer in (roughly) arrival order, so matching flushed
+        # counts against arrival cohorts is exact to within one flush
+        # interval. ``freshness`` is a FreshnessTracker (or None).
+        self.freshness = freshness
+        self._arrivals: Deque[Tuple[float, int]] = collections.deque()
+        self._arr_lock = threading.Lock()
         self.wal = WriteAheadLog(cfg.wal) if cfg.wal is not None else None
         self.buffer = StreamBuffer(lateness=cfg.lateness,
                                    max_staged=cfg.max_staged,
@@ -90,6 +100,8 @@ class IngestPipeline:
         """Stage one event; never blocks on device work. Returns False iff
         the event was beyond the watermark (dropped, counted)."""
         ok = self.buffer.push(key, ts, row)
+        if ok:
+            self._note_arrival(1)
         with self._work:
             self._work.notify()
         return ok
@@ -98,6 +110,8 @@ class IngestPipeline:
                    rows: np.ndarray, *, all_or_nothing: bool = False) -> int:
         n = self.buffer.push_batch(keys, ts, rows,
                                    all_or_nothing=all_or_nothing)
+        if n:
+            self._note_arrival(n)
         with self._work:
             self._work.notify()
         return n
@@ -116,12 +130,43 @@ class IngestPipeline:
         when attached — gets the whole batch as ONE record at commit
         time, so replay-after-crash has 2PC atomicity for free."""
         events = self.buffer.commit(txn)
+        if events:
+            self._note_arrival(len(events))
         with self._work:
             self._work.notify()
         return len(events)
 
     def abort_txn(self, txn: int) -> None:
         self.buffer.abort(txn)
+
+    # ------------------------------------------------------------- freshness
+    def _note_arrival(self, count: int) -> None:
+        if self.freshness is None:
+            return
+        with self._arr_lock:
+            self._arrivals.append((time.time(), count))
+
+    def _note_visible(self, n: int) -> None:
+        """``n`` events just PUBLISHED: pop arrival cohorts covering them
+        and record arrival→visible wall latency per cohort."""
+        if self.freshness is None or n <= 0:
+            return
+        now = time.time()
+        name = self.table.schema.name
+        cohorts = []
+        with self._arr_lock:
+            while n > 0 and self._arrivals:
+                t0, c = self._arrivals[0]
+                take = min(c, n)
+                cohorts.append((t0, take))
+                n -= take
+                if take == c:
+                    self._arrivals.popleft()
+                else:
+                    self._arrivals[0] = (t0, c - take)
+        for t0, c in cohorts:
+            self.freshness.observe_ingest_visibility(
+                name, max(now - t0, 0.0), count=c)
 
     # ----------------------------------------------------------------- flush
     def _flush_once(self, *, flush_all: bool = False) -> int:
@@ -165,6 +210,7 @@ class IngestPipeline:
             if n == 0:
                 return 0
         self._event_clock = max(self._event_clock, float(ts[n - 1]))
+        self._note_visible(n)
         self.stats["flushes"] += 1
         self.stats["events_flushed"] += n
         self.stats["flush_s"] += time.perf_counter() - t0

@@ -124,17 +124,23 @@ def test_cache_stats_snapshot():
     json.dumps(snap)
 
 
-def test_handle_metrics_latency_reservoir():
+def test_handle_metrics_latency_sketch():
+    """Latency percentiles come from a bounded rolling quantile sketch:
+    no raw-sample reservoir, a monotonic sample count (the replanner's
+    health gate keys on it advancing), and a guaranteed relative-error
+    bound instead of FIFO displacement."""
     m = HandleMetrics()
     assert math.isnan(m.latency_percentile(99))      # empty = no tail
     for i in range(600):
         m.observe_latency(0.001 * (i + 1))
-    assert len(m.latency_s) == HandleMetrics.LATENCY_RESERVOIR
-    # FIFO window: oldest 88 displaced, so the floor is sample #89
-    assert min(m.latency_s) == pytest.approx(0.089)
+    assert len(m.latency_s) == 600                   # monotonic, unbounded
+    p99 = m.latency_percentile(99)
+    assert p99 == pytest.approx(0.001 * 595, rel=0.05)
     snap = m.snapshot()
-    assert snap["latency_samples"] == 512
+    assert snap["latency_samples"] == 600
     assert snap["latency_p99_s"] >= snap["latency_p50_s"]
+    # the sketch itself rides along for exact cross-shard merging
+    assert snap["latency_sketch"]["kind"] == "qsketch"
     json.dumps(snap)
 
 
@@ -210,10 +216,11 @@ def test_join_staleness_zero_probe_rows_after_serving():
     eng.close()
 
 
-def test_join_age_reservoir_overflow_fifo_determinism():
-    """The age reservoir is a bounded FIFO (deque maxlen): overflowing it
-    keeps exactly the newest maxlen ages, deterministically — two
-    identical fixed-seed runs agree bit for bit."""
+def test_join_age_sketch_determinism_and_bounded_state():
+    """The age reservoir is a log-bucketed quantile sketch: every age
+    ever observed counts (no FIFO displacement), state stays bounded
+    (bucket count grows with the value RANGE, not the sample count), and
+    two identical fixed-seed runs agree bit for bit."""
     def run():
         eng = make_join_engine(seed=3)
         eng.insert("merchants", [0, 1, 2, 3], [50.0] * 4,
@@ -221,25 +228,24 @@ def test_join_age_reservoir_overflow_fifo_determinism():
                               np.float32))
         dep = eng.deploy("f", JOIN_SQL)
         h = eng.handle("f")
-        maxlen = h._join_ages["merchants"].maxlen
-        # overflow via the metrics path itself (synthetic ages, ordered
-        # so the survivor set is unambiguous)
-        ages = np.arange(maxlen + 500, dtype=np.float64)
+        ages = np.arange(1012, dtype=np.float64)
         res = {"__join_match_merchants": np.ones(len(ages), np.float32),
                "__join_age_merchants": ages}
         h._record_join_stats(res, len(ages))
-        got = list(h._join_ages["merchants"])
+        sk = h._join_ages["merchants"]
         st = dep.join_staleness()["merchants"]
         eng.close()
-        return got, st
+        return sk.to_dict(), st
 
-    got1, st1 = run()
-    got2, st2 = run()
-    maxlen = len(got1)
-    assert got1 == got2                                 # deterministic
-    assert got1[0] == 500.0 and got1[-1] == maxlen + 499.0  # newest win
-    assert st1["age_samples"] == st2["age_samples"] == maxlen
+    d1, st1 = run()
+    d2, st2 = run()
+    assert d1 == d2                                     # deterministic
+    assert st1["age_samples"] == st2["age_samples"] == 1012
     assert st1["age_p99"] == st2["age_p99"]
+    # rel-err bound holds at the tail; far fewer buckets than samples
+    assert st1["age_p99"] == pytest.approx(0.99 * 1011, rel=0.05)
+    assert len(d1["pos"]) < 1012 // 2
+    json.dumps(st1)                 # snapshot (sketch incl.) serializes
 
 
 # --------------------------------------------------------------- calibrator

@@ -1,0 +1,440 @@
+"""Data-plane freshness + SLO tier (DESIGN.md §14): watermark-stamped
+snapshots, per-request feature age, ingest-to-visible latency, exact
+cross-shard sketch merging, burn-rate SLO alerting delivered into the
+control plane, and the flight recorder's dump-on-breach path.
+
+The acceptance pair:
+
+* an end-to-end freshness test — a disordered streamed load on BOTH
+  shard backends where the served feature age matches the injected
+  watermark lag and the cross-shard merged age sketch equals the
+  single-engine sketch bit for bit;
+* an SLO burn-rate test — an injected latency regression flips the SLO
+  to ALERTING within the fast window, the alert lands in
+  ``ControlPlane.tick()`` as ``slo_burning`` (steering a knob), the
+  flight ring is dumped to JSONL with the offending trace ids, and the
+  SLO recovers to OK once the regression clears.
+"""
+import json
+import math
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.control.knobs import KnobConfig, KnobController
+from repro.control.plane import ControlPlane
+from repro.core.engine import Engine
+from repro.core.optimizer import OptFlags
+from repro.core.results import STATUS_OK, RequestContext
+from repro.featurestore.table import TableSchema
+from repro.obs.flight import FlightRecorder
+from repro.obs.freshness import FreshnessTracker
+from repro.obs.sketch import QuantileSketch, RollingSketch
+from repro.obs.slo import ALERTING, OK, SLOEngine, SLOSpec
+from repro.shard import ShardConfig, ShardedEngine
+
+SQL = """SELECT SUM(amount) OVER w AS s, COUNT(amount) OVER w AS c
+FROM events
+WINDOW w AS (PARTITION BY user ORDER BY ts
+             ROWS BETWEEN 10 PRECEDING AND CURRENT ROW)"""
+SCHEMA = TableSchema("events", key_col="user", ts_col="ts",
+                     value_cols=("amount", "mkey"))
+
+N_KEYS = 16
+N_TICKS = 40            # event-time grid 0..39; watermark = 39.0
+
+
+def _round_robin_events(seed=0, shuffle=False):
+    """Every key gets exactly one event per event-time tick, so EVERY
+    shard's watermark equals the global max tick — the construction that
+    makes sharded freshness bit-comparable to a single engine. With
+    ``shuffle`` the arrival order is disordered (streamed loads only:
+    direct ``insert`` requires per-key ordered timestamps)."""
+    rng = np.random.default_rng(seed)
+    keys, ts = np.meshgrid(np.arange(N_KEYS), np.arange(N_TICKS))
+    keys, ts = keys.ravel(), ts.ravel().astype(np.float64)
+    rows = np.stack([rng.normal(size=keys.size),
+                     rng.integers(0, 4, keys.size)], -1).astype(np.float32)
+    if not shuffle:
+        return keys, ts, rows
+    order = rng.permutation(keys.size)       # disordered arrival
+    return keys[order], ts[order], rows[order]
+
+
+def _stream_into(eng, keys, ts, rows, lateness=1000.0):
+    pipe = eng.attach_stream("events", lateness=lateness,
+                             flush_interval_s=0.001)
+    pipe.push_batch(keys.tolist(), ts.tolist(), rows)
+    pipe.flush()
+    return pipe
+
+
+def _mk(backend=None):
+    eng = (Engine(OptFlags()) if backend is None
+           else ShardedEngine(ShardConfig(n_shards=3), backend=backend))
+    eng.create_table(SCHEMA, max_keys=64, capacity=64, bucket_size=8)
+    return eng
+
+
+def _sketch_core(d):
+    """The bit-for-bit comparable part of a sketch dict (``sum`` is
+    excluded: float addition order differs across merge topologies)."""
+    return {k: d[k] for k in ("rel_err", "pos", "neg", "zero", "count",
+                              "min", "max")}
+
+
+# ===================================================== freshness stamps
+def test_table_watermark_and_frame_stamp():
+    eng = _mk()
+    keys, ts, rows = _round_robin_events()
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    assert eng.tables["events"].watermark == float(N_TICKS - 1)
+    snap = eng.tables["events"].snapshot()
+    assert snap.watermark == float(N_TICKS - 1)
+    assert snap.published_at > 0.0
+    eng.deploy("q", SQL)
+    fr = eng.request("q", [0, 1, 2], [100.0, 200.0, 150.0])
+    assert fr.watermark == float(N_TICKS - 1)
+    # batch age = max over rows of (request event-ts - watermark)
+    assert fr.feature_age == pytest.approx(200.0 - (N_TICKS - 1))
+    assert fr.row(1).feature_age == fr.feature_age
+    eng.close()
+
+
+def test_unserved_table_has_no_watermark_stamp():
+    eng = _mk()
+    eng.deploy("q", SQL)
+    fr = eng.request("q", [0], [5.0])
+    assert fr.watermark is None and fr.feature_age is None
+    exp = eng.freshness_export()
+    assert math.isnan(FreshnessTracker.worst_age_p99(exp))
+    eng.close()
+
+
+def test_ingest_to_visible_latency_recorded():
+    """Events pushed, then flushed after an injected delay: the i2v
+    histogram must cover every event and sit at/above the injected
+    delay (exact to within one flush interval + scheduling slack)."""
+    eng = _mk()
+    keys, ts, rows = _round_robin_events(shuffle=True)
+    pipe = eng.attach_stream("events", lateness=1000.0,
+                             flush_interval_s=30.0)   # manual flush only
+    pipe.push_batch(keys.tolist(), ts.tolist(), rows)
+    delay = 0.15
+    time.sleep(delay)
+    pipe.flush()
+    snap = eng.freshness_snapshot()["events"]
+    assert snap["ingested"] == keys.size
+    i2v = QuantileSketch.from_dict(snap["i2v_sketch"])
+    assert i2v.count == keys.size
+    assert i2v.percentile(50) >= delay * 0.9          # waited at least
+    assert i2v.percentile(99) < delay + 5.0           # no runaway clock
+    exp = eng.freshness_export()
+    assert exp["events/ingest_visible_p50_s"] >= delay * 0.9
+    # per-column ingest sketches + key cardinality ride along
+    assert exp["events/keys_est"] == pytest.approx(N_KEYS)
+    assert math.isfinite(exp["events/ingest_amount_p50"])
+    eng.close()
+
+
+# ============================= acceptance: e2e freshness, both backends
+@pytest.mark.parametrize("backend", ["inprocess", "process"])
+def test_feature_age_and_merged_sketch_bit_for_bit(backend):
+    """Disordered streamed load into a reference Engine and a 3-shard
+    ShardedEngine: frame freshness stamps agree exactly, and the
+    cross-shard MERGED age sketch equals the single-engine sketch bit
+    for bit (same buckets, same counts, same p99)."""
+    keys, ts, rows = _round_robin_events(shuffle=True)
+    ref, se = _mk(), _mk(backend)
+    try:
+        _stream_into(ref, keys, ts, rows)
+        _stream_into(se, keys, ts, rows)
+        ref.deploy("q", SQL)
+        se.deploy("q", SQL)
+        wm = float(N_TICKS - 1)
+        rng = np.random.default_rng(7)
+        for b in range(4):
+            rk = rng.integers(0, N_KEYS, 16).tolist()
+            rt = (np.full(16, 100.0 + b, np.float32)
+                  + rng.integers(0, 5, 16).astype(np.float32)).tolist()
+            fa = ref.request("q", rk, rt)
+            fs = se.request("q", rk, rt)
+            assert (fa.status == STATUS_OK).all()
+            assert np.array_equal(fa.status, fs.status)
+            # stamps: same watermark, same (max-over-rows) age — the
+            # injected lag is request ts - wm, exact in event time
+            assert fa.watermark == fs.watermark == wm
+            assert fa.feature_age == fs.feature_age
+            assert fa.feature_age == pytest.approx(max(rt) - wm)
+        ref_snap = ref.freshness_snapshot()["events"]
+        se_snap = se.freshness_snapshot()["events"]
+        assert se_snap["watermark"] == ref_snap["watermark"] == wm
+        assert se_snap["ingested"] == ref_snap["ingested"] == keys.size
+        assert se_snap["serve_rows"] == ref_snap["serve_rows"] == 64
+        # THE bit-for-bit contract: merged-across-shards age sketch ==
+        # the single engine's (pad rows excluded via n_live, so equal
+        # request multisets produce equal bucket maps)
+        a, m = ref_snap["age_sketch"], se_snap["age_sketch"]
+        assert _sketch_core(a) == _sketch_core(m)
+        assert (QuantileSketch.from_dict(a).percentile(99)
+                == QuantileSketch.from_dict(m).percentile(99))
+        # per-column ingest sketches merge exactly too
+        for col in ("amount", "mkey"):
+            assert _sketch_core(ref_snap["columns"][col]) == \
+                _sketch_core(se_snap["columns"][col])
+    finally:
+        ref.close()
+        se.close()
+
+
+def test_freshness_merge_matches_single_tracker():
+    """Unit half of the acceptance: merge(shard snapshots) == the
+    tracker that observed the union, and watermarks take the MIN."""
+    rng = np.random.default_rng(3)
+    ages = rng.gamma(2.0, 5.0, 4096)
+    whole, a, b = (FreshnessTracker() for _ in range(3))
+    whole.observe_age("t", ages)
+    a.observe_age("t", ages[:1500])
+    b.observe_age("t", ages[1500:])
+    sa, sb = a.snapshot(), b.snapshot()
+    sa["t"]["watermark"], sb["t"]["watermark"] = 40.0, 25.0
+    merged = FreshnessTracker.merge([sa, None, sb])["t"]
+    assert _sketch_core(merged["age_sketch"]) == \
+        _sketch_core(whole.snapshot()["t"]["age_sketch"])
+    assert merged["watermark"] == 25.0      # slowest shard bounds it
+    assert merged["serve_rows"] == 4096
+
+
+# ===================================================== burn-rate SLOs
+def test_slo_engine_multi_window_burn_deterministic():
+    """Driven clock: the fast window trips promptly on a regression and
+    resolves promptly after it clears; the slow window filters blips."""
+    spec = SLOSpec("lat", "latency_p99_s", bound=0.010, budget=0.1,
+                   fast_window_s=10.0, slow_window_s=60.0,
+                   burn_threshold=2.0)
+    slo = SLOEngine([spec])
+    t = 0.0
+    for _ in range(60):                      # a healthy minute
+        assert slo.evaluate({"latency_p99_s": 0.002}, now=t) == []
+        t += 1.0
+    # one bad blip: fast burn spikes but the SLOW window holds it back
+    slo.evaluate({"latency_p99_s": 0.5}, now=t); t += 1.0
+    assert slo.state("lat") == OK
+    events = []
+    for _ in range(12):                      # sustained regression
+        events += slo.evaluate({"latency_p99_s": 0.5}, now=t)
+        t += 1.0
+    assert slo.state("lat") == ALERTING
+    assert [e["state"] for e in events] == [ALERTING]
+    # deterministic fire time: the slow window (60 samples, budget 0.1,
+    # threshold 2.0) needs 12 bad samples -> t = 61 + 11 = 72
+    assert events[0]["t"] == 72.0
+    for _ in range(11):                      # recovery: fast drains
+        events += slo.evaluate({"latency_p99_s": 0.002}, now=t)
+        t += 1.0
+    assert slo.state("lat") == OK
+    assert slo.export()["lat/transitions"] == 2.0
+    # missing / non-finite metrics contribute no sample
+    n0 = slo.snapshot(now=t)["lat"]["slow_samples"]
+    slo.evaluate({}, now=t)
+    slo.evaluate({"latency_p99_s": float("nan")}, now=t)
+    assert slo.snapshot(now=t)["lat"]["slow_samples"] == n0
+
+
+def test_slo_spec_validation():
+    with pytest.raises(ValueError):
+        SLOSpec("x", "m", 1.0, action="page")
+    with pytest.raises(ValueError):
+        SLOSpec("x", "m", 1.0, budget=0.0)
+    with pytest.raises(ValueError):
+        SLOSpec("x", "m", 1.0, fast_window_s=60, slow_window_s=30)
+
+
+# ============================ acceptance: SLO burn -> tick -> flight
+def test_slo_burn_alert_into_control_plane_e2e(tmp_path):
+    """Injected latency regression: the latency SLO flips to ALERTING
+    within the fast window, ``tick()`` folds the active alert into the
+    knob controller (``slo_burning`` -> overload backoff even though the
+    plain p99 target would not have tripped), the flight ring lands on
+    disk with the offending trace ids, and the SLO recovers to OK."""
+    eng = _mk()
+    keys, ts, rows = _round_robin_events()
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    eng.deploy("q", SQL)
+    eng.flight.out_dir = str(tmp_path)
+    # short latency window so the regression also CLEARS quickly
+    h = eng.handle("q")
+    h.metrics.latency_s = RollingSketch(window_s=0.2)
+    slo = SLOEngine([SLOSpec("latency", "latency_p99_s", bound=0.5,
+                             budget=0.25, fast_window_s=0.6,
+                             slow_window_s=0.6, burn_threshold=1.0)])
+    plane = ControlPlane(
+        eng, "q", replan=False, slo=slo,
+        # sky-high plain-p99 target: only the SLO can declare overload
+        knobs=KnobController(KnobConfig(target_p99_s=100.0),
+                             delay_s=0.004))
+    traces = []
+
+    def serve_once():
+        tid = f"trace-{len(traces):04d}"
+        traces.append(tid)
+        eng.request("q", [0, 1, 2, 3], [100.0] * 4,
+                    ctx=RequestContext(trace_id=tid))
+
+    for _ in range(3):                       # healthy baseline
+        serve_once()
+        r = plane.tick()
+        assert r["slo"]["alerting"] == []
+        time.sleep(0.03)
+    assert slo.state("latency") == OK
+
+    deadline = time.time() + 10.0
+    while slo.state("latency") == OK and time.time() < deadline:
+        serve_once()
+        h.metrics.observe_latency(2.0)       # the injected regression
+        plane.tick()
+        time.sleep(0.05)
+    assert slo.state("latency") == ALERTING  # fired within fast window
+
+    # one more burning tick pair -> hysteresis met -> knob backoff
+    burn_reports = []
+    for _ in range(3):
+        serve_once()
+        h.metrics.observe_latency(2.0)
+        burn_reports.append(plane.tick())
+        time.sleep(0.05)
+    assert any(r["load"]["slo_burning"] for r in burn_reports)
+    assert plane.knobs.knobs["delay_s"] < 0.004
+    moves = [d for r in plane.reports for d in r["knob_decisions"]]
+    assert any(d["knob"] == "delay_s" and "overload" in d["reason"]
+               for d in moves)
+
+    # flight ring hit the disk on the OK->ALERTING transition, and it
+    # carries the serve records' trace ids from the burning interval
+    assert plane.flight is eng.flight and eng.flight.dumps
+    recs = [json.loads(line)
+            for line in open(eng.flight.dumps[0], encoding="utf-8")]
+    assert recs[0]["kind"] == "dump" and "slo-latency" in \
+        os.path.basename(eng.flight.dumps[0])
+    kinds = {r["kind"] for r in recs}
+    assert "slo_transition" in kinds and "serve" in kinds
+    dumped_traces = {r.get("trace") for r in recs if r["kind"] == "serve"}
+    assert dumped_traces & set(traces)
+
+    deadline = time.time() + 10.0            # recovery: regression gone
+    while slo.state("latency") == ALERTING and time.time() < deadline:
+        serve_once()
+        plane.tick()
+        time.sleep(0.05)
+    assert slo.state("latency") == OK
+    assert not plane.reports[-1]["load"]["slo_burning"]
+    eng.close()
+
+
+# ================================================================ drift
+def test_drift_detector_tp_and_fp():
+    """Same serving distribution after pinning -> no drift (FP check);
+    a genuinely shifted output distribution -> PSI over threshold (TP)."""
+    eng = _mk()
+    keys, ts, rows = _round_robin_events()
+    eng.insert("events", keys.tolist(), ts.tolist(), rows)
+    eng.deploy("q", SQL)
+    rng = np.random.default_rng(11)
+
+    def serve(lo, hi, n_batches=6):
+        for _ in range(n_batches):
+            rk = rng.integers(0, N_KEYS, 16).tolist()
+            rt = rng.uniform(lo, hi, 16).astype(np.float32).tolist()
+            eng.request("q", rk, rt)
+
+    serve(100.0, 200.0)
+    assert eng.pin_drift_reference() == ["c", "s"]
+    serve(100.0, 200.0)                      # same workload again
+    rep = eng.drift_report()
+    assert not any(r["drifted"] for r in rep.values()), rep
+    assert rep["s"]["psi"] < 0.25
+    # inject upstream drift: fresh events whose amounts jump to ~N(50,1)
+    # — the windowed SUM shifts, the windowed COUNT must not
+    k2, t2 = np.meshgrid(np.arange(N_KEYS), np.arange(N_TICKS,
+                                                      N_TICKS + 20))
+    k2, t2 = k2.ravel(), t2.ravel().astype(np.float64)
+    r2 = np.stack([rng.normal(50.0, 1.0, k2.size),
+                   rng.integers(0, 4, k2.size)], -1).astype(np.float32)
+    eng.insert("events", k2.tolist(), t2.tolist(), r2)
+    serve(2000.0, 2100.0, n_batches=12)
+    rep2 = eng.drift_report()
+    assert rep2["s"]["drifted"] and rep2["s"]["psi"] > 0.25
+    assert not rep2["c"]["drifted"]          # count distribution held
+    exp = eng.drift_export()
+    assert exp["s/drifted"] == 1.0
+    eng.close()
+
+
+@pytest.mark.parametrize("backend", ["inprocess", "process"])
+def test_drift_pin_and_merge_across_shards(backend):
+    se = _mk(backend)
+    keys, ts, rows = _round_robin_events()
+    try:
+        se.insert("events", keys.tolist(), ts.tolist(), rows)
+        se.deploy("q", SQL)
+        rng = np.random.default_rng(13)
+        batches = [rng.integers(0, N_KEYS, 16).tolist() for _ in range(4)]
+        for rk in batches:
+            se.request("q", rk, [150.0] * 16)
+        assert se.pin_drift_reference() == ["c", "s"]
+        for rk in batches:                   # identical request multiset
+            se.request("q", rk, [150.0] * 16)
+        rep = se.drift_report()
+        assert set(rep) == {"c", "s"}
+        assert rep["s"]["live_count"] == 64 and rep["s"]["ref_count"] == 64
+        assert rep["s"]["psi"] == 0.0        # identical dist, exact merge
+        assert not rep["s"]["drifted"]
+    finally:
+        se.close()
+
+
+# ======================================================= flight recorder
+def test_flight_recorder_ring_dump_and_rate_limit(tmp_path):
+    fl = FlightRecorder(capacity=8, out_dir=str(tmp_path),
+                        min_dump_interval_s=60.0)
+    fl.set_context(delay_s=0.004)
+    fl.set_context(delay_s=0.004)            # unchanged: no record
+    for i in range(20):
+        fl.record("serve", trace=f"t{i}", rows=4)
+    assert len(fl) == 8                      # bounded: newest only
+    p1 = fl.dump("slo-latency")
+    assert p1 and os.path.exists(p1)
+    assert fl.dump("again") is None          # rate-limited
+    assert fl.dump("forced", force=True)     # ... unless forced
+    lines = [json.loads(ln) for ln in open(p1, encoding="utf-8")]
+    assert lines[0]["kind"] == "dump"
+    assert lines[0]["context"] == {"delay_s": 0.004}
+    serves = [ln for ln in lines if ln["kind"] == "serve"]
+    assert [s["trace"] for s in serves] == [f"t{i}" for i in range(12, 20)]
+    assert fl.stats()["dumps"] == 2.0
+
+
+def test_sharded_worker_down_dumps_flight(tmp_path):
+    """A worker death is a flight-dump trigger: the parent records the
+    worker_down marker and persists the ring."""
+    import signal
+    se = _mk("process")
+    keys, ts, rows = _round_robin_events()
+    try:
+        se.flight.out_dir = str(tmp_path)
+        se.insert("events", keys.tolist(), ts.tolist(), rows)
+        se.deploy("q", SQL)
+        se.request("q", list(range(8)), [100.0] * 8)
+        os.kill(se.shards[1].proc.pid, signal.SIGKILL)
+        deadline = time.time() + 90.0
+        while not se.flight.dumps and time.time() < deadline:
+            time.sleep(0.05)
+        assert se.flight.dumps
+        recs = [json.loads(ln)
+                for ln in open(se.flight.dumps[0], encoding="utf-8")]
+        assert any(r["kind"] == "worker_down" for r in recs)
+        assert any(r["kind"] == "serve" for r in recs)
+    finally:
+        se.close()

@@ -386,13 +386,52 @@ def test_registry_prometheus_golden():
     text = reg.render_prometheus()
     lines = text.strip().split("\n")
     assert lines == [
+        "# HELP repro_g_a g a",
         "# TYPE repro_g_a gauge",
         "repro_g_a 3",
+        "# HELP repro_g_b g b",
         "# TYPE repro_g_b gauge",
         "repro_g_b 2.5",
+        "# HELP repro_g_requests g requests",
         '# TYPE repro_g_requests gauge',
         'repro_g_requests{item="fraud"} 7',
     ]
+
+
+def test_prometheus_label_escaping():
+    """Backslash, double-quote and newline in a label value render with
+    the text-format escapes — a raw quote would corrupt the exposition."""
+    reg = MetricsRegistry(prefix="repro")
+    reg.register("g", lambda: {'a\\b"c\nd/x': 1})
+    line = reg.render_prometheus().strip().split("\n")[-1]
+    assert line == 'repro_g_x{item="a\\\\b\\"c\\nd"} 1'
+
+
+def test_prometheus_sketch_renders_native_histogram():
+    """A ``*_sketch`` dict value becomes a cumulative histogram family:
+    ``_bucket`` series with ``le`` bounds, ``le="+Inf"``, ``_sum`` and
+    ``_count`` — and the cumulative counts are monotone and total."""
+    from repro.obs.sketch import QuantileSketch
+    sk = QuantileSketch()
+    vals = [0.001, 0.01, 0.01, 0.1, 1.0, 10.0]
+    sk.observe_many(vals)
+    reg = MetricsRegistry(prefix="repro")
+    reg.register("g", lambda: {"lat/lat_sketch": sk.to_dict()})
+    text = reg.render_prometheus()
+    lines = text.strip().split("\n")
+    assert "# TYPE repro_g_lat_sketch histogram" in lines
+    buckets = [ln for ln in lines if "_bucket{" in ln]
+    assert buckets[-1] == \
+        f'repro_g_lat_sketch_bucket{{item="lat",le="+Inf"}} {len(vals)}'
+    cums = [int(ln.rsplit(" ", 1)[1]) for ln in buckets]
+    assert cums == sorted(cums)             # cumulative = monotone
+    ubs = [float(ln.split('le="')[1].split('"')[0])
+           for ln in buckets[:-1]]
+    assert ubs == sorted(ubs)               # ascending bounds
+    assert f'repro_g_lat_sketch_count{{item="lat"}} {len(vals)}' in lines
+    sum_line = [ln for ln in lines if "_sum{" in ln][0]
+    assert float(sum_line.rsplit(" ", 1)[1]) == \
+        pytest.approx(sum(vals), rel=1e-9)
 
 
 def test_registry_jsonl_roundtrip_and_error_isolation():
@@ -495,3 +534,139 @@ def test_ring_series_bounded_fifo():
     assert rs.mean(2) == pytest.approx(8.5)
     js = rs.to_json()
     assert js["t"] == [6.0, 7.0, 8.0, 9.0]
+
+
+# ====================================================== quantile sketch
+def _core(d):
+    """Bit-comparable sketch fields (``sum`` excluded: float addition
+    order is topology-dependent)."""
+    return {k: d[k] for k in ("rel_err", "pos", "neg", "zero", "count",
+                              "min", "max")}
+
+
+def test_sketch_merge_associative_and_commutative():
+    from repro.obs.sketch import QuantileSketch
+    rng = np.random.default_rng(5)
+    parts = [rng.lognormal(0, 2.0, 500),
+             -rng.lognormal(1.0, 1.0, 300),
+             np.concatenate([np.zeros(50), rng.normal(0, 1e-3, 200)])]
+    sks = []
+    for p in parts:
+        sk = QuantileSketch()
+        sk.observe_many(p)
+        sks.append(sk)
+    a, b, c = (sk.to_dict() for sk in sks)
+
+    def merged(*dicts):
+        out = QuantileSketch()
+        for d in dicts:
+            out.merge(dict(d))
+        return _core(out.to_dict())
+
+    ab_c = merged(a, b, c)
+    assert ab_c == merged(c, b, a)                    # commutative
+    bc = QuantileSketch.from_dict(b).merge(dict(c)).to_dict()
+    assert ab_c == merged(a, bc)                      # associative
+    whole = QuantileSketch()
+    whole.observe_many(np.concatenate(parts))
+    assert ab_c == _core(whole.to_dict())             # merge == union
+    for q in (1, 25, 50, 75, 99):
+        assert QuantileSketch.from_dict(bc).merge(dict(a)).percentile(q) \
+            == whole.percentile(q)
+
+
+def test_sketch_serialization_deterministic_and_roundtrip():
+    from repro.obs.sketch import QuantileSketch
+    rng = np.random.default_rng(9)
+    vals = rng.gamma(2.0, 3.0, 1000)
+    s1, s2 = QuantileSketch(), QuantileSketch()
+    s1.observe_many(vals)
+    for chunk in np.split(rng.permutation(vals), 10):  # different order
+        s2.observe_many(chunk)
+    assert s1.to_bytes() != b""
+    d1, d2 = s1.to_dict(), s2.to_dict()
+    assert _core(d1) == _core(d2)           # order-independent
+    rt = QuantileSketch.from_dict(json.loads(json.dumps(d1)))
+    assert _core(rt.to_dict()) == _core(d1)
+    assert rt.percentile(99) == s1.percentile(99)
+
+
+def test_sketch_relative_error_bound_across_six_decades():
+    """The DDSketch guarantee: every quantile estimate is within the
+    configured relative error of the exact order statistic, on values
+    spanning 1e-3 .. 1e3."""
+    from repro.obs.sketch import QuantileSketch
+    rng = np.random.default_rng(17)
+    vals = 10.0 ** rng.uniform(-3, 3, 20000)
+    sk = QuantileSketch(rel_err=0.01)
+    sk.observe_many(vals)
+    sv = np.sort(vals)
+    for q in (0.1, 1, 5, 25, 50, 75, 95, 99, 99.9):
+        exact = sv[int(q / 100.0 * (len(sv) - 1))]    # lower-interp rank
+        got = sk.percentile(q)
+        assert abs(got - exact) <= 0.0101 * exact, (q, got, exact)
+    # negatives mirror the same bound
+    skn = QuantileSketch(rel_err=0.01)
+    skn.observe_many(-vals)
+    svn = np.sort(-vals)
+    exact = svn[int(0.01 * (len(svn) - 1))]
+    assert abs(skn.percentile(1) - exact) <= 0.0101 * abs(exact)
+
+
+def test_sketch_empty_and_zero_edge_cases():
+    from repro.obs.sketch import QuantileSketch
+    e = QuantileSketch()
+    assert e.count == 0
+    assert math.isnan(e.percentile(50))
+    d = e.to_dict()
+    assert d["count"] == 0 and d["pos"] == [] and d["neg"] == []
+    m = QuantileSketch.merged([e, None, QuantileSketch()])
+    assert m.count == 0 and math.isnan(m.percentile(99))
+    # merging an empty into a live sketch is the identity
+    live = QuantileSketch()
+    live.observe_many([1.0, 2.0, 3.0])
+    before = _core(live.to_dict())
+    live.merge(e.to_dict())
+    assert _core(live.to_dict()) == before
+    # pure zeros: all mass in the zero bucket, percentiles are 0
+    z = QuantileSketch()
+    z.observe_many(np.zeros(10))
+    assert z.to_dict()["zero"] == 10
+    assert z.percentile(50) == 0.0
+    with pytest.raises(ValueError):          # rel_err mismatch refuses
+        z.merge(QuantileSketch(rel_err=0.05).to_dict())
+
+
+def test_rolling_sketch_time_panes_and_monotonic_len():
+    from repro.obs.sketch import RollingSketch
+    now = [0.0]
+    rs = RollingSketch(window_s=1.0, clock=lambda: now[0])
+    for _ in range(100):
+        rs.observe(10.0)
+    assert rs.percentile(50) == pytest.approx(10.0, rel=0.03)
+    now[0] = 1.2                             # rotate: old pane held
+    rs.observe(1.0)
+    assert len(rs) == 101                    # monotonic total
+    assert rs.window_count() == 101          # both panes still visible
+    now[0] = 2.5                             # old pane rotates away
+    rs.observe(1.0)
+    assert rs.percentile(99) == pytest.approx(1.0, rel=0.03)
+    assert len(rs) == 102                    # len never decreases
+    rs.clear()
+    assert len(rs) == 0 and math.isnan(rs.percentile(50))
+
+
+def test_cardinality_estimator_exact_then_approx_and_merge():
+    from repro.obs.sketch import CardinalityEstimator
+    a = CardinalityEstimator(k=64)
+    a.add_many(np.arange(50))
+    assert a.estimate() == 50.0              # exact below k
+    b = CardinalityEstimator(k=64)
+    b.add_many(np.arange(25, 75))            # overlapping range
+    m = CardinalityEstimator(k=64)
+    m.merge(a.to_dict())
+    m.merge(b.to_dict())
+    assert m.estimate() == pytest.approx(75.0, rel=0.25)
+    big = CardinalityEstimator(k=64)
+    big.add_many(np.arange(100000))
+    assert big.estimate() == pytest.approx(100000, rel=0.30)
